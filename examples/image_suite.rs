@@ -1,0 +1,48 @@
+//! Image-classification suite (paper §7.2, Figs. 1, 3, 5–10).
+//!
+//! Trains the three architecture stand-ins (resnet_mini / vgg_mini /
+//! wrn_mini) on synthetic CIFAR-shaped data with CD-Adam vs EF21 vs
+//! 1-bit Adam (the provably-efficient baselines of §7.2) and, for
+//! Fig. 1, vs uncompressed AMSGrad.
+//!
+//! ```bash
+//! cargo run --release --example image_suite -- [--model resnet_mini] \
+//!     [--rounds 400] [--full] [--quick] [--threaded]
+//! ```
+
+use cdadam::harness::{fig3_variants, print_series, print_summary, quick_rounds, save, sweep, Variant};
+use cdadam::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let rounds = args.usize("rounds", quick_rounds(400, quick))?;
+    let models: Vec<String> = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => ["resnet_mini", "vgg_mini", "wrn_mini"].iter().map(|s| s.to_string()).collect(),
+    };
+
+    for model in &models {
+        let preset = format!("image_{model}");
+        // Fig. 1 adds the uncompressed baseline to the Fig. 3 set.
+        let mut variants = fig3_variants();
+        variants.push(Variant::new("uncompressed_amsgrad", "identity", 0.0));
+        let runs = sweep(&preset, &variants, |c| {
+            c.rounds = rounds;
+            c.lr_milestones = vec![rounds / 2, rounds * 3 / 4];
+            c.eval_every = (rounds / 20).max(1);
+            if args.flag("full") {
+                if let cdadam::config::Task::Images { full, .. } = &mut c.task {
+                    *full = true;
+                }
+            }
+            if args.flag("threaded") {
+                c.threaded = true;
+            }
+        })?;
+        print_series(&format!("figs 1/3/5-10 {model}"), &runs);
+        print_summary(&format!("image {model}"), &runs);
+        save(&format!("image_{model}"), &runs)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Nonconvex logistic-regression suite (paper §7.1, Figs. 2 and 4).
+//!
+//! Sweeps the four compression strategies over the four (synthetic
+//! stand-ins of the) LibSVM datasets, with either the scaled-sign
+//! (Fig. 2) or Top-1 (Fig. 4) compressor, and prints both x-axes
+//! (iteration / communication bits).
+//!
+//! ```bash
+//! cargo run --release --example logreg_suite -- [--dataset a9a] \
+//!     [--compressor scaled_sign|top1] [--rounds 600] [--quick]
+//! ```
+
+use cdadam::harness::{fig2_variants, print_series, print_summary, quick_rounds, save, sweep};
+use cdadam::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let compressor: &'static str = match args.string("compressor", "scaled_sign").as_str() {
+        "top1" => "top1",
+        _ => "scaled_sign",
+    };
+    let quick = args.flag("quick");
+    let rounds = args.usize("rounds", quick_rounds(600, quick))?;
+    let datasets: Vec<String> = match args.get("dataset") {
+        Some(d) => vec![d.to_string()],
+        None => ["phishing", "mushrooms", "a9a", "w8a"].iter().map(|s| s.to_string()).collect(),
+    };
+    let fig = if compressor == "top1" { "fig4" } else { "fig2" };
+
+    for ds in &datasets {
+        let preset = format!("fig2_{ds}");
+        let runs = sweep(&preset, &fig2_variants(compressor), |c| {
+            c.rounds = rounds;
+            c.eval_every = (rounds / 30).max(1);
+        })?;
+        print_series(&format!("{fig} {ds} ({compressor})"), &runs);
+        print_summary(&format!("{fig} {ds}"), &runs);
+        save(&format!("{fig}_{ds}_{compressor}"), &runs)?;
+    }
+    Ok(())
+}

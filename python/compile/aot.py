@@ -1,0 +1,255 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Python runs exactly once (``make artifacts``); the Rust binary is
+self-contained afterwards. Interchange is HLO *text* (never
+``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits into --out-dir (default ../artifacts):
+  * <name>.hlo.txt          one module per entry point (fwd+bwd fused)
+  * manifest.json           machine-readable signature of every artifact
+  * golden/<case>.json      reference vectors for the Rust unit tests
+                            (compressors / Markov / AMSGrad three-way
+                            agreement: jnp oracle == Pallas == Rust)
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import pallas_ops, ref
+from .model import MLP_PRESETS, TLM_PRESETS, MlpConfig, TlmConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(*specs):
+    return [{"shape": list(s.shape), "dtype": s.dtype.name} for s in specs]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, out_specs, meta=None):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "path": path,
+            "inputs": _sig(*in_specs),
+            "outputs": _sig(*out_specs),
+            "meta": meta or {},
+        }
+        print(f"  {name}: {len(text)} chars, inputs={len(in_specs)}")
+
+    def golden(self, case: str, payload: dict):
+        path = os.path.join(self.out_dir, "golden", f"{case}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        print(f"  golden/{case}.json")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=2)
+        print(f"wrote manifest with {len(self.manifest['artifacts'])} artifacts")
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts.
+# ---------------------------------------------------------------------------
+
+def emit_mlp(em: Emitter, name: str, cfg: MlpConfig):
+    P, B, IN, C = cfg.param_count, cfg.batch, cfg.input_dim, cfg.classes
+    meta = {"model": "mlp", "param_count": P, "batch": B,
+            "input_dim": IN, "classes": C, "hidden": list(cfg.hidden)}
+    em.emit(
+        f"{name}_grad",
+        lambda p, x, y: cfg.loss_and_grad(p, x, y),
+        [f32([P]), f32([B, IN]), i32([B])],
+        [f32([]), f32([P])],
+        meta,
+    )
+    em.emit(
+        f"{name}_logits",
+        lambda p, x: (cfg.logits(p, x),),
+        [f32([P]), f32([B, IN])],
+        [f32([B, C])],
+        meta,
+    )
+
+
+def emit_tlm(em: Emitter, name: str, cfg: TlmConfig):
+    P, B, S = cfg.param_count, cfg.batch, cfg.seq
+    meta = {"model": "tlm", "param_count": P, "batch": B, "seq": S,
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads}
+    em.emit(
+        f"{name}_grad",
+        lambda p, t, y: cfg.loss_and_grad(p, t, y),
+        [f32([P]), i32([B, S]), i32([B, S])],
+        [f32([]), f32([P])],
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel artifacts (Pallas, lowered into the same HLO pipeline).
+# ---------------------------------------------------------------------------
+
+def emit_kernels(em: Emitter, dims, beta1, beta2, nu):
+    for d in sorted(set(dims)):
+        em.emit(
+            f"amsgrad_update_d{d}",
+            lambda m, v, vh, x, g, a: pallas_ops.amsgrad_update_pallas(
+                m, v, vh, x, g, a, beta1=beta1, beta2=beta2, nu=nu),
+            [f32([d])] * 5 + [f32([])],
+            [f32([d])] * 4,
+            {"kernel": "fused_amsgrad", "dim": d,
+             "beta1": beta1, "beta2": beta2, "nu": nu},
+        )
+        em.emit(
+            f"scaled_sign_d{d}",
+            lambda x: (pallas_ops.scaled_sign_pallas(x),),
+            [f32([d])],
+            [f32([d])],
+            {"kernel": "scaled_sign", "dim": d},
+        )
+        em.emit(
+            f"markov_sign_d{d}",
+            lambda g, gh: pallas_ops.markov_sign_step_pallas(g, gh),
+            [f32([d]), f32([d])],
+            [f32([d])] * 2,
+            {"kernel": "markov_sign_step", "dim": d},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for Rust <-> python agreement tests.
+# ---------------------------------------------------------------------------
+
+def emit_golden(em: Emitter, seed=7, d=1000):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1.5, d).astype(np.float32)
+    x[::17] = 0.0  # exercise the sign(0) := +1 convention
+
+    ss = np.asarray(ref.scaled_sign(jnp.asarray(x)))
+    em.golden("scaled_sign", {"d": d, "x": x.tolist(), "out": ss.tolist()})
+
+    for k in (1, 10, 100):
+        tk = np.asarray(ref.topk(jnp.asarray(x), k))
+        em.golden(f"topk_k{k}", {"d": d, "k": k, "x": x.tolist(), "out": tk.tolist()})
+
+    # Markov sequence over 5 steps of a drifting gradient.
+    gh = jnp.zeros(d, jnp.float32)
+    gs, cs, ghs = [], [], []
+    g = jnp.asarray(x)
+    for t in range(5):
+        c, gh = ref.markov_step(g, gh)
+        gs.append(np.asarray(g).tolist())
+        cs.append(np.asarray(c).tolist())
+        ghs.append(np.asarray(gh).tolist())
+        g = g * 0.7 + jnp.asarray(rng.normal(0, 0.3, d).astype(np.float32))
+    em.golden("markov_sign", {"d": d, "g": gs, "c": cs, "ghat": ghs})
+
+    # AMSGrad chain over 5 steps.
+    m = jnp.zeros(d, jnp.float32)
+    v = jnp.zeros(d, jnp.float32)
+    vh = jnp.zeros(d, jnp.float32)
+    xx = jnp.asarray(x)
+    alpha, beta1, beta2, nu = 1e-2, 0.9, 0.99, 1e-8
+    gts, ms, vs, vhs, xs = [], [], [], [], []
+    gt = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+    for t in range(5):
+        m, v, vh, xx = ref.amsgrad_update(
+            m, v, vh, xx, gt, alpha=alpha, beta1=beta1, beta2=beta2, nu=nu)
+        gts.append(np.asarray(gt).tolist())
+        ms.append(np.asarray(m).tolist())
+        vs.append(np.asarray(v).tolist())
+        vhs.append(np.asarray(vh).tolist())
+        xs.append(np.asarray(xx).tolist())
+        gt = gt * 0.5 + jnp.asarray(rng.normal(0, 0.5, d).astype(np.float32))
+    em.golden("amsgrad", {
+        "d": d, "alpha": alpha, "beta1": beta1, "beta2": beta2, "nu": nu,
+        "x0": x.tolist(), "g": gts, "m": ms, "v": vs, "vhat": vhs, "x": xs,
+    })
+
+
+# ---------------------------------------------------------------------------
+# Initial parameter dumps (Rust loads these instead of reimplementing init).
+# ---------------------------------------------------------------------------
+
+def emit_params(em: Emitter, name: str, flat: np.ndarray):
+    path = os.path.join(em.out_dir, f"{name}_params.f32")
+    flat.astype("<f4").tofile(path)
+    em.manifest["artifacts"].setdefault("_params", {})[name] = {
+        "path": f"{name}_params.f32", "count": int(flat.size)}
+    print(f"  {name}_params.f32: {flat.size} f32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--mlp", default="resnet_mini",
+                    help="comma list of MLP presets to lower")
+    ap.add_argument("--tlm", default="e2e",
+                    help="comma list of transformer presets to lower")
+    ap.add_argument("--beta1", type=float, default=0.9)
+    ap.add_argument("--beta2", type=float, default=0.99)
+    ap.add_argument("--nu", type=float, default=1e-8)
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    dims = []
+
+    for preset in filter(None, args.mlp.split(",")):
+        cfg = MLP_PRESETS[preset]
+        print(f"MLP preset {preset}: {cfg.param_count} params")
+        emit_mlp(em, f"mlp_{preset}", cfg)
+        emit_params(em, f"mlp_{preset}", cfg.init(seed=0))
+        dims.append(cfg.param_count)
+
+    for preset in filter(None, args.tlm.split(",")):
+        cfg = TLM_PRESETS[preset]
+        print(f"TLM preset {preset}: {cfg.param_count} params")
+        emit_tlm(em, f"tlm_{preset}", cfg)
+        emit_params(em, f"tlm_{preset}", cfg.init(seed=0))
+        dims.append(cfg.param_count)
+
+    emit_kernels(em, dims, args.beta1, args.beta2, args.nu)
+    emit_golden(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

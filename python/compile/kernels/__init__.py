@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles for CD-Adam."""
+
+from . import pallas_ops, ref  # noqa: F401

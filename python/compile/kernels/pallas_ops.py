@@ -1,0 +1,206 @@
+"""Layer-1 Pallas kernels for the CD-Adam hot path.
+
+All kernels operate on flat f32 vectors, tiled to TPU-shaped (8, 128)
+VMEM blocks via BlockSpec. They are lowered with ``interpret=True``:
+real-TPU lowering emits Mosaic custom-calls the CPU PJRT plugin cannot
+run, and interpret-mode lowers to plain HLO ops so the same artifact
+executes on any backend (see DESIGN.md §Hardware-Adaptation).
+
+Kernel inventory
+  * block L1-reduction (two-pass norm: per-block partials -> scalar sum)
+  * scaled-sign apply (elementwise, scale broadcast from SMEM-like (1,1))
+  * Markov compression step (c = C(g - ghat); ghat' = ghat + c)
+  * fused AMSGrad update (reads 5 vectors, writes 4, single pass)
+  * mask apply (the data-movement half of top-k / rand-k; the *selection*
+    half is a sort/quickselect, which is not a tiling-friendly TPU kernel
+    and is done at L2 / in Rust)
+
+Scalars beta1/beta2/nu are static (baked per artifact); alpha is a
+runtime input so the coordinator can decay the step size without
+re-lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANES = 128
+TILE = SUBLANES * LANES  # 1024 elements per grid step
+
+
+def _pad_to_tiles(x: jnp.ndarray):
+    """Flatten + zero-pad to a multiple of TILE, reshape to (rows, LANES)."""
+    d = x.size
+    flat = x.reshape(-1)
+    padded = ((d + TILE - 1) // TILE) * TILE
+    if padded != d:
+        flat = jnp.concatenate([flat, jnp.zeros((padded - d,), x.dtype)])
+    return flat.reshape(padded // LANES, LANES), d
+
+
+def _unpad(x2: jnp.ndarray, d: int) -> jnp.ndarray:
+    return x2.reshape(-1)[:d]
+
+
+def _grid(x2: jnp.ndarray) -> int:
+    return x2.shape[0] // SUBLANES
+
+
+def _vec_spec():
+    """BlockSpec for a (rows, LANES) operand walked in (8, 128) blocks."""
+    return pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    """BlockSpec for a (1, 1) broadcast scalar (every block maps to it)."""
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+# ---------------------------------------------------------------------------
+# L1 reduction (two-pass): per-block partial |x| sums, then combine.
+# ---------------------------------------------------------------------------
+
+def _l1_partial_kernel(x_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(jnp.abs(x_ref[...]))
+
+
+def l1_norm_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """||x||_1 via per-block partials. Zero padding contributes 0."""
+    x2, _ = _pad_to_tiles(x)
+    g = _grid(x2)
+    partials = pl.pallas_call(
+        _l1_partial_kernel,
+        grid=(g,),
+        in_specs=[_vec_spec()],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 1), x.dtype),
+        interpret=True,
+    )(x2)
+    return jnp.sum(partials)
+
+
+# ---------------------------------------------------------------------------
+# Scaled sign compressor.
+# ---------------------------------------------------------------------------
+
+def _scale_sign_kernel(x_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    o_ref[...] = jnp.where(x_ref[...] >= 0, s, -s)
+
+
+def scaled_sign_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """C(x) = (||x||_1/d) * sign(x), sign(0) := +1. Matches ref.scaled_sign."""
+    x2, d = _pad_to_tiles(x)
+    scale = (l1_norm_pallas(x) / d).reshape(1, 1)
+    out = pl.pallas_call(
+        _scale_sign_kernel,
+        grid=(_grid(x2),),
+        in_specs=[_vec_spec(), _scalar_spec()],
+        out_specs=_vec_spec(),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=True,
+    )(x2, scale)
+    return _unpad(out, d).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Markov compression step (scaled-sign base compressor).
+# ---------------------------------------------------------------------------
+
+def _markov_apply_kernel(g_ref, gh_ref, s_ref, c_ref, ghn_ref):
+    s = s_ref[0, 0]
+    diff = g_ref[...] - gh_ref[...]
+    c = jnp.where(diff >= 0, s, -s)
+    c_ref[...] = c
+    ghn_ref[...] = gh_ref[...] + c
+
+
+def markov_sign_step_pallas(g: jnp.ndarray, g_hat: jnp.ndarray):
+    """(c, g_hat') with c = scaled_sign(g - g_hat), g_hat' = g_hat + c."""
+    g2, d = _pad_to_tiles(g)
+    gh2, _ = _pad_to_tiles(g_hat)
+    scale = (l1_norm_pallas(g - g_hat) / d).reshape(1, 1)
+    c2, ghn2 = pl.pallas_call(
+        _markov_apply_kernel,
+        grid=(_grid(g2),),
+        in_specs=[_vec_spec(), _vec_spec(), _scalar_spec()],
+        out_specs=[_vec_spec(), _vec_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct(g2.shape, g.dtype),
+            jax.ShapeDtypeStruct(g2.shape, g.dtype),
+        ],
+        interpret=True,
+    )(g2, gh2, scale)
+    return _unpad(c2, d).reshape(g.shape), _unpad(ghn2, d).reshape(g.shape)
+
+
+# ---------------------------------------------------------------------------
+# Fused AMSGrad update (Algorithm 1, lines 13-16).
+# ---------------------------------------------------------------------------
+
+def _amsgrad_kernel(beta1, beta2, nu, m_ref, v_ref, vh_ref, x_ref, g_ref,
+                    a_ref, mo_ref, vo_ref, vho_ref, xo_ref):
+    g = g_ref[...]
+    m_n = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_n = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    vh_n = jnp.maximum(vh_ref[...], v_n)
+    mo_ref[...] = m_n
+    vo_ref[...] = v_n
+    vho_ref[...] = vh_n
+    xo_ref[...] = x_ref[...] - a_ref[0, 0] * m_n * jax.lax.rsqrt(vh_n + nu)
+
+
+def amsgrad_update_pallas(m, v, vhat, x, g_tilde, alpha, *, beta1, beta2, nu):
+    """Single-pass fused AMSGrad. alpha is a runtime scalar (lr decay)."""
+    m2, d = _pad_to_tiles(m)
+    v2, _ = _pad_to_tiles(v)
+    vh2, _ = _pad_to_tiles(vhat)
+    x2, _ = _pad_to_tiles(x)
+    g2, _ = _pad_to_tiles(g_tilde)
+    a = jnp.asarray(alpha, m.dtype).reshape(1, 1)
+    kern = functools.partial(_amsgrad_kernel, float(beta1), float(beta2), float(nu))
+    outs = pl.pallas_call(
+        kern,
+        grid=(_grid(m2),),
+        in_specs=[_vec_spec()] * 5 + [_scalar_spec()],
+        out_specs=[_vec_spec()] * 4,
+        out_shape=[jax.ShapeDtypeStruct(m2.shape, m.dtype)] * 4,
+        interpret=True,
+    )(m2, v2, vh2, x2, g2, a)
+    return tuple(_unpad(o, d).reshape(m.shape) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Mask apply (data-movement half of top-k / rand-k).
+# ---------------------------------------------------------------------------
+
+def _mask_kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = jnp.where(m_ref[...] != 0, x_ref[...], 0.0)
+
+
+def mask_apply_pallas(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """x * mask with mask given as {0,1} f32 (bool masks are pre-cast)."""
+    x2, d = _pad_to_tiles(x)
+    m2, _ = _pad_to_tiles(mask.astype(x.dtype))
+    out = pl.pallas_call(
+        _mask_kernel,
+        grid=(_grid(x2),),
+        in_specs=[_vec_spec(), _vec_spec()],
+        out_specs=_vec_spec(),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=True,
+    )(x2, m2)
+    return _unpad(out, d).reshape(x.shape)
+
+
+def topk_pallas(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-k compressor: L2 computes the keep-mask (selection = sort, not a
+    tiling-friendly kernel), the Pallas kernel applies it."""
+    from . import ref
+
+    return mask_apply_pallas(x, ref.topk_mask(x, k))

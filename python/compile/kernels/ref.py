@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+These are the reference semantics shared by three implementations:
+  1. this file (oracle),
+  2. the Pallas kernels in this package (checked by python/tests/),
+  3. the Rust implementations in rust/src/{compress,markov,optim}
+     (checked against golden vectors emitted by aot.py).
+
+Conventions (must match Rust exactly):
+  * sign(x) maps x >= 0 -> +1.0 and x < 0 -> -1.0 (never 0, so a sign
+    vector is wire-encodable at 1 bit/coordinate).
+  * scaled_sign(x) = (||x||_1 / d) * sign(x).
+  * top-k keeps the k largest-magnitude coordinates (ties broken toward
+    the lower index, matching Rust's quickselect + stable scan).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """Sign in {-1, +1} with sign(0) := +1."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def scaled_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """Scaled sign compressor C(x) = (||x||_1 / d) * sign(x)  (Karimireddy et al. 2019)."""
+    d = x.size
+    scale = jnp.sum(jnp.abs(x)) / d
+    return scale * sign_pm1(x)
+
+
+def topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k largest-|x| coordinates (lower index wins ties)."""
+    flat = jnp.abs(x.reshape(-1))
+    d = flat.shape[0]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    # stable argsort on descending magnitude => lower index wins ties.
+    order = jnp.argsort(-flat, stable=True)
+    keep = jnp.zeros((d,), dtype=bool).at[order[:k]].set(True)
+    return keep.reshape(x.shape)
+
+
+def topk(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-k compressor: keep k largest-magnitude coordinates, zero the rest."""
+    return jnp.where(topk_mask(x, k), x, jnp.zeros_like(x))
+
+
+def randk(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Rand-k compressor given a precomputed boolean keep-mask.
+
+    Randomness is owned by the caller (Rust owns the RNG on the request
+    path); the kernel itself is the deterministic masking.
+    """
+    return jnp.where(mask, x, jnp.zeros_like(x))
+
+
+def markov_step(g: jnp.ndarray, g_hat: jnp.ndarray, compressor=scaled_sign):
+    """One step of the Markov compression sequence (Richtarik et al. 2021).
+
+    c      = C(g - g_hat)        (the only thing transmitted)
+    g_hat' = g_hat + c           (replicated on both endpoints)
+
+    Returns (c, g_hat').
+    """
+    c = compressor(g - g_hat)
+    return c, g_hat + c
+
+
+def amsgrad_update(m, v, vhat, x, g_tilde, *, alpha, beta1, beta2, nu):
+    """Fused AMSGrad update (Algorithm 1, lines 13-16).
+
+    m'    = beta1 * m + (1 - beta1) * g
+    v'    = beta2 * v + (1 - beta2) * g^2
+    vhat' = max(vhat, v')
+    x'    = x - alpha * m' / sqrt(vhat' + nu)
+
+    Returns (m', v', vhat', x').
+    """
+    m_n = beta1 * m + (1.0 - beta1) * g_tilde
+    v_n = beta2 * v + (1.0 - beta2) * g_tilde * g_tilde
+    vhat_n = jnp.maximum(vhat, v_n)
+    x_n = x - alpha * m_n / jnp.sqrt(vhat_n + nu)
+    return m_n, v_n, vhat_n, x_n
+
+
+def l1_norm(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(x))

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and values; every kernel must match ref.py to
+tight tolerance across padding boundaries (d not a multiple of the
+(8, 128) tile), zeros (sign(0) convention), and extreme magnitudes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_ops as po
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Dims chosen to straddle tile boundaries: < 1 lane, < 1 tile, exact
+# tiles, and ragged.
+DIMS = st.sampled_from([1, 3, 127, 128, 129, 1000, 1024, 1025, 2048])
+
+finite_f32 = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False,
+    width=32)
+
+
+def vec(draw, d, data):
+    return np.asarray(data.draw(
+        st.lists(finite_f32, min_size=d, max_size=d)), np.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=DIMS, data=st.data())
+def test_l1_norm(d, data):
+    x = vec(None, d, data)
+    got = po.l1_norm_pallas(jnp.asarray(x))
+    np.testing.assert_allclose(got, np.sum(np.abs(x)), rtol=2e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=DIMS, data=st.data())
+def test_scaled_sign(d, data):
+    x = vec(None, d, data)
+    got = po.scaled_sign_pallas(jnp.asarray(x))
+    want = ref.scaled_sign(jnp.asarray(x))
+    scale = float(np.sum(np.abs(x))) / d + 1e-12
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5 * scale + 1e-7)
+
+
+def test_scaled_sign_zero_convention():
+    x = jnp.asarray([0.0, -1.0, 2.0, 0.0], jnp.float32)
+    out = np.asarray(po.scaled_sign_pallas(x))
+    scale = 3.0 / 4.0
+    np.testing.assert_allclose(out, [scale, -scale, scale, scale], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, data=st.data())
+def test_markov_step(d, data):
+    g = vec(None, d, data)
+    gh = vec(None, d, data)
+    c, ghn = po.markov_sign_step_pallas(jnp.asarray(g), jnp.asarray(gh))
+    c_ref, ghn_ref = ref.markov_step(jnp.asarray(g), jnp.asarray(gh))
+    # the two-pass (blockwise) L1 reduction rounds differently from the
+    # flat jnp.sum; allow a few ulps relative to the scale magnitude.
+    scale = float(np.sum(np.abs(g - gh))) / d + 1e-12
+    np.testing.assert_allclose(c, c_ref, rtol=2e-5, atol=1e-5 * scale + 1e-6)
+    np.testing.assert_allclose(ghn, ghn_ref, rtol=2e-5, atol=1e-5 * scale + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, data=st.data(),
+       alpha=st.floats(float(np.float32(1e-5)), 1.0, width=32),
+       beta1=st.floats(0.0, float(np.float32(0.999)), width=32),
+       beta2=st.floats(0.0, float(np.float32(0.9999)), width=32))
+def test_fused_amsgrad(d, data, alpha, beta1, beta2):
+    nu = 1e-8
+    m, v, x, g = (vec(None, d, data) for _ in range(4))
+    vh = np.abs(vec(None, d, data))
+    v = np.abs(v)
+    got = po.amsgrad_update_pallas(
+        *(jnp.asarray(a) for a in (m, v, vh, x, g)), jnp.float32(alpha),
+        beta1=beta1, beta2=beta2, nu=nu)
+    want = ref.amsgrad_update(
+        *(jnp.asarray(a) for a in (m, v, vh, x)), jnp.asarray(g),
+        alpha=alpha, beta1=beta1, beta2=beta2, nu=nu)
+    for a, b, name in zip(got, want, ["m", "v", "vhat", "x"]):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=1e-4, err_msg=name)
+
+
+def test_amsgrad_vhat_monotone():
+    rng = np.random.default_rng(0)
+    d = 512
+    m = v = vh = jnp.zeros(d, jnp.float32)
+    x = jnp.asarray(rng.normal(size=d), jnp.float32)
+    prev = np.zeros(d, np.float32)
+    for _ in range(10):
+        g = jnp.asarray(rng.normal(size=d), jnp.float32)
+        m, v, vh, x = po.amsgrad_update_pallas(
+            m, v, vh, x, g, jnp.float32(1e-2), beta1=0.9, beta2=0.99, nu=1e-8)
+        assert np.all(np.asarray(vh) >= prev - 1e-7)
+        prev = np.asarray(vh)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, data=st.data())
+def test_mask_apply(d, data):
+    x = vec(None, d, data)
+    mask = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=d, max_size=d)))
+    got = po.mask_apply_pallas(jnp.asarray(x), jnp.asarray(mask))
+    want = ref.randk(jnp.asarray(x), jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([10, 128, 300, 1000]), data=st.data())
+def test_topk(d, data):
+    x = vec(None, d, data)
+    k = data.draw(st.integers(1, d))
+    got = np.asarray(po.topk_pallas(jnp.asarray(x), k))
+    want = np.asarray(ref.topk(jnp.asarray(x), k))
+    np.testing.assert_array_equal(got, want)
+    assert np.count_nonzero(got) <= k
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=DIMS, data=st.data())
+def test_contraction_scaled_sign(d, data):
+    """Assumption 4.1: ||C(x)-x||^2 <= (1 - ||x||_1^2/(d ||x||_2^2)) ||x||^2."""
+    x = vec(None, d, data)
+    nx2 = float(np.sum(x.astype(np.float64) ** 2))
+    if nx2 < 1e-12:
+        return
+    c = np.asarray(po.scaled_sign_pallas(jnp.asarray(x)), np.float64)
+    err = float(np.sum((c - x) ** 2))
+    l1 = float(np.sum(np.abs(x.astype(np.float64))))
+    bound = (1.0 - l1 * l1 / (d * nx2)) * nx2
+    assert err <= bound * (1 + 1e-3) + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([100, 1000]), data=st.data())
+def test_markov_error_tracks_convergent_sequence(d, data):
+    """Eq (5.1): if the source sequence converges, the Markov compression
+    error contracts instead of accumulating."""
+    x = vec(None, d, data)
+    g = jnp.asarray(x)
+    gh = jnp.zeros(d, jnp.float32)
+    errs = []
+    for t in range(30):
+        _, gh = ref.markov_step(g, gh)
+        errs.append(float(jnp.linalg.norm(gh - g)))
+        # a convergent (here: constant) underlying sequence
+    if errs[0] > 1e-6:
+        assert errs[-1] <= errs[0] * 0.9 + 1e-5

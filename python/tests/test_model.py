@@ -1,0 +1,125 @@
+"""Layer-2 model checks: shapes, finite-difference gradients, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import MlpConfig, TlmConfig, MLP_PRESETS, TLM_PRESETS
+
+jax.config.update("jax_enable_x64", False)
+
+
+def fd_check(loss_fn, flat, args, idxs, eps=1e-2, rtol=0.15):
+    """Central finite differences vs autodiff on selected coordinates."""
+    _, grad = jax.value_and_grad(loss_fn)(flat, *args)
+    grad = np.asarray(grad)
+    for i in idxs:
+        e = np.zeros_like(np.asarray(flat))
+        e[i] = eps
+        lp = float(loss_fn(flat + e, *args))
+        lm = float(loss_fn(flat - e, *args))
+        fd = (lp - lm) / (2 * eps)
+        if abs(fd) < 1e-4 and abs(grad[i]) < 1e-4:
+            continue
+        np.testing.assert_allclose(grad[i], fd, rtol=rtol, atol=2e-3)
+
+
+class TestMlp:
+    cfg = MlpConfig(input_dim=20, hidden=(16,), classes=4, batch=8)
+
+    def _batch(self, seed=0):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(self.cfg.batch, 20)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 4, self.cfg.batch), jnp.int32)
+        return x, y
+
+    def test_param_count(self):
+        assert self.cfg.param_count == 20 * 16 + 16 + 16 * 4 + 4
+
+    def test_logits_shape(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        x, _ = self._batch()
+        assert self.cfg.logits(flat, x).shape == (8, 4)
+
+    def test_loss_is_log_c_at_init_scale(self):
+        # At random init the loss should be near ln(classes).
+        flat = jnp.asarray(self.cfg.init(0)) * 0.0
+        x, y = self._batch()
+        assert abs(float(self.cfg.loss(flat, x, y)) - np.log(4)) < 1e-5
+
+    def test_grad_finite_diff(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        x, y = self._batch()
+        fd_check(self.cfg.loss, flat, (x, y), idxs=[0, 5, 100, 300, -1])
+
+    def test_trains_with_amsgrad(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        x, y = self._batch()
+        m = v = vh = jnp.zeros_like(flat)
+        l0 = float(self.cfg.loss(flat, x, y))
+        for _ in range(30):
+            _, g = self.cfg.loss_and_grad(flat, x, y)
+            m, v, vh, flat = ref.amsgrad_update(
+                m, v, vh, flat, g, alpha=5e-2, beta1=0.9, beta2=0.99, nu=1e-8)
+        assert float(self.cfg.loss(flat, x, y)) < l0 * 0.5
+
+
+class TestTlm:
+    cfg = TlmConfig(vocab=32, d_model=16, n_layers=1, n_heads=2, seq=8, batch=2)
+
+    def _batch(self, seed=0):
+        rng = np.random.default_rng(seed)
+        t = jnp.asarray(rng.integers(0, 32, (2, 8)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 32, (2, 8)), jnp.int32)
+        return t, y
+
+    def test_param_count_matches_shapes(self):
+        flat = self.cfg.init(0)
+        assert flat.size == self.cfg.param_count
+
+    def test_logits_shape(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        t, _ = self._batch()
+        assert self.cfg.logits(flat, t).shape == (2, 8, 32)
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        flat = jnp.asarray(self.cfg.init(1))
+        t, _ = self._batch()
+        base = np.asarray(self.cfg.logits(flat, t))
+        t2 = t.at[0, 7].set((t[0, 7] + 1) % 32)
+        pert = np.asarray(self.cfg.logits(flat, t2))
+        np.testing.assert_allclose(base[0, :7], pert[0, :7], atol=1e-5)
+        assert not np.allclose(base[0, 7], pert[0, 7], atol=1e-5)
+
+    def test_grad_finite_diff(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        t, y = self._batch()
+        P = self.cfg.param_count
+        fd_check(self.cfg.loss, flat, (t, y), idxs=[1, P // 3, P // 2, P - 5])
+
+    def test_trains(self):
+        flat = jnp.asarray(self.cfg.init(0))
+        t, y = self._batch()
+        m = v = vh = jnp.zeros_like(flat)
+        l0 = float(self.cfg.loss(flat, t, y))
+        step = jax.jit(lambda fl, m, v, vh: (lambda lg: ref.amsgrad_update(
+            m, v, vh, fl, lg[1], alpha=1e-2, beta1=0.9, beta2=0.99, nu=1e-8))(
+            self.cfg.loss_and_grad(fl, t, y)))
+        for _ in range(60):
+            m, v, vh, flat = step(flat, m, v, vh)
+        assert float(self.cfg.loss(flat, t, y)) < l0 - 0.5
+
+
+@pytest.mark.parametrize("name,cfg", list(MLP_PRESETS.items()))
+def test_mlp_presets_param_counts(name, cfg):
+    assert cfg.init(0).size == cfg.param_count
+
+
+def test_tlm_presets_consistent():
+    for name, cfg in TLM_PRESETS.items():
+        assert cfg.param_count == sum(
+            int(np.prod(s)) for s in cfg.shapes())
+    assert TLM_PRESETS["gpt_100m"].param_count > 80_000_000

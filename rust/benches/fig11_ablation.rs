@@ -1,0 +1,72 @@
+//! Fig. 11 (§E.3): ablation on the number of workers n and the batch
+//! size τ — training loss vs iteration.
+//!
+//! Expected shape (paper): larger n speeds the early loss decrease but
+//! does not strictly improve the final value; larger τ converges faster.
+
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::run_lockstep;
+use cdadam::harness::{print_series, quick_rounds, save};
+use cdadam::metrics::RunLog;
+use cdadam::util::args::Args;
+
+fn run_with(n: usize, tau: usize, rounds: usize, label: String) -> anyhow::Result<RunLog> {
+    let mut cfg = ExperimentConfig::preset("fig2_a9a")?;
+    cfg.lr = 0.001; // CD-Adam's tuned grid value (see harness::fig2_variants)
+    cfg.n = n;
+    cfg.tau = tau;
+    cfg.rounds = rounds;
+    cfg.eval_every = (rounds / 20).max(1);
+    let mut log = run_lockstep(&cfg)?;
+    log.label = label;
+    Ok(log)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.usize("rounds", quick_rounds(300, args.flag("quick")))?;
+
+    let n_runs: Vec<RunLog> = [2usize, 4, 8, 16, 32]
+        .iter()
+        .map(|&n| run_with(n, 128, rounds, format!("n={n}")))
+        .collect::<anyhow::Result<_>>()?;
+    print_series("fig11-left: n ablation (tau=128)", &n_runs);
+    save("fig11_n", &n_runs)?;
+
+    let tau_runs: Vec<RunLog> = [8usize, 32, 128, 512]
+        .iter()
+        .map(|&tau| run_with(8, tau, rounds, format!("tau={tau}")))
+        .collect::<anyhow::Result<_>>()?;
+    print_series("fig11-right: tau ablation (n=8)", &tau_runs);
+    save("fig11_tau", &tau_runs)?;
+
+    println!("\n### fig11 final train loss");
+    for r in n_runs.iter().chain(&tau_runs) {
+        println!("{}\t{:.5}", r.label, r.last().unwrap().train_loss);
+    }
+
+    // ----- design-choice ablation (paper §5): worker-side vs server-side
+    // model update at identical bit budget --------------------------------
+    let mut side_runs: Vec<RunLog> = Vec::new();
+    for (strategy, label) in [("cdadam", "worker_side"), ("cdadam_server", "server_side")] {
+        let mut cfg = ExperimentConfig::preset("fig2_a9a")?;
+        cfg.strategy = strategy.into();
+        cfg.lr = 0.001;
+        cfg.rounds = rounds;
+        cfg.eval_every = (rounds / 20).max(1);
+        let mut log = run_lockstep(&cfg)?;
+        log.label = label.into();
+        side_runs.push(log);
+    }
+    print_series("fig11-extra: worker-side vs server-side update (design §5)", &side_runs);
+    save("fig11_update_side", &side_runs)?;
+    let gn = |label: &str| {
+        side_runs.iter().find(|r| r.label == label).unwrap().last().unwrap().grad_norm
+    };
+    println!(
+        "\nworker-side grad norm {:.4e} vs server-side {:.4e} (same bits; paper §5 predicts worker-side wins)",
+        gn("worker_side"),
+        gn("server_side")
+    );
+    Ok(())
+}

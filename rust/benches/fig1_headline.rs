@@ -1,0 +1,45 @@
+//! Fig. 1 (headline): training loss / test accuracy against
+//! communication bits for CD-Adam vs original AMSGrad vs 1-bit Adam —
+//! the "~32× over AMSGrad, ~5× over 1-bit Adam" claim.
+//!
+//! The two ratios are wire-format arithmetic and must reproduce almost
+//! exactly at equal rounds:
+//!   uncompressed / CD-Adam = 32d / (32+d) → 32 as d grows;
+//!   1-bit Adam / CD-Adam   = [32d·2T₁ + (32+d)·2(T−T₁)] / [(32+d)·2T]
+//!   ≈ 1 + 31·T₁/T → ≈ 5 at the paper's 13% warm-up.
+//! This bench measures both from the metered links and prints the
+//! loss/accuracy-vs-bits series.
+
+use cdadam::harness::{print_series, print_summary, quick_rounds, save, sweep, Variant};
+use cdadam::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.usize("rounds", quick_rounds(400, args.flag("quick")))?;
+    let variants = [
+        Variant::new("cdadam", "scaled_sign", 0.0),
+        Variant::new("uncompressed_amsgrad", "identity", 0.0),
+        Variant::new("onebit_adam", "scaled_sign", 0.0),
+    ];
+    let runs = sweep("image_resnet_mini", &variants, |c| {
+        c.rounds = rounds;
+        c.lr_milestones = vec![rounds / 2, rounds * 3 / 4];
+        c.eval_every = (rounds / 20).max(1);
+    })?;
+    print_series("fig1 resnet_mini loss/acc vs bits", &runs);
+    print_summary("fig1", &runs);
+    save("fig1_headline", &runs)?;
+
+    let bits = |label: &str| {
+        runs.iter().find(|r| r.label.starts_with(label)).unwrap().total_bits() as f64
+    };
+    let cd = bits("cdadam");
+    let ratio_unc = bits("uncompressed") / cd;
+    let ratio_1bit = bits("onebit_adam") / cd;
+    println!("\n### fig1 headline ratios (equal rounds = {rounds})");
+    println!("uncompressed AMSGrad / CD-Adam bits: {ratio_unc:.1}x   (paper: ~32x)");
+    println!("1-bit Adam / CD-Adam bits:           {ratio_1bit:.1}x   (paper: ~5x)");
+    anyhow::ensure!(ratio_unc > 25.0, "32x claim failed: {ratio_unc}");
+    anyhow::ensure!(ratio_1bit > 3.0 && ratio_1bit < 8.0, "5x claim failed: {ratio_1bit}");
+    Ok(())
+}

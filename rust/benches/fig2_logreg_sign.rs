@@ -1,0 +1,34 @@
+//! Fig. 2: gradient-norm convergence of {CD-Adam, EF, naive,
+//! uncompressed} AMSGrad with the scaled-sign compressor on the four
+//! LibSVM-shaped datasets (n = 20, full batch) — both x-axes (bits and
+//! iterations).
+//!
+//! Expected shape (paper): CD-Adam ≈ uncompressed per iteration and far
+//! better per bit; EF and naive stall at a higher gradient-norm floor.
+
+use cdadam::harness::{fig2_variants, grid_search_lr, print_series, print_summary, quick_rounds, save, sweep};
+use cdadam::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.usize("rounds", quick_rounds(1000, args.flag("quick")))?;
+    let grid = args.flag("grid"); // redo the paper's per-method lr search
+    for ds in ["phishing", "mushrooms", "a9a", "w8a"] {
+        let mut variants = fig2_variants("scaled_sign");
+        if grid {
+            for v in variants.iter_mut() {
+                let (lr, gn) = grid_search_lr(&format!("fig2_{ds}"), *v, rounds / 4)?;
+                eprintln!("  grid: {} best lr {lr} (grad norm {gn:.2e})", v.strategy);
+                v.lr = lr;
+            }
+        }
+        let runs = sweep(&format!("fig2_{ds}"), &variants, |c| {
+            c.rounds = rounds;
+            c.eval_every = (rounds / 25).max(1);
+        })?;
+        print_series(&format!("fig2 {ds} (scaled_sign)"), &runs);
+        print_summary(&format!("fig2 {ds}"), &runs);
+        save(&format!("fig2_{ds}_scaled_sign"), &runs)?;
+    }
+    Ok(())
+}

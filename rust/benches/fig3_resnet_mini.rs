@@ -1,0 +1,24 @@
+//! Fig. 3 + Figs. 5/6: full metric grid (train/test loss, gradient norm, accuracy)
+//! against both epochs and communication bits for the resnet_mini
+//! architecture stand-in — CD-Adam vs EF21 (bidirectional) vs 1-bit Adam.
+//!
+//! Expected shape (paper): CD-Adam matches or beats EF21 late in
+//! training (adaptivity wins), beats 1-bit Adam per bit (no warm-up),
+//! and 1-bit Adam's gradient norm can drift up after its freeze.
+
+use cdadam::harness::{fig3_variants, print_series, print_summary, quick_rounds, save, sweep};
+use cdadam::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.usize("rounds", quick_rounds(400, args.flag("quick")))?;
+    let runs = sweep("image_resnet_mini", &fig3_variants(), |c| {
+        c.rounds = rounds;
+        c.lr_milestones = vec![rounds / 2, rounds * 3 / 4];
+        c.eval_every = (rounds / 20).max(1);
+    })?;
+    print_series("Fig. 3 + Figs. 5/6 resnet_mini", &runs);
+    print_summary("Fig. 3 + Figs. 5/6 resnet_mini", &runs);
+    save("fig3_resnet_mini", &runs)?;
+    Ok(())
+}

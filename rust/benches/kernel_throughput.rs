@@ -1,0 +1,76 @@
+//! L3 hot-path micro-benchmarks: the per-round kernels at model
+//! dimension — sign pack/unpack, top-k selection, Markov step, fused
+//! AMSGrad update, EF step. Feeds the §Perf optimization loop
+//! (EXPERIMENTS.md): each row is elements/s and effective GB/s.
+
+use cdadam::compress::{packing, Compressor, ScaledSign, TopK};
+use cdadam::markov::MarkovEncoder;
+use cdadam::optim::{AmsGrad, Optimizer};
+use cdadam::util::args::Args;
+use cdadam::util::rng::Rng;
+use cdadam::util::timer::bench;
+
+fn row(name: &str, d: usize, bytes_per_elem: f64, iters: usize, f: impl FnMut()) {
+    let st = bench(3, iters, f);
+    let ms = st.mean();
+    let meps = d as f64 / ms / 1e3; // million elements / s
+    let gbps = d as f64 * bytes_per_elem / (ms * 1e-3) / 1e9;
+    println!("{name:<26} d={d:>9}  {ms:>9.3} ms  {meps:>9.1} Melem/s  {gbps:>7.2} GB/s");
+}
+
+fn main() {
+    let args = Args::from_env();
+    let d: usize = args.usize("d", 4_000_000).unwrap();
+    let iters = args.usize("iters", if args.flag("quick") { 5 } else { 15 }).unwrap();
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0f32; d];
+    rng.fill_normal(&mut x, 1.0);
+
+    println!("### kernel_throughput (d = {d}, {iters} iters, mean)");
+
+    let mut bits = packing::pack_signs(&x);
+    row("pack_signs", d, 4.0, iters, || {
+        bits = packing::pack_signs(&x);
+    });
+
+    let mut out = vec![0.0f32; d];
+    row("unpack_signs_scaled", d, 4.0, iters, || {
+        packing::unpack_signs_scaled(&bits, 0.5, &mut out);
+    });
+
+    row("add_signs_scaled", d, 8.0, iters, || {
+        packing::add_signs_scaled(&bits, 0.5, &mut out);
+    });
+
+    let mut ss = ScaledSign::new();
+    row("scaled_sign compress", d, 8.0, iters, || {
+        std::hint::black_box(ss.compress(&x));
+    });
+
+    let mut tk = TopK::with_frac(0.016);
+    row("topk compress (k=1.6%)", d, 8.0, iters, || {
+        std::hint::black_box(tk.compress(&x));
+    });
+
+    let mut enc = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
+    row("markov sign step", d, 16.0, iters, || {
+        std::hint::black_box(enc.step(&x));
+    });
+
+    let mut opt = AmsGrad::paper_defaults(d);
+    let mut params = vec![0.0f32; d];
+    // 7 vector streams: m,v,vhat read+write, params read+write, grad read
+    row("fused amsgrad step", d, 28.0, iters, || {
+        opt.step(&mut params, &x, 1e-3);
+    });
+
+    // full CD-Adam worker round (compress + markov + decode + update)
+    let mut enc2 = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
+    let mut dec_state = vec![0.0f32; d];
+    let mut opt2 = AmsGrad::paper_defaults(d);
+    row("cdadam worker round", d, 44.0, iters, || {
+        let c = enc2.step(&x);
+        c.add_into(&mut dec_state);
+        opt2.step(&mut params, &dec_state, 1e-3);
+    });
+}

@@ -1,0 +1,188 @@
+//! **CD-Adam** (paper Algorithm 1): bidirectionally-compressed
+//! distributed AMSGrad via Markov compression sequences with worker-side
+//! model updates.
+//!
+//! Worker i (lines 3–6, 11–16):
+//! ```text
+//!   c_t^{(i)} = C(g_t^{(i)} − ĝ_{t−1}^{(i)});   ĝ_t^{(i)} = ĝ_{t−1}^{(i)} + c_t^{(i)}
+//!   g̃_t = g̃_{t−1} + c_t                        (downlink replica)
+//!   AMSGrad update of x with g̃_t
+//! ```
+//! Server (lines 7–10):
+//! ```text
+//!   ĝ_t = ĝ_{t−1} + (1/n) Σ_i c_t^{(i)}
+//!   c_t = C(ĝ_t − g̃_{t−1});   g̃_t = g̃_{t−1} + c_t
+//! ```
+//!
+//! Note the server aggregates in *compressed-difference* space: it only
+//! ever adds decoded messages into its running ĝ state, so per-round
+//! server work is O(d + Σ message sizes) and the uplink Markov invariant
+//! (server ĝ == mean of worker ĝ^{(i)}) holds exactly — tested below.
+
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::markov::{MarkovDecoder, MarkovEncoder};
+use crate::optim::{AmsGrad, Optimizer};
+
+/// CD-Adam strategy factory.
+pub struct CdAdam {
+    pub compressor: Box<dyn Compressor>,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+    pub weight_decay: f32,
+}
+
+impl CdAdam {
+    pub fn new(compressor: Box<dyn Compressor>) -> Self {
+        CdAdam { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+    }
+
+    pub fn with_betas(mut self, beta1: f32, beta2: f32, nu: f32) -> Self {
+        self.beta1 = beta1;
+        self.beta2 = beta2;
+        self.nu = nu;
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Strategy for CdAdam {
+    fn name(&self) -> &'static str {
+        "cdadam"
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        Box::new(CdAdamWorker {
+            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            dec: MarkovDecoder::new(dim),
+            opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu)
+                .with_weight_decay(self.weight_decay),
+        })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(CdAdamServer {
+            ghat_agg: vec![0.0; dim],
+            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+        })
+    }
+}
+
+/// Worker half: uplink Markov encoder ĝ^{(i)}, downlink replica g̃, AMSGrad.
+pub struct CdAdamWorker {
+    enc: MarkovEncoder,
+    dec: MarkovDecoder,
+    opt: AmsGrad,
+}
+
+impl WorkerAlgo for CdAdamWorker {
+    fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
+        self.enc.step(grad)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        self.dec.apply(msg);
+        // disjoint-field borrows: g̃ lives in self.dec, state in self.opt.
+        self.opt.step(params, self.dec.state(), lr);
+    }
+}
+
+/// Server half: running ĝ aggregate + downlink Markov encoder.
+pub struct CdAdamServer {
+    /// ĝ_t = ĝ_{t−1} + (1/n) Σ c_t^{(i)} — the Markov-reconstructed mean
+    /// of the workers' compressed gradients.
+    ghat_agg: Vec<f32>,
+    enc: MarkovEncoder,
+}
+
+impl ServerAlgo for CdAdamServer {
+    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        let inv = 1.0 / uplinks.len() as f32;
+        for c in uplinks {
+            c.add_scaled_into(&mut self.ghat_agg, inv);
+        }
+        self.enc.step(&self.ghat_agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+    use crate::compress::{Identity, ScaledSign, TopK};
+    use crate::markov::MarkovDecoder;
+
+    #[test]
+    fn converges_on_quadratic_scaled_sign() {
+        let strat = CdAdam::new(Box::new(ScaledSign::new()));
+        let (_, traj) = drive(&strat, 40, 4, 400, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.1), "traj {:?} -> {:?}", traj[0], traj.last());
+    }
+
+    #[test]
+    fn converges_on_quadratic_topk() {
+        let strat = CdAdam::new(Box::new(TopK::with_frac(0.25)));
+        let (_, traj) = drive(&strat, 40, 4, 600, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.15));
+    }
+
+    #[test]
+    fn identity_compressor_equals_uncompressed_amsgrad() {
+        // π = 0 ⇒ CD-Adam degenerates to vanilla distributed AMSGrad.
+        let cd = CdAdam::new(Box::new(Identity));
+        let un = crate::algo::uncompressed::Uncompressed::amsgrad();
+        let (x_cd, _) = drive(&cd, 25, 3, 100, 0.05);
+        let (x_un, _) = drive(&un, 25, 3, 100, 0.05);
+        for (a, b) in x_cd.iter().zip(&x_un) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn server_ghat_equals_mean_of_worker_ghats() {
+        // Line 8 invariant: ĝ_t (server) == (1/n) Σ ĝ_t^{(i)} exactly.
+        let dim = 30;
+        let n = 4;
+        let strat = CdAdam::new(Box::new(ScaledSign::new()));
+        let mut workers: Vec<Box<dyn WorkerAlgo>> =
+            (0..n).map(|i| strat.make_worker(dim, i)).collect();
+        let mut enc_states: Vec<MarkovDecoder> = (0..n).map(|_| MarkovDecoder::new(dim)).collect();
+        let mut server_agg = vec![0.0f32; dim];
+        let mut rng = crate::util::rng::Rng::new(17);
+        for t in 1..=20 {
+            let mut ups = Vec::new();
+            for (i, w) in workers.iter_mut().enumerate() {
+                let mut g = vec![0.0f32; dim];
+                rng.fill_normal(&mut g, 1.0);
+                let c = w.uplink(t, &g);
+                enc_states[i].apply(&c); // shadow replica of worker ĝ^(i)
+                ups.push(c);
+            }
+            let inv = 1.0 / n as f32;
+            for c in &ups {
+                c.add_scaled_into(&mut server_agg, inv);
+            }
+            let mut mean = vec![0.0f32; dim];
+            for st in &enc_states {
+                crate::tensor::axpy(&mut mean, inv, st.state());
+            }
+            for (a, b) in server_agg.iter().zip(&mean) {
+                assert!((a - b).abs() < 1e-4, "round {t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn uplink_bits_are_one_bit_per_coord() {
+        let strat = CdAdam::new(Box::new(ScaledSign::new()));
+        let mut w = strat.make_worker(1000, 0);
+        let g = vec![1.0f32; 1000];
+        let c = w.uplink(1, &g);
+        assert_eq!(c.wire_bits(), 32 + 1000);
+    }
+}

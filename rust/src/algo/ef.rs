@@ -1,0 +1,154 @@
+//! Classical error feedback (Karimireddy et al. 2019; paper §4) applied
+//! to AMSGrad — the "EF" baseline of Figs. 2/4.
+//!
+//! Worker memory: δ_t^{(i)} = (g + δ_{t−1}) − C(g + δ_{t−1}); uplink is
+//! C(g + δ_{t−1}). The server keeps its own EF memory for the downlink
+//! so both directions are compressed (same budget as CD-Adam). EF only
+//! guarantees a *constant* compression-error bound, so the AMSGrad
+//! variance accumulates the quadratic error term of eq. (4.2) — the
+//! mechanism behind EF's stalling gradient norm in Fig. 2.
+
+use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::optim::{AmsGrad, Optimizer};
+use crate::tensor;
+
+/// Error-feedback AMSGrad (bidirectional).
+pub struct ErrorFeedback {
+    pub compressor: Box<dyn Compressor>,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+}
+
+impl ErrorFeedback {
+    pub fn new(compressor: Box<dyn Compressor>) -> Self {
+        ErrorFeedback { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+    }
+}
+
+impl Strategy for ErrorFeedback {
+    fn name(&self) -> &'static str {
+        "ef"
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        Box::new(EfWorker {
+            comp: self.compressor.clone(),
+            delta: vec![0.0; dim],
+            e: vec![0.0; dim],
+            buf: vec![0.0; dim],
+            opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu),
+        })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(EfServer {
+            comp: self.compressor.clone(),
+            delta: vec![0.0; dim],
+            e: vec![0.0; dim],
+            buf: vec![0.0; dim],
+        })
+    }
+}
+
+/// Shared EF step: e = x + δ; c = C(e); δ = e − decode(c).
+fn ef_step(
+    comp: &mut dyn Compressor,
+    x: &[f32],
+    delta: &mut [f32],
+    e: &mut [f32],
+    buf: &mut [f32],
+) -> CompressedMsg {
+    for ((ei, &xi), &di) in e.iter_mut().zip(x).zip(delta.iter()) {
+        *ei = xi + di;
+    }
+    let c = comp.compress(e);
+    c.decode_into(buf);
+    tensor::sub(delta, e, buf);
+    c
+}
+
+struct EfWorker {
+    comp: Box<dyn Compressor>,
+    delta: Vec<f32>,
+    e: Vec<f32>,
+    buf: Vec<f32>,
+    opt: AmsGrad,
+}
+
+impl WorkerAlgo for EfWorker {
+    fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
+        ef_step(self.comp.as_mut(), grad, &mut self.delta, &mut self.e, &mut self.buf)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        msg.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
+}
+
+struct EfServer {
+    comp: Box<dyn Compressor>,
+    delta: Vec<f32>,
+    e: Vec<f32>,
+    buf: Vec<f32>,
+}
+
+impl ServerAlgo for EfServer {
+    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        let mut avg = vec![0.0f32; self.buf.len()];
+        average_into(uplinks, &mut avg);
+        ef_step(self.comp.as_mut(), &avg, &mut self.delta, &mut self.e, &mut self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+    use crate::compress::{ScaledSign, TopK};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ef_memory_is_bounded_on_bounded_gradients() {
+        // the EF guarantee: ‖δ_t‖ stays bounded when ‖g_t‖ is bounded.
+        let mut comp: Box<dyn Compressor> = Box::new(TopK::with_frac(0.1));
+        let d = 100;
+        let mut delta = vec![0.0f32; d];
+        let mut e = vec![0.0f32; d];
+        let mut buf = vec![0.0f32; d];
+        let mut rng = Rng::new(5);
+        let mut max_norm = 0.0f64;
+        for _ in 0..300 {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            ef_step(comp.as_mut(), &g, &mut delta, &mut e, &mut buf);
+            max_norm = max_norm.max(tensor::norm2(&delta));
+        }
+        // ‖g‖ ≈ 10; EF theory bounds ‖δ‖ ≤ 2(1−π)^{-1}·max‖g‖·sqrt(π)-ish;
+        // the point is it must not grow unboundedly over 300 rounds.
+        assert!(max_norm < 300.0, "EF memory grew to {max_norm}");
+    }
+
+    #[test]
+    fn improves_on_naive_with_top1() {
+        let ef = ErrorFeedback::new(Box::new(TopK::with_k(1)));
+        let naive = crate::algo::naive::Naive::new(Box::new(TopK::with_k(1)));
+        let (_, te) = drive(&ef, 30, 2, 800, 0.05);
+        let (_, tn) = drive(&naive, 30, 2, 800, 0.05);
+        assert!(
+            te.last().unwrap() < tn.last().unwrap(),
+            "ef {} vs naive {}",
+            te.last().unwrap(),
+            tn.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let ef = ErrorFeedback::new(Box::new(ScaledSign::new()));
+        let (_, traj) = drive(&ef, 40, 4, 600, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.5));
+    }
+}

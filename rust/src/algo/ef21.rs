@@ -1,0 +1,123 @@
+//! EF21 baseline (Richtárik et al. 2021), extended to bidirectional
+//! compression exactly as the paper does for its §7.2 comparison: the
+//! same Markov-compression comm stack as CD-Adam, but the local update
+//! rule is SGD (+ optional momentum / weight decay) instead of AMSGrad.
+//!
+//! Comparing `ef21` vs `cdadam` therefore isolates the paper's claim
+//! that the *adaptive* update is what wins at later training stages —
+//! comm cost per round is identical by construction.
+
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::markov::{MarkovDecoder, MarkovEncoder};
+use crate::optim::{Optimizer, SgdMomentum};
+
+/// EF21 with bidirectional Markov compression + SGD update.
+pub struct Ef21 {
+    pub compressor: Box<dyn Compressor>,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Ef21 {
+    pub fn new(compressor: Box<dyn Compressor>) -> Self {
+        Ef21 { compressor, momentum: 0.0, weight_decay: 0.0 }
+    }
+
+    pub fn with_momentum(mut self, m: f32) -> Self {
+        self.momentum = m;
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Strategy for Ef21 {
+    fn name(&self) -> &'static str {
+        "ef21"
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        Box::new(Ef21Worker {
+            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            dec: MarkovDecoder::new(dim),
+            opt: SgdMomentum::new(dim, self.momentum).with_weight_decay(self.weight_decay),
+        })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(Ef21Server {
+            ghat_agg: vec![0.0; dim],
+            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+        })
+    }
+}
+
+struct Ef21Worker {
+    enc: MarkovEncoder,
+    dec: MarkovDecoder,
+    opt: SgdMomentum,
+}
+
+impl WorkerAlgo for Ef21Worker {
+    fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
+        self.enc.step(grad)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        self.dec.apply(msg);
+        self.opt.step(params, self.dec.state(), lr);
+    }
+}
+
+struct Ef21Server {
+    ghat_agg: Vec<f32>,
+    enc: MarkovEncoder,
+}
+
+impl ServerAlgo for Ef21Server {
+    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        let inv = 1.0 / uplinks.len() as f32;
+        for c in uplinks {
+            c.add_scaled_into(&mut self.ghat_agg, inv);
+        }
+        self.enc.step(&self.ghat_agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+    use crate::compress::{ScaledSign, TopK};
+
+    #[test]
+    fn converges_on_quadratic() {
+        let s = Ef21::new(Box::new(ScaledSign::new()));
+        let (_, traj) = drive(&s, 40, 4, 500, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.2));
+    }
+
+    #[test]
+    fn topk_paper_ratio_converges() {
+        // K = 0.016d is the paper's EF21 setting; on a small quadratic a
+        // larger frac is needed for 500 rounds, use 0.05 for signal.
+        let s = Ef21::new(Box::new(TopK::with_frac(0.05)));
+        let (_, traj) = drive(&s, 100, 4, 800, 0.1);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.5));
+    }
+
+    #[test]
+    fn comm_cost_matches_cdadam() {
+        // per-round uplink bits identical to CD-Adam by construction
+        let ef21 = Ef21::new(Box::new(ScaledSign::new()));
+        let cd = crate::algo::cdadam::CdAdam::new(Box::new(ScaledSign::new()));
+        let g = vec![1.0f32; 500];
+        let b1 = ef21.make_worker(500, 0).uplink(1, &g).wire_bits();
+        let b2 = cd.make_worker(500, 0).uplink(1, &g).wire_bits();
+        assert_eq!(b1, b2);
+    }
+}

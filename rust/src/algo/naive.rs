@@ -1,0 +1,99 @@
+//! Naive compression baseline (paper §4): compress the fresh gradient
+//! directly, no memory anywhere. Known to stall or diverge because the
+//! compression error accumulates — exactly what Fig. 2's "naive" curve
+//! shows flat-lining above the others.
+
+use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::optim::{AmsGrad, Optimizer};
+
+/// Naive bidirectional compression with worker-side AMSGrad.
+pub struct Naive {
+    pub compressor: Box<dyn Compressor>,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+}
+
+impl Naive {
+    pub fn new(compressor: Box<dyn Compressor>) -> Self {
+        Naive { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+    }
+}
+
+impl Strategy for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        Box::new(NaiveWorker {
+            comp: self.compressor.clone(),
+            opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu),
+            buf: vec![0.0; dim],
+        })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(NaiveServer { comp: self.compressor.clone(), buf: vec![0.0; dim] })
+    }
+}
+
+struct NaiveWorker {
+    comp: Box<dyn Compressor>,
+    opt: AmsGrad,
+    buf: Vec<f32>,
+}
+
+impl WorkerAlgo for NaiveWorker {
+    fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
+        self.comp.compress(grad)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        msg.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
+}
+
+struct NaiveServer {
+    comp: Box<dyn Compressor>,
+    buf: Vec<f32>,
+}
+
+impl ServerAlgo for NaiveServer {
+    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        average_into(uplinks, &mut self.buf);
+        self.comp.compress(&self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+    use crate::compress::{ScaledSign, TopK};
+
+    #[test]
+    fn makes_progress_but_stalls_vs_cdadam() {
+        // Naive sign compression reaches a neighbourhood but cannot match
+        // CD-Adam's final error on the same budget — the Fig. 2 shape.
+        // (lr in the convergent regime for both; cf. the paper's grid.)
+        let naive = Naive::new(Box::new(ScaledSign::new()));
+        let cd = crate::algo::cdadam::CdAdam::new(Box::new(ScaledSign::new()));
+        let (_, tn) = drive(&naive, 40, 4, 800, 0.01);
+        let (_, tc) = drive(&cd, 40, 4, 800, 0.01);
+        let (fin_n, fin_c) = (*tn.last().unwrap(), *tc.last().unwrap());
+        assert!(fin_n < tn[0], "naive made no progress at all");
+        assert!(fin_c < fin_n, "cdadam {fin_c} should beat naive {fin_n}");
+    }
+
+    #[test]
+    fn topk_naive_loses_coordinates() {
+        // with top-1 and no memory, most coordinates never move
+        let naive = Naive::new(Box::new(TopK::with_k(1)));
+        let (x, _) = drive(&naive, 50, 2, 50, 0.1);
+        let moved = x.iter().filter(|v| **v != 0.0).count();
+        assert!(moved < 50, "naive top-1 moved {moved}/50 coords in 50 rounds");
+    }
+}

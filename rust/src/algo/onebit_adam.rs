@@ -1,0 +1,254 @@
+//! 1-bit Adam baseline (Tang et al. 2021): uncompressed Adam warm-up for
+//! T₁ rounds, then **freeze the variance term** and run error-feedback-
+//! compressed momentum updates.
+//!
+//! * Stage 1 (t ≤ T₁): dense 32d-bit gradients both ways; every worker
+//!   replays the identical Adam update (variance still adapting).
+//! * Stage 2 (t > T₁): v is pinned at v_{T₁}; workers EF-compress their
+//!   gradients, the server averages and EF-compresses the broadcast;
+//!   workers update momentum with the reconstructed g̃ and step with the
+//!   frozen preconditioner — effectively momentum SGD with a fixed
+//!   diagonal scaling, which is why the paper calls it "no longer fully
+//!   adaptive".
+//!
+//! Total bits/worker: 32d·2T₁ + (32+d)·2(T−T₁) (Table 2 row 3) — the
+//! warm-up term is what makes its per-bit curves lag CD-Adam in Fig. 1.
+
+use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::optim::{Adam, Optimizer};
+use crate::tensor;
+
+/// 1-bit Adam strategy.
+pub struct OneBitAdam {
+    pub compressor: Box<dyn Compressor>,
+    /// warm-up rounds with uncompressed, fully-adaptive Adam.
+    pub warmup_rounds: usize,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+}
+
+impl OneBitAdam {
+    pub fn new(compressor: Box<dyn Compressor>, warmup_rounds: usize) -> Self {
+        OneBitAdam { compressor, warmup_rounds, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+    }
+}
+
+impl Strategy for OneBitAdam {
+    fn name(&self) -> &'static str {
+        "onebit_adam"
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        let mut adam = Adam::new(dim, self.beta1, self.beta2, self.nu);
+        // match Tang et al.'s momentum-SGD-like stage-2 form (no bias
+        // correction so stage-2 and stage-1 preconditioners line up).
+        adam.bias_correction = false;
+        Box::new(OneBitWorker {
+            comp: self.compressor.clone(),
+            warmup: self.warmup_rounds,
+            delta: vec![0.0; dim],
+            e: vec![0.0; dim],
+            buf: vec![0.0; dim],
+            opt: adam,
+        })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(OneBitServer {
+            comp: self.compressor.clone(),
+            warmup: self.warmup_rounds,
+            delta: vec![0.0; dim],
+            e: vec![0.0; dim],
+            buf: vec![0.0; dim],
+        })
+    }
+}
+
+struct OneBitWorker {
+    comp: Box<dyn Compressor>,
+    warmup: usize,
+    delta: Vec<f32>,
+    e: Vec<f32>,
+    buf: Vec<f32>,
+    opt: Adam,
+}
+
+impl WorkerAlgo for OneBitWorker {
+    fn uplink(&mut self, round: usize, grad: &[f32]) -> CompressedMsg {
+        if round <= self.warmup {
+            return CompressedMsg::Dense(grad.to_vec());
+        }
+        // EF-compressed uplink (stage 2)
+        for ((ei, &gi), &di) in self.e.iter_mut().zip(grad).zip(self.delta.iter()) {
+            *ei = gi + di;
+        }
+        let c = self.comp.compress(&self.e);
+        c.decode_into(&mut self.buf);
+        tensor::sub(&mut self.delta, &self.e, &self.buf);
+        c
+    }
+
+    fn apply_downlink(&mut self, round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        if round == self.warmup + 1 && !self.opt.frozen {
+            self.opt.freeze_variance();
+        }
+        msg.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
+}
+
+struct OneBitServer {
+    comp: Box<dyn Compressor>,
+    warmup: usize,
+    delta: Vec<f32>,
+    e: Vec<f32>,
+    buf: Vec<f32>,
+}
+
+impl ServerAlgo for OneBitServer {
+    fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        let mut avg = vec![0.0f32; self.buf.len()];
+        average_into(uplinks, &mut avg);
+        if round <= self.warmup {
+            return CompressedMsg::Dense(avg);
+        }
+        for ((ei, &ai), &di) in self.e.iter_mut().zip(&avg).zip(self.delta.iter()) {
+            *ei = ai + di;
+        }
+        let c = self.comp.compress(&self.e);
+        c.decode_into(&mut self.buf);
+        tensor::sub(&mut self.delta, &self.e, &self.buf);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+    use crate::compress::ScaledSign;
+
+    /// Drive 1-bit Adam on the quadratic with *stochastic* gradients
+    /// (noise keeps every v_i bounded away from 0 — as minibatch noise
+    /// does in real training; the deterministic oracle is degenerate for
+    /// frozen-variance methods). Returns the distance trajectory.
+    fn drive_noisy(warmup: usize, rounds: usize, lr_of: impl Fn(usize) -> f32) -> Vec<f64> {
+        use crate::algo::test_support::Quadratic;
+        let (dim, n) = (40usize, 4usize);
+        let s = OneBitAdam::new(Box::new(ScaledSign::new()), warmup);
+        let problem = Quadratic::new(dim, n);
+        let mut workers: Vec<_> = (0..n).map(|i| s.make_worker(dim, i)).collect();
+        let mut server = s.make_server(dim, n);
+        let mut params = vec![vec![0.0f32; dim]; n];
+        let mut grad = vec![0.0f32; dim];
+        let mut noise = vec![0.0f32; dim];
+        let mut rng = crate::util::rng::Rng::new(21);
+        let mut traj = Vec::new();
+        for t in 1..=rounds {
+            let mut ups = Vec::new();
+            for (i, w) in workers.iter_mut().enumerate() {
+                problem.grad(i, &params[i], &mut grad);
+                rng.fill_normal(&mut noise, 0.2);
+                crate::tensor::axpy(&mut grad, 1.0, &noise);
+                ups.push(w.uplink(t, &grad));
+            }
+            let down = server.round(t, &ups);
+            for (i, w) in workers.iter_mut().enumerate() {
+                w.apply_downlink(t, &down, &mut params[i], lr_of(t));
+            }
+            traj.push(
+                params[0]
+                    .iter()
+                    .zip(&problem.target)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt(),
+            );
+        }
+        traj
+    }
+
+    #[test]
+    fn warmup_progresses_and_early_freeze_is_stable() {
+        // Freezing while gradients are still informative (the paper's
+        // 13%-of-training choice) keeps v_frozen representative and
+        // stage 2 stable.
+        let traj = drive_noisy(30, 300, |_| 0.02);
+        assert!(traj[29] < traj[0], "warm-up made no progress");
+        let fin = *traj.last().unwrap();
+        assert!(fin.is_finite() && fin < traj[0] * 0.6, "{} -> {fin}", traj[0]);
+    }
+
+    #[test]
+    fn late_freeze_is_degenerate_by_design() {
+        // Documents the failure mode the paper alludes to ("its gradient
+        // norm diverges later", Fig. 9): freeze after the warm-up has
+        // essentially converged ⇒ v_frozen ≈ 0 ⇒ giant effective steps.
+        // deterministic oracle (no minibatch noise): v can collapse to ~0
+        let s = OneBitAdam::new(Box::new(ScaledSign::new()), 200);
+        let (_, traj) = drive(&s, 40, 4, 260, 0.05);
+        let at_freeze = traj[199];
+        assert!(at_freeze < traj[0] * 0.2, "warm-up should converge first");
+        let post_max = traj[200..].iter().cloned().fold(0.0f64, f64::max);
+        assert!(post_max > at_freeze * 10.0, "expected post-freeze blow-up, got {post_max}");
+    }
+
+    #[test]
+    fn converges_with_decayed_lr() {
+        // with the paper's multi-step lr decay the stage-2 neighbourhood
+        // shrinks and the full run converges.
+        let traj = drive_noisy(40, 600, |t| {
+            if t <= 300 {
+                0.02
+            } else if t <= 450 {
+                0.002
+            } else {
+                0.0002
+            }
+        });
+        let (d0, dfin) = (traj[0], *traj.last().unwrap());
+        assert!(dfin < d0 * 0.2, "{d0} -> {dfin}");
+    }
+
+    #[test]
+    fn warmup_bits_then_compressed_bits() {
+        let s = OneBitAdam::new(Box::new(ScaledSign::new()), 3);
+        let mut w = s.make_worker(1000, 0);
+        let g = vec![1.0f32; 1000];
+        for t in 1..=3 {
+            assert_eq!(w.uplink(t, &g).wire_bits(), 32_000, "round {t} should be dense");
+        }
+        assert_eq!(w.uplink(4, &g).wire_bits(), 32 + 1000);
+    }
+
+    #[test]
+    fn variance_frozen_after_warmup() {
+        // behavioural check: with an identity compressor, 1-bit Adam must
+        // exactly match an Adam whose variance is frozen after warm-up.
+        let dim = 20;
+        let s2 = OneBitAdam::new(Box::new(crate::compress::Identity), 5);
+        let mut w2 = s2.make_worker(dim, 0);
+        let mut srv2 = s2.make_server(dim, 1);
+        let mut x2 = vec![0.0f32; dim];
+        let mut adam = Adam::new(dim, 0.9, 0.99, 1e-8);
+        adam.bias_correction = false;
+        let mut x_ref = vec![0.0f32; dim];
+        let mut rng = crate::util::rng::Rng::new(3);
+        for t in 1..=20 {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            let up = w2.uplink(t, &g);
+            let down = srv2.round(t, &[up]);
+            w2.apply_downlink(t, &down, &mut x2, 0.01);
+            if t == 6 {
+                adam.freeze_variance();
+            }
+            adam.step(&mut x_ref, &g, 0.01);
+        }
+        for (a, b) in x2.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+}

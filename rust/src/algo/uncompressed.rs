@@ -1,0 +1,154 @@
+//! Uncompressed baseline: vanilla distributed AMSGrad (or SGD), 32 bits
+//! per coordinate in both directions — the paper's "Uncompressed" curve
+//! and the 32d·2T row of Table 2.
+
+use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use crate::compress::CompressedMsg;
+use crate::optim::{AmsGrad, Optimizer, SgdMomentum};
+
+/// Which local update rule the (identical) worker replicas run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rule {
+    AmsGrad,
+    Sgd { momentum: f32 },
+}
+
+/// Uncompressed distributed training.
+pub struct Uncompressed {
+    pub rule: Rule,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+    pub weight_decay: f32,
+}
+
+impl Uncompressed {
+    pub fn amsgrad() -> Self {
+        Uncompressed { rule: Rule::AmsGrad, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+    }
+
+    pub fn sgd(momentum: f32) -> Self {
+        Uncompressed { rule: Rule::Sgd { momentum }, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    fn make_opt(&self, dim: usize) -> Box<dyn Optimizer> {
+        match self.rule {
+            Rule::AmsGrad => Box::new(
+                AmsGrad::new(dim, self.beta1, self.beta2, self.nu)
+                    .with_weight_decay(self.weight_decay),
+            ),
+            Rule::Sgd { momentum } => {
+                Box::new(SgdMomentum::new(dim, momentum).with_weight_decay(self.weight_decay))
+            }
+        }
+    }
+}
+
+impl Strategy for Uncompressed {
+    fn name(&self) -> &'static str {
+        match self.rule {
+            Rule::AmsGrad => "uncompressed_amsgrad",
+            Rule::Sgd { .. } => "uncompressed_sgd",
+        }
+    }
+
+    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+        Box::new(UncompressedWorker { opt: self.make_opt(dim), buf: vec![0.0; dim] })
+    }
+
+    fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
+        Box::new(UncompressedServer { buf: vec![0.0; dim] })
+    }
+}
+
+struct UncompressedWorker {
+    opt: Box<dyn Optimizer>,
+    buf: Vec<f32>,
+}
+
+impl WorkerAlgo for UncompressedWorker {
+    fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
+        CompressedMsg::Dense(grad.to_vec())
+    }
+
+    fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
+        msg.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
+}
+
+struct UncompressedServer {
+    buf: Vec<f32>,
+}
+
+impl ServerAlgo for UncompressedServer {
+    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        average_into(uplinks, &mut self.buf);
+        CompressedMsg::Dense(self.buf.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::test_support::drive;
+
+    #[test]
+    fn amsgrad_converges() {
+        let (_, traj) = drive(&Uncompressed::amsgrad(), 30, 4, 300, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.05));
+    }
+
+    #[test]
+    fn sgd_converges() {
+        let (_, traj) = drive(&Uncompressed::sgd(0.9), 30, 4, 300, 0.05);
+        assert!(traj.last().unwrap() < &(traj[0] * 0.05));
+    }
+
+    #[test]
+    fn bits_are_32d_each_way() {
+        let s = Uncompressed::amsgrad();
+        let mut w = s.make_worker(100, 0);
+        let mut srv = s.make_server(100, 2);
+        let g = vec![1.0f32; 100];
+        let up = w.uplink(1, &g);
+        assert_eq!(up.wire_bits(), 3200);
+        let down = srv.round(1, &[up.clone(), up]);
+        assert_eq!(down.wire_bits(), 3200);
+    }
+
+    #[test]
+    fn matches_single_node_amsgrad() {
+        // n identical workers with homogeneous gradients == single-node.
+        use crate::optim::{AmsGrad, Optimizer};
+        let dim = 10;
+        let s = Uncompressed::amsgrad();
+        let mut w0 = s.make_worker(dim, 0);
+        let mut w1 = s.make_worker(dim, 1);
+        let mut srv = s.make_server(dim, 2);
+        let mut x_dist = vec![0.5f32; dim];
+        let mut x_dist_b = vec![0.5f32; dim];
+        let mut x_single = vec![0.5f32; dim];
+        let mut opt = AmsGrad::paper_defaults(dim);
+        let mut rng = crate::util::rng::Rng::new(8);
+        for t in 1..=50 {
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            let up0 = w0.uplink(t, &g);
+            let up1 = w1.uplink(t, &g);
+            let down = srv.round(t, &[up0, up1]);
+            w0.apply_downlink(t, &down, &mut x_dist, 0.01);
+            w1.apply_downlink(t, &down, &mut x_dist_b, 0.01);
+            opt.step(&mut x_single, &g, 0.01);
+            assert_eq!(x_dist, x_dist_b);
+        }
+        for (a, b) in x_dist.iter().zip(&x_single) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Theory-side reproduction: the constants of Theorem 6.4 and their
+//! dependence on the compression factor π (paper §D, Table 1).
+//!
+//! Given problem constants (G, G∞, L, Δf, σ, ν, β₁, d, n) and a
+//! compressor's π, [`TheoremConstants`] evaluates M₁…M₅ and the
+//! iteration bound T(ε) of eq. (6.1); `order_in_pi` verifies the
+//! (1−π)^{-k} scaling orders Table 1 reports (M₁: −2, M₂: −4, M₃: −6,
+//! M₄: −2, M₅: −4, T: −8).
+
+/// Problem-level constants entering Theorem 6.4.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemConstants {
+    /// ℓ₂ stochastic-gradient bound G (Assumption 6.2).
+    pub g: f64,
+    /// ℓ∞ stochastic-gradient bound G∞.
+    pub g_inf: f64,
+    /// smoothness L (Assumption 6.1).
+    pub l: f64,
+    /// Δf = f(x₁) − inf f.
+    pub delta_f: f64,
+    /// per-worker gradient variance σ² (Assumption 6.3) — σ here.
+    pub sigma: f64,
+    /// AMSGrad ν and β₁.
+    pub nu: f64,
+    pub beta1: f64,
+    /// model dimension d and worker count n.
+    pub d: usize,
+    pub n: usize,
+}
+
+impl Default for ProblemConstants {
+    fn default() -> Self {
+        ProblemConstants {
+            g: 1.0,
+            g_inf: 0.1,
+            l: 1.0,
+            delta_f: 1.0,
+            sigma: 0.5,
+            nu: 1e-8,
+            beta1: 0.9,
+            d: 1000,
+            n: 8,
+        }
+    }
+}
+
+/// The derived constants of Theorem 6.4 for a given π.
+#[derive(Clone, Copy, Debug)]
+pub struct TheoremConstants {
+    pub pi: f64,
+    pub g_tilde: f64,
+    pub g_tilde_inf: f64,
+    pub c: f64,
+    pub c1: f64,
+    pub m1: f64,
+    pub m2: f64,
+    pub m3: f64,
+    pub m4: f64,
+    pub m5: f64,
+}
+
+impl TheoremConstants {
+    pub fn compute(p: &ProblemConstants, pi: f64) -> Self {
+        assert!((0.0..1.0).contains(&pi), "pi must be in [0,1)");
+        let sp = pi.sqrt();
+        let c2 = (1.0 + sp).powi(2) / (1.0 - sp).powi(2);
+        let g_tilde = c2 * p.g;
+        let g_tilde_inf = c2 * p.g_inf;
+        let c = 2.0 * (g_tilde_inf * g_tilde_inf + p.nu).sqrt();
+        let c1 = 2.0 * p.l + 3.0 * p.l * (p.beta1 / (1.0 - p.beta1)).powi(2);
+        let m1 = c * p.delta_f;
+        let m2 = c * p.g * g_tilde / ((1.0 - p.beta1) * p.nu.sqrt());
+        let m3 = 32.0 * c * c1 * g_tilde * g_tilde / p.nu
+            + 2.0 * sp * c * p.l * p.g * g_tilde * (p.d as f64).sqrt() / (p.nu * (1.0 - sp).powi(2));
+        let m4 = 4.0 * c * c1 / p.nu;
+        let m5 = 4.0 * sp * c * p.g / (p.nu.sqrt() * (1.0 - sp).powi(2));
+        TheoremConstants { pi, g_tilde, g_tilde_inf, c, c1, m1, m2, m3, m4, m5 }
+    }
+
+    /// Iteration bound T(ε) of eq. (6.1).
+    pub fn iteration_bound(&self, p: &ProblemConstants, eps: f64) -> f64 {
+        (36.0 * self.m1 * self.m3 / (eps * eps)
+            + 36.0 * self.m1 * self.m4 * p.sigma * p.sigma / (p.n as f64 * eps * eps)
+            + 3.0 * self.m2 / eps)
+            .ceil()
+    }
+
+    /// Step-size bound α(ε) of eq. (6.1).
+    pub fn alpha_bound(&self, p: &ProblemConstants, eps: f64) -> f64 {
+        let n = p.n as f64;
+        n * eps / (6.0 * n * self.m3 + 6.0 * self.m4 * p.sigma * p.sigma)
+    }
+
+    /// Mini-batch bound τ(ε) of eq. (6.1).
+    pub fn tau_bound(&self, p: &ProblemConstants, eps: f64, n_samples: usize) -> f64 {
+        let nn = n_samples as f64;
+        let s = (3.0 * self.m5 * p.sigma).powi(2);
+        (nn * s / ((nn - 1.0) * eps * eps + s)).ceil()
+    }
+}
+
+/// Empirical scaling order: fit k in  value(π) ∝ (1−π)^{-k}  from two
+/// evaluations (π and π′ close to 1). Used to regenerate Table 1.
+pub fn order_in_pi<F: Fn(f64) -> f64>(f: F) -> f64 {
+    let (p1, p2) = (0.990, 0.999);
+    let (v1, v2) = (f(p1), f(p2));
+    ((v2 / v1).ln() / ((1.0 - p1) / (1.0 - p2)).ln()).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pi_zero_recovers_uncompressed_constants() {
+        let p = ProblemConstants::default();
+        let t = TheoremConstants::compute(&p, 0.0);
+        assert_eq!(t.g_tilde, p.g);
+        assert_eq!(t.g_tilde_inf, p.g_inf);
+        assert!(t.m5 == 0.0); // no compression error term
+    }
+
+    #[test]
+    fn table1_scaling_orders() {
+        let p = ProblemConstants::default();
+        let order = |pick: fn(&TheoremConstants) -> f64| {
+            order_in_pi(|pi| pick(&TheoremConstants::compute(&p, pi)))
+        };
+        // Table 1: M1 ~ (1-π)^-2, M2 ~ ^-4, M3 ~ ^-6, M4 ~ ^-2, M5 ~ ^-4
+        assert!((order(|t| t.m1) - 2.0).abs() < 0.3, "M1 order {}", order(|t| t.m1));
+        assert!((order(|t| t.m2) - 4.0).abs() < 0.3);
+        assert!((order(|t| t.m3) - 6.0).abs() < 0.3);
+        assert!((order(|t| t.m4) - 2.0).abs() < 0.3);
+        assert!((order(|t| t.m5) - 4.0).abs() < 0.5);
+        // T ~ (1-π)^-8 (dominant M1·M3 term)
+        let t_order = order_in_pi(|pi| {
+            TheoremConstants::compute(&p, pi).iteration_bound(&p, 1e-3)
+        });
+        assert!((t_order - 8.0).abs() < 0.4, "T order {t_order}");
+    }
+
+    #[test]
+    fn bounds_monotone_in_eps() {
+        let p = ProblemConstants::default();
+        let t = TheoremConstants::compute(&p, 0.6);
+        assert!(t.iteration_bound(&p, 1e-3) > t.iteration_bound(&p, 1e-2));
+        assert!(t.alpha_bound(&p, 1e-3) < t.alpha_bound(&p, 1e-2));
+        let tau3 = t.tau_bound(&p, 1e-3, 10_000);
+        let tau2 = t.tau_bound(&p, 1e-2, 10_000);
+        assert!(tau3 >= tau2);
+        assert!(tau3 <= 10_000.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! Identity "compressor" (π = 0): the uncompressed baseline, so the
+//! whole strategy stack can be driven through one code path.
+
+use super::{CompressedMsg, Compressor};
+
+/// C(x) = x at 32 bits/coordinate.
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn pi_bound(&self, _d: usize) -> f64 {
+        0.0
+    }
+
+    fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+        CompressedMsg::Dense(x.to_vec())
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact() {
+        let x = vec![1.0f32, -2.0, 3.5];
+        let msg = Identity.compress(&x);
+        assert_eq!(msg.to_dense(), x);
+        assert_eq!(msg.wire_bits(), 96);
+        assert_eq!(Identity.pi_bound(10), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Sign-bit packing: d sign bits in ⌈d/64⌉ u64 words.
+//!
+//! Bit i of word i/64 is 1 when coordinate i is non-negative (the
+//! sign(0) := +1 convention shared with python/compile/kernels/ref.py).
+//! This is the L3 hot path for scaled-sign — `pack_signs` runs once per
+//! worker per round on a vector of model dimension.
+
+/// Pack the signs of `x` (1 = non-negative) into u64 words.
+pub fn pack_signs(x: &[f32]) -> Vec<u64> {
+    let mut words = vec![0u64; x.len().div_ceil(64)];
+    // Branchless: the IEEE-754 sign bit of f32 is bit 31; non-negative
+    // (incl. +0.0) has sign bit 0. -0.0 would misclassify, but -0.0 is
+    // not produced by subtraction of distinct values and decodes to the
+    // same magnitude either way at reconstruction tolerance; we still
+    // normalize it for exactness.
+    for (w, chunk) in words.iter_mut().zip(x.chunks(64)) {
+        let mut word = 0u64;
+        for (j, &v) in chunk.iter().enumerate() {
+            // v >= 0.0 is true for +0.0 and -0.0 alike, matching the
+            // oracle's `where(x >= 0, +1, -1)`.
+            word |= u64::from(v >= 0.0) << j;
+        }
+        *w = word;
+    }
+    words
+}
+
+/// out[i] = scale * (bit_i ? +1 : -1)
+pub fn unpack_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
+    debug_assert!(bits.len() * 64 >= out.len());
+    for (chunk, &word) in out.chunks_mut(64).zip(bits) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = if word >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+/// out[i] += scale * (bit_i ? +1 : -1)
+pub fn add_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
+    debug_assert!(bits.len() * 64 >= out.len());
+    for (chunk, &word) in out.chunks_mut(64).zip(bits) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o += if word >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+/// Serialize packed words to little-endian bytes (wire encoding).
+pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
+    let nbytes = d.div_ceil(8);
+    let mut out = Vec::with_capacity(nbytes);
+    for w in bits {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.truncate(nbytes);
+    out
+}
+
+/// Deserialize little-endian bytes back into packed words.
+pub fn bytes_to_words(bytes: &[u8], d: usize) -> Vec<u64> {
+    let mut words = vec![0u64; d.div_ceil(64)];
+    for (i, b) in bytes.iter().enumerate() {
+        words[i / 8] |= (*b as u64) << (8 * (i % 8));
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn pack_unpack_exact() {
+        let x = [1.0f32, -2.0, 0.0, -0.5, 3.0];
+        let bits = pack_signs(&x);
+        let mut out = vec![0.0; 5];
+        unpack_signs_scaled(&bits, 2.0, &mut out);
+        assert_eq!(out, vec![2.0, -2.0, 2.0, -2.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_lengths() {
+        check("sign pack/unpack roundtrip", Config::default(), |g| {
+            let d = g.size(520); // crosses several word boundaries
+            let x = g.vec_f32(d, 5.0);
+            let bits = pack_signs(&x);
+            let mut out = vec![0.0; d];
+            unpack_signs_scaled(&bits, 1.0, &mut out);
+            for (i, (&xi, &oi)) in x.iter().zip(&out).enumerate() {
+                let want = if xi >= 0.0 { 1.0 } else { -1.0 };
+                if oi != want {
+                    return Err(format!("bit {i}: x={xi} decoded {oi}"));
+                }
+            }
+            // byte roundtrip
+            let bytes = words_to_bytes(&bits, d);
+            if bytes.len() != d.div_ceil(8) {
+                return Err(format!("byte len {} for d={d}", bytes.len()));
+            }
+            let back = bytes_to_words(&bytes, d);
+            let mut out2 = vec![0.0; d];
+            unpack_signs_scaled(&back, 1.0, &mut out2);
+            if out != out2 {
+                return Err("byte roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let bits = pack_signs(&[1.0, -1.0]);
+        let mut out = vec![10.0, 10.0];
+        add_signs_scaled(&bits, 3.0, &mut out);
+        assert_eq!(out, vec![13.0, 7.0]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Rand-k compressor: keep k uniformly-random coordinates (Stich et al.
+//! 2018). Satisfies Assumption 4.1 with E π = 1 − k/d (eq. A.1).
+//!
+//! The RNG lives in the compressor (one independent stream per worker,
+//! forked from the experiment seed), so compression remains deterministic
+//! given the config.
+
+use super::{CompressedMsg, Compressor};
+use crate::util::rng::Rng;
+
+/// Rand-k with k as a fraction of d or fixed.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    k_fixed: Option<usize>,
+    k_frac: f64,
+    rng: Rng,
+}
+
+impl RandK {
+    pub fn with_frac(frac: f64, seed: u64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        RandK { k_fixed: None, k_frac: frac, rng: Rng::new(seed) }
+    }
+
+    pub fn with_k(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        RandK { k_fixed: Some(k), k_frac: 0.0, rng: Rng::new(seed) }
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        match self.k_fixed {
+            Some(k) => k.min(d),
+            None => ((self.k_frac * d as f64).round() as usize).clamp(1, d),
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn pi_bound(&self, d: usize) -> f64 {
+        1.0 - self.k_for(d) as f64 / d as f64
+    }
+
+    fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+        let d = x.len();
+        let k = self.k_for(d);
+        if k >= d {
+            return CompressedMsg::Dense(x.to_vec());
+        }
+        let idx = self.rng.sample_indices(d, k);
+        let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        CompressedMsg::Sparse { d, idx, val }
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measured_pi;
+    use crate::tensor;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn keeps_exactly_k() {
+        let x: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let msg = RandK::with_k(10, 1).compress(&x);
+        let dec = msg.to_dense();
+        assert_eq!(dec.iter().filter(|v| **v != 0.0).count(), 10);
+        // kept values are unmodified
+        for (i, v) in dec.iter().enumerate() {
+            assert!(*v == 0.0 || *v == x[i]);
+        }
+    }
+
+    #[test]
+    fn pi_holds_in_expectation() {
+        // average measured pi over many draws ≈ 1 - k/d
+        let mut c = RandK::with_k(25, 7);
+        let mut rng = Rng::new(3);
+        let d = 100;
+        let mut acc = 0.0;
+        let trials = 400;
+        for _ in 0..trials {
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            if tensor::norm2_sq(&x) < 1e-12 {
+                continue;
+            }
+            acc += measured_pi(&x, &c.compress(&x));
+        }
+        let avg = acc / trials as f64;
+        assert!((avg - 0.75).abs() < 0.03, "avg pi {avg}");
+    }
+
+    #[test]
+    fn prop_deterministic_given_seed() {
+        check("randk deterministic", Config::default(), |g| {
+            let d = 1 + g.size(200);
+            let x = g.vec_f32(d, 1.0);
+            let m1 = RandK::with_frac(0.3, 42).compress(&x);
+            let m2 = RandK::with_frac(0.3, 42).compress(&x);
+            if m1 != m2 {
+                return Err("same seed produced different messages".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! Top-k compressor: keep the k largest-magnitude coordinates.
+//!
+//! Selection uses an in-place quickselect on |x| (O(d) expected, no full
+//! sort — this is an L3 hot path at model dimension). Ties are broken
+//! toward the lower index, matching the stable-argsort oracle in
+//! python/compile/kernels/ref.py.
+
+use super::{CompressedMsg, Compressor};
+
+/// Top-k with either a fixed k or a fraction of the dimension.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k_fixed: Option<usize>,
+    k_frac: f64,
+    /// scratch for quickselect (reused across calls; zero-alloc steady state)
+    scratch: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    /// k = max(1, round(frac * d)) — the paper's K = 0.016·d style choice.
+    pub fn with_frac(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "k fraction must be in (0,1]");
+        TopK { k_fixed: None, k_frac: frac, scratch: Vec::new() }
+    }
+
+    /// Fixed k (Top-1 in the paper's Fig. 4 ablation).
+    pub fn with_k(k: usize) -> Self {
+        assert!(k >= 1);
+        TopK { k_fixed: Some(k), k_frac: 0.0, scratch: Vec::new() }
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        match self.k_fixed {
+            Some(k) => k.min(d),
+            None => ((self.k_frac * d as f64).round() as usize).clamp(1, d),
+        }
+    }
+}
+
+/// Order: larger magnitude first; ties -> lower index first.
+#[inline]
+fn before(a: (f32, u32), b: (f32, u32)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Partially order `v` so v[..k] holds the top-k under `before` (Hoare
+/// quickselect with median-of-3 pivots).
+fn quickselect_topk(v: &mut [(f32, u32)], k: usize) {
+    let (mut lo, mut hi) = (0usize, v.len());
+    let mut want = k;
+    while hi - lo > 1 && want > 0 && want < hi - lo {
+        // median-of-3 pivot
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (v[lo], v[mid], v[hi - 1]);
+        let pivot = if before(a, b) == before(b, c) {
+            b
+        } else if before(b, a) == before(a, c) {
+            a
+        } else {
+            c
+        };
+        // partition: [lo, i) strictly before pivot-or-equal boundary
+        let mut i = lo;
+        let mut j = hi;
+        let mut p = lo;
+        // 3-way partition (Dutch national flag) on `before`
+        while p < j {
+            if before(v[p], pivot) {
+                v.swap(i, p);
+                i += 1;
+                p += 1;
+            } else if before(pivot, v[p]) {
+                j -= 1;
+                v.swap(p, j);
+            } else {
+                p += 1;
+            }
+        }
+        let n_less = i - lo; // elements strictly before pivot
+        let n_eq = j - i;
+        if want < n_less {
+            hi = i;
+        } else if want < n_less + n_eq {
+            return; // boundary falls inside the equal block: done
+        } else {
+            want -= n_less + n_eq;
+            lo = j;
+        }
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn pi_bound(&self, d: usize) -> f64 {
+        1.0 - self.k_for(d) as f64 / d as f64
+    }
+
+    fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+        let d = x.len();
+        let k = self.k_for(d);
+        if k >= d {
+            return CompressedMsg::Dense(x.to_vec());
+        }
+        self.scratch.clear();
+        self.scratch.extend(x.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
+        quickselect_topk(&mut self.scratch, k);
+        // Boundary magnitude = smallest magnitude in the selected prefix.
+        // Keep everything strictly above it (there are < k such entries),
+        // then fill the remaining slots with boundary-equal entries in
+        // index order — the deterministic lower-index-wins tie rule.
+        let boundary = self.scratch[..k].iter().map(|e| e.0).fold(f32::INFINITY, f32::min);
+        let mut idx: Vec<u32> = Vec::with_capacity(k);
+        for (i, v) in x.iter().enumerate() {
+            if v.abs() > boundary {
+                idx.push(i as u32);
+            }
+        }
+        for (i, v) in x.iter().enumerate() {
+            if idx.len() == k {
+                break;
+            }
+            if v.abs() == boundary {
+                idx.push(i as u32);
+            }
+        }
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        CompressedMsg::Sparse { d, idx, val }
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::measured_pi;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn top1_picks_largest() {
+        let x = [0.5f32, -3.0, 2.0];
+        let msg = TopK::with_k(1).compress(&x);
+        assert_eq!(msg.to_dense(), vec![0.0, -3.0, 0.0]);
+    }
+
+    #[test]
+    fn ties_prefer_lower_index() {
+        let x = [2.0f32, -2.0, 2.0, 1.0];
+        let msg = TopK::with_k(2).compress(&x);
+        assert_eq!(msg.to_dense(), vec![2.0, -2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn k_ge_d_is_identity() {
+        let x = [1.0f32, 2.0];
+        let msg = TopK::with_k(10).compress(&x);
+        assert_eq!(msg.to_dense(), x.to_vec());
+    }
+
+    #[test]
+    fn prop_topk_is_optimal_k_sparse() {
+        // top-k minimizes ‖C(x)−x‖ over all k-sparse approximations:
+        // equivalently it keeps the k largest magnitudes.
+        check("topk keeps k largest", Config::default(), |g| {
+            let d = g.size(257);
+            let x = g.vec_f32(d, 4.0);
+            let k = 1 + g.rng.below(d);
+            let msg = TopK::with_k(k).compress(&x);
+            let dec = msg.to_dense();
+            let kept: Vec<f32> =
+                dec.iter().filter(|v| **v != 0.0).map(|v| v.abs()).collect();
+            let dropped_max = x
+                .iter()
+                .zip(&dec)
+                .filter(|(_, d)| **d == 0.0)
+                .map(|(x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            let kept_min = kept.iter().copied().fold(f32::INFINITY, f32::min);
+            // every kept magnitude >= every dropped magnitude
+            if !kept.is_empty() && kept_min < dropped_max {
+                return Err(format!("kept_min {kept_min} < dropped_max {dropped_max}"));
+            }
+            // nonzero count <= k and == k when x has >= k nonzeros
+            let nz_in = x.iter().filter(|v| **v != 0.0).count();
+            let nz_out = dec.iter().filter(|v| **v != 0.0).count();
+            if nz_out > k || nz_out < k.min(nz_in) {
+                return Err(format!("nz_out {nz_out}, k {k}, nz_in {nz_in}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pi_bound_holds() {
+        check("topk pi <= 1-k/d", Config::default(), |g| {
+            let d = g.size(300);
+            let x = g.vec_normal(d, 2.0);
+            if crate::tensor::norm2_sq(&x) < 1e-12 {
+                return Ok(());
+            }
+            let mut c = TopK::with_frac(0.2);
+            let msg = c.compress(&x);
+            let pi = measured_pi(&x, &msg);
+            if pi > c.pi_bound(d) + 1e-6 {
+                return Err(format!("pi {pi} > {}", c.pi_bound(d)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frac_matches_paper_ratio() {
+        // K = 0.016 d at d = 1000 -> k = 16
+        assert_eq!(TopK::with_frac(0.016).k_for(1000), 16);
+    }
+}

@@ -1,0 +1,59 @@
+//! The distributed-training coordinator — Layer 3's event loop.
+//!
+//! Two drivers share the same [`Strategy`](crate::algo::Strategy) /
+//! [`GradEngine`](crate::models::GradEngine) interfaces:
+//!
+//! * [`lockstep`] — single-threaded round loop. Deterministic, fast, and
+//!   exploits the worker-replica-identity invariant (all workers hold
+//!   bit-identical x_t) to keep one parameter vector. Used by benches
+//!   and sweeps.
+//! * [`threaded`] — the real topology: one server thread + n worker
+//!   threads + (for HLO tasks) the PJRT service thread, communicating
+//!   over bit-metered mpsc links. Asserts the replica invariant instead
+//!   of assuming it. Trajectories are bit-identical to lockstep (tested
+//!   in `tests/coordinator.rs`).
+
+pub mod lockstep;
+pub mod setup;
+pub mod threaded;
+
+pub use lockstep::run_lockstep;
+pub use threaded::run_threaded;
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunLog;
+
+/// Run with the driver selected by the config.
+pub fn run(cfg: &ExperimentConfig) -> anyhow::Result<RunLog> {
+    if cfg.threaded {
+        run_threaded(cfg)
+    } else {
+        run_lockstep(cfg)
+    }
+}
+
+/// FNV-1a hash of a parameter vector (replica-consistency checks).
+pub fn params_hash(params: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in params {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_discriminates() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(params_hash(&a), params_hash(&b));
+        b[1] += 1e-6;
+        assert_ne!(params_hash(&a), params_hash(&b));
+    }
+}

@@ -1,0 +1,172 @@
+//! Task setup: build engines, evaluator, and initial parameters from an
+//! [`ExperimentConfig`].
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Task};
+use crate::data::corpus::Corpus;
+use crate::data::synth_images::SynthImages;
+use crate::data::synth_libsvm::SynthLibsvm;
+use crate::data::Shard;
+use crate::models::logreg::{LogRegEngine, LogRegEvaluator};
+use crate::models::mlp::{MlpEngine, MlpEvaluator, MlpSpec};
+use crate::models::{EvalResult, Evaluator, GradEngine};
+use crate::runtime::engines::{HloMlpEngine, HloTlmEngine};
+use crate::runtime::RuntimeService;
+use crate::util::rng::Rng;
+
+/// Everything the drivers need for a run.
+pub struct Setup {
+    pub dim: usize,
+    pub engines: Vec<Box<dyn GradEngine>>,
+    pub evaluator: Box<dyn Evaluator>,
+    pub init_params: Vec<f32>,
+    /// total training samples (for the epochs axis).
+    pub total_samples: usize,
+    /// per-worker mini-batch size actually used (τ clamped to shard).
+    pub tau_effective: usize,
+    /// keeps the PJRT service alive for HLO tasks.
+    pub _runtime: Option<RuntimeService>,
+}
+
+/// Null evaluator for tasks without held-out metrics.
+struct NoEval;
+
+impl Evaluator for NoEval {
+    fn eval(&mut self, _params: &[f32]) -> EvalResult {
+        EvalResult::default()
+    }
+}
+
+pub fn build(cfg: &ExperimentConfig) -> Result<Setup> {
+    let base_rng = Rng::new(cfg.seed);
+    match &cfg.task {
+        Task::LogReg { dataset, lambda } => {
+            let data = Arc::new(if dataset == "tiny" {
+                SynthLibsvm::new("tiny", 512, 50, cfg.seed, 0.05)
+            } else {
+                SynthLibsvm::paper(dataset, cfg.seed)?
+            });
+            let shards = Shard::split(data.n, cfg.n);
+            let tau_eff = cfg.tau.min(shards[0].len);
+            let engines: Vec<Box<dyn GradEngine>> = shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Box::new(LogRegEngine::new(
+                        data.clone(),
+                        s.clone(),
+                        *lambda,
+                        cfg.tau,
+                        base_rng.fork(1000 + i as u64),
+                    )) as Box<dyn GradEngine>
+                })
+                .collect();
+            Ok(Setup {
+                dim: data.dim,
+                init_params: vec![0.0; data.dim],
+                evaluator: Box::new(LogRegEvaluator::new(data.clone(), *lambda)),
+                engines,
+                total_samples: data.n,
+                tau_effective: tau_eff,
+                _runtime: None,
+            })
+        }
+        Task::Images { preset, full } => {
+            let data = Arc::new(if *full {
+                SynthImages::cifar_like(cfg.seed)
+            } else {
+                SynthImages::new(4096, 1024, 256, 10, cfg.seed, 0.02)
+            });
+            let spec = MlpSpec::preset_scaled(preset, data.dim, data.classes, *full)?;
+            let shards = Shard::split(data.n_train, cfg.n);
+            let tau_eff = cfg.tau.min(shards[0].len);
+            let engines: Vec<Box<dyn GradEngine>> = shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Box::new(MlpEngine::new(
+                        spec.clone(),
+                        data.clone(),
+                        s.clone(),
+                        tau_eff,
+                        base_rng.fork(1000 + i as u64),
+                    )) as Box<dyn GradEngine>
+                })
+                .collect();
+            Ok(Setup {
+                dim: spec.param_count(),
+                init_params: spec.init(cfg.seed ^ 0xAB),
+                evaluator: Box::new(MlpEvaluator::new(spec, data.clone(), 1024, 128)),
+                engines,
+                total_samples: data.n_train,
+                tau_effective: tau_eff,
+                _runtime: None,
+            })
+        }
+        Task::HloMlp { preset } => {
+            let svc = RuntimeService::start(&[format!("mlp_{preset}_grad")])?;
+            let data = Arc::new(SynthImages::cifar_like(cfg.seed));
+            let shards = Shard::split(data.n_train, cfg.n);
+            let manifest = svc.manifest.clone();
+            let engines: Vec<Box<dyn GradEngine>> = shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| -> Result<Box<dyn GradEngine>> {
+                    Ok(Box::new(HloMlpEngine::new(
+                        &manifest,
+                        svc.handle(),
+                        preset,
+                        data.clone(),
+                        s.clone(),
+                        base_rng.fork(1000 + i as u64),
+                    )?))
+                })
+                .collect::<Result<_>>()?;
+            let dim = engines[0].dim();
+            let init = manifest.load_params(&format!("mlp_{preset}"))?;
+            // rust-side evaluator reuses the same flat layout
+            let spec = MlpSpec::preset(preset, data.dim, data.classes)?;
+            let tau_eff = engines.len(); // placeholder; real τ is artifact batch
+            let batch = cfg.tau;
+            Ok(Setup {
+                dim,
+                init_params: init,
+                evaluator: Box::new(MlpEvaluator::new(spec, data.clone(), 512, 128)),
+                engines,
+                total_samples: data.n_train,
+                tau_effective: batch.min(data.n_train / cfg.n).max(tau_eff),
+                _runtime: Some(svc),
+            })
+        }
+        Task::HloTlm { preset } => {
+            let svc = RuntimeService::start(&[format!("tlm_{preset}_grad")])?;
+            let corpus = Arc::new(Corpus::synthetic(64 * 1024, cfg.seed ^ 0xD0C));
+            let manifest = svc.manifest.clone();
+            let engines: Vec<Box<dyn GradEngine>> = (0..cfg.n)
+                .map(|i| -> Result<Box<dyn GradEngine>> {
+                    Ok(Box::new(HloTlmEngine::new(
+                        &manifest,
+                        svc.handle(),
+                        preset,
+                        corpus.clone(),
+                        base_rng.fork(1000 + i as u64),
+                    )?))
+                })
+                .collect::<Result<_>>()?;
+            let dim = engines[0].dim();
+            let init = manifest.load_params(&format!("tlm_{preset}"))?;
+            Ok(Setup {
+                dim,
+                init_params: init,
+                evaluator: Box::new(NoEval),
+                engines,
+                total_samples: corpus.len(),
+                tau_effective: cfg.tau,
+                _runtime: Some(svc),
+            })
+        }
+    }
+}

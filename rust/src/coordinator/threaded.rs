@@ -1,0 +1,221 @@
+//! Threaded driver: the real parameter-server topology.
+//!
+//! One server thread + n worker threads over the bit-metered [`comm`]
+//! links; each worker owns its gradient engine, its strategy half, and
+//! its **own parameter replica** (worker-side updates, paper §5). At
+//! every eval round each worker reports a replica hash and worker 0
+//! reports the full vector; the driver asserts all hashes agree — the
+//! replica-consistency invariant that makes worker-side updates sound.
+
+use std::sync::mpsc::channel;
+
+use anyhow::{anyhow, Result};
+
+use super::{params_hash, setup};
+use crate::comm::{topology, WireMsg};
+use crate::config::ExperimentConfig;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::optim::LrSchedule;
+use crate::tensor;
+use crate::util::timer::Timer;
+
+/// Worker → driver eval report.
+struct EvalReport {
+    round: usize,
+    worker: usize,
+    hash: u64,
+    loss: f32,
+    grad_norm_contrib: Vec<f32>,
+    params: Option<Vec<f32>>,
+    /// cumulative payload bits on this worker's link (up + down) as of
+    /// this round — counted in the worker loop so the number is exact
+    /// even while other workers race ahead (the shared meters are only
+    /// used for end-of-run totals).
+    cum_bits: u64,
+}
+
+/// Run one experiment through the threaded coordinator.
+pub fn run_threaded(cfg: &ExperimentConfig) -> Result<RunLog> {
+    let s = setup::build(cfg)?;
+    run_threaded_with(cfg, s)
+}
+
+/// Threaded run over an externally-built [`setup::Setup`] — lets tests
+/// inject faulty engines (worker-death propagation) and lets embedders
+/// drive custom models through the coordinator.
+pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<RunLog> {
+    let strat = cfg.build_strategy()?;
+    let dim = s.dim;
+    let n = cfg.n;
+    let rounds = cfg.rounds;
+    let eval_every = cfg.eval_every;
+    let sched = LrSchedule::multi_step(cfg.lr as f32, &cfg.lr_milestones, cfg.lr_gamma as f32);
+
+    let (worker_links, server_links, up_meters, down_meters) = topology(n);
+    let (report_tx, report_rx) = channel::<EvalReport>();
+
+    // --- server thread -------------------------------------------------
+    let mut server = strat.make_server(dim, n);
+    let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
+        let mut links = server_links;
+        for t in 1..=rounds {
+            let mut ups = Vec::with_capacity(links.len());
+            for link in links.iter() {
+                let msg = match link.up.recv() {
+                    Ok(m) => m,
+                    Err(_) => return, // workers gone
+                };
+                debug_assert_eq!(msg.round, t as u64);
+                ups.push(msg.payload);
+            }
+            let down = server.round(t, &ups);
+            for (i, link) in links.iter_mut().enumerate() {
+                let _ = link.down.send(WireMsg { round: t as u64, from: i as u32, payload: down.clone() });
+            }
+        }
+    })?;
+
+    // --- worker threads --------------------------------------------------
+    let mut joins = Vec::with_capacity(n);
+    let init_params = s.init_params.clone();
+    let engines = std::mem::take(&mut s.engines);
+    for (i, (engine, link)) in engines.into_iter().zip(worker_links).enumerate() {
+        let mut worker = strat.make_worker(dim, i);
+        let mut engine = engine;
+        let mut params = init_params.clone();
+        let sched = sched.clone();
+        let tx = report_tx.clone();
+        joins.push(std::thread::Builder::new().name(format!("worker-{i}")).spawn(
+            move || -> Result<()> {
+                let mut grad = vec![0.0f32; dim];
+                let mut cum_bits = 0u64;
+                for t in 1..=rounds {
+                    let loss = engine.loss_grad(&params, &mut grad);
+                    let c = worker.uplink(t, &grad);
+                    cum_bits += c.wire_bits();
+                    link.up.send(WireMsg { round: t as u64, from: i as u32, payload: c })?;
+                    let down = link.down.recv()?;
+                    debug_assert_eq!(down.round, t as u64);
+                    cum_bits += down.payload.wire_bits();
+                    worker.apply_downlink(t, &down.payload, &mut params, sched.at(t - 1));
+                    if t % eval_every == 0 || t == rounds {
+                        tx.send(EvalReport {
+                            round: t,
+                            worker: i,
+                            hash: params_hash(&params),
+                            loss,
+                            grad_norm_contrib: grad.clone(),
+                            params: if i == 0 { Some(params.clone()) } else { None },
+                            cum_bits,
+                        })
+                        .map_err(|_| anyhow!("driver gone"))?;
+                    }
+                }
+                Ok(())
+            },
+        )?);
+    }
+    drop(report_tx);
+
+    // --- driver: collect eval reports -----------------------------------
+    let mut log = RunLog::new(cfg.label());
+    let timer = Timer::start();
+    let mut pending: std::collections::BTreeMap<usize, Vec<EvalReport>> = Default::default();
+    while let Ok(rep) = report_rx.recv() {
+        let round = rep.round;
+        let entry = pending.entry(round).or_default();
+        entry.push(rep);
+        if entry.len() == n {
+            let reports = pending.remove(&round).unwrap();
+            let h0 = reports[0].hash;
+            for r in &reports {
+                anyhow::ensure!(
+                    r.hash == h0,
+                    "replica divergence at round {round}: worker {} hash {:#x} != {:#x}",
+                    r.worker,
+                    r.hash,
+                    h0
+                );
+            }
+            let params = reports
+                .iter()
+                .find_map(|r| r.params.as_ref())
+                .ok_or_else(|| anyhow!("no params snapshot"))?;
+            let mut grad_avg = vec![0.0f32; dim];
+            for r in &reports {
+                tensor::axpy(&mut grad_avg, 1.0 / n as f32, &r.grad_norm_contrib);
+            }
+            let loss_sum: f64 = reports.iter().map(|r| r.loss as f64).sum();
+            let grad_norm = s
+                .evaluator
+                .global_grad_norm(params)
+                .unwrap_or_else(|| tensor::norm2(&grad_avg));
+            let ev = s.evaluator.eval(params);
+            // bits: per-worker link (paper convention), snapshotted by
+            // worker 0 at this round — payload bits only, so lockstep and
+            // threaded report identical numbers.
+            let cum_bits =
+                reports.iter().find(|r| r.worker == 0).map(|r| r.cum_bits).unwrap_or(0);
+            log.push(RoundRecord {
+                round,
+                epoch: round as f64 * (n * s.tau_effective) as f64 / s.total_samples as f64,
+                train_loss: loss_sum / n as f64,
+                grad_norm,
+                test_loss: ev.loss,
+                test_acc: ev.accuracy,
+                cum_bits,
+                wall_ms: timer.elapsed_ms(),
+            });
+        }
+    }
+
+    for j in joins {
+        j.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+    server_join.join().map_err(|_| anyhow!("server panicked"))?;
+    log.records.sort_by_key(|r| r.round);
+    // end-of-run accounting audit: the comm-layer meters (which include
+    // the 64-bit frame headers) must agree with worker 0's payload count.
+    if let Some(last) = log.records.last() {
+        let metered = up_meters[0].bits() + down_meters[0].bits();
+        let headers = 64 * (up_meters[0].msgs() + down_meters[0].msgs());
+        anyhow::ensure!(
+            metered == last.cum_bits + headers,
+            "bit-accounting mismatch: metered {metered} != payload {} + headers {headers}",
+            last.cum_bits
+        );
+    }
+    Ok(log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_lockstep;
+
+    #[test]
+    fn matches_lockstep_exactly() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 60;
+        cfg.eval_every = 20;
+        let a = run_lockstep(&cfg).unwrap();
+        let b = run_threaded(&cfg).unwrap();
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.grad_norm, y.grad_norm, "round {}", x.round);
+            assert_eq!(x.cum_bits, y.cum_bits, "round {}", x.round);
+        }
+    }
+
+    #[test]
+    fn replica_invariant_enforced_across_strategies() {
+        for strat in ["cdadam", "ef", "naive", "onebit_adam", "ef21"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.strategy = strat.into();
+            cfg.rounds = 30;
+            cfg.eval_every = 10;
+            run_threaded(&cfg).unwrap_or_else(|e| panic!("{strat}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Datasets + sharding.
+//!
+//! Offline substitutes for the paper's data (DESIGN.md §2):
+//! * [`synth_libsvm`] — planted-teacher binary classification shaped like
+//!   phishing / mushrooms / a9a / w8a (Fig. 2 / Fig. 4);
+//! * [`synth_images`] — 10-class teacher-labelled images shaped like
+//!   CIFAR-10 (Figs. 1, 3, 5–10), generated lazily so 50k×3072 floats
+//!   never sit in memory;
+//! * [`corpus`] — tiny synthetic byte corpus for the transformer e2e run.
+//!
+//! Sharding is the paper's equal split: worker i owns the contiguous
+//! range of ⌊len/n⌋(+1) indices. Mini-batches of size τ are sampled
+//! without replacement within the shard (the sampling scheme of
+//! Lemma B.3: P{j, j' ∈ S_τ} = τ(τ−1)/(N(N−1))).
+
+pub mod corpus;
+pub mod synth_images;
+pub mod synth_libsvm;
+
+use crate::util::rng::Rng;
+
+/// A worker's view of a dataset: a contiguous index range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Shard {
+    /// Equal split of `total` items over `n` workers (remainder spread
+    /// over the first `total % n` workers).
+    pub fn split(total: usize, n: usize) -> Vec<Shard> {
+        assert!(n > 0 && total >= n, "need at least one sample per worker");
+        let base = total / n;
+        let rem = total % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < rem);
+            out.push(Shard { start, len });
+            start += len;
+        }
+        out
+    }
+
+    /// Sample `tau` distinct local indices (without replacement), or the
+    /// whole shard when `tau >= len` (full-batch mode, Fig. 2).
+    pub fn sample(&self, tau: usize, rng: &mut Rng) -> Vec<usize> {
+        if tau >= self.len {
+            return (self.start..self.start + self.len).collect();
+        }
+        rng.sample_indices(self.len, tau).into_iter().map(|i| self.start + i as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_everything() {
+        let shards = Shard::split(103, 8);
+        assert_eq!(shards.len(), 8);
+        assert_eq!(shards.iter().map(|s| s.len).sum::<usize>(), 103);
+        let mut next = 0;
+        for s in &shards {
+            assert_eq!(s.start, next);
+            next += s.len;
+        }
+        // max difference of 1 between shard sizes
+        let min = shards.iter().map(|s| s.len).min().unwrap();
+        let max = shards.iter().map(|s| s.len).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn sample_without_replacement() {
+        let s = Shard { start: 100, len: 50 };
+        let mut rng = Rng::new(3);
+        let idx = s.sample(20, &mut rng);
+        assert_eq!(idx.len(), 20);
+        let mut u = idx.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 20);
+        assert!(idx.iter().all(|&i| (100..150).contains(&i)));
+    }
+
+    #[test]
+    fn full_batch_when_tau_large() {
+        let s = Shard { start: 0, len: 10 };
+        let mut rng = Rng::new(0);
+        assert_eq!(s.sample(10, &mut rng).len(), 10);
+        assert_eq!(s.sample(99, &mut rng), (0..10).collect::<Vec<_>>());
+    }
+}

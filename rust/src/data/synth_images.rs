@@ -1,0 +1,206 @@
+//! Synthetic CIFAR-shaped image classification (Figs. 1, 3, 5–10 data).
+//!
+//! A fixed random 2-layer teacher MLP labels lazily-generated Gaussian
+//! "images" (3×32×32 = 3072 features), with label noise. Same train/test
+//! protocol as the paper: 50 000 train / 10 000 test, 10 classes, split
+//! over n workers. Examples are produced on the fly from the seed — a
+//! batch fill is one PRNG pass + one teacher forward, no resident data.
+
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// CIFAR-10-shaped defaults.
+pub const CIFAR_DIM: usize = 3 * 32 * 32;
+pub const CIFAR_CLASSES: usize = 10;
+pub const CIFAR_TRAIN: usize = 50_000;
+pub const CIFAR_TEST: usize = 10_000;
+
+/// Lazily-generated teacher-labelled image dataset.
+pub struct SynthImages {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub dim: usize,
+    pub classes: usize,
+    seed: u64,
+    noise: f64,
+    /// teacher: dim -> hidden (ReLU) -> classes
+    hidden: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    /// materialized (features, labels) over train+test when within the
+    /// cache budget (§Perf: skips per-batch PRNG + teacher forward).
+    cache: Option<(Vec<f32>, Vec<i32>)>,
+}
+
+/// Cache datasets up to this many f32 elements (256 MB).
+const CACHE_BUDGET_ELEMS: usize = 64 << 20;
+
+impl SynthImages {
+    pub fn new(n_train: usize, n_test: usize, dim: usize, classes: usize, seed: u64, noise: f64) -> Self {
+        let hidden = 64;
+        let mut rng = Rng::new(seed ^ 0x1AB5_EED);
+        let mut w1 = vec![0.0f32; dim * hidden];
+        let mut w2 = vec![0.0f32; hidden * classes];
+        let mut b1 = vec![0.0f32; hidden];
+        let mut b2 = vec![0.0f32; classes];
+        rng.fill_normal(&mut w1, (2.0 / dim as f32).sqrt());
+        rng.fill_normal(&mut w2, (2.0 / hidden as f32).sqrt());
+        rng.fill_normal(&mut b1, 0.1);
+        rng.fill_normal(&mut b2, 0.1);
+        let mut ds = SynthImages {
+            n_train, n_test, dim, classes, seed, noise, hidden, w1, b1, w2, b2, cache: None,
+        };
+        let total = n_train + n_test;
+        if total.saturating_mul(dim) <= CACHE_BUDGET_ELEMS {
+            let mut feats = vec![0.0f32; total * dim];
+            let mut labels = vec![0i32; total];
+            for i in 0..total {
+                labels[i] = ds.generate_example(i, &mut feats[i * dim..(i + 1) * dim]);
+            }
+            ds.cache = Some((feats, labels));
+        }
+        ds
+    }
+
+    /// Paper-scale default (50k/10k, 3072 features, 10 classes).
+    pub fn cifar_like(seed: u64) -> Self {
+        SynthImages::new(CIFAR_TRAIN, CIFAR_TEST, CIFAR_DIM, CIFAR_CLASSES, seed, 0.02)
+    }
+
+    /// Reduced-scale variant for tests and quick runs.
+    pub fn small(seed: u64) -> Self {
+        SynthImages::new(2048, 512, 64, 10, seed, 0.02)
+    }
+
+    /// Teacher forward for one example (returns argmax class).
+    fn teacher_label(&self, x: &[f32], rng: &mut Rng) -> i32 {
+        let mut h = self.b1.clone();
+        for k in 0..self.dim {
+            let xv = x[k];
+            if xv != 0.0 {
+                tensor::axpy(&mut h, xv, &self.w1[k * self.hidden..(k + 1) * self.hidden]);
+            }
+        }
+        tensor::relu(&mut h);
+        let mut out = self.b2.clone();
+        for k in 0..self.hidden {
+            let hv = h[k];
+            if hv != 0.0 {
+                tensor::axpy(&mut out, hv, &self.w2[k * self.classes..(k + 1) * self.classes]);
+            }
+        }
+        let mut best = 0;
+        for c in 1..self.classes {
+            if out[c] > out[best] {
+                best = c;
+            }
+        }
+        if rng.f64() < self.noise {
+            // uniform random flip
+            rng.below(self.classes) as i32
+        } else {
+            best as i32
+        }
+    }
+
+    /// Global index space: train examples are [0, n_train), test examples
+    /// use [n_train, n_train + n_test).
+    pub fn test_index(&self, i: usize) -> usize {
+        self.n_train + i
+    }
+
+    /// Generate one example from its PRNG stream (cache ground truth).
+    fn generate_example(&self, idx: usize, out: &mut [f32]) -> i32 {
+        debug_assert_eq!(out.len(), self.dim);
+        let mut rng = Rng::new(self.seed).fork(idx as u64 + 1);
+        rng.fill_normal(out, 1.0);
+        self.teacher_label(out, &mut rng)
+    }
+
+    /// Fill features for one example and return its label.
+    pub fn fill_example(&self, idx: usize, out: &mut [f32]) -> i32 {
+        if let Some((feats, labels)) = &self.cache {
+            out.copy_from_slice(&feats[idx * self.dim..(idx + 1) * self.dim]);
+            return labels[idx];
+        }
+        self.generate_example(idx, out)
+    }
+
+    /// Fill a batch (row-major features + int labels).
+    pub fn fill_batch(&self, idxs: &[usize], x: &mut [f32], y: &mut [i32]) {
+        debug_assert_eq!(x.len(), idxs.len() * self.dim);
+        debug_assert_eq!(y.len(), idxs.len());
+        for (row, &idx) in idxs.iter().enumerate() {
+            y[row] = self.fill_example(idx, &mut x[row * self.dim..(row + 1) * self.dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let ds = SynthImages::small(5);
+        let mut a = vec![0.0; ds.dim];
+        let mut b = vec![0.0; ds.dim];
+        assert_eq!(ds.fill_example(3, &mut a), ds.fill_example(3, &mut b));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn labels_in_range_and_nondegenerate() {
+        let ds = SynthImages::small(1);
+        let mut buf = vec![0.0; ds.dim];
+        let mut counts = vec![0usize; ds.classes];
+        for i in 0..500 {
+            let y = ds.fill_example(i, &mut buf);
+            assert!((0..ds.classes as i32).contains(&y));
+            counts[y as usize] += 1;
+        }
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero >= 5, "class histogram {counts:?}");
+    }
+
+    #[test]
+    fn batch_fill_matches_single() {
+        let ds = SynthImages::small(2);
+        let idxs = [0usize, 7, 100];
+        let mut x = vec![0.0; 3 * ds.dim];
+        let mut y = vec![0i32; 3];
+        ds.fill_batch(&idxs, &mut x, &mut y);
+        let mut single = vec![0.0; ds.dim];
+        for (r, &i) in idxs.iter().enumerate() {
+            let ys = ds.fill_example(i, &mut single);
+            assert_eq!(y[r], ys);
+            assert_eq!(&x[r * ds.dim..(r + 1) * ds.dim], &single[..]);
+        }
+    }
+
+    #[test]
+    fn cache_is_bit_identical_to_lazy_generation() {
+        let ds = SynthImages::small(9);
+        assert!(ds.cache.is_some());
+        let mut lazy = vec![0.0f32; ds.dim];
+        let mut cached = vec![0.0f32; ds.dim];
+        for i in [0usize, 100, ds.test_index(5)] {
+            let yl = ds.generate_example(i, &mut lazy);
+            let yc = ds.fill_example(i, &mut cached);
+            assert_eq!(lazy, cached, "row {i}");
+            assert_eq!(yl, yc, "label {i}");
+        }
+    }
+
+    #[test]
+    fn train_test_disjoint_streams() {
+        let ds = SynthImages::small(3);
+        let mut a = vec![0.0; ds.dim];
+        let mut b = vec![0.0; ds.dim];
+        ds.fill_example(0, &mut a);
+        ds.fill_example(ds.test_index(0), &mut b);
+        assert_ne!(a, b);
+    }
+}

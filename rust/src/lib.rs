@@ -1,0 +1,59 @@
+//! # CD-Adam: Communication-Compressed Adaptive Gradient Method
+//!
+//! Production-quality reproduction of *"Communication-Compressed Adaptive
+//! Gradient Method for Distributed Nonconvex Optimization"* (Wang, Lin,
+//! Chen; AISTATS 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the distributed-training coordinator. It owns
+//! the event loop, the parameter-server process topology (server thread +
+//! `n` worker threads over bit-metered channels), the compression stack
+//! (scaled-sign / top-k / rand-k with real bit-packed wire formats), the
+//! Markov compression sequences of Richtárik et al. (2021), the AMSGrad
+//! family of optimizers, and all six distributed strategies the paper
+//! evaluates:
+//!
+//! * [`algo::cdadam`] — **CD-Adam** (Algorithm 1): bidirectional Markov
+//!   compression with worker-side AMSGrad updates;
+//! * [`algo::uncompressed`] — vanilla distributed AMSGrad;
+//! * [`algo::naive`] — direct gradient compression (no memory);
+//! * [`algo::ef`] — classical error feedback;
+//! * [`algo::ef21`] — EF21 extended to bidirectional compression + SGD;
+//! * [`algo::onebit_adam`] — 1-bit Adam (warm-up, then frozen variance).
+//!
+//! Layers 2 (JAX models) and 1 (Pallas kernels) live in `python/compile/`
+//! and are AOT-lowered **once** (`make artifacts`) to HLO text; the
+//! [`runtime`] module loads and executes them via the PJRT C API. Python
+//! never runs on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cdadam::config::ExperimentConfig;
+//! use cdadam::coordinator::lockstep::run_lockstep;
+//!
+//! let cfg = ExperimentConfig::preset("quickstart").unwrap();
+//! let out = run_lockstep(&cfg).unwrap();
+//! println!("final grad norm = {}", out.records.last().unwrap().grad_norm);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod algo;
+pub mod analysis;
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod markov;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

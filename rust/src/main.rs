@@ -1,0 +1,120 @@
+//! `cdadam` — launcher CLI for the CD-Adam distributed-training runtime.
+//!
+//! ```text
+//! cdadam run --preset quickstart [--strategy cdadam] [--n 8] [--threaded] ...
+//! cdadam presets                 # list available presets
+//! cdadam artifacts               # show artifact manifest status
+//! ```
+
+use anyhow::{bail, Result};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator;
+use cdadam::metrics::{self, RunLog};
+use cdadam::runtime;
+use cdadam::util::args::Args;
+
+const PRESETS: &[&str] = &[
+    "quickstart",
+    "fig2_phishing",
+    "fig2_mushrooms",
+    "fig2_a9a",
+    "fig2_w8a",
+    "image_resnet_mini",
+    "image_vgg_mini",
+    "image_wrn_mini",
+    "hlo_mlp",
+    "transformer_e2e",
+];
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cdadam <command> [options]\n\
+         \n\
+         commands:\n\
+           run        run one experiment (--preset <name> + overrides)\n\
+           presets    list experiment presets\n\
+           artifacts  report AOT artifact status\n\
+         \n\
+         run options:\n\
+           --preset <name>       experiment preset (default quickstart)\n\
+           --strategy <s>        cdadam | uncompressed_amsgrad | uncompressed_sgd |\n\
+                                 naive | ef | ef21 | onebit_adam\n\
+           --compressor <c>      scaled_sign | topk | top1 | randk | identity\n\
+           --n <int>             number of workers\n\
+           --tau <int|full>      mini-batch size\n\
+           --rounds <int>        training rounds\n\
+           --lr <float>          step size\n\
+           --threaded            use the threaded coordinator\n\
+           --csv <path>          write the run log as CSV\n"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("presets") => {
+            for p in PRESETS {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        Some("artifacts") => cmd_artifacts(),
+        _ => usage(),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let preset = args.string("preset", "quickstart");
+    let mut cfg = ExperimentConfig::preset(&preset)?;
+    cfg.apply_args(args)?;
+    eprintln!(
+        "running {} | strategy={} compressor={} n={} rounds={} lr={} ({})",
+        cfg.name,
+        cfg.strategy,
+        cfg.compressor,
+        cfg.n,
+        cfg.rounds,
+        cfg.lr,
+        if cfg.threaded { "threaded" } else { "lockstep" }
+    );
+    let log = coordinator::run(&cfg)?;
+    print_log(&log);
+    if let Some(path) = args.get("csv") {
+        metrics::write_csv(path, std::slice::from_ref(&log))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn print_log(log: &RunLog) {
+    println!("round\tepoch\ttrain_loss\tgrad_norm\ttest_acc\tcum_bits");
+    for r in &log.records {
+        println!(
+            "{}\t{:.2}\t{:.5}\t{:.5}\t{:.4}\t{}",
+            r.round, r.epoch, r.train_loss, r.grad_norm, r.test_acc, r.cum_bits
+        );
+    }
+}
+
+fn cmd_artifacts() -> Result<()> {
+    if !runtime::artifacts_available() {
+        bail!("artifacts not built — run `make artifacts`");
+    }
+    let dir = runtime::artifacts_dir()?;
+    let m = runtime::Manifest::load(&dir)?;
+    println!("artifacts dir: {}", dir.display());
+    for (name, info) in &m.artifacts {
+        println!(
+            "  {name}: {} -> {} outputs, inputs {:?}",
+            info.path,
+            info.outputs.len(),
+            info.inputs.iter().map(|(s, d)| format!("{d}{s:?}")).collect::<Vec<_>>()
+        );
+    }
+    for (name, (path, count)) in &m.params {
+        println!("  params {name}: {path} ({count} f32)");
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Markov compression sequences (Richtárik et al. 2021; paper §5).
+//!
+//! Given a base compressor C and a source sequence {w_t}, the sequence
+//!
+//! ```text
+//!   ŵ_0 = C(w_0),   ŵ_{t+1} = ŵ_t + C(w_{t+1} − ŵ_t)
+//! ```
+//!
+//! transmits only the compressed *differences* c_t = C(w_{t+1} − ŵ_t).
+//! Both endpoints replay the identical ŵ state, so the compression error
+//! contracts whenever the source sequence converges (eq. 5.1) — the
+//! property that makes the AMSGrad variance term stable (paper §4 vs §5).
+//!
+//! [`MarkovEncoder`] is the sender half (owns ŵ, produces c_t);
+//! [`MarkovDecoder`] is the receiver half (replays ŵ from c_t). The
+//! invariant `encoder.state() == decoder.state()` after every exchanged
+//! message is enforced by property tests and by the coordinator's debug
+//! assertions.
+
+use crate::compress::{CompressedMsg, Compressor};
+use crate::tensor;
+
+/// Sender side: holds ŵ_t and a reusable difference buffer.
+pub struct MarkovEncoder {
+    ghat: Vec<f32>,
+    diff: Vec<f32>,
+    compressor: Box<dyn Compressor>,
+}
+
+impl MarkovEncoder {
+    /// Start from ŵ_0 = C(0) = 0 (Algorithm 1 line 1: g_0 = 0 ⇒ ĝ_0 = 0).
+    pub fn new(dim: usize, compressor: Box<dyn Compressor>) -> Self {
+        MarkovEncoder { ghat: vec![0.0; dim], diff: vec![0.0; dim], compressor }
+    }
+
+    /// Compress the difference to the new source value `w`, advance ŵ,
+    /// and return the wire message.
+    pub fn step(&mut self, w: &[f32]) -> CompressedMsg {
+        debug_assert_eq!(w.len(), self.ghat.len());
+        tensor::sub(&mut self.diff, w, &self.ghat);
+        let c = self.compressor.compress(&self.diff);
+        c.add_into(&mut self.ghat);
+        c
+    }
+
+    /// Current ŵ_t (the receiver's replica after it applies the last msg).
+    pub fn state(&self) -> &[f32] {
+        &self.ghat
+    }
+
+    /// Current compression error ‖ŵ_t − w‖₂ against a given source value.
+    pub fn error_to(&self, w: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for (a, b) in self.ghat.iter().zip(w) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc.sqrt()
+    }
+}
+
+/// Receiver side: replays ŵ_t from the stream of messages.
+pub struct MarkovDecoder {
+    ghat: Vec<f32>,
+}
+
+impl MarkovDecoder {
+    pub fn new(dim: usize) -> Self {
+        MarkovDecoder { ghat: vec![0.0; dim] }
+    }
+
+    /// Apply one message; returns the updated replica ŵ_t.
+    pub fn apply(&mut self, c: &CompressedMsg) -> &[f32] {
+        c.add_into(&mut self.ghat);
+        &self.ghat
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.ghat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{ScaledSign, TopK};
+    use crate::util::prop::{assert_close, check, Config};
+
+    #[test]
+    fn encoder_decoder_agree() {
+        let mut enc = MarkovEncoder::new(8, Box::new(ScaledSign::new()));
+        let mut dec = MarkovDecoder::new(8);
+        let w = [1.0f32, -2.0, 3.0, 0.5, -0.25, 4.0, 0.0, -1.0];
+        for t in 0..10 {
+            let wt: Vec<f32> = w.iter().map(|v| v * (1.0 + t as f32 * 0.1)).collect();
+            let c = enc.step(&wt);
+            dec.apply(&c);
+            assert_eq!(enc.state(), dec.state());
+        }
+    }
+
+    #[test]
+    fn prop_state_agreement_arbitrary_sequences() {
+        check("markov encoder==decoder", Config::default(), |g| {
+            let d = g.size(200);
+            let mut enc = MarkovEncoder::new(d, Box::new(TopK::with_frac(0.2)));
+            let mut dec = MarkovDecoder::new(d);
+            for _ in 0..10 {
+                let w = g.vec_f32(d, 3.0);
+                let c = enc.step(&w);
+                dec.apply(&c);
+                if enc.state() != dec.state() {
+                    return Err("state divergence".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_contracts_on_constant_sequence() {
+        // eq. (5.1): constant source ⇒ error shrinks geometrically.
+        let d = 100;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut w = vec![0.0f32; d];
+        rng.fill_normal(&mut w, 1.0);
+        let mut enc = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
+        let mut errs = Vec::new();
+        for _ in 0..40 {
+            enc.step(&w);
+            errs.push(enc.error_to(&w));
+        }
+        assert!(errs[39] < errs[0] * 0.2, "errors {:?} -> {:?}", errs[0], errs[39]);
+    }
+
+    #[test]
+    fn first_message_is_compressed_w1() {
+        // ŵ_0 = 0 ⇒ c_1 = C(w_1).
+        let w = [3.0f32, -1.0, 2.0, 0.0];
+        let mut enc = MarkovEncoder::new(4, Box::new(ScaledSign::new()));
+        let c = enc.step(&w);
+        let direct = ScaledSign::new().compress(&w);
+        assert_close(&c.to_dense(), &direct.to_dense(), 1e-7, 1e-7).unwrap();
+    }
+}

@@ -1,0 +1,165 @@
+//! Metrics pipeline: per-round records, run logs, CSV/TSV writers.
+//!
+//! Every figure in the paper is a projection of [`RoundRecord`] streams
+//! (loss / grad-norm / accuracy against rounds, epochs, or cumulative
+//! bits); the bench harness writes one CSV per experiment under
+//! `results/` and prints the paper-table rows to stdout.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// One evaluation point of a distributed run.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// fractional epochs completed (round * n * tau / total_samples)
+    pub epoch: f64,
+    pub train_loss: f64,
+    /// ‖∇f(x)‖₂ of the global objective at x_t
+    pub grad_norm: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// cumulative uplink + downlink bits across all links
+    pub cum_bits: u64,
+    pub wall_ms: f64,
+}
+
+/// A completed run: config fingerprint + record stream.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        RunLog { label: label.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// Final cumulative bits (0 for an empty run).
+    pub fn total_bits(&self) -> u64 {
+        self.last().map(|r| r.cum_bits).unwrap_or(0)
+    }
+
+    /// CSV header shared by all experiment outputs.
+    pub const CSV_HEADER: &'static str =
+        "label,round,epoch,train_loss,grad_norm,test_loss,test_acc,cum_bits,wall_ms";
+
+    pub fn to_csv_rows(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{},{},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{},{:.2}",
+                self.label,
+                r.round,
+                r.epoch,
+                r.train_loss,
+                r.grad_norm,
+                r.test_loss,
+                r.test_acc,
+                r.cum_bits,
+                r.wall_ms
+            );
+        }
+        out
+    }
+}
+
+/// Write a set of runs as one CSV under `results/` (creating the dir).
+pub fn write_csv(path: impl AsRef<Path>, runs: &[RunLog]) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut out = String::from(RunLog::CSV_HEADER);
+    out.push('\n');
+    for r in runs {
+        out.push_str(&r.to_csv_rows());
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+/// Pretty-print a comparison table (one row per run) of final metrics —
+/// the "who wins" summary every bench prints.
+pub fn summary_table(runs: &[RunLog]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<24} {:>8} {:>12} {:>12} {:>9} {:>14}",
+        "method", "rounds", "final_loss", "grad_norm", "test_acc", "total_bits"
+    );
+    for r in runs {
+        if let Some(last) = r.last() {
+            let _ = writeln!(
+                out,
+                "{:<24} {:>8} {:>12.5} {:>12.5} {:>9.4} {:>14}",
+                r.label,
+                last.round,
+                last.train_loss,
+                last.grad_norm,
+                last.test_acc,
+                last.cum_bits
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> RunLog {
+        let mut run = RunLog::new("cdadam");
+        run.push(RoundRecord {
+            round: 1,
+            epoch: 0.5,
+            train_loss: 1.0,
+            grad_norm: 0.5,
+            test_loss: 1.1,
+            test_acc: 0.3,
+            cum_bits: 100,
+            wall_ms: 5.0,
+        });
+        run.push(RoundRecord { round: 2, cum_bits: 200, ..run.records[0].clone() });
+        run
+    }
+
+    #[test]
+    fn csv_shape() {
+        let run = sample_run();
+        let rows = run.to_csv_rows();
+        assert_eq!(rows.lines().count(), 2);
+        assert!(rows.starts_with("cdadam,1,0.5"));
+        assert_eq!(run.total_bits(), 200);
+    }
+
+    #[test]
+    fn write_and_read_back() {
+        let dir = std::env::temp_dir().join("cdadam_test_metrics");
+        let path = dir.join("out.csv");
+        write_csv(&path, &[sample_run()]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with(RunLog::CSV_HEADER));
+        assert_eq!(content.lines().count(), 3);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn summary_contains_label() {
+        let s = summary_table(&[sample_run()]);
+        assert!(s.contains("cdadam"));
+        assert!(s.lines().count() >= 2);
+    }
+}

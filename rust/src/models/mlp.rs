@@ -1,0 +1,367 @@
+//! Pure-Rust ReLU MLP classifier over flat parameters — weight layout is
+//! identical to `python/compile/model.py::MlpConfig` (row-major (in, out)
+//! weight then bias, per layer), so the same flat vector drives either
+//! this engine or the JAX HLO artifact interchangeably.
+
+use std::sync::Arc;
+
+use super::{EvalResult, Evaluator, GradEngine};
+use crate::data::synth_images::SynthImages;
+use crate::data::Shard;
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// Architecture: dims = [input, hidden..., classes].
+#[derive(Clone, Debug)]
+pub struct MlpSpec {
+    pub dims: Vec<usize>,
+}
+
+impl MlpSpec {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2);
+        MlpSpec { dims }
+    }
+
+    /// The three paper-architecture stand-ins (keep in sync with
+    /// python/compile/model.py MLP_PRESETS).
+    pub fn preset(name: &str, input_dim: usize, classes: usize) -> anyhow::Result<Self> {
+        let hidden: Vec<usize> = match name {
+            "resnet_mini" => vec![256, 128],
+            "vgg_mini" => vec![512],
+            "wrn_mini" => vec![192, 192, 96],
+            other => anyhow::bail!("unknown MLP preset {other:?}"),
+        };
+        let mut dims = vec![input_dim];
+        dims.extend(hidden);
+        dims.push(classes);
+        Ok(MlpSpec::new(dims))
+    }
+
+    /// Preset, optionally scaled down for the reduced (non-`full`)
+    /// synthetic-image runs so CPU sweeps stay fast; the relative
+    /// capacity ordering of the three architectures is preserved.
+    pub fn preset_scaled(
+        name: &str,
+        input_dim: usize,
+        classes: usize,
+        full: bool,
+    ) -> anyhow::Result<Self> {
+        if full {
+            return Self::preset(name, input_dim, classes);
+        }
+        let hidden: Vec<usize> = match name {
+            "resnet_mini" => vec![64, 32],
+            "vgg_mini" => vec![128],
+            "wrn_mini" => vec![48, 48, 24],
+            other => anyhow::bail!("unknown MLP preset {other:?}"),
+        };
+        let mut dims = vec![input_dim];
+        dims.extend(hidden);
+        dims.push(classes);
+        Ok(MlpSpec::new(dims))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// (weight offset, bias offset) of layer `l` within the flat vector.
+    fn offsets(&self, l: usize) -> (usize, usize) {
+        let mut off = 0;
+        for i in 0..l {
+            off += self.dims[i] * self.dims[i + 1] + self.dims[i + 1];
+        }
+        (off, off + self.dims[l] * self.dims[l + 1])
+    }
+
+    /// He-initialized flat parameter vector (matches python init scheme
+    /// in distribution; exact values come from each side's own RNG).
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut out = vec![0.0f32; self.param_count()];
+        for l in 0..self.n_layers() {
+            let (wo, bo) = self.offsets(l);
+            let std = (2.0 / self.dims[l] as f32).sqrt();
+            rng.fill_normal(&mut out[wo..bo], std);
+            // biases stay zero
+        }
+        out
+    }
+
+    /// Forward pass: returns per-layer activations (h[0] = input copy).
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        let mut acts = Vec::with_capacity(self.n_layers() + 1);
+        acts.push(x.to_vec());
+        for l in 0..self.n_layers() {
+            let (wo, bo) = self.offsets(l);
+            let (m, n) = (self.dims[l], self.dims[l + 1]);
+            let mut h = vec![0.0f32; batch * n];
+            tensor::matmul_bias(&mut h, &acts[l], &params[wo..bo], &params[bo..bo + n], batch, m, n);
+            if l + 1 < self.n_layers() {
+                tensor::relu(&mut h);
+            }
+            acts.push(h);
+        }
+        acts
+    }
+
+    /// Mean cross-entropy loss + gradient (into `grad`, overwritten).
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        grad: &mut [f32],
+    ) -> f32 {
+        debug_assert_eq!(params.len(), self.param_count());
+        debug_assert_eq!(grad.len(), params.len());
+        let classes = *self.dims.last().unwrap();
+        let acts = self.forward(params, x, batch);
+        // log-softmax + NLL
+        let mut logp = acts.last().unwrap().clone();
+        tensor::log_softmax_rows(&mut logp, batch, classes);
+        let mut loss = 0.0f64;
+        for (b, &yb) in y.iter().enumerate() {
+            loss -= logp[b * classes + yb as usize] as f64;
+        }
+        loss /= batch as f64;
+        // dlogits = (softmax − onehot)/batch
+        let mut dz: Vec<f32> = logp;
+        for v in dz.iter_mut() {
+            *v = v.exp();
+        }
+        for (b, &yb) in y.iter().enumerate() {
+            dz[b * classes + yb as usize] -= 1.0;
+        }
+        tensor::scale(&mut dz, 1.0 / batch as f32);
+        grad.fill(0.0);
+        // backprop
+        for l in (0..self.n_layers()).rev() {
+            let (wo, bo) = self.offsets(l);
+            let (m, n) = (self.dims[l], self.dims[l + 1]);
+            // dW = h_{l}^T dz ; db = colsum(dz)
+            tensor::matmul_tn_acc(&mut grad[wo..bo], &acts[l], &dz, batch, m, n);
+            for b in 0..batch {
+                for j in 0..n {
+                    grad[bo + j] += dz[b * n + j];
+                }
+            }
+            if l > 0 {
+                let mut dh = vec![0.0f32; batch * m];
+                tensor::matmul_nt(&mut dh, &dz, &params[wo..bo], batch, m, n);
+                // relu mask from stored activations
+                for (dv, &hv) in dh.iter_mut().zip(&acts[l][..]) {
+                    if hv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+                dz = dh;
+            }
+        }
+        loss as f32
+    }
+
+    /// Argmax predictions into `pred`.
+    pub fn predict(&self, params: &[f32], x: &[f32], batch: usize, pred: &mut [i32]) {
+        let classes = *self.dims.last().unwrap();
+        let acts = self.forward(params, x, batch);
+        let logits = acts.last().unwrap();
+        for b in 0..batch {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let mut best = 0;
+            for c in 1..classes {
+                if row[c] > row[best] {
+                    best = c;
+                }
+            }
+            pred[b] = best as i32;
+        }
+    }
+}
+
+/// Per-worker MLP gradient engine over a shard of [`SynthImages`].
+pub struct MlpEngine {
+    pub spec: MlpSpec,
+    data: Arc<SynthImages>,
+    shard: Shard,
+    pub tau: usize,
+    rng: Rng,
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl MlpEngine {
+    pub fn new(spec: MlpSpec, data: Arc<SynthImages>, shard: Shard, tau: usize, rng: Rng) -> Self {
+        let dim = data.dim;
+        MlpEngine { spec, data, shard, tau, rng, xbuf: vec![0.0; tau * dim], ybuf: vec![0; tau] }
+    }
+}
+
+impl GradEngine for MlpEngine {
+    fn dim(&self) -> usize {
+        self.spec.param_count()
+    }
+
+    fn loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        let idxs = self.shard.sample(self.tau, &mut self.rng);
+        let b = idxs.len();
+        self.data.fill_batch(&idxs, &mut self.xbuf[..b * self.data.dim], &mut self.ybuf[..b]);
+        self.spec.loss_grad(params, &self.xbuf[..b * self.data.dim], &self.ybuf[..b], b, grad_out)
+    }
+
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        // full shard in chunks of tau, averaging
+        let mut total = vec![0.0f32; grad_out.len()];
+        let mut loss = 0.0f64;
+        let mut count = 0usize;
+        let all: Vec<usize> = (self.shard.start..self.shard.start + self.shard.len).collect();
+        let mut g = vec![0.0f32; grad_out.len()];
+        for chunk in all.chunks(self.tau) {
+            let b = chunk.len();
+            self.data.fill_batch(chunk, &mut self.xbuf[..b * self.data.dim], &mut self.ybuf[..b]);
+            let l = self.spec.loss_grad(
+                params,
+                &self.xbuf[..b * self.data.dim],
+                &self.ybuf[..b],
+                b,
+                &mut g,
+            );
+            tensor::axpy(&mut total, b as f32, &g);
+            loss += l as f64 * b as f64;
+            count += b;
+        }
+        tensor::scale(&mut total, 1.0 / count as f32);
+        grad_out.copy_from_slice(&total);
+        (loss / count as f64) as f32
+    }
+}
+
+/// Held-out evaluator: test loss + accuracy over a fixed sample of the
+/// test split (paper reports test curves each epoch).
+pub struct MlpEvaluator {
+    spec: MlpSpec,
+    data: Arc<SynthImages>,
+    /// test indices evaluated (fixed subset for wallclock control)
+    idxs: Vec<usize>,
+    batch: usize,
+}
+
+impl MlpEvaluator {
+    pub fn new(spec: MlpSpec, data: Arc<SynthImages>, max_examples: usize, batch: usize) -> Self {
+        let n = data.n_test.min(max_examples);
+        let idxs: Vec<usize> = (0..n).map(|i| data.test_index(i)).collect();
+        MlpEvaluator { spec, data, idxs, batch }
+    }
+}
+
+impl Evaluator for MlpEvaluator {
+    fn eval(&mut self, params: &[f32]) -> EvalResult {
+        let d = self.data.dim;
+        let classes = *self.spec.dims.last().unwrap();
+        let mut x = vec![0.0f32; self.batch * d];
+        let mut y = vec![0i32; self.batch];
+        let mut pred = vec![0i32; self.batch];
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        let mut count = 0usize;
+        for chunk in self.idxs.chunks(self.batch) {
+            let b = chunk.len();
+            self.data.fill_batch(chunk, &mut x[..b * d], &mut y[..b]);
+            // loss via forward + log-softmax
+            let acts = self.spec.forward(params, &x[..b * d], b);
+            let mut logp = acts.last().unwrap().clone();
+            tensor::log_softmax_rows(&mut logp, b, classes);
+            for (row, &yb) in y[..b].iter().enumerate() {
+                loss -= logp[row * classes + yb as usize] as f64;
+            }
+            self.spec.predict(params, &x[..b * d], b, &mut pred[..b]);
+            correct += pred[..b].iter().zip(&y[..b]).filter(|(p, y)| p == y).count();
+            count += b;
+        }
+        EvalResult { loss: loss / count as f64, accuracy: correct as f64 / count as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> MlpSpec {
+        MlpSpec::new(vec![6, 5, 3])
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(tiny_spec().param_count(), 6 * 5 + 5 + 5 * 3 + 3);
+        let p = MlpSpec::preset("resnet_mini", 3072, 10).unwrap();
+        assert_eq!(p.param_count(), 3072 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let spec = tiny_spec();
+        let mut rng = Rng::new(3);
+        let params = spec.init(1);
+        let batch = 4;
+        let mut x = vec![0.0f32; batch * 6];
+        rng.fill_normal(&mut x, 1.0);
+        let y = vec![0i32, 2, 1, 0];
+        let mut g = vec![0.0f32; spec.param_count()];
+        let l0 = spec.loss_grad(&params, &x, &y, batch, &mut g);
+        assert!(l0 > 0.0);
+        let eps = 1e-3f32;
+        let mut scratch = vec![0.0f32; spec.param_count()];
+        for &i in &[0usize, 10, 30, spec.param_count() - 1] {
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let lp = spec.loss_grad(&pp, &x, &y, batch, &mut scratch);
+            let mut pm = params.clone();
+            pm[i] -= eps;
+            let lm = spec.loss_grad(&pm, &x, &y, batch, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 2e-2, "coord {i}: fd {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn engine_trains_on_synthetic_images() {
+        use crate::optim::{AmsGrad, Optimizer};
+        let data = Arc::new(SynthImages::small(4));
+        let spec = MlpSpec::new(vec![data.dim, 32, 10]);
+        let shard = Shard { start: 0, len: 512 };
+        let mut engine = MlpEngine::new(spec.clone(), data.clone(), shard, 64, Rng::new(5));
+        let mut params = spec.init(0);
+        let mut opt = AmsGrad::paper_defaults(params.len());
+        let mut g = vec![0.0f32; params.len()];
+        let mut ev = MlpEvaluator::new(spec, data, 256, 64);
+        let before = ev.eval(&params);
+        for _ in 0..80 {
+            engine.loss_grad(&params, &mut g);
+            opt.step(&mut params, &g, 2e-3);
+        }
+        let after = ev.eval(&params);
+        assert!(
+            after.accuracy > before.accuracy + 0.1,
+            "acc {} -> {}",
+            before.accuracy,
+            after.accuracy
+        );
+        assert!(after.loss < before.loss);
+    }
+
+    #[test]
+    fn predict_shapes() {
+        let spec = tiny_spec();
+        let params = spec.init(7);
+        let x = vec![0.5f32; 2 * 6];
+        let mut pred = vec![0i32; 2];
+        spec.predict(&params, &x, 2, &mut pred);
+        assert!(pred.iter().all(|&p| (0..3).contains(&p)));
+    }
+}

@@ -1,0 +1,49 @@
+//! Model engines: the things that turn (params, local data) into
+//! stochastic gradients.
+//!
+//! Two families implement [`GradEngine`]:
+//! * pure-Rust engines ([`logreg`], [`mlp`]) — fast CPU paths used for
+//!   the paper's optimization-heavy sweeps (Fig. 2/4 run thousands of
+//!   full-batch rounds at n = 20);
+//! * the HLO-backed engine in [`crate::runtime`] — the three-layer path
+//!   (JAX model + Pallas kernels lowered AOT, executed via PJRT), used
+//!   by the image suite and the transformer e2e driver.
+//!
+//! Both share the flat-f32 parameter representation, so a pure-Rust MLP
+//! and the JAX MLP artifact are interchangeable given the same preset
+//! (cross-checked in tests/hlo_agreement.rs).
+
+pub mod logreg;
+pub mod mlp;
+
+/// Computes stochastic loss/gradients for one worker's shard.
+pub trait GradEngine: Send {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Draw the next mini-batch (without replacement, size τ from the
+    /// engine's shard), compute loss and write the gradient.
+    fn loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32;
+
+    /// Deterministic full-shard gradient (metrics / Fig. 2 full batch).
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32;
+}
+
+/// Test-set metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Evaluates params on held-out data (driver-side, not per worker).
+pub trait Evaluator: Send {
+    fn eval(&mut self, params: &[f32]) -> EvalResult;
+
+    /// Exact global-objective gradient norm ‖∇f(x)‖₂ when cheaply
+    /// available (logreg); None ⇒ the coordinator falls back to the norm
+    /// of the round's averaged fresh mini-batch gradient.
+    fn global_grad_norm(&mut self, _params: &[f32]) -> Option<f64> {
+        None
+    }
+}

@@ -1,0 +1,114 @@
+//! Adam (Kingma & Ba 2014) with bias correction, plus the **frozen-
+//! variance** mode that 1-bit Adam (Tang et al. 2021) switches to after
+//! its warm-up: v is pinned at its warm-up value and only the momentum
+//! keeps updating — the "variance-freezing trick" the paper contrasts
+//! CD-Adam against.
+
+use super::Optimizer;
+
+/// Adam state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+    /// When true, v is no longer updated (1-bit Adam stage 2).
+    pub frozen: bool,
+    pub bias_correction: bool,
+}
+
+impl Adam {
+    pub fn new(dim: usize, beta1: f32, beta2: f32, nu: f32) -> Self {
+        Adam {
+            beta1,
+            beta2,
+            nu,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+            frozen: false,
+            bias_correction: true,
+        }
+    }
+
+    /// Freeze the variance term at its current value (end of warm-up).
+    pub fn freeze_variance(&mut self) {
+        self.frozen = true;
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        let (b1, b2, nu) = (self.beta1, self.beta2, self.nu);
+        let (c1, c2) = if self.bias_correction {
+            (1.0 - b1.powi(self.t as i32), 1.0 - b2.powi(self.t as i32))
+        } else {
+            (1.0, 1.0)
+        };
+        for i in 0..params.len() {
+            let g = grad[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * g;
+            self.m[i] = m;
+            let v = if self.frozen {
+                self.v[i]
+            } else {
+                let v = b2 * self.v[i] + (1.0 - b2) * g * g;
+                self.v[i] = v;
+                v
+            };
+            let mhat = m / c1;
+            let vhat = v / c2;
+            params[i] -= lr * mhat / (vhat.sqrt() + nu);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+        self.frozen = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signlike() {
+        // With bias correction, the first Adam step is ≈ lr·sign(g).
+        let mut opt = Adam::new(3, 0.9, 0.999, 1e-8);
+        let mut x = vec![0.0f32; 3];
+        opt.step(&mut x, &[0.5, -2.0, 1e-3], 0.1);
+        for (xi, gi) in x.iter().zip([0.5f32, -2.0, 1e-3]) {
+            assert!((xi.abs() - 0.1).abs() < 1e-3, "{xi}");
+            assert_eq!(xi.signum(), -gi.signum());
+        }
+    }
+
+    #[test]
+    fn frozen_variance_stops_v() {
+        let mut opt = Adam::new(2, 0.9, 0.99, 1e-8);
+        let mut x = vec![0.0f32; 2];
+        for _ in 0..5 {
+            opt.step(&mut x, &[1.0, -1.0], 0.01);
+        }
+        let v_before = opt.v.clone();
+        opt.freeze_variance();
+        for _ in 0..5 {
+            opt.step(&mut x, &[100.0, -100.0], 0.01);
+        }
+        assert_eq!(opt.v, v_before);
+        // momentum keeps moving
+        assert!(opt.m[0] > 1.0);
+    }
+}

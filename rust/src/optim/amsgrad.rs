@@ -1,0 +1,162 @@
+//! AMSGrad (Reddi et al. 2018) — Algorithm 1 lines 13–16:
+//!
+//! ```text
+//!   m_t = β₁ m_{t−1} + (1 − β₁) g̃_t
+//!   v_t = β₂ v_{t−1} + (1 − β₂) g̃_t²
+//!   v̂_t = max(v̂_{t−1}, v_t)
+//!   x_{t+1} = x_t − α_t · m_t / sqrt(v̂_t + ν)
+//! ```
+//!
+//! The update is a single fused pass (one load of each state vector, one
+//! store), mirroring the Pallas `fused_amsgrad` kernel; the two are
+//! cross-checked against the same golden vectors (tests/golden.rs).
+
+use super::Optimizer;
+
+/// AMSGrad state (m, v, v̂) over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct AmsGrad {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub nu: f32,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub vhat: Vec<f32>,
+    /// Optional decoupled weight decay (AdamW-style, paper §7.2 uses 5e-4).
+    pub weight_decay: f32,
+}
+
+impl AmsGrad {
+    pub fn new(dim: usize, beta1: f32, beta2: f32, nu: f32) -> Self {
+        AmsGrad {
+            beta1,
+            beta2,
+            nu,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            vhat: vec![0.0; dim],
+            weight_decay: 0.0,
+        }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    /// The paper's defaults (β₁=0.9, β₂=0.99, ν=1e-8).
+    pub fn paper_defaults(dim: usize) -> Self {
+        AmsGrad::new(dim, 0.9, 0.99, 1e-8)
+    }
+}
+
+impl Optimizer for AmsGrad {
+    fn name(&self) -> &'static str {
+        "amsgrad"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(params.len(), self.m.len());
+        let (b1, b2, nu, wd) = (self.beta1, self.beta2, self.nu, self.weight_decay);
+        for i in 0..params.len() {
+            let g = grad[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * g;
+            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let vh = self.vhat[i].max(v);
+            self.m[i] = m;
+            self.v[i] = v;
+            self.vhat[i] = vh;
+            let mut p = params[i];
+            if wd != 0.0 {
+                p -= lr * wd * p;
+            }
+            params[i] = p - lr * m / (vh + nu).sqrt();
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.vhat.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn single_step_formula() {
+        let mut opt = AmsGrad::new(2, 0.9, 0.99, 1e-8);
+        let mut x = vec![1.0f32, -1.0];
+        let g = vec![0.5f32, -0.25];
+        opt.step(&mut x, &g, 0.1);
+        for i in 0..2 {
+            let m = 0.1 * g[i];
+            let v = 0.01 * g[i] * g[i];
+            let want = [1.0, -1.0][i] - 0.1 * m / (v + 1e-8).sqrt();
+            assert!((x[i] - want).abs() < 1e-6, "{} vs {}", x[i], want);
+        }
+    }
+
+    #[test]
+    fn prop_vhat_monotone() {
+        check("vhat non-decreasing", Config::default(), |gen| {
+            let d = gen.size(100);
+            let mut opt = AmsGrad::paper_defaults(d);
+            let mut x = gen.vec_normal(d, 1.0);
+            let mut prev = vec![0.0f32; d];
+            for _ in 0..8 {
+                let g = gen.vec_normal(d, 1.0);
+                opt.step(&mut x, &g, 1e-2);
+                for i in 0..d {
+                    if opt.vhat[i] < prev[i] {
+                        return Err(format!("vhat[{i}] decreased"));
+                    }
+                }
+                prev.copy_from_slice(&opt.vhat);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bounded_step_size() {
+        // |Δx| ≤ lr · |m| / sqrt(ν) always; with β₁ = 0 and one step,
+        // |Δx| = lr·|g|/sqrt(g²(1-β₂)+ν) ≤ lr/sqrt(1-β₂).
+        check("update magnitude bounded", Config::default(), |gen| {
+            let d = gen.size(64);
+            let mut opt = AmsGrad::new(d, 0.0, 0.99, 1e-8);
+            let mut x = vec![0.0f32; d];
+            let g = gen.vec_f32(d, 100.0);
+            opt.step(&mut x, &g, 0.1);
+            let bound = 0.1 / (1.0f32 - 0.99).sqrt() + 1e-5;
+            for (i, v) in x.iter().enumerate() {
+                if v.abs() > bound {
+                    return Err(format!("x[{i}] = {v} exceeds bound {bound}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = AmsGrad::paper_defaults(1).with_weight_decay(0.1);
+        let mut x = vec![1.0f32];
+        opt.step(&mut x, &[0.0], 0.5);
+        assert!((x[0] - 0.95).abs() < 1e-6); // pure decay when grad = 0
+    }
+
+    #[test]
+    fn reset_zeroes_state() {
+        let mut opt = AmsGrad::paper_defaults(3);
+        let mut x = vec![1.0f32; 3];
+        opt.step(&mut x, &[1.0, 2.0, 3.0], 0.1);
+        opt.reset();
+        assert!(opt.m.iter().all(|&v| v == 0.0));
+        assert!(opt.vhat.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,87 @@
+//! Optimizers: AMSGrad (Algorithm 1 lines 13–16), Adam (with the frozen-
+//! variance mode 1-bit Adam needs), SGD with momentum, and step-size
+//! schedules.
+//!
+//! All optimizers consume a *flat* f32 gradient and update a flat
+//! parameter vector in place — the same representation the compressors,
+//! the wire format, and the HLO artifacts use, so the L3 hot loop is a
+//! handful of single-pass kernels with zero steady-state allocation.
+
+pub mod adam;
+pub mod amsgrad;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use amsgrad::AmsGrad;
+pub use sgd::SgdMomentum;
+
+/// A stateful first-order optimizer over flat parameter vectors.
+pub trait Optimizer: Send {
+    /// Apply one update: params ← params − step(grad).
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+
+    /// Stable identifier for configs/CSV.
+    fn name(&self) -> &'static str;
+
+    /// Reset all moment state to zero (used between sweep repetitions).
+    fn reset(&mut self);
+}
+
+/// Learning-rate schedule: constant, or multi-step decay (the paper's
+/// deep-learning runs decay ×0.1 at epochs 50 and 75 of 100).
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// (round, multiplier) pairs; applied when `round >= entry.0`.
+    pub milestones: Vec<(usize, f32)>,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> Self {
+        LrSchedule { base: lr, milestones: Vec::new() }
+    }
+
+    /// Multi-step decay, paper style: gamma applied at each milestone.
+    pub fn multi_step(lr: f32, milestones: &[usize], gamma: f32) -> Self {
+        let mut acc = 1.0;
+        let ms = milestones
+            .iter()
+            .map(|&r| {
+                acc *= gamma;
+                (r, acc)
+            })
+            .collect();
+        LrSchedule { base: lr, milestones: ms }
+    }
+
+    pub fn at(&self, round: usize) -> f32 {
+        let mut mult = 1.0;
+        for &(r, m) in &self.milestones {
+            if round >= r {
+                mult = m;
+            }
+        }
+        self.base * mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1000), 0.1);
+    }
+
+    #[test]
+    fn schedule_multistep() {
+        let s = LrSchedule::multi_step(1.0, &[50, 75], 0.1);
+        assert_eq!(s.at(49), 1.0);
+        assert!((s.at(50) - 0.1).abs() < 1e-7);
+        assert!((s.at(74) - 0.1).abs() < 1e-7);
+        assert!((s.at(75) - 0.01).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,77 @@
+//! SGD with (heavy-ball) momentum and optional weight decay — the update
+//! rule under EF21 (paper §7.2 uses lr 0.1) and the effective rule of
+//! 1-bit Adam's compressed stage.
+
+use super::Optimizer;
+
+/// SGD + momentum: u ← μ·u + g;  x ← x − lr·u  (PyTorch convention).
+#[derive(Clone, Debug)]
+pub struct SgdMomentum {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub u: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(dim: usize, momentum: f32) -> Self {
+        SgdMomentum { momentum, weight_decay: 0.0, u: vec![0.0; dim] }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgd_momentum"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grad.len());
+        let (mu, wd) = (self.momentum, self.weight_decay);
+        for i in 0..params.len() {
+            let g = grad[i] + wd * params[i];
+            let u = mu * self.u[i] + g;
+            self.u[i] = u;
+            params[i] -= lr * u;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.u.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdMomentum::new(1, 0.9);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], 0.1);
+        assert!((x[0] + 0.1).abs() < 1e-7);
+        opt.step(&mut x, &[1.0], 0.1);
+        // u = 0.9*1 + 1 = 1.9; x = -0.1 - 0.19
+        assert!((x[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut opt = SgdMomentum::new(2, 0.0);
+        let mut x = vec![1.0f32, 2.0];
+        opt.step(&mut x, &[0.5, -0.5], 0.2);
+        assert_eq!(x, vec![0.9, 2.1]);
+    }
+
+    #[test]
+    fn weight_decay_couples_into_grad() {
+        let mut opt = SgdMomentum::new(1, 0.0).with_weight_decay(0.1);
+        let mut x = vec![1.0f32];
+        opt.step(&mut x, &[0.0], 1.0);
+        assert!((x[0] - 0.9).abs() < 1e-7);
+    }
+}

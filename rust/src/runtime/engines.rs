@@ -1,0 +1,185 @@
+//! HLO-backed gradient engines: the three-layer training path.
+//!
+//! Each engine drives one AOT artifact through the [`RuntimeHandle`]:
+//! * [`HloMlpEngine`] — `mlp_<preset>_grad` (JAX MLP classifier) on a
+//!   shard of [`SynthImages`];
+//! * [`HloTlmEngine`] — `tlm_<preset>_grad` (transformer LM) on windows
+//!   of a shared [`Corpus`].
+//!
+//! The artifact's batch shape is fixed at lowering time, so τ is pinned
+//! to it; the engine re-samples a fresh batch each call (without
+//! replacement within the shard).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::{HostTensor, Manifest, RuntimeHandle};
+use crate::data::corpus::Corpus;
+use crate::data::synth_images::SynthImages;
+use crate::data::Shard;
+use crate::models::GradEngine;
+use crate::util::rng::Rng;
+
+/// JAX-MLP gradient engine (image classification via PJRT).
+pub struct HloMlpEngine {
+    handle: RuntimeHandle,
+    artifact: String,
+    dim: usize,
+    batch: usize,
+    input_dim: usize,
+    data: Arc<SynthImages>,
+    shard: Shard,
+    rng: Rng,
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl HloMlpEngine {
+    pub fn new(
+        manifest: &Manifest,
+        handle: RuntimeHandle,
+        preset: &str,
+        data: Arc<SynthImages>,
+        shard: Shard,
+        rng: Rng,
+    ) -> Result<Self> {
+        let artifact = format!("mlp_{preset}_grad");
+        let info = manifest
+            .artifacts
+            .get(&artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact:?} missing — run make artifacts"))?;
+        let dim = info.inputs[0].0[0];
+        let batch = info.inputs[1].0[0];
+        let input_dim = info.inputs[1].0[1];
+        anyhow::ensure!(
+            input_dim == data.dim,
+            "artifact expects {input_dim} features, dataset has {}",
+            data.dim
+        );
+        Ok(HloMlpEngine {
+            handle,
+            artifact,
+            dim,
+            batch,
+            input_dim,
+            data,
+            shard,
+            rng,
+            xbuf: vec![0.0; batch * input_dim],
+            ybuf: vec![0; batch],
+        })
+    }
+
+    fn run(&mut self, params: &[f32], grad_out: &mut [f32], idxs: &[usize]) -> f32 {
+        // artifact batch is fixed: wrap the index list to fill it
+        let mut filled = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            filled.push(idxs[i % idxs.len()]);
+        }
+        self.data.fill_batch(&filled, &mut self.xbuf, &mut self.ybuf);
+        let out = self
+            .handle
+            .exec(
+                &self.artifact,
+                vec![
+                    HostTensor::f32(vec![self.dim], params.to_vec()),
+                    HostTensor::f32(vec![self.batch, self.input_dim], self.xbuf.clone()),
+                    HostTensor::i32(vec![self.batch], self.ybuf.clone()),
+                ],
+            )
+            .expect("PJRT execution failed");
+        grad_out.copy_from_slice(out[1].as_f32().unwrap());
+        out[0].scalar_f32().unwrap()
+    }
+}
+
+impl GradEngine for HloMlpEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        let idxs = self.shard.sample(self.batch, &mut self.rng);
+        self.run(params, grad_out, &idxs)
+    }
+
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        // fixed-batch artifact: approximate with one deterministic pass
+        // over the first `batch` shard examples (metrics only).
+        let idxs: Vec<usize> =
+            (self.shard.start..self.shard.start + self.shard.len.min(self.batch)).collect();
+        self.run(params, grad_out, &idxs)
+    }
+}
+
+/// Transformer-LM gradient engine (byte corpus via PJRT).
+pub struct HloTlmEngine {
+    handle: RuntimeHandle,
+    artifact: String,
+    dim: usize,
+    batch: usize,
+    seq: usize,
+    corpus: Arc<Corpus>,
+    rng: Rng,
+    tbuf: Vec<i32>,
+    ybuf: Vec<i32>,
+}
+
+impl HloTlmEngine {
+    pub fn new(
+        manifest: &Manifest,
+        handle: RuntimeHandle,
+        preset: &str,
+        corpus: Arc<Corpus>,
+        rng: Rng,
+    ) -> Result<Self> {
+        let artifact = format!("tlm_{preset}_grad");
+        let info = manifest
+            .artifacts
+            .get(&artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact:?} missing — run make artifacts"))?;
+        let dim = info.inputs[0].0[0];
+        let batch = info.inputs[1].0[0];
+        let seq = info.inputs[1].0[1];
+        Ok(HloTlmEngine {
+            handle,
+            artifact,
+            dim,
+            batch,
+            seq,
+            corpus,
+            rng,
+            tbuf: vec![0; batch * seq],
+            ybuf: vec![0; batch * seq],
+        })
+    }
+}
+
+impl GradEngine for HloTlmEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        self.corpus.sample_batch(self.batch, self.seq, &mut self.rng, &mut self.tbuf, &mut self.ybuf);
+        let out = self
+            .handle
+            .exec(
+                &self.artifact,
+                vec![
+                    HostTensor::f32(vec![self.dim], params.to_vec()),
+                    HostTensor::i32(vec![self.batch, self.seq], self.tbuf.clone()),
+                    HostTensor::i32(vec![self.batch, self.seq], self.ybuf.clone()),
+                ],
+            )
+            .expect("PJRT execution failed");
+        grad_out.copy_from_slice(out[1].as_f32().unwrap());
+        out[0].scalar_f32().unwrap()
+    }
+
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        // LM has no "full batch"; use a fresh stochastic batch.
+        self.loss_grad(params, grad_out)
+    }
+}

@@ -1,0 +1,376 @@
+//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
+//! them from the Rust training path.
+//!
+//! The `xla` crate's handles wrap raw pointers (not `Send`), so a single
+//! **service thread** owns the `PjRtClient` and the compiled-executable
+//! cache; workers talk to it through a cloneable [`RuntimeHandle`]
+//! (request/reply over mpsc). On a single-CPU PJRT device this serializes
+//! gradient computation — which is exactly the semantics of one shared
+//! accelerator — while keeping the coordinator fully multi-threaded.
+//!
+//! Artifact discovery: `CDADAM_ARTIFACTS` env var, else `./artifacts`,
+//! else walking up from the executable (so `cargo test` finds the repo
+//! root from `target/…`).
+
+pub mod engines;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A host-side tensor crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+}
+
+/// One artifact's signature from manifest.json.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+    pub meta: Json,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactInfo>,
+    pub params: HashMap<String, (String, usize)>,
+    pub dir: PathBuf,
+}
+
+fn sig(list: &Json) -> Result<Vec<(Vec<usize>, String)>> {
+    list.as_arr()?
+        .iter()
+        .map(|e| {
+            let shape = e
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok((shape, e.req("dtype")?.as_str()?.to_string()))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let json = Json::parse(&text)?;
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        for (name, entry) in json.req("artifacts")?.as_obj()? {
+            if name == "_params" {
+                for (pname, pe) in entry.as_obj()? {
+                    m.params.insert(
+                        pname.clone(),
+                        (pe.req("path")?.as_str()?.to_string(), pe.req("count")?.as_usize()?),
+                    );
+                }
+                continue;
+            }
+            m.artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    path: entry.req("path")?.as_str()?.to_string(),
+                    inputs: sig(entry.req("inputs")?)?,
+                    outputs: sig(entry.req("outputs")?)?,
+                    meta: entry.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(m)
+    }
+
+    /// Load an initial-parameter dump (little-endian f32 file).
+    pub fn load_params(&self, name: &str) -> Result<Vec<f32>> {
+        let (path, count) =
+            self.params.get(name).ok_or_else(|| anyhow!("no params dump {name:?}"))?;
+        let bytes = std::fs::read(self.dir.join(path))?;
+        if bytes.len() != count * 4 {
+            bail!("params file {path}: {} bytes, expected {}", bytes.len(), count * 4);
+        }
+        Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+    }
+}
+
+/// Locate the artifacts directory.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("CDADAM_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("artifacts/manifest.json not found (run `make artifacts`)");
+        }
+    }
+}
+
+/// True when artifacts have been built (tests skip HLO paths otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().is_ok()
+}
+
+enum Req {
+    Exec { name: String, inputs: Vec<HostTensor>, reply: Sender<Result<Vec<HostTensor>>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the runtime service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Req>,
+}
+
+impl RuntimeHandle {
+    /// Execute artifact `name` with the given inputs; blocks for results.
+    pub fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Req::Exec { name: name.into(), inputs, reply: rtx })
+            .map_err(|_| anyhow!("runtime service down"))?;
+        rrx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+}
+
+/// The runtime service: owns PJRT state on its own thread.
+pub struct RuntimeService {
+    pub manifest: Manifest,
+    handle: RuntimeHandle,
+    join: Option<JoinHandle<()>>,
+    tx: Sender<Req>,
+}
+
+impl RuntimeService {
+    /// Start the service, eagerly compiling the named artifacts
+    /// (compile-once; executables are cached for the process lifetime).
+    pub fn start(preload: &[String]) -> Result<RuntimeService> {
+        let dir = artifacts_dir()?;
+        let manifest = Manifest::load(&dir)?;
+        for name in preload {
+            if !manifest.artifacts.contains_key(name) {
+                bail!("artifact {name:?} not in manifest");
+            }
+        }
+        let (tx, rx) = channel::<Req>();
+        let m2 = manifest.clone();
+        let preload: Vec<String> = preload.to_vec();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new().name("pjrt-runtime".into()).spawn(move || {
+            let client = match xla::PjRtClient::cpu() {
+                Ok(c) => c,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow!("PJRT client: {e}")));
+                    return;
+                }
+            };
+            let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+            let compile = |client: &xla::PjRtClient,
+                           m: &Manifest,
+                           name: &str|
+             -> Result<xla::PjRtLoadedExecutable> {
+                let info =
+                    m.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+                let path = m.dir.join(&info.path);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))
+            };
+            let mut ok = Ok(());
+            for name in &preload {
+                match compile(&client, &m2, name) {
+                    Ok(exe) => {
+                        cache.insert(name.clone(), exe);
+                    }
+                    Err(e) => {
+                        ok = Err(e);
+                        break;
+                    }
+                }
+            }
+            let failed = ok.is_err();
+            let _ = ready_tx.send(ok);
+            if failed {
+                return;
+            }
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Shutdown => break,
+                    Req::Exec { name, inputs, reply } => {
+                        let result = (|| -> Result<Vec<HostTensor>> {
+                            if !cache.contains_key(&name) {
+                                let exe = compile(&client, &m2, &name)?;
+                                cache.insert(name.clone(), exe);
+                            }
+                            let exe = cache.get(&name).unwrap();
+                            let lits: Vec<xla::Literal> = inputs
+                                .iter()
+                                .map(|t| -> Result<xla::Literal> {
+                                    let (dims, lit) = match t {
+                                        HostTensor::F32 { shape, data } => {
+                                            (shape, xla::Literal::vec1(data))
+                                        }
+                                        HostTensor::I32 { shape, data } => {
+                                            (shape, xla::Literal::vec1(data))
+                                        }
+                                    };
+                                    let dims: Vec<i64> =
+                                        dims.iter().map(|&d| d as i64).collect();
+                                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+                                })
+                                .collect::<Result<Vec<_>>>()?;
+                            let bufs =
+                                exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("exec: {e}"))?;
+                            let out = bufs[0][0]
+                                .to_literal_sync()
+                                .map_err(|e| anyhow!("to_literal: {e}"))?;
+                            let parts =
+                                out.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))?;
+                            let info = m2.artifacts.get(&name).unwrap();
+                            parts
+                                .into_iter()
+                                .zip(&info.outputs)
+                                .map(|(lit, (shape, dtype))| -> Result<HostTensor> {
+                                    match dtype.as_str() {
+                                        "float32" => Ok(HostTensor::F32 {
+                                            shape: shape.clone(),
+                                            data: lit
+                                                .to_vec::<f32>()
+                                                .map_err(|e| anyhow!("to_vec f32: {e}"))?,
+                                        }),
+                                        "int32" => Ok(HostTensor::I32 {
+                                            shape: shape.clone(),
+                                            data: lit
+                                                .to_vec::<i32>()
+                                                .map_err(|e| anyhow!("to_vec i32: {e}"))?,
+                                        }),
+                                        other => bail!("unsupported output dtype {other}"),
+                                    }
+                                })
+                                .collect()
+                        })();
+                        let _ = reply.send(result);
+                    }
+                }
+            }
+        })?;
+        ready_rx.recv().map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(RuntimeService {
+            manifest,
+            handle: RuntimeHandle { tx: tx.clone() },
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_artifacts_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir().unwrap()).unwrap();
+        assert!(!m.artifacts.is_empty());
+        // every artifact file exists
+        for info in m.artifacts.values() {
+            assert!(m.dir.join(&info.path).exists(), "missing {}", info.path);
+        }
+        // params dumps load with the advertised count
+        for name in m.params.keys() {
+            let p = m.load_params(name).unwrap();
+            assert_eq!(p.len(), m.params[name].1);
+        }
+    }
+
+    #[test]
+    fn scaled_sign_artifact_matches_rust() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = artifacts_dir().unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // find any scaled_sign artifact
+        let Some(name) = m.artifacts.keys().find(|k| k.starts_with("scaled_sign_d")) else {
+            return;
+        };
+        let d = m.artifacts[name].inputs[0].0[0];
+        let svc = RuntimeService::start(&[name.clone()]).unwrap();
+        let mut x = vec![0.0f32; d];
+        crate::util::rng::Rng::new(5).fill_normal(&mut x, 1.0);
+        let out = svc.handle().exec(name, vec![HostTensor::f32(vec![d], x.clone())]).unwrap();
+        let hlo = out[0].as_f32().unwrap();
+        use crate::compress::Compressor;
+        let rust = crate::compress::ScaledSign::new().compress(&x).to_dense();
+        for (i, (a, b)) in hlo.iter().zip(&rust).enumerate() {
+            // XLA's reduction order differs from the linear Rust scan;
+            // the scale agrees to a few f32 ulps.
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1e-3),
+                "coord {i}: hlo {a} vs rust {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (`--key value` / `--key=value` / `--flag`).
+//!
+//! clap is unavailable in the offline cache; experiments only need flat
+//! key-value overrides on top of named presets, which this covers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: positional args + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut args = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{key} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("run --n 8 --tau=128 --lr 0.001 --quick");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.usize("n", 0).unwrap(), 8);
+        assert_eq!(a.usize("tau", 0).unwrap(), 128);
+        assert!(a.flag("quick"));
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 0.001);
+        // a bare flag followed by a positional consumes it as a value —
+        // documented ambiguity; use --flag=true before positionals.
+        let b = parse("--quick pos");
+        assert_eq!(b.get("quick"), Some("pos"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("--x notanum");
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert!(a.usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Dependency-free utilities: PRNG, JSON, CLI args, timers, property tests.
+//!
+//! The offline crate cache only carries the `xla` dependency tree, so the
+//! usual ecosystem crates (rand, serde, clap, proptest, criterion) are
+//! replaced by the small, tested substitutes in this module (see
+//! DESIGN.md §2, substitution table).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Round `x` to `digits` significant decimal digits (for log output).
+pub fn sig(x: f64, digits: i32) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let f = 10f64.powi(digits - 1 - mag);
+    (x * f).round() / f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_rounds() {
+        assert_eq!(sig(0.123456, 3), 0.123);
+        assert_eq!(sig(123456.0, 2), 120000.0);
+        assert_eq!(sig(0.0, 3), 0.0);
+    }
+}

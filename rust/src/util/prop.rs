@@ -1,0 +1,131 @@
+//! Randomized property-test harness (proptest substitute).
+//!
+//! `check` runs a property over `cases` generated inputs from a seeded
+//! RNG; on failure it retries with progressively "smaller" generator
+//! budgets (shrinking-lite) and reports the seed so the case replays
+//! deterministically: `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE);
+        Config { cases: 128, seed }
+    }
+}
+
+/// A generation budget: properties draw sizes/magnitudes from it so that
+/// failing cases can be retried at smaller scales.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// scale in (0, 1]: 1.0 = full-size inputs.
+    pub scale: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// A size in [1, max], scaled down when shrinking.
+    pub fn size(&mut self, max: usize) -> usize {
+        let m = ((max as f64 * self.scale).ceil() as usize).max(1);
+        1 + self.rng.below(m)
+    }
+
+    /// A vector of f32s in [-mag, mag] with occasional exact zeros.
+    pub fn vec_f32(&mut self, len: usize, mag: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if self.rng.below(16) == 0 {
+                    0.0
+                } else {
+                    (self.rng.f32() * 2.0 - 1.0) * mag * self.scale as f32
+                }
+            })
+            .collect()
+    }
+
+    /// A vector of standard normals * std.
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std * self.scale as f32);
+        v
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panic with a replayable
+/// seed on the first failure (after attempting smaller-scale repros).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen<'_>) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut rng, scale: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // Shrinking-lite: replay the same seed at smaller scales and
+            // report the smallest scale that still fails.
+            let mut failing_scale = 1.0;
+            for &s in &[0.5, 0.25, 0.1, 0.05] {
+                let mut rng = Rng::new(case_seed);
+                let mut g = Gen { rng: &mut rng, scale: s };
+                if prop(&mut g).is_err() {
+                    failing_scale = s;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {case_seed}, \
+                 min failing scale {failing_scale}): {msg}\n\
+                 replay with PROP_SEED={case_seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum_commutes", Config::default(), |g| {
+            let n = g.size(100);
+            let v = g.vec_f32(n, 10.0);
+            let fwd: f32 = v.iter().sum();
+            let rev: f32 = v.iter().rev().sum();
+            // f32 addition is not associative, but these agree to tolerance
+            assert_close(&[fwd], &[rev], 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failure() {
+        check("always_fails", Config { cases: 3, seed: 1 }, |g| {
+            let n = g.size(10);
+            if n > 0 {
+                Err("nope".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Failure injection: the coordinator must fail loudly (Err, not hang,
+//! not silently wrong) when a worker dies or an engine misbehaves, and
+//! the wire format must reject corruption.
+
+use cdadam::comm::{link, wire, WireMsg};
+use cdadam::compress::CompressedMsg;
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::setup::{self, Setup};
+use cdadam::coordinator::threaded::run_threaded_with;
+use cdadam::models::GradEngine;
+
+/// Engine that panics after `ok_rounds` gradient computations.
+struct DyingEngine {
+    dim: usize,
+    ok_rounds: usize,
+    calls: usize,
+}
+
+impl GradEngine for DyingEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, _params: &[f32], grad_out: &mut [f32]) -> f32 {
+        self.calls += 1;
+        if self.calls > self.ok_rounds {
+            panic!("injected engine failure at call {}", self.calls);
+        }
+        grad_out.fill(0.01);
+        1.0
+    }
+
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        self.loss_grad(params, grad_out)
+    }
+}
+
+/// NaN-producing engine: training must not mask non-finite losses.
+struct NanEngine {
+    dim: usize,
+}
+
+impl GradEngine for NanEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, _params: &[f32], grad_out: &mut [f32]) -> f32 {
+        grad_out.fill(f32::NAN);
+        f32::NAN
+    }
+
+    fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
+        self.loss_grad(params, grad_out)
+    }
+}
+
+fn base_setup(cfg: &ExperimentConfig) -> Setup {
+    setup::build(cfg).unwrap()
+}
+
+#[test]
+fn worker_death_surfaces_as_error_not_hang() {
+    let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+    cfg.rounds = 50;
+    cfg.eval_every = 10;
+    let mut s = base_setup(&cfg);
+    let dim = s.dim;
+    // worker 2 dies after 5 rounds
+    s.engines[2] = Box::new(DyingEngine { dim, ok_rounds: 5, calls: 0 });
+    let started = std::time::Instant::now();
+    let result = run_threaded_with(&cfg, s);
+    assert!(result.is_err(), "expected error from dying worker");
+    assert!(started.elapsed().as_secs() < 30, "coordinator hung");
+}
+
+#[test]
+fn nan_gradients_propagate_to_metrics_not_panic() {
+    let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+    cfg.rounds = 10;
+    cfg.eval_every = 10;
+    let mut s = base_setup(&cfg);
+    let dim = s.dim;
+    for e in s.engines.iter_mut() {
+        *e = Box::new(NanEngine { dim });
+    }
+    // a NaN gradient is a *model* failure, not a coordinator failure:
+    // the run completes and the metrics expose the NaN for the caller.
+    let log = run_threaded_with(&cfg, s).unwrap();
+    assert!(log.last().unwrap().train_loss.is_nan());
+}
+
+#[test]
+fn wire_corruption_detected() {
+    let msg = WireMsg { round: 9, from: 3, payload: CompressedMsg::Dense(vec![1.0, 2.0, 3.0]) };
+    let bytes = wire::encode(&msg);
+    // bit flips in the tag byte or truncation must not decode silently
+    // into a *different valid* payload of the same length class.
+    let mut t = bytes.clone();
+    t.truncate(t.len() - 2);
+    assert!(wire::decode(&t).is_err());
+    let mut garbage = bytes.clone();
+    garbage[6] = 99; // invalid tag
+    assert!(wire::decode(&garbage).is_err());
+}
+
+#[test]
+fn dropped_receiver_fails_sender() {
+    let (tx, rx, _) = link();
+    drop(rx);
+    assert!(tx.send(WireMsg { round: 0, from: 0, payload: CompressedMsg::Zero { d: 1 } }).is_err());
+}
+
+#[test]
+fn replica_divergence_detected() {
+    // Force divergence with a strategy whose worker halves disagree:
+    // wrap CD-Adam but give worker 0 a perturbed downlink application.
+    use cdadam::algo::{ServerAlgo, Strategy, WorkerAlgo};
+    use cdadam::compress::ScaledSign;
+
+    struct Evil(cdadam::algo::cdadam::CdAdam);
+    struct EvilWorker {
+        inner: Box<dyn WorkerAlgo>,
+        id: usize,
+    }
+    impl WorkerAlgo for EvilWorker {
+        fn uplink(&mut self, round: usize, grad: &[f32]) -> CompressedMsg {
+            self.inner.uplink(round, grad)
+        }
+        fn apply_downlink(
+            &mut self,
+            round: usize,
+            msg: &CompressedMsg,
+            params: &mut [f32],
+            lr: f32,
+        ) {
+            self.inner.apply_downlink(round, msg, params, lr);
+            if self.id == 1 {
+                params[0] += 1e-3; // divergent replica
+            }
+        }
+    }
+    impl Strategy for Evil {
+        fn name(&self) -> &'static str {
+            "evil"
+        }
+        fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
+            Box::new(EvilWorker { inner: self.0.make_worker(dim, worker_id), id: worker_id })
+        }
+        fn make_server(&self, dim: usize, n: usize) -> Box<dyn ServerAlgo> {
+            self.0.make_server(dim, n)
+        }
+    }
+
+    // drive manually through the test harness used by algo tests: the
+    // lockstep drive() asserts replica equality and must catch this.
+    let strat = Evil(cdadam::algo::cdadam::CdAdam::new(Box::new(ScaledSign::new())));
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // local mini-driver replicating the replica check
+        let dim = 8;
+        let n = 2;
+        let mut workers: Vec<_> = (0..n).map(|i| strat.make_worker(dim, i)).collect();
+        let mut server = strat.make_server(dim, n);
+        let mut params = vec![vec![0.0f32; dim]; n];
+        let g = vec![1.0f32; dim];
+        for t in 1..=3 {
+            let ups: Vec<_> = workers.iter_mut().map(|w| w.uplink(t, &g)).collect();
+            let down = server.round(t, &ups);
+            for (i, w) in workers.iter_mut().enumerate() {
+                w.apply_downlink(t, &down, &mut params[i], 0.01);
+            }
+            assert_eq!(
+                cdadam::coordinator::params_hash(&params[0]),
+                cdadam::coordinator::params_hash(&params[1]),
+                "replica divergence"
+            );
+        }
+    }));
+    assert!(res.is_err(), "divergent replicas must be detected");
+}

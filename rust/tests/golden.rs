@@ -1,0 +1,98 @@
+//! Rust ↔ Python golden-vector agreement: the Rust implementations of
+//! every shared kernel must match the pure-jnp oracles bit-for-bit (up
+//! to f32 reduction-order ulps). Golden vectors are produced once by
+//! `python -m compile.aot` into `artifacts/golden/*.json`.
+//!
+//! These tests skip (with a notice) when artifacts have not been built;
+//! `make test` always builds them first.
+
+use cdadam::compress::{Compressor, ScaledSign, TopK};
+use cdadam::markov::MarkovEncoder;
+use cdadam::optim::{AmsGrad, Optimizer};
+use cdadam::runtime::{artifacts_dir, artifacts_available};
+use cdadam::util::json::Json;
+
+fn golden(case: &str) -> Option<Json> {
+    if !artifacts_available() {
+        eprintln!("skipping golden test: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let path = artifacts_dir().unwrap().join("golden").join(format!("{case}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden case {case}: {e}"));
+    Some(Json::parse(&text).unwrap())
+}
+
+fn assert_close(tag: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * b.abs();
+        assert!((a - b).abs() <= tol, "{tag}[{i}]: rust {a} vs python {b}");
+    }
+}
+
+#[test]
+fn scaled_sign_matches_python() {
+    let Some(g) = golden("scaled_sign") else { return };
+    let x = g.req("x").unwrap().as_f32_vec().unwrap();
+    let want = g.req("out").unwrap().as_f32_vec().unwrap();
+    let got = ScaledSign::new().compress(&x).to_dense();
+    // scale is an f32 L1 mean on both sides; reduction order may differ
+    assert_close("scaled_sign", &got, &want, 1e-5, 1e-7);
+    // and signs must agree exactly
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.signum(), b.signum(), "sign mismatch at {i}");
+    }
+}
+
+#[test]
+fn topk_matches_python_exactly() {
+    for k in [1usize, 10, 100] {
+        let Some(g) = golden(&format!("topk_k{k}")) else { return };
+        let x = g.req("x").unwrap().as_f32_vec().unwrap();
+        let want = g.req("out").unwrap().as_f32_vec().unwrap();
+        let got = TopK::with_k(k).compress(&x).to_dense();
+        assert_eq!(got, want, "topk k={k} must match exactly (incl. tie rule)");
+    }
+}
+
+#[test]
+fn markov_sequence_matches_python() {
+    let Some(g) = golden("markov_sign") else { return };
+    let d = g.req("d").unwrap().as_usize().unwrap();
+    let gs = g.req("g").unwrap().as_arr().unwrap();
+    let cs = g.req("c").unwrap().as_arr().unwrap();
+    let ghats = g.req("ghat").unwrap().as_arr().unwrap();
+    let mut enc = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
+    for t in 0..gs.len() {
+        let gt = gs[t].as_f32_vec().unwrap();
+        let want_c = cs[t].as_f32_vec().unwrap();
+        let want_ghat = ghats[t].as_f32_vec().unwrap();
+        let c = enc.step(&gt).to_dense();
+        assert_close(&format!("markov c[{t}]"), &c, &want_c, 1e-4, 1e-6);
+        assert_close(&format!("markov ghat[{t}]"), enc.state(), &want_ghat, 1e-4, 1e-5);
+    }
+}
+
+#[test]
+fn amsgrad_chain_matches_python() {
+    let Some(g) = golden("amsgrad") else { return };
+    let d = g.req("d").unwrap().as_usize().unwrap();
+    let alpha = g.req("alpha").unwrap().as_f64().unwrap() as f32;
+    let beta1 = g.req("beta1").unwrap().as_f64().unwrap() as f32;
+    let beta2 = g.req("beta2").unwrap().as_f64().unwrap() as f32;
+    let nu = g.req("nu").unwrap().as_f64().unwrap() as f32;
+    let mut x = g.req("x0").unwrap().as_f32_vec().unwrap();
+    let mut opt = AmsGrad::new(d, beta1, beta2, nu);
+    let gs = g.req("g").unwrap().as_arr().unwrap();
+    let xs = g.req("x").unwrap().as_arr().unwrap();
+    let ms = g.req("m").unwrap().as_arr().unwrap();
+    let vhs = g.req("vhat").unwrap().as_arr().unwrap();
+    for t in 0..gs.len() {
+        let gt = gs[t].as_f32_vec().unwrap();
+        opt.step(&mut x, &gt, alpha);
+        assert_close(&format!("x[{t}]"), &x, &xs[t].as_f32_vec().unwrap(), 2e-5, 1e-6);
+        assert_close(&format!("m[{t}]"), &opt.m, &ms[t].as_f32_vec().unwrap(), 2e-5, 1e-7);
+        assert_close(&format!("vhat[{t}]"), &opt.vhat, &vhs[t].as_f32_vec().unwrap(), 2e-5, 1e-7);
+    }
+}

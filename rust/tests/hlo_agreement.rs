@@ -1,0 +1,157 @@
+//! Three-layer agreement: the AOT HLO artifacts (JAX/Pallas lowered,
+//! executed via PJRT) must agree with the pure-Rust implementations —
+//! the proof that the L1/L2/L3 stacks compute the same math.
+//!
+//! Serial: PJRT CPU clients don't love concurrent construction, so one
+//! test drives all artifact comparisons.
+
+use cdadam::compress::{Compressor, ScaledSign};
+use cdadam::models::mlp::MlpSpec;
+use cdadam::optim::{AmsGrad, Optimizer};
+use cdadam::runtime::{artifacts_available, HostTensor, RuntimeService};
+use cdadam::util::rng::Rng;
+
+fn close(tag: &str, got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "{tag} length");
+    let mut worst = 0.0f32;
+    for (a, b) in got.iter().zip(want) {
+        worst = worst.max((a - b).abs() / (atol + rtol * b.abs().max(1e-6)));
+    }
+    assert!(worst <= 1.0, "{tag}: worst normalized err {worst}");
+}
+
+#[test]
+fn artifacts_agree_with_rust() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let svc = RuntimeService::start(&[]).unwrap();
+    let m = svc.manifest.clone();
+    let h = svc.handle();
+    let mut rng = Rng::new(1234);
+
+    // --- fused AMSGrad kernel (Pallas) vs optim::AmsGrad ----------------
+    let Some(name) = m.artifacts.keys().find(|k| k.starts_with("amsgrad_update_d")) else {
+        panic!("no amsgrad artifact");
+    };
+    let d = m.artifacts[name].inputs[0].0[0];
+    // small prefix exercised; artifact dim is the model dim
+    let meta = &m.artifacts[name].meta;
+    let beta1 = meta.req("beta1").unwrap().as_f64().unwrap() as f32;
+    let beta2 = meta.req("beta2").unwrap().as_f64().unwrap() as f32;
+    let nu = meta.req("nu").unwrap().as_f64().unwrap() as f32;
+    let mut mbuf = vec![0.0f32; d];
+    let mut vbuf = vec![0.0f32; d];
+    let mut vhbuf = vec![0.0f32; d];
+    let mut xbuf = vec![0.0f32; d];
+    let mut gbuf = vec![0.0f32; d];
+    rng.fill_normal(&mut mbuf, 0.5);
+    rng.fill_normal(&mut xbuf, 1.0);
+    rng.fill_normal(&mut gbuf, 1.0);
+    for v in vbuf.iter_mut() {
+        *v = rng.f32() * 0.1;
+    }
+    for (vh, &v) in vhbuf.iter_mut().zip(&vbuf) {
+        *vh = v * (1.0 + rng.f32());
+    }
+    let alpha = 1e-2f32;
+    let out = h
+        .exec(
+            name,
+            vec![
+                HostTensor::f32(vec![d], mbuf.clone()),
+                HostTensor::f32(vec![d], vbuf.clone()),
+                HostTensor::f32(vec![d], vhbuf.clone()),
+                HostTensor::f32(vec![d], xbuf.clone()),
+                HostTensor::f32(vec![d], gbuf.clone()),
+                HostTensor::f32(vec![], vec![alpha]),
+            ],
+        )
+        .unwrap();
+    let mut opt = AmsGrad::new(d, beta1, beta2, nu);
+    opt.m = mbuf;
+    opt.v = vbuf;
+    opt.vhat = vhbuf;
+    let mut x = xbuf;
+    opt.step(&mut x, &gbuf, alpha);
+    close("amsgrad m", out[0].as_f32().unwrap(), &opt.m, 1e-5, 1e-7);
+    close("amsgrad v", out[1].as_f32().unwrap(), &opt.v, 1e-5, 1e-7);
+    close("amsgrad vhat", out[2].as_f32().unwrap(), &opt.vhat, 1e-5, 1e-7);
+    close("amsgrad x", out[3].as_f32().unwrap(), &x, 1e-4, 1e-6);
+
+    // --- Markov sign step (Pallas) vs markov::MarkovEncoder -------------
+    let Some(name) = m.artifacts.keys().find(|k| k.starts_with("markov_sign_d")) else {
+        panic!("no markov artifact");
+    };
+    let d = m.artifacts[name].inputs[0].0[0];
+    let mut g = vec![0.0f32; d];
+    let mut ghat = vec![0.0f32; d];
+    rng.fill_normal(&mut g, 1.0);
+    rng.fill_normal(&mut ghat, 0.5);
+    let out = h
+        .exec(
+            name,
+            vec![HostTensor::f32(vec![d], g.clone()), HostTensor::f32(vec![d], ghat.clone())],
+        )
+        .unwrap();
+    // compute the expected step directly: c = C(g − ghat); ghat' = ghat + c.
+    let mut diff = vec![0.0f32; d];
+    cdadam::tensor::sub(&mut diff, &g, &ghat);
+    let c = ScaledSign::new().compress(&diff).to_dense();
+    let mut ghat_new = ghat.clone();
+    cdadam::tensor::axpy(&mut ghat_new, 1.0, &c);
+    // ghat' entries can sit near zero (ghat ≈ −c), so the few-ulp scale
+    // difference between the XLA and Rust L1 reductions shows up as an
+    // absolute error proportional to the scale — tolerate that.
+    let scale = c.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    close("markov c", out[0].as_f32().unwrap(), &c, 1e-4, 1e-5 * scale);
+    close("markov ghat'", out[1].as_f32().unwrap(), &ghat_new, 1e-4, 1e-4 * scale.max(1.0));
+
+    // --- JAX MLP grad artifact vs pure-Rust MlpSpec ----------------------
+    let Some(name) = m.artifacts.keys().find(|k| k.starts_with("mlp_") && k.ends_with("_grad"))
+    else {
+        panic!("no mlp artifact");
+    };
+    let meta = &m.artifacts[name].meta;
+    let input_dim = meta.req("input_dim").unwrap().as_usize().unwrap();
+    let classes = meta.req("classes").unwrap().as_usize().unwrap();
+    let batch = meta.req("batch").unwrap().as_usize().unwrap();
+    let hidden: Vec<usize> = meta
+        .req("hidden")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let mut dims = vec![input_dim];
+    dims.extend(hidden);
+    dims.push(classes);
+    let spec = MlpSpec::new(dims);
+    let preset = name.strip_prefix("mlp_").unwrap().strip_suffix("_grad").unwrap();
+    let params = m.load_params(&format!("mlp_{preset}")).unwrap();
+    assert_eq!(params.len(), spec.param_count(), "flat layout mismatch");
+    let mut xb = vec![0.0f32; batch * input_dim];
+    rng.fill_normal(&mut xb, 1.0);
+    let yb: Vec<i32> = (0..batch).map(|_| rng.below(classes) as i32).collect();
+    let out = h
+        .exec(
+            name,
+            vec![
+                HostTensor::f32(vec![params.len()], params.clone()),
+                HostTensor::f32(vec![batch, input_dim], xb.clone()),
+                HostTensor::i32(vec![batch], yb.clone()),
+            ],
+        )
+        .unwrap();
+    let hlo_loss = out[0].scalar_f32().unwrap();
+    let hlo_grad = out[1].as_f32().unwrap();
+    let mut rust_grad = vec![0.0f32; spec.param_count()];
+    let rust_loss = spec.loss_grad(&params, &xb, &yb, batch, &mut rust_grad);
+    assert!(
+        (hlo_loss - rust_loss).abs() < 1e-4 * rust_loss.abs().max(1.0),
+        "loss: hlo {hlo_loss} vs rust {rust_loss}"
+    );
+    close("mlp grad", hlo_grad, &rust_grad, 5e-3, 1e-5);
+}
