@@ -1,0 +1,83 @@
+//! Block-sharded compression throughput at model dimension: monolithic
+//! compressor vs [`ShardedCompressor`] on 1/2/4 scoped threads, for the
+//! two hot compressors (scaled-sign and blockwise top-k).
+//!
+//! The top-k comparison is apples-to-apples math: `ShardedCompressor`
+//! over global `TopK` with shard size B selects exactly the same
+//! coordinates as monolithic `TopKBlock` with block size B, so the
+//! speedup column isolates the scheduling win. Scaled-sign changes from
+//! one global scale to one scale per shard (blockwise scaling à la
+//! Efficient-Adam), so that row reports the sharded pipeline against the
+//! monolithic kernel it replaces.
+//!
+//! ```bash
+//! cargo bench --bench shard_throughput            # d = 1M
+//! cargo bench --bench shard_throughput -- --d 4000000 --shard 65536
+//! ```
+
+use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor, TopK, TopKBlock};
+use cdadam::util::args::Args;
+use cdadam::util::rng::Rng;
+use cdadam::util::timer::bench;
+
+fn row(name: &str, d: usize, iters: usize, baseline_ms: Option<f64>, f: impl FnMut()) -> f64 {
+    let st = bench(2, iters, f);
+    let ms = st.mean();
+    let meps = d as f64 / ms / 1e3;
+    let speedup = match baseline_ms {
+        Some(b) => format!("{:>6.2}x", b / ms),
+        None => "  1.00x".into(),
+    };
+    println!("{name:<34} {ms:>9.3} ms  {meps:>9.1} Melem/s  {speedup}");
+    ms
+}
+
+fn main() {
+    let args = Args::from_env();
+    let d: usize = args.usize("d", 1 << 20).unwrap();
+    let shard: usize = args.usize("shard", 65_536).unwrap();
+    let iters = args.usize("iters", if args.flag("quick") { 3 } else { 10 }).unwrap();
+    let k_frac = 0.016;
+
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0f32; d];
+    rng.fill_normal(&mut x, 1.0);
+
+    println!(
+        "### shard_throughput (d = {d}, shard = {shard}, {iters} iters, mean)\n\
+         {:<34} {:>12}  {:>17}  {:>7}",
+        "kernel", "per call", "throughput", "speedup"
+    );
+
+    // scaled-sign: monolithic kernel vs sharded pipeline
+    let mut mono_ss = ScaledSign::new();
+    let base = row("scaled_sign monolithic", d, iters, None, || {
+        std::hint::black_box(mono_ss.compress(&x));
+    });
+    for threads in [1usize, 2, 4] {
+        let mut c = ShardedCompressor::new(Box::new(ScaledSign::new()), shard, threads);
+        row(&format!("scaled_sign sharded t={threads}"), d, iters, Some(base), || {
+            std::hint::black_box(c.compress(&x));
+        });
+    }
+
+    // blockwise top-k: serial blockwise kernel vs the same math sharded
+    let mut mono_tk = TopKBlock::with_frac(k_frac, shard);
+    let base = row("topk_block monolithic", d, iters, None, || {
+        std::hint::black_box(mono_tk.compress(&x));
+    });
+    for threads in [1usize, 2, 4] {
+        let mut c = ShardedCompressor::new(Box::new(TopK::with_frac(k_frac)), shard, threads);
+        row(&format!("topk_block sharded t={threads}"), d, iters, Some(base), || {
+            std::hint::black_box(c.compress(&x));
+        });
+    }
+
+    // sanity: the sharded top-k really is the same selection
+    let a = ShardedCompressor::new(Box::new(TopK::with_frac(k_frac)), shard, 4)
+        .compress(&x)
+        .to_dense();
+    let b = TopKBlock::with_frac(k_frac, shard).compress(&x).to_dense();
+    assert_eq!(a, b, "sharded top-k diverged from blockwise top-k");
+    println!("sanity: sharded == blockwise top-k selection ✓");
+}

@@ -56,9 +56,12 @@ impl Strategy for CdAdam {
         "cdadam"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
+        // fork_stream, not clone: a plain clone would hand every worker
+        // identical rand-k RNG state, so the "independent" streams would
+        // pick the same coordinates each round (see compress::Compressor).
         Box::new(CdAdamWorker {
-            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
             dec: MarkovDecoder::new(dim),
             opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu)
                 .with_weight_decay(self.weight_decay),

@@ -41,9 +41,9 @@ impl Strategy for CdAdamServerSide {
         "cdadam_server"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(SsWorker {
-            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
             dec: MarkovDecoder::new(dim),
         })
     }

@@ -32,9 +32,9 @@ impl Strategy for ErrorFeedback {
         "ef"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(EfWorker {
-            comp: self.compressor.clone(),
+            comp: self.compressor.fork_stream(worker_id as u64),
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
             buf: vec![0.0; dim],

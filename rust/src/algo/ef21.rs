@@ -40,9 +40,9 @@ impl Strategy for Ef21 {
         "ef21"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(Ef21Worker {
-            enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
             dec: MarkovDecoder::new(dim),
             opt: SgdMomentum::new(dim, self.momentum).with_weight_decay(self.weight_decay),
         })

@@ -68,6 +68,41 @@ pub(crate) fn average_into(uplinks: &[CompressedMsg], out: &mut [f32]) {
 }
 
 #[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressor, RandK};
+
+    #[test]
+    fn workers_get_independent_randk_streams() {
+        // regression: make_worker used to box_clone the strategy's
+        // compressor, so every "independent" rand-k stream shared RNG
+        // state and picked the same coordinates each round.
+        let d = 256;
+        let mut grad = vec![0.0f32; d];
+        crate::util::rng::Rng::new(21).fill_normal(&mut grad, 1.0);
+        let comp = || -> Box<dyn Compressor> { Box::new(RandK::with_frac(0.1, 7)) };
+        let strats: Vec<Box<dyn Strategy>> = vec![
+            Box::new(cdadam::CdAdam::new(comp())),
+            Box::new(naive::Naive::new(comp())),
+            Box::new(ef::ErrorFeedback::new(comp())),
+            Box::new(ef21::Ef21::new(comp())),
+            Box::new(onebit_adam::OneBitAdam::new(comp(), 0)),
+        ];
+        for s in &strats {
+            let mut w0 = s.make_worker(d, 0);
+            let mut w1 = s.make_worker(d, 1);
+            let m0 = w0.uplink(1, &grad);
+            let m1 = w1.uplink(1, &grad);
+            assert_ne!(m0, m1, "{}: workers replayed identical rand-k draws", s.name());
+            // same worker id must still be reproducible (lockstep ==
+            // threaded relies on make_worker being deterministic)
+            let mut w0b = s.make_worker(d, 0);
+            assert_eq!(m0, w0b.uplink(1, &grad), "{}: fork not deterministic", s.name());
+        }
+    }
+}
+
+#[cfg(test)]
 pub(crate) mod test_support {
     //! Shared harness: run a strategy on a tiny quadratic-ish problem and
     //! return the trajectory — used by every strategy's unit tests.

@@ -26,9 +26,9 @@ impl Strategy for Naive {
         "naive"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(NaiveWorker {
-            comp: self.compressor.clone(),
+            comp: self.compressor.fork_stream(worker_id as u64),
             opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu),
             buf: vec![0.0; dim],
         })

@@ -40,13 +40,13 @@ impl Strategy for OneBitAdam {
         "onebit_adam"
     }
 
-    fn make_worker(&self, dim: usize, _worker_id: usize) -> Box<dyn WorkerAlgo> {
+    fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         let mut adam = Adam::new(dim, self.beta1, self.beta2, self.nu);
         // match Tang et al.'s momentum-SGD-like stage-2 form (no bias
         // correction so stage-2 and stage-1 preconditioners line up).
         adam.bias_correction = false;
         Box::new(OneBitWorker {
-            comp: self.compressor.clone(),
+            comp: self.compressor.fork_stream(worker_id as u64),
             warmup: self.warmup_rounds,
             delta: vec![0.0; dim],
             e: vec![0.0; dim],

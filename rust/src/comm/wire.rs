@@ -3,15 +3,26 @@
 //!
 //! Layout (little-endian):
 //! ```text
-//!   frame  := round:u32 from:u16 tag:u8 pad:u8 payload      (64-bit header)
-//!   dense  := d:u32 f32[d]
-//!   sign   := d:u32 scale:f32 bytes[ceil(d/8)]
-//!   sparse := d:u32 k:u32 idx:u32[k] val:f32[k]
-//!   zero   := d:u32
+//!   frame   := round:u32 from:u16 payload
+//!   payload := tag:u8 pad:u8 d:u32 body
+//!   dense   := f32[d]
+//!   sign    := scale:f32 bytes[ceil(d/8)]
+//!   sparse  := k:u32 idx:u32[k] val:f32[k]
+//!   zero    := (empty)
+//!   sharded := count:u32 payload[count]        (leaf payloads only)
 //! ```
-//! `encode(msg).len() * 8` differs from `WireMsg::wire_bits()` only by
-//! sub-byte padding of the sign bitmap and the explicit `d` fields —
-//! tests pin the exact relationship so the figures' bit axis is honest.
+//! `encode(msg)?.len() * 8` differs from `WireMsg::wire_bits()` only by
+//! sub-byte padding of the sign bitmap and the explicit per-payload
+//! tag/d fields — tests pin the exact relationship so the figures' bit
+//! axis is honest.
+//!
+//! Robustness contract: `encode` fails (never truncates) when a field
+//! overflows its wire width, and `decode` **never panics** on arbitrary
+//! bytes — every length is checked against the remaining frame before
+//! allocation, sparse indices must be strictly increasing and < d,
+//! shard dims must sum to d, and sharded payloads cannot nest. The
+//! `fuzz_decode_never_panics` test drives mutated and random frames
+//! through `decode` to hold the line.
 
 use anyhow::{bail, Result};
 
@@ -22,17 +33,38 @@ const TAG_DENSE: u8 = 0;
 const TAG_SIGN: u8 = 1;
 const TAG_SPARSE: u8 = 2;
 const TAG_ZERO: u8 = 3;
+const TAG_SHARDED: u8 = 4;
 
-/// Serialize a message to bytes.
-pub fn encode(msg: &WireMsg) -> Vec<u8> {
+fn u32_field(x: usize, what: &str) -> Result<u32> {
+    match u32::try_from(x) {
+        Ok(v) => Ok(v),
+        Err(_) => bail!("{what} {x} overflows the u32 wire field"),
+    }
+}
+
+/// Serialize a message to bytes. Fails (instead of silently truncating)
+/// when `round` exceeds u32 or `from` exceeds u16 — the casts used to be
+/// unchecked `as` conversions that wrapped on overflow.
+pub fn encode(msg: &WireMsg) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(16 + msg.payload.wire_bits() as usize / 8);
-    out.extend_from_slice(&(msg.round as u32).to_le_bytes());
-    out.extend_from_slice(&(msg.from as u16).to_le_bytes());
-    match &msg.payload {
+    let Ok(round) = u32::try_from(msg.round) else {
+        bail!("round {} overflows the u32 wire field", msg.round)
+    };
+    let Ok(from) = u16::try_from(msg.from) else {
+        bail!("worker id {} overflows the u16 wire field", msg.from)
+    };
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&from.to_le_bytes());
+    encode_payload(&msg.payload, &mut out, false)?;
+    Ok(out)
+}
+
+fn encode_payload(payload: &CompressedMsg, out: &mut Vec<u8>, nested: bool) -> Result<()> {
+    match payload {
         CompressedMsg::Dense(v) => {
             out.push(TAG_DENSE);
             out.push(0);
-            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            out.extend_from_slice(&u32_field(v.len(), "dense dim")?.to_le_bytes());
             for x in v {
                 out.extend_from_slice(&x.to_le_bytes());
             }
@@ -40,15 +72,15 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
         CompressedMsg::SignScale { d, scale, bits } => {
             out.push(TAG_SIGN);
             out.push(0);
-            out.extend_from_slice(&(*d as u32).to_le_bytes());
+            out.extend_from_slice(&u32_field(*d, "sign dim")?.to_le_bytes());
             out.extend_from_slice(&scale.to_le_bytes());
             out.extend_from_slice(&packing::words_to_bytes(bits, *d));
         }
         CompressedMsg::Sparse { d, idx, val } => {
             out.push(TAG_SPARSE);
             out.push(0);
-            out.extend_from_slice(&(*d as u32).to_le_bytes());
-            out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+            out.extend_from_slice(&u32_field(*d, "sparse dim")?.to_le_bytes());
+            out.extend_from_slice(&u32_field(idx.len(), "sparse k")?.to_le_bytes());
             for i in idx {
                 out.extend_from_slice(&i.to_le_bytes());
             }
@@ -59,10 +91,32 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
         CompressedMsg::Zero { d } => {
             out.push(TAG_ZERO);
             out.push(0);
-            out.extend_from_slice(&(*d as u32).to_le_bytes());
+            out.extend_from_slice(&u32_field(*d, "zero dim")?.to_le_bytes());
+        }
+        CompressedMsg::Sharded { d, shards } => {
+            if nested {
+                bail!("sharded payloads cannot nest");
+            }
+            // mirror decode's structural checks so a producer bug fails
+            // loudly at the encode site, not as a corrupt-frame error on
+            // the receiving end
+            if shards.is_empty() {
+                bail!("sharded payload with zero shards");
+            }
+            let dims: usize = shards.iter().map(|s| s.dim()).sum();
+            if dims != *d {
+                bail!("shard dims sum to {dims}, payload says d = {d}");
+            }
+            out.push(TAG_SHARDED);
+            out.push(0);
+            out.extend_from_slice(&u32_field(*d, "sharded dim")?.to_le_bytes());
+            out.extend_from_slice(&u32_field(shards.len(), "shard count")?.to_le_bytes());
+            for s in shards {
+                encode_payload(s, out, true)?;
+            }
         }
     }
-    out
+    Ok(())
 }
 
 struct Reader<'a> {
@@ -71,8 +125,12 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        if n > self.remaining() {
             bail!("truncated message");
         }
         let s = &self.b[self.i..self.i + n];
@@ -97,16 +155,29 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Parse a serialized message.
+/// Parse a serialized message. Errors (never panics) on corrupt input.
 pub fn decode(bytes: &[u8]) -> Result<WireMsg> {
     let mut r = Reader { b: bytes, i: 0 };
     let round = r.u32()? as u64;
     let from = r.u16()? as u32;
+    let payload = decode_payload(&mut r, false)?;
+    if r.i != bytes.len() {
+        bail!("trailing bytes");
+    }
+    Ok(WireMsg { round, from, payload })
+}
+
+fn decode_payload(r: &mut Reader, nested: bool) -> Result<CompressedMsg> {
     let tag = r.u8()?;
     let _pad = r.u8()?;
     let d = r.u32()? as usize;
-    let payload = match tag {
+    Ok(match tag {
         TAG_DENSE => {
+            // length check before allocation: a corrupt d must not drive
+            // a multi-GB Vec::with_capacity
+            if r.remaining() < 4 * d {
+                bail!("dense payload truncated (d = {d})");
+            }
             let mut v = Vec::with_capacity(d);
             for _ in 0..d {
                 v.push(r.f32()?);
@@ -120,9 +191,26 @@ pub fn decode(bytes: &[u8]) -> Result<WireMsg> {
         }
         TAG_SPARSE => {
             let k = r.u32()? as usize;
-            let mut idx = Vec::with_capacity(k);
+            if k > d {
+                bail!("sparse k = {k} exceeds d = {d}");
+            }
+            if r.remaining() < 8 * k {
+                bail!("sparse payload truncated (k = {k})");
+            }
+            let mut idx: Vec<u32> = Vec::with_capacity(k);
             for _ in 0..k {
                 idx.push(r.u32()?);
+            }
+            // strictly increasing and < d ⇒ sorted, duplicate-free, in
+            // range: a corrupt frame used to pass here and panic later
+            // in decode_into / add_scaled_into on the out-of-range index
+            for (j, &i) in idx.iter().enumerate() {
+                if i as usize >= d {
+                    bail!("sparse index {i} out of range (d = {d})");
+                }
+                if j > 0 && idx[j - 1] >= i {
+                    bail!("sparse indices not strictly increasing at position {j}");
+                }
             }
             let mut val = Vec::with_capacity(k);
             for _ in 0..k {
@@ -131,22 +219,47 @@ pub fn decode(bytes: &[u8]) -> Result<WireMsg> {
             CompressedMsg::Sparse { d, idx, val }
         }
         TAG_ZERO => CompressedMsg::Zero { d },
+        TAG_SHARDED => {
+            if nested {
+                bail!("nested sharded payload");
+            }
+            let count = r.u32()? as usize;
+            if count == 0 {
+                bail!("sharded payload with zero shards");
+            }
+            // every shard costs at least its 6-byte tag/d header, which
+            // bounds count (and the allocation) by the frame length
+            if count > r.remaining() / 6 {
+                bail!("shard count {count} exceeds frame size");
+            }
+            let mut shards = Vec::with_capacity(count);
+            let mut dims = 0usize;
+            for _ in 0..count {
+                let s = decode_payload(r, true)?;
+                dims = match dims.checked_add(s.dim()) {
+                    Some(v) => v,
+                    None => bail!("shard dims overflow"),
+                };
+                shards.push(s);
+            }
+            if dims != d {
+                bail!("shard dims sum to {dims}, frame says d = {d}");
+            }
+            CompressedMsg::Sharded { d, shards }
+        }
         t => bail!("unknown tag {t}"),
-    };
-    if r.i != bytes.len() {
-        bail!("trailing bytes");
-    }
-    Ok(WireMsg { round, from, payload })
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Compressor, ScaledSign, TopK};
+    use crate::compress::{Compressor, ScaledSign, ShardedCompressor, TopK};
     use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
 
     fn roundtrip(msg: WireMsg) {
-        let bytes = encode(&msg);
+        let bytes = encode(&msg).unwrap();
         let back = decode(&bytes).unwrap();
         assert_eq!(back.round, msg.round);
         assert_eq!(back.from, msg.from);
@@ -167,6 +280,51 @@ mod tests {
             payload: TopK::with_k(2).compress(&[5.0, -1.0, 3.0, 0.1]),
         });
         roundtrip(WireMsg { round: 1, from: 7, payload: CompressedMsg::Zero { d: 42 } });
+        let mut rng = Rng::new(5);
+        let mut x = vec![0.0f32; 200];
+        rng.fill_normal(&mut x, 1.0);
+        let mut sh = ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 2);
+        roundtrip(WireMsg { round: 12, from: 3, payload: sh.compress(&x) });
+        let mut sh = ShardedCompressor::new(Box::new(TopK::with_frac(0.1)), 32, 2);
+        roundtrip(WireMsg { round: 13, from: 4, payload: sh.compress(&x) });
+    }
+
+    #[test]
+    fn encode_rejects_field_overflow() {
+        // regression: these used to truncate silently via `as` casts
+        let payload = CompressedMsg::Zero { d: 1 };
+        let too_round = WireMsg { round: u32::MAX as u64 + 1, from: 0, payload: payload.clone() };
+        let err = encode(&too_round).unwrap_err().to_string();
+        assert!(err.contains("round"), "{err}");
+        let too_from = WireMsg { round: 0, from: u16::MAX as u32 + 1, payload };
+        let err = encode(&too_from).unwrap_err().to_string();
+        assert!(err.contains("worker id"), "{err}");
+        // boundary values still encode
+        roundtrip(WireMsg {
+            round: u32::MAX as u64,
+            from: u16::MAX as u32,
+            payload: CompressedMsg::Zero { d: 1 },
+        });
+    }
+
+    #[test]
+    fn encode_rejects_malformed_sharded() {
+        // encode mirrors decode's structural checks: a producer bug must
+        // fail at the encode site, not decode as a corrupt frame
+        let empty = WireMsg {
+            round: 0,
+            from: 0,
+            payload: CompressedMsg::Sharded { d: 0, shards: vec![] },
+        };
+        let err = encode(&empty).unwrap_err().to_string();
+        assert!(err.contains("zero shards"), "{err}");
+        let mismatched = WireMsg {
+            round: 0,
+            from: 0,
+            payload: CompressedMsg::Sharded { d: 10, shards: vec![CompressedMsg::Zero { d: 4 }] },
+        };
+        let err = encode(&mismatched).unwrap_err().to_string();
+        assert!(err.contains("shard dims"), "{err}");
     }
 
     #[test]
@@ -184,7 +342,7 @@ mod tests {
                 WireMsg { round: 1, from: 0, payload: CompressedMsg::Dense(x.clone()) },
             ];
             for m in msgs {
-                let enc_bits = (encode(&m).len() * 8) as u64;
+                let enc_bits = (encode(&m).unwrap().len() * 8) as u64;
                 let metered = m.wire_bits();
                 if enc_bits < metered || enc_bits > metered + 7 + 32 {
                     return Err(format!(
@@ -198,11 +356,151 @@ mod tests {
     }
 
     #[test]
+    fn prop_sharded_size_matches_meter() {
+        // per shard the byte encoding adds a 48-bit tag/d header and ≤ 7
+        // bits of sign padding on top of the metered payload (and the
+        // outer frame adds 96 bits of headers beyond the metered count
+        // field); Zero shards cost 16 fewer than that ceiling.
+        check("sharded wire size honest", Config::default(), |g| {
+            let d = 32 + g.size(500);
+            let x = g.vec_normal(d, 1.0);
+            let shard = 1 + g.size(d);
+            for mk in 0..2usize {
+                let inner: Box<dyn Compressor> = if mk == 0 {
+                    Box::new(ScaledSign::new())
+                } else {
+                    Box::new(TopK::with_frac(0.2))
+                };
+                let mut c = ShardedCompressor::new(inner, shard, 2);
+                let m = WireMsg { round: 1, from: 0, payload: c.compress(&x) };
+                let n_shards = match &m.payload {
+                    CompressedMsg::Sharded { shards, .. } => shards.len() as u64,
+                    _ => unreachable!(),
+                };
+                let enc_bits = (encode(&m).unwrap().len() * 8) as u64;
+                let metered = m.wire_bits();
+                if enc_bits < metered || enc_bits > metered + 96 + 55 * n_shards {
+                    return Err(format!(
+                        "sharded: encoded {enc_bits} vs metered {metered} ({n_shards} shards)"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn rejects_corrupt() {
         let msg = WireMsg { round: 1, from: 0, payload: CompressedMsg::Dense(vec![1.0]) };
-        let mut bytes = encode(&msg);
+        let mut bytes = encode(&msg).unwrap();
         bytes.truncate(bytes.len() - 1);
         assert!(decode(&bytes).is_err());
         assert!(decode(&[1, 2, 3]).is_err());
+
+        // hand-built corrupt Sparse frames: all must error, none may
+        // panic later in decode_into / add_scaled_into
+        let sparse = |d: u32, idx: Vec<u32>, val: Vec<f32>| {
+            let mut b = vec![1, 0, 0, 0, 0, 0, TAG_SPARSE, 0];
+            b.extend_from_slice(&d.to_le_bytes());
+            b.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+            for i in &idx {
+                b.extend_from_slice(&i.to_le_bytes());
+            }
+            for v in &val {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+            b
+        };
+        // idx >= d
+        assert!(decode(&sparse(4, vec![1, 9], vec![1.0, 2.0])).is_err());
+        // duplicate indices
+        assert!(decode(&sparse(4, vec![2, 2], vec![1.0, 2.0])).is_err());
+        // unsorted indices
+        assert!(decode(&sparse(4, vec![3, 1], vec![1.0, 2.0])).is_err());
+        // k > d
+        assert!(decode(&sparse(1, vec![0, 1, 2], vec![1.0, 2.0, 3.0])).is_err());
+
+        // oversized dense d with a short frame must error, not allocate
+        let mut dense = vec![1, 0, 0, 0, 0, 0, TAG_DENSE, 0];
+        dense.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&dense).is_err());
+
+        // nested sharded payloads are rejected
+        let mut nested = vec![1, 0, 0, 0, 0, 0, TAG_SHARDED, 0];
+        nested.extend_from_slice(&1u32.to_le_bytes()); // d = 1
+        nested.extend_from_slice(&1u32.to_le_bytes()); // count = 1
+        nested.extend_from_slice(&[TAG_SHARDED, 0]);
+        nested.extend_from_slice(&1u32.to_le_bytes());
+        nested.extend_from_slice(&1u32.to_le_bytes());
+        assert!(decode(&nested).is_err());
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        // decode must return Ok or Err — never panic, never abort on a
+        // hostile allocation — for (a) every truncation, (b) byte
+        // mutations, and (c) random garbage. A panic fails the test.
+        let mut rng = Rng::new(0xF422);
+        let mut x = vec![0.0f32; 96];
+        rng.fill_normal(&mut x, 1.0);
+        let mut seeds: Vec<Vec<u8>> = vec![
+            encode(&WireMsg { round: 7, from: 1, payload: ScaledSign::new().compress(&x) })
+                .unwrap(),
+            encode(&WireMsg {
+                round: 7,
+                from: 1,
+                payload: TopK::with_frac(0.2).compress(&x),
+            })
+            .unwrap(),
+            encode(&WireMsg { round: 7, from: 1, payload: CompressedMsg::Dense(x.clone()) })
+                .unwrap(),
+            encode(&WireMsg { round: 7, from: 1, payload: CompressedMsg::Zero { d: 9 } })
+                .unwrap(),
+            encode(&WireMsg {
+                round: 7,
+                from: 1,
+                payload: ShardedCompressor::new(Box::new(ScaledSign::new()), 32, 2)
+                    .compress(&x),
+            })
+            .unwrap(),
+        ];
+        // (a) truncations
+        for s in &seeds {
+            for len in 0..s.len() {
+                let _ = decode(&s[..len]);
+            }
+        }
+        // (b) single- and double-byte mutations
+        for s in seeds.iter_mut() {
+            for pos in 0..s.len() {
+                let orig = s[pos];
+                for v in [0x00, 0x01, 0x7F, 0x80, 0xFE, 0xFF] {
+                    s[pos] = v;
+                    let _ = decode(s);
+                }
+                s[pos] = orig;
+            }
+            for _ in 0..200 {
+                let p1 = rng.below(s.len());
+                let p2 = rng.below(s.len());
+                let (o1, o2) = (s[p1], s[p2]);
+                s[p1] = rng.next_u64() as u8;
+                s[p2] = rng.next_u64() as u8;
+                let _ = decode(s);
+                s[p1] = o1;
+                s[p2] = o2;
+            }
+        }
+        // (c) random garbage of assorted lengths
+        for len in [0usize, 1, 5, 6, 7, 13, 64, 300] {
+            for _ in 0..50 {
+                let garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+                let _ = decode(&garbage);
+            }
+        }
+        // and one sanity anchor: untouched seeds still decode fine
+        for s in &seeds {
+            assert!(decode(s).is_ok());
+        }
     }
 }

@@ -19,12 +19,14 @@ pub mod identity;
 pub mod packing;
 pub mod randk;
 pub mod scaled_sign;
+pub mod sharded;
 pub mod topk;
 
 pub use identity::Identity;
 pub use randk::RandK;
 pub use scaled_sign::ScaledSign;
-pub use topk::TopK;
+pub use sharded::ShardedCompressor;
+pub use topk::{TopK, TopKBlock};
 
 use crate::tensor;
 
@@ -39,6 +41,11 @@ pub enum CompressedMsg {
     Sparse { d: usize, idx: Vec<u32>, val: Vec<f32> },
     /// All-zero vector (k = 0 edge case, or compressing an exact zero).
     Zero { d: usize },
+    /// Block-sharded vector: `shards[i]` compresses the i-th contiguous
+    /// block, and block dims sum to `d`. Produced by
+    /// [`ShardedCompressor`]; shards are always leaf messages (no
+    /// nesting — the wire codec enforces this).
+    Sharded { d: usize, shards: Vec<CompressedMsg> },
 }
 
 impl CompressedMsg {
@@ -49,6 +56,7 @@ impl CompressedMsg {
             CompressedMsg::SignScale { d, .. } => *d,
             CompressedMsg::Sparse { d, .. } => *d,
             CompressedMsg::Zero { d } => *d,
+            CompressedMsg::Sharded { d, .. } => *d,
         }
     }
 
@@ -64,6 +72,10 @@ impl CompressedMsg {
             // k (idx u32 + val f32) pairs + a u32 count.
             CompressedMsg::Sparse { idx, .. } => 32 + 64 * idx.len() as u64,
             CompressedMsg::Zero { .. } => 32,
+            // u32 shard count + each shard's own payload accounting.
+            CompressedMsg::Sharded { shards, .. } => {
+                32 + shards.iter().map(|s| s.wire_bits()).sum::<u64>()
+            }
         }
     }
 
@@ -82,6 +94,15 @@ impl CompressedMsg {
                 }
             }
             CompressedMsg::Zero { .. } => out.fill(0.0),
+            CompressedMsg::Sharded { d, shards } => {
+                let mut off = 0;
+                for s in shards {
+                    let n = s.dim();
+                    s.decode_into(&mut out[off..off + n]);
+                    off += n;
+                }
+                debug_assert_eq!(off, *d);
+            }
         }
     }
 
@@ -100,6 +121,15 @@ impl CompressedMsg {
                 }
             }
             CompressedMsg::Zero { .. } => {}
+            CompressedMsg::Sharded { d, shards } => {
+                let mut off = 0;
+                for sh in shards {
+                    let n = sh.dim();
+                    sh.add_scaled_into(&mut out[off..off + n], s);
+                    off += n;
+                }
+                debug_assert_eq!(off, *d);
+            }
         }
     }
 
@@ -130,6 +160,16 @@ pub trait Compressor: Send + Sync {
 
     /// Boxed clone for spawning per-worker instances.
     fn box_clone(&self) -> Box<dyn Compressor>;
+
+    /// Derive an **independent** instance for a parallel stream (one per
+    /// worker, or one per shard inside [`ShardedCompressor`]). Stateless
+    /// compressors return a plain clone; stateful ones (rand-k) must fork
+    /// their RNG so that streams decorrelate — a plain `box_clone` would
+    /// make every "independent" stream replay identical random choices.
+    fn fork_stream(&self, stream: u64) -> Box<dyn Compressor> {
+        let _ = stream;
+        self.box_clone()
+    }
 }
 
 impl Clone for Box<dyn Compressor> {
@@ -155,13 +195,44 @@ pub fn measured_pi(x: &[f32], c: &CompressedMsg) -> f64 {
     err / nx
 }
 
+/// Worst-case contraction bound for any blockwise compressor: blocks of
+/// a d-vector come in at most two sizes (the full block and the final
+/// remainder), and ‖C(x)−x‖² = Σ_b ‖C(x_b)−x_b‖² ≤ (max_b π_b)‖x‖², so
+/// the bound is the max of the per-size bounds.
+pub(crate) fn blockwise_pi_bound(d: usize, block: usize, bound: impl Fn(usize) -> f64) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    let full = block.min(d);
+    let mut b = bound(full);
+    let rem = if d > block { d % block } else { 0 };
+    if rem > 0 {
+        b = b.max(bound(rem));
+    }
+    b
+}
+
 /// Construct a compressor by name. `k_frac` parameterizes top-k / rand-k
-/// as a fraction of d (the paper's K = 0.016·d choice for EF21).
-pub fn by_name(name: &str, k_frac: f64, seed: u64) -> anyhow::Result<Box<dyn Compressor>> {
+/// as a fraction of d (the paper's K = 0.016·d choice for EF21);
+/// `block_size` parameterizes blockwise top-k (0 = the
+/// [`TopKBlock::DEFAULT_BLOCK`] default).
+pub fn by_name(
+    name: &str,
+    k_frac: f64,
+    block_size: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Compressor>> {
     Ok(match name {
         "scaled_sign" | "sign" => Box::new(ScaledSign::new()),
         "topk" | "top_k" => Box::new(TopK::with_frac(k_frac)),
         "top1" => Box::new(TopK::with_k(1)),
+        // per-block selection is a semantically distinct compressor from
+        // global top-k (its own, per-block π bound) — registered under
+        // its own name.
+        "topk_block" | "topk_blockwise" => {
+            let block = if block_size > 0 { block_size } else { TopKBlock::DEFAULT_BLOCK };
+            Box::new(TopKBlock::with_frac(k_frac, block))
+        }
         "randk" | "rand_k" => Box::new(RandK::with_frac(k_frac, seed)),
         "identity" | "none" => Box::new(Identity),
         other => anyhow::bail!("unknown compressor {other:?}"),
@@ -201,6 +272,26 @@ mod tests {
     }
 
     #[test]
+    fn sharded_decode_walks_blocks() {
+        // blocks [0..3) sparse, [3..5) zero, [5..7) dense
+        let m = CompressedMsg::Sharded {
+            d: 7,
+            shards: vec![
+                CompressedMsg::Sparse { d: 3, idx: vec![1], val: vec![2.0] },
+                CompressedMsg::Zero { d: 2 },
+                CompressedMsg::Dense(vec![-1.0, 4.0]),
+            ],
+        };
+        assert_eq!(m.dim(), 7);
+        assert_eq!(m.to_dense(), vec![0.0, 2.0, 0.0, 0.0, 0.0, -1.0, 4.0]);
+        // 32 (count) + (32 + 64·1) + 32 + 32·2
+        assert_eq!(m.wire_bits(), 32 + 96 + 32 + 64);
+        let mut out = vec![1.0f32; 7];
+        m.add_scaled_into(&mut out, 2.0);
+        assert_eq!(out, vec![1.0, 5.0, 1.0, 1.0, 1.0, -1.0, 9.0]);
+    }
+
+    #[test]
     fn prop_add_scaled_matches_dense_decode() {
         check("add_scaled == decode+axpy", Config::default(), |g| {
             let d = g.size(300);
@@ -230,6 +321,8 @@ mod tests {
             let mut cs: Vec<Box<dyn Compressor>> = vec![
                 Box::new(ScaledSign::new()),
                 Box::new(TopK::with_frac(0.25)),
+                Box::new(TopKBlock::with_frac(0.25, 64)),
+                Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 2)),
                 Box::new(Identity),
             ];
             for c in cs.iter_mut() {

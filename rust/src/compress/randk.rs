@@ -2,8 +2,11 @@
 //! 2018). Satisfies Assumption 4.1 with E π = 1 − k/d (eq. A.1).
 //!
 //! The RNG lives in the compressor (one independent stream per worker,
-//! forked from the experiment seed), so compression remains deterministic
-//! given the config.
+//! forked from the experiment seed via [`Compressor::fork_stream`]), so
+//! compression remains deterministic given the config. A plain clone
+//! would make every "independent" worker replay identical draws and pick
+//! the same coordinates each round — `fork_stream` is the required way
+//! to spawn per-worker / per-shard instances.
 
 use super::{CompressedMsg, Compressor};
 use crate::util::rng::Rng;
@@ -58,6 +61,12 @@ impl Compressor for RandK {
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
     }
+
+    fn fork_stream(&self, stream: u64) -> Box<dyn Compressor> {
+        let mut c = self.clone();
+        c.rng = self.rng.fork(stream);
+        Box::new(c)
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +106,25 @@ mod tests {
         }
         let avg = acc / trials as f64;
         assert!((avg - 0.75).abs() < 0.03, "avg pi {avg}");
+    }
+
+    #[test]
+    fn fork_stream_decorrelates_fork_is_deterministic() {
+        use crate::compress::Compressor as _;
+        let base = RandK::with_frac(0.2, 42);
+        let x: Vec<f32> = (0..200).map(|i| (i as f32).sin()).collect();
+        // same stream id ⇒ identical messages; different ids ⇒ some
+        // round must differ (a shared clone would agree on every round)
+        let mut a = base.fork_stream(0);
+        let mut a2 = base.fork_stream(0);
+        let mut b = base.fork_stream(1);
+        let mut differs = false;
+        for _ in 0..5 {
+            let ma = a.compress(&x);
+            assert_eq!(ma, a2.compress(&x));
+            differs |= ma != b.compress(&x);
+        }
+        assert!(differs, "forked rand-k streams replayed identical draws");
     }
 
     #[test]

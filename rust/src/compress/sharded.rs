@@ -1,0 +1,231 @@
+//! Block-sharded parallel compression: split a d-dimensional vector into
+//! fixed-size contiguous blocks and compress the blocks concurrently on
+//! scoped `std::thread` workers.
+//!
+//! This is how real deployments of compressed adaptive methods structure
+//! the hot path (blockwise scaling in Efficient-Adam, arXiv:2205.14473;
+//! server-side per-shard aggregation in COMP-AMS, arXiv:2205.05632): the
+//! model is sharded, each shard compresses independently, and the server
+//! folds shards into its aggregate as they decode. The wrapper is
+//! compressor-agnostic — any [`Compressor`] becomes its block-sharded
+//! variant, and the produced [`CompressedMsg::Sharded`] message carries
+//! exact per-shard bit accounting (`wire_bits` = 32-bit shard count +
+//! the sum of the shards' own payload bits).
+//!
+//! Semantics note: sharding changes the *math*, not just the schedule —
+//! scaled-sign gets one scale per block, top-k selects per block — so the
+//! contraction bound is the worst per-block bound ([`Compressor::pi_bound`]
+//! below) and `shard_size = 0` in the config keeps the monolithic
+//! compressor (bit-for-bit identical to the unsharded path; the wrapper
+//! is simply never constructed).
+
+use super::{CompressedMsg, Compressor};
+
+/// Wraps any compressor into its block-sharded, thread-parallel variant.
+#[derive(Clone)]
+pub struct ShardedCompressor {
+    inner: Box<dyn Compressor>,
+    shard_size: usize,
+    threads: usize,
+    /// One forked instance per shard, grown lazily when the dimension is
+    /// first seen — stateful inner compressors (rand-k) need one
+    /// independent stream per shard, exactly like per-worker forking.
+    shard_comps: Vec<Box<dyn Compressor>>,
+}
+
+impl ShardedCompressor {
+    /// Below this dimension the scoped-thread spawn cost (~tens of µs per
+    /// worker) exceeds the compression work itself, so `compress` stays
+    /// serial — a scheduling decision only, never a math one (the message
+    /// is identical either way; pinned by `parallel_equals_serial_bit_for_bit`).
+    pub const MIN_PARALLEL_DIM: usize = 1 << 16;
+
+    /// `shard_size` must be ≥ 1 (a `shard_size` of 0 means "unsharded"
+    /// at the config layer and never reaches this constructor);
+    /// `threads` is clamped to ≥ 1.
+    pub fn new(inner: Box<dyn Compressor>, shard_size: usize, threads: usize) -> Self {
+        assert!(shard_size > 0, "shard_size must be >= 1 (0 disables sharding in the config)");
+        ShardedCompressor { inner, shard_size, threads: threads.max(1), shard_comps: Vec::new() }
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    fn ensure_shard_comps(&mut self, num_shards: usize) {
+        if self.shard_comps.len() != num_shards {
+            self.shard_comps =
+                (0..num_shards).map(|i| self.inner.fork_stream(i as u64)).collect();
+        }
+    }
+}
+
+impl Compressor for ShardedCompressor {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn pi_bound(&self, d: usize) -> f64 {
+        super::blockwise_pi_bound(d, self.shard_size, |b| self.inner.pi_bound(b))
+    }
+
+    fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+        let d = x.len();
+        if d == 0 {
+            return CompressedMsg::Zero { d: 0 };
+        }
+        let num_shards = d.div_ceil(self.shard_size);
+        self.ensure_shard_comps(num_shards);
+        let chunks: Vec<&[f32]> = x.chunks(self.shard_size).collect();
+        let mut shards: Vec<CompressedMsg> = vec![CompressedMsg::Zero { d: 0 }; num_shards];
+        let threads = if d < Self::MIN_PARALLEL_DIM { 1 } else { self.threads.min(num_shards) };
+        if threads <= 1 {
+            for ((comp, out), chunk) in
+                self.shard_comps.iter_mut().zip(shards.iter_mut()).zip(&chunks)
+            {
+                *out = comp.compress(chunk);
+            }
+        } else {
+            // Contiguous static partition: shard i goes to thread i/per.
+            // Each scoped worker owns disjoint &mut slices of the
+            // compressor pool and the result buffer, so no locks and no
+            // result reordering — shards land at their block offsets.
+            let per = num_shards.div_ceil(threads);
+            std::thread::scope(|s| {
+                for ((comps_t, outs_t), chunks_t) in self
+                    .shard_comps
+                    .chunks_mut(per)
+                    .zip(shards.chunks_mut(per))
+                    .zip(chunks.chunks(per))
+                {
+                    s.spawn(move || {
+                        for ((comp, out), chunk) in
+                            comps_t.iter_mut().zip(outs_t.iter_mut()).zip(chunks_t)
+                        {
+                            *out = comp.compress(chunk);
+                        }
+                    });
+                }
+            });
+        }
+        CompressedMsg::Sharded { d, shards }
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+
+    fn fork_stream(&self, stream: u64) -> Box<dyn Compressor> {
+        // Fork the inner prototype; per-shard instances re-fork from it
+        // on first use, so worker streams and shard streams nest
+        // (worker w, shard i ⇒ inner.fork(w).fork(i)).
+        Box::new(ShardedCompressor {
+            inner: self.inner.fork_stream(stream),
+            shard_size: self.shard_size,
+            threads: self.threads,
+            shard_comps: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{measured_pi, Identity, RandK, ScaledSign, TopK};
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn identity_shards_decode_exactly() {
+        let x: Vec<f32> = (0..103).map(|i| i as f32 - 51.0).collect();
+        let mut c = ShardedCompressor::new(Box::new(Identity), 16, 4);
+        let msg = c.compress(&x);
+        match &msg {
+            CompressedMsg::Sharded { d, shards } => {
+                assert_eq!(*d, 103);
+                assert_eq!(shards.len(), 7); // 6 full blocks of 16 + remainder 7
+                assert_eq!(shards[6].dim(), 7);
+            }
+            other => panic!("expected sharded message, got {other:?}"),
+        }
+        assert_eq!(msg.to_dense(), x);
+    }
+
+    #[test]
+    fn parallel_equals_serial_bit_for_bit() {
+        // thread count is a scheduling knob, never a math knob — checked
+        // above MIN_PARALLEL_DIM so the scoped-thread path really runs
+        let d = 2 * ShardedCompressor::MIN_PARALLEL_DIM + 17;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        for inner in ["sign", "topk"] {
+            let mk = || -> Box<dyn Compressor> {
+                match inner {
+                    "sign" => Box::new(ScaledSign::new()),
+                    _ => Box::new(TopK::with_frac(0.1)),
+                }
+            };
+            let a = ShardedCompressor::new(mk(), 8192, 1).compress(&x);
+            let b = ShardedCompressor::new(mk(), 8192, 4).compress(&x);
+            assert_eq!(a, b, "{inner}: threads changed the message");
+        }
+    }
+
+    #[test]
+    fn sign_shard_bits_are_exact() {
+        // every shard nonzero ⇒ per-shard 32 + d_i, plus the 32-bit count
+        let x = vec![1.0f32; 150]; // shards 64, 64, 22
+        let mut c = ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 2);
+        let msg = c.compress(&x);
+        assert_eq!(msg.wire_bits(), 32 + (32 + 64) + (32 + 64) + (32 + 22));
+    }
+
+    #[test]
+    fn randk_shards_get_independent_streams() {
+        // with a shared stream every shard would pick the same local
+        // indices; forked shard streams must not all coincide
+        let x = vec![1.0f32; 4 * 100];
+        let mut c = ShardedCompressor::new(Box::new(RandK::with_frac(0.1, 9)), 100, 2);
+        let msg = c.compress(&x);
+        let CompressedMsg::Sharded { shards, .. } = msg else { panic!("not sharded") };
+        let locals: Vec<Vec<u32>> = shards
+            .iter()
+            .map(|s| match s {
+                CompressedMsg::Sparse { idx, .. } => idx.clone(),
+                other => panic!("expected sparse shard, got {other:?}"),
+            })
+            .collect();
+        assert!(
+            locals.windows(2).any(|w| w[0] != w[1]),
+            "all shards picked identical coordinates: {locals:?}"
+        );
+    }
+
+    #[test]
+    fn fork_stream_decorrelates_wrapper() {
+        let x = vec![1.0f32; 300];
+        let base = ShardedCompressor::new(Box::new(RandK::with_frac(0.1, 7)), 100, 1);
+        let m0 = base.fork_stream(0).compress(&x);
+        let m1 = base.fork_stream(1).compress(&x);
+        assert_ne!(m0, m1, "forked wrappers replayed identical rand-k streams");
+    }
+
+    #[test]
+    fn prop_sharded_pi_bound_holds() {
+        check("sharded pi <= worst shard bound", Config::default(), |g| {
+            let d = g.size(500);
+            let x = g.vec_normal(d, 1.0);
+            if crate::tensor::norm2_sq(&x) == 0.0 {
+                return Ok(());
+            }
+            let mut c = ShardedCompressor::new(Box::new(TopK::with_frac(0.25)), 37, 3);
+            let msg = c.compress(&x);
+            let pi = measured_pi(&x, &msg);
+            let bound = c.pi_bound(d);
+            if pi > bound + 1e-5 {
+                return Err(format!("pi {pi} > bound {bound} (d={d})"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,9 +1,20 @@
-//! Top-k compressor: keep the k largest-magnitude coordinates.
+//! Top-k compressors: keep the k largest-magnitude coordinates, either
+//! globally ([`TopK`]) or within fixed-size blocks ([`TopKBlock`]).
 //!
 //! Selection uses an in-place quickselect on |x| (O(d) expected, no full
 //! sort — this is an L3 hot path at model dimension). Ties are broken
 //! toward the lower index, matching the stable-argsort oracle in
 //! python/compile/kernels/ref.py.
+//!
+//! Non-finite input (NaN/Inf) breaks magnitude ordering — the boundary
+//! scan would silently select fewer than k entries — so the selection
+//! path **panics loudly** instead of mis-compressing. A diverged model
+//! therefore aborts the run — the threaded coordinator converts worker
+//! panics into an `Err` (pinned by failure-injection tests) — while the
+//! softer NaN-propagates-to-metrics contract of
+//! `tests/failure_injection.rs` holds only for compressors that
+//! tolerate non-finite values (scaled-sign, identity), never for
+//! selecting ones.
 
 use super::{CompressedMsg, Compressor};
 
@@ -104,29 +115,126 @@ impl Compressor for TopK {
         if k >= d {
             return CompressedMsg::Dense(x.to_vec());
         }
-        self.scratch.clear();
-        self.scratch.extend(x.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
-        quickselect_topk(&mut self.scratch, k);
-        // Boundary magnitude = smallest magnitude in the selected prefix.
-        // Keep everything strictly above it (there are < k such entries),
-        // then fill the remaining slots with boundary-equal entries in
-        // index order — the deterministic lower-index-wins tie rule.
-        let boundary = self.scratch[..k].iter().map(|e| e.0).fold(f32::INFINITY, f32::min);
         let mut idx: Vec<u32> = Vec::with_capacity(k);
-        for (i, v) in x.iter().enumerate() {
-            if v.abs() > boundary {
-                idx.push(i as u32);
+        select_topk_into(x, k, &mut self.scratch, &mut idx);
+        let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        CompressedMsg::Sparse { d, idx, val }
+    }
+
+    fn box_clone(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+/// Append the ascending indices (relative to `x`) of the k largest-|·|
+/// entries of `x` onto `idx` (ties → lower index). Requires `k < x.len()`
+/// (callers handle the k ≥ d passthrough). Panics on non-finite input —
+/// NaN breaks the ordering and would silently select fewer than k
+/// entries (Inf breaks the boundary scan the same way).
+fn select_topk_into(x: &[f32], k: usize, scratch: &mut Vec<(f32, u32)>, idx: &mut Vec<u32>) {
+    debug_assert!(k < x.len());
+    scratch.clear();
+    let mut finite = true;
+    scratch.extend(x.iter().enumerate().map(|(i, &v)| {
+        finite &= v.is_finite();
+        (v.abs(), i as u32)
+    }));
+    assert!(
+        finite,
+        "top-k selection on non-finite input (NaN/Inf breaks magnitude ordering; \
+         check gradients before compressing)"
+    );
+    quickselect_topk(scratch, k);
+    // Boundary magnitude = smallest magnitude in the selected prefix.
+    // Keep everything strictly above it (there are < k such entries),
+    // then fill the remaining slots with boundary-equal entries in
+    // index order — the deterministic lower-index-wins tie rule.
+    let boundary = scratch[..k].iter().map(|e| e.0).fold(f32::INFINITY, f32::min);
+    let base = idx.len();
+    for (i, v) in x.iter().enumerate() {
+        if v.abs() > boundary {
+            idx.push(i as u32);
+        }
+    }
+    for (i, v) in x.iter().enumerate() {
+        if idx.len() - base == k {
+            break;
+        }
+        if v.abs() == boundary {
+            idx.push(i as u32);
+        }
+    }
+    idx[base..].sort_unstable();
+}
+
+/// Blockwise top-k: select the top-k **within each fixed-size block**
+/// instead of globally (blockwise scaling à la Efficient-Adam,
+/// arXiv:2205.14473). Semantically distinct from global top-k — every
+/// block keeps at least one coordinate, so the contraction bound is the
+/// worst per-block bound, not `1 − k/d` — hence its own registered name
+/// (`topk_block`) and its own `pi_bound`.
+#[derive(Clone, Debug)]
+pub struct TopKBlock {
+    k_fixed: Option<usize>,
+    k_frac: f64,
+    block: usize,
+    scratch: Vec<(f32, u32)>,
+}
+
+impl TopKBlock {
+    /// Default block size when none is configured (`by_name` path).
+    pub const DEFAULT_BLOCK: usize = 4096;
+
+    /// Per block of size B: k = max(1, round(frac · B)).
+    pub fn with_frac(frac: f64, block: usize) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "k fraction must be in (0,1]");
+        assert!(block >= 1, "block size must be >= 1");
+        TopKBlock { k_fixed: None, k_frac: frac, block, scratch: Vec::new() }
+    }
+
+    /// Fixed k per block (clamped to the block size).
+    pub fn with_k(k: usize, block: usize) -> Self {
+        assert!(k >= 1);
+        assert!(block >= 1, "block size must be >= 1");
+        TopKBlock { k_fixed: Some(k), k_frac: 0.0, block, scratch: Vec::new() }
+    }
+
+    fn k_for(&self, b: usize) -> usize {
+        match self.k_fixed {
+            Some(k) => k.min(b),
+            None => ((self.k_frac * b as f64).round() as usize).clamp(1, b),
+        }
+    }
+}
+
+impl Compressor for TopKBlock {
+    fn name(&self) -> &'static str {
+        "topk_block"
+    }
+
+    fn pi_bound(&self, d: usize) -> f64 {
+        super::blockwise_pi_bound(d, self.block, |b| 1.0 - self.k_for(b) as f64 / b as f64)
+    }
+
+    fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+        let d = x.len();
+        let mut idx: Vec<u32> = Vec::new();
+        for (b, chunk) in x.chunks(self.block).enumerate() {
+            let off = (b * self.block) as u32;
+            let k = self.k_for(chunk.len());
+            let base = idx.len();
+            if k >= chunk.len() {
+                idx.extend((0..chunk.len() as u32).map(|i| off + i));
+            } else {
+                select_topk_into(chunk, k, &mut self.scratch, &mut idx);
+                for i in idx[base..].iter_mut() {
+                    *i += off;
+                }
             }
         }
-        for (i, v) in x.iter().enumerate() {
-            if idx.len() == k {
-                break;
-            }
-            if v.abs() == boundary {
-                idx.push(i as u32);
-            }
+        if idx.len() == d {
+            return CompressedMsg::Dense(x.to_vec());
         }
-        idx.sort_unstable();
         let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
         CompressedMsg::Sparse { d, idx, val }
     }
@@ -218,5 +326,86 @@ mod tests {
     fn frac_matches_paper_ratio() {
         // K = 0.016 d at d = 1000 -> k = 16
         assert_eq!(TopK::with_frac(0.016).k_for(1000), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_input_fails_loudly() {
+        // regression: NaN used to silently mis-select (< k entries kept)
+        // because NaN compares false under both > and ==
+        let x = [1.0f32, f32::NAN, 3.0, 0.5];
+        TopK::with_k(2).compress(&x);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn inf_input_fails_loudly() {
+        let x = [1.0f32, f32::INFINITY, 3.0, 0.5];
+        TopK::with_k(2).compress(&x);
+    }
+
+    #[test]
+    fn nan_with_k_ge_d_passes_through() {
+        // no selection happens, so the dense passthrough stays exact and
+        // the NaN propagates to the metrics (failure_injection contract)
+        let x = [f32::NAN, 1.0];
+        let msg = TopK::with_k(5).compress(&x);
+        assert!(matches!(msg, CompressedMsg::Dense(_)));
+    }
+
+    #[test]
+    fn block_equals_global_when_block_covers_d() {
+        let x = [0.5f32, -3.0, 2.0, 1.0, -0.25];
+        let a = TopK::with_k(2).compress(&x);
+        let b = TopKBlock::with_k(2, 64).compress(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn block_keeps_k_per_block() {
+        // blocks [0..3) and [3..6): top-1 of each, not global top-2
+        let x = [5.0f32, 1.0, 0.5, 0.1, 4.0, 0.2];
+        let msg = TopKBlock::with_k(1, 3).compress(&x);
+        assert_eq!(msg.to_dense(), vec![5.0, 0.0, 0.0, 0.0, 4.0, 0.0]);
+        // global top-2 would have kept 5.0 and 4.0 too here, but with
+        // both large entries in one block the selections differ:
+        let y = [5.0f32, 4.0, 0.5, 0.1, 0.3, 0.2];
+        let blk = TopKBlock::with_k(1, 3).compress(&y);
+        assert_eq!(blk.to_dense(), vec![5.0, 0.0, 0.0, 0.3, 0.0, 0.0]);
+        let glob = TopK::with_k(2).compress(&y);
+        assert_eq!(glob.to_dense(), vec![5.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_indices_sorted_and_ragged_tail() {
+        // d = 7, block = 3 ⇒ blocks of 3, 3, 1; last block keeps its coord
+        let x = [0.0f32, 2.0, 1.0, -4.0, 0.0, 3.0, 0.25];
+        let msg = TopKBlock::with_k(1, 3).compress(&x);
+        match &msg {
+            CompressedMsg::Sparse { d, idx, val } => {
+                assert_eq!(*d, 7);
+                assert_eq!(idx, &vec![1, 3, 6]);
+                assert_eq!(val, &vec![2.0, -4.0, 0.25]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_block_pi_bound_holds() {
+        check("topk_block pi <= bound", Config::default(), |g| {
+            let d = g.size(400);
+            let x = g.vec_normal(d, 1.5);
+            if crate::tensor::norm2_sq(&x) < 1e-12 {
+                return Ok(());
+            }
+            let mut c = TopKBlock::with_frac(0.2, 29);
+            let msg = c.compress(&x);
+            let pi = measured_pi(&x, &msg);
+            if pi > c.pi_bound(d) + 1e-6 {
+                return Err(format!("pi {pi} > {} (d={d})", c.pi_bound(d)));
+            }
+            Ok(())
+        });
     }
 }

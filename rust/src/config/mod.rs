@@ -39,9 +39,17 @@ pub struct ExperimentConfig {
     /// cdadam | uncompressed_amsgrad | uncompressed_sgd | naive | ef |
     /// ef21 | onebit_adam
     pub strategy: String,
-    /// scaled_sign | topk | top1 | randk | identity
+    /// scaled_sign | topk | topk_block | top1 | randk | identity
     pub compressor: String,
     pub k_frac: f64,
+    /// Block size for the `topk_block` compressor (0 = its default).
+    pub block_size: usize,
+    /// Block size for the block-sharded compression pipeline; 0 disables
+    /// sharding and keeps the monolithic compressor bit-for-bit.
+    pub shard_size: usize,
+    /// Scoped worker threads used to compress shards concurrently
+    /// (only meaningful when `shard_size > 0`; clamped to ≥ 1).
+    pub compress_threads: usize,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -71,6 +79,9 @@ impl Default for ExperimentConfig {
             strategy: "cdadam".into(),
             compressor: "scaled_sign".into(),
             k_frac: 0.016,
+            block_size: 0,
+            shard_size: 0,
+            compress_threads: 4,
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -151,6 +162,21 @@ impl ExperimentConfig {
                 cfg.lr_milestones = vec![200];
                 cfg.eval_every = 10;
             }
+            // large-d scenario: d = 2²⁰ synthetic logreg with the
+            // block-sharded compression pipeline on (16 shards × 4
+            // threads). Demonstrates the sharded hot path at model
+            // dimension; `benches/shard_throughput.rs` measures the
+            // kernel-level speedup at the same d.
+            "large_d_sharded" => {
+                cfg.task = Task::LogReg { dataset: "large_1m".into(), lambda: 0.1 };
+                cfg.n = 4;
+                cfg.tau = usize::MAX;
+                cfg.rounds = 20;
+                cfg.lr = 0.003;
+                cfg.eval_every = 5;
+                cfg.shard_size = 65_536;
+                cfg.compress_threads = 4;
+            }
             other => bail!("unknown preset {other:?}"),
         }
         Ok(cfg)
@@ -165,6 +191,9 @@ impl ExperimentConfig {
             self.compressor = c.into();
         }
         self.k_frac = args.f64("k-frac", self.k_frac)?;
+        self.block_size = args.usize("block-size", self.block_size)?;
+        self.shard_size = args.usize("shard-size", self.shard_size)?;
+        self.compress_threads = args.usize("compress-threads", self.compress_threads)?;
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
         if let Some(t) = args.get("tau") {
@@ -199,7 +228,20 @@ impl ExperimentConfig {
 
     /// Instantiate the strategy object.
     pub fn build_strategy(&self) -> Result<Box<dyn Strategy>> {
-        let comp = compress::by_name(&self.compressor, self.k_frac, self.seed ^ 0xC0)?;
+        let mut comp =
+            compress::by_name(&self.compressor, self.k_frac, self.block_size, self.seed ^ 0xC0)?;
+        // Opt-in block-sharded pipeline: wrap the base compressor so
+        // every strategy half (worker Markov encoders, server downlink,
+        // EF steps) compresses fixed-size blocks on scoped threads and
+        // emits CompressedMsg::Sharded with exact per-shard accounting.
+        // shard_size = 0 keeps today's monolithic path bit-for-bit.
+        if self.shard_size > 0 {
+            comp = Box::new(compress::ShardedCompressor::new(
+                comp,
+                self.shard_size,
+                self.compress_threads.max(1),
+            ));
+        }
         let (b1, b2, nu) = (self.beta1 as f32, self.beta2 as f32, self.nu as f32);
         Ok(match self.strategy.as_str() {
             "cdadam" => Box::new(
@@ -262,11 +304,79 @@ mod tests {
             "image_wrn_mini",
             "hlo_mlp",
             "transformer_e2e",
+            "large_d_sharded",
         ] {
             let cfg = ExperimentConfig::preset(p).unwrap();
             cfg.build_strategy().unwrap();
         }
         assert!(ExperimentConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn shard_knobs_wrap_the_compressor() {
+        use crate::compress::CompressedMsg;
+        let g = vec![1.0f32; 100];
+        // shard_size > 0 ⇒ every worker uplink is a Sharded message with
+        // ceil(d / shard_size) blocks
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.shard_size = 32;
+        cfg.compress_threads = 2;
+        let strat = cfg.build_strategy().unwrap();
+        let msg = strat.make_worker(100, 0).uplink(1, &g);
+        match &msg {
+            CompressedMsg::Sharded { d, shards } => {
+                assert_eq!(*d, 100);
+                assert_eq!(shards.len(), 4); // 32+32+32+4
+            }
+            other => panic!("expected sharded uplink, got {other:?}"),
+        }
+        // shard_size = 0 ⇒ the monolithic path, bit-for-bit
+        cfg.shard_size = 0;
+        let mono = cfg.build_strategy().unwrap().make_worker(100, 0).uplink(1, &g);
+        let baseline =
+            ExperimentConfig::preset("quickstart").unwrap().build_strategy().unwrap();
+        assert_eq!(mono, baseline.make_worker(100, 0).uplink(1, &g));
+        assert!(!matches!(mono, CompressedMsg::Sharded { .. }));
+    }
+
+    #[test]
+    fn shard_args_override() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(
+            ["--shard-size", "4096", "--compress-threads", "8", "--block-size", "512"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.shard_size, 4096);
+        assert_eq!(cfg.compress_threads, 8);
+        assert_eq!(cfg.block_size, 512);
+    }
+
+    #[test]
+    fn block_size_knob_reaches_topk_block() {
+        use crate::compress::CompressedMsg;
+        // k_frac 0.016 at d = 50: global top-k keeps 1 coordinate, but
+        // blockwise with block 10 keeps 1 per block = 5 — the knob must
+        // actually change the selection, not fall through to the 4096
+        // default (which would cover d and degenerate to global top-k).
+        let g: Vec<f32> = (1..=50).map(|i| i as f32).collect();
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compressor = "topk_block".into();
+        cfg.block_size = 10;
+        let msg = cfg.build_strategy().unwrap().make_worker(50, 0).uplink(1, &g);
+        match &msg {
+            CompressedMsg::Sparse { idx, .. } => assert_eq!(idx.len(), 5),
+            other => panic!("expected sparse uplink, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_d_preset_is_sharded() {
+        let cfg = ExperimentConfig::preset("large_d_sharded").unwrap();
+        assert!(cfg.shard_size > 0);
+        assert!(cfg.compress_threads >= 4);
+        assert_eq!(cfg.task, Task::LogReg { dataset: "large_1m".into(), lambda: 0.1 });
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub fn build(cfg: &ExperimentConfig) -> Result<Setup> {
         Task::LogReg { dataset, lambda } => {
             let data = Arc::new(if dataset == "tiny" {
                 SynthLibsvm::new("tiny", 512, 50, cfg.seed, 0.05)
+            } else if dataset == "large_1m" {
+                // ≥1M-parameter scenario for the block-sharded pipeline
+                // (`large_d_sharded` preset): few samples, huge feature
+                // dim, so the compression path dominates the round.
+                SynthLibsvm::new("large_1m", 128, 1 << 20, cfg.seed, 0.05)
             } else {
                 SynthLibsvm::paper(dataset, cfg.seed)?
             });

@@ -24,6 +24,7 @@ const PRESETS: &[&str] = &[
     "image_wrn_mini",
     "hlo_mlp",
     "transformer_e2e",
+    "large_d_sharded",
 ];
 
 fn usage() -> ! {
@@ -39,7 +40,10 @@ fn usage() -> ! {
            --preset <name>       experiment preset (default quickstart)\n\
            --strategy <s>        cdadam | uncompressed_amsgrad | uncompressed_sgd |\n\
                                  naive | ef | ef21 | onebit_adam\n\
-           --compressor <c>      scaled_sign | topk | top1 | randk | identity\n\
+           --compressor <c>      scaled_sign | topk | topk_block | top1 | randk | identity\n\
+           --block-size <int>    topk_block block size (0 = default 4096)\n\
+           --shard-size <int>    block-sharded compression block size (0 = off)\n\
+           --compress-threads <int>  threads for parallel shard compression\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\

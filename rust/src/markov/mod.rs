@@ -16,6 +16,13 @@
 //! invariant `encoder.state() == decoder.state()` after every exchanged
 //! message is enforced by property tests and by the coordinator's debug
 //! assertions.
+//!
+//! Both halves are compressor-agnostic, so wrapping the base compressor
+//! in a [`crate::compress::ShardedCompressor`] makes the whole sequence
+//! operate shard-wise: c_t becomes a `CompressedMsg::Sharded` whose
+//! blocks were compressed in parallel, `apply` folds shards into ŵ as
+//! they decode, and the state-agreement invariant is untouched (tested
+//! below).
 
 use crate::compress::{CompressedMsg, Compressor};
 use crate::tensor;
@@ -131,6 +138,59 @@ mod tests {
             errs.push(enc.error_to(&w));
         }
         assert!(errs[39] < errs[0] * 0.2, "errors {:?} -> {:?}", errs[0], errs[39]);
+    }
+
+    #[test]
+    fn sharded_sequence_keeps_state_agreement() {
+        use crate::compress::{CompressedMsg, ShardedCompressor};
+        let d = 230; // 3 full 64-blocks + remainder 38
+        let mut enc = MarkovEncoder::new(
+            d,
+            Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 4)),
+        );
+        let mut dec = MarkovDecoder::new(d);
+        let mut rng = crate::util::rng::Rng::new(23);
+        for _ in 0..12 {
+            let mut w = vec![0.0f32; d];
+            rng.fill_normal(&mut w, 2.0);
+            let c = enc.step(&w);
+            match &c {
+                CompressedMsg::Sharded { d: md, shards } => {
+                    assert_eq!(*md, d);
+                    assert_eq!(shards.len(), 4);
+                    // exact per-shard accounting carried through the step
+                    let sum: u64 = shards.iter().map(|s| s.wire_bits()).sum();
+                    assert_eq!(c.wire_bits(), 32 + sum);
+                }
+                other => panic!("expected sharded diff message, got {other:?}"),
+            }
+            dec.apply(&c);
+            assert_eq!(enc.state(), dec.state());
+        }
+    }
+
+    #[test]
+    fn sharded_equals_blockwise_monolithic_math() {
+        // ShardedCompressor(TopK, B) and TopKBlock(B) implement the same
+        // per-block selection, so their Markov sequences reconstruct the
+        // identical ŵ — sharding changes the schedule and framing, never
+        // the trajectory relative to its blockwise-math twin.
+        use crate::compress::{ShardedCompressor, TopKBlock};
+        let d = 150;
+        let mut sharded = MarkovEncoder::new(
+            d,
+            Box::new(ShardedCompressor::new(Box::new(TopK::with_frac(0.2)), 32, 3)),
+        );
+        let mut blockwise = MarkovEncoder::new(d, Box::new(TopKBlock::with_frac(0.2, 32)));
+        let mut rng = crate::util::rng::Rng::new(31);
+        for _ in 0..8 {
+            let mut w = vec![0.0f32; d];
+            rng.fill_normal(&mut w, 1.0);
+            let a = sharded.step(&w);
+            let b = blockwise.step(&w);
+            assert_eq!(a.to_dense(), b.to_dense());
+            assert_eq!(sharded.state(), blockwise.state());
+        }
     }
 
     #[test]

@@ -42,6 +42,57 @@ fn threaded_scales_workers() {
 }
 
 #[test]
+fn sharded_threaded_equals_lockstep() {
+    // block-sharded pipeline on: the threaded server folds shards into
+    // its aggregate as they decode, and the trajectory + cum_bits must
+    // still match lockstep exactly — for sign and blockwise-topk bases.
+    for compressor in ["scaled_sign", "topk"] {
+        let mut cfg = quick("quickstart");
+        cfg.compressor = compressor.into();
+        cfg.shard_size = 16; // d = 50 ⇒ shards 16,16,16,2
+        cfg.compress_threads = 2;
+        let a = run_lockstep(&cfg).unwrap();
+        let b = run_threaded(&cfg).unwrap();
+        assert_eq!(a.records.len(), b.records.len(), "{compressor}");
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(
+                x.grad_norm.to_bits(),
+                y.grad_norm.to_bits(),
+                "{compressor} round {}",
+                x.round
+            );
+            assert_eq!(x.cum_bits, y.cum_bits, "{compressor} round {}", x.round);
+        }
+    }
+}
+
+#[test]
+fn shard_size_zero_is_bit_for_bit_monolithic() {
+    // shard_size = 0 must reproduce the unsharded run exactly (it is the
+    // same code path — the wrapper is never constructed), while any
+    // shard_size > 0 pays the per-shard framing, so its metered bits are
+    // strictly larger on the same schedule.
+    let base = quick("quickstart");
+    let mut zero = base.clone();
+    zero.shard_size = 0;
+    let a = run_lockstep(&base).unwrap();
+    let b = run_lockstep(&zero).unwrap();
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.grad_norm.to_bits(), y.grad_norm.to_bits());
+        assert_eq!(x.cum_bits, y.cum_bits);
+    }
+    let mut sharded = base.clone();
+    sharded.shard_size = 16;
+    let c = run_lockstep(&sharded).unwrap();
+    assert!(
+        c.total_bits() > a.total_bits(),
+        "sharded framing {} should exceed monolithic {}",
+        c.total_bits(),
+        a.total_bits()
+    );
+}
+
+#[test]
 fn comm_ratio_32x_headline() {
     // The paper's headline: CD-Adam uses ~32× fewer bits than
     // uncompressed AMSGrad per round. Exact ratio: 32d / (32 + d) → 32

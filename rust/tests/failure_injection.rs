@@ -93,7 +93,7 @@ fn nan_gradients_propagate_to_metrics_not_panic() {
 #[test]
 fn wire_corruption_detected() {
     let msg = WireMsg { round: 9, from: 3, payload: CompressedMsg::Dense(vec![1.0, 2.0, 3.0]) };
-    let bytes = wire::encode(&msg);
+    let bytes = wire::encode(&msg).unwrap();
     // bit flips in the tag byte or truncation must not decode silently
     // into a *different valid* payload of the same length class.
     let mut t = bytes.clone();
