@@ -1,0 +1,113 @@
+//! Server-side aggregation throughput at model dimension: the
+//! sequential per-message fold vs the shard-parallel [`AggEngine`]
+//! (one range job per thread folding every uplink, no locks), at the
+//! `large_d_sharded` preset's geometry (d = 2²⁰, shard 65 536) for
+//! n = 8 and n = 32 uplinks.
+//!
+//! This is the figure-style bench for the decode/aggregate half of the
+//! sharded pipeline (`shard_throughput` covers the encode half): the
+//! server is the star topology's bottleneck, and the speedup column is
+//! pure scheduling — the engine is bit-identical to the sequential fold
+//! at every thread count (asserted at the end of the run).
+//!
+//! ```bash
+//! cargo bench --bench agg_throughput              # preset geometry
+//! cargo bench --bench agg_throughput -- --n 16 --threads 8
+//! ```
+
+use cdadam::agg::AggEngine;
+use cdadam::compress::{CompressedMsg, Compressor, ScaledSign, ShardedCompressor, TopK};
+use cdadam::config::ExperimentConfig;
+use cdadam::util::args::Args;
+use cdadam::util::rng::Rng;
+use cdadam::util::timer::bench;
+
+fn make_uplinks(
+    mk: impl Fn() -> Box<dyn Compressor>,
+    d: usize,
+    shard: usize,
+    threads: usize,
+    n: usize,
+) -> Vec<CompressedMsg> {
+    let mut rng = Rng::new(0xBE7);
+    (0..n)
+        .map(|i| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            ShardedCompressor::new(mk(), shard, threads).fork_stream(i as u64).compress(&x)
+        })
+        .collect()
+}
+
+fn row(name: &str, work_elems: usize, iters: usize, baseline_ms: Option<f64>, f: impl FnMut()) -> f64 {
+    let st = bench(2, iters, f);
+    let ms = st.mean();
+    let meps = work_elems as f64 / ms / 1e3;
+    let speedup = match baseline_ms {
+        Some(b) => format!("{:>6.2}x", b / ms),
+        None => "  1.00x".into(),
+    };
+    println!("{name:<36} {ms:>9.3} ms  {meps:>9.1} Melem/s  {speedup}");
+    ms
+}
+
+fn main() {
+    let args = Args::from_env();
+    // geometry comes from the large_d_sharded preset (d = 2^20 logreg,
+    // 65536-element shards, 4 compress/server threads) unless overridden.
+    let preset = ExperimentConfig::preset("large_d_sharded").expect("preset");
+    let d: usize = args.usize("d", 1 << 20).unwrap();
+    let shard: usize = args.usize("shard", preset.shard_size).unwrap();
+    let max_threads: usize = args.usize("threads", preset.server_threads.max(4)).unwrap();
+    let iters = args.usize("iters", if args.flag("quick") { 3 } else { 10 }).unwrap();
+    let ns: Vec<usize> = match args.get("n") {
+        Some(v) => vec![v.parse().expect("--n integer")],
+        None => vec![8, 32],
+    };
+
+    println!(
+        "### agg_throughput (d = {d}, shard = {shard}, preset = {}, {iters} iters, mean)",
+        preset.name
+    );
+
+    for &n in &ns {
+        println!(
+            "\n--- n = {n} uplinks ---\n{:<36} {:>12}  {:>17}  {:>7}",
+            "aggregate", "per round", "throughput", "speedup"
+        );
+        type MkComp = fn() -> Box<dyn Compressor>;
+        let families: [(&str, MkComp); 2] = [
+            ("sign", || Box::new(ScaledSign::new())),
+            ("topk", || Box::new(TopK::with_frac(0.016))),
+        ];
+        for (label, mk) in families {
+            let msgs = make_uplinks(mk, d, shard, preset.compress_threads, n);
+            let mut out = vec![0.0f32; d];
+            let seq = AggEngine::sequential();
+            let base = row(&format!("{label} sequential fold"), d * n, iters, None, || {
+                seq.average_into(&msgs, &mut out);
+                std::hint::black_box(&out);
+            });
+            for t in [2usize, max_threads] {
+                let eng = AggEngine::new(t);
+                row(&format!("{label} shard-parallel t={t}"), d * n, iters, Some(base), || {
+                    eng.average_into(&msgs, &mut out);
+                    std::hint::black_box(&out);
+                });
+            }
+        }
+    }
+
+    // sanity: the parallel fold really is the sequential fold, to the bit
+    let msgs =
+        make_uplinks(|| -> Box<dyn Compressor> { Box::new(ScaledSign::new()) }, d, shard, 2, 4);
+    let mut a = vec![0.0f32; d];
+    let mut b = vec![0.0f32; d];
+    AggEngine::sequential().average_into(&msgs, &mut a);
+    AggEngine::new(max_threads.max(2)).average_into(&msgs, &mut b);
+    assert!(
+        a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "parallel aggregate diverged from sequential fold"
+    );
+    println!("\nsanity: parallel == sequential fold, bit-for-bit ✓");
+}

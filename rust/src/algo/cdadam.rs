@@ -20,6 +20,7 @@
 //! (server ĝ == mean of worker ĝ^{(i)}) holds exactly — tested below.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, Optimizer};
@@ -31,11 +32,26 @@ pub struct CdAdam {
     pub beta2: f32,
     pub nu: f32,
     pub weight_decay: f32,
+    /// decode/aggregate engine handed to the server fold and the worker
+    /// downlink decoders (sequential by default).
+    pub agg: AggEngine,
 }
 
 impl CdAdam {
     pub fn new(compressor: Box<dyn Compressor>) -> Self {
-        CdAdam { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+        CdAdam {
+            compressor,
+            beta1: 0.9,
+            beta2: 0.99,
+            nu: 1e-8,
+            weight_decay: 0.0,
+            agg: AggEngine::sequential(),
+        }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 
     pub fn with_betas(mut self, beta1: f32, beta2: f32, nu: f32) -> Self {
@@ -62,7 +78,7 @@ impl Strategy for CdAdam {
         // pick the same coordinates each round (see compress::Compressor).
         Box::new(CdAdamWorker {
             enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
-            dec: MarkovDecoder::new(dim),
+            dec: MarkovDecoder::with_engine(dim, self.agg.clone()),
             opt: AmsGrad::new(dim, self.beta1, self.beta2, self.nu)
                 .with_weight_decay(self.weight_decay),
         })
@@ -72,6 +88,7 @@ impl Strategy for CdAdam {
         Box::new(CdAdamServer {
             ghat_agg: vec![0.0; dim],
             enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            agg: self.agg.clone(),
         })
     }
 }
@@ -101,14 +118,13 @@ pub struct CdAdamServer {
     /// of the workers' compressed gradients.
     ghat_agg: Vec<f32>,
     enc: MarkovEncoder,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for CdAdamServer {
     fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
         let inv = 1.0 / uplinks.len() as f32;
-        for c in uplinks {
-            c.add_scaled_into(&mut self.ghat_agg, inv);
-        }
+        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
         self.enc.step(&self.ghat_agg)
     }
 }

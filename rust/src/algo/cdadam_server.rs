@@ -16,6 +16,7 @@
 //! number (the coordinator gives both sides the same schedule).
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, LrSchedule, Optimizer};
@@ -28,11 +29,24 @@ pub struct CdAdamServerSide {
     pub beta1: f32,
     pub beta2: f32,
     pub nu: f32,
+    pub agg: AggEngine,
 }
 
 impl CdAdamServerSide {
     pub fn new(compressor: Box<dyn Compressor>, schedule: LrSchedule) -> Self {
-        CdAdamServerSide { compressor, schedule, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+        CdAdamServerSide {
+            compressor,
+            schedule,
+            beta1: 0.9,
+            beta2: 0.99,
+            nu: 1e-8,
+            agg: AggEngine::sequential(),
+        }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 }
 
@@ -44,7 +58,7 @@ impl Strategy for CdAdamServerSide {
     fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(SsWorker {
             enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
-            dec: MarkovDecoder::new(dim),
+            dec: MarkovDecoder::with_engine(dim, self.agg.clone()),
         })
     }
 
@@ -58,6 +72,7 @@ impl Strategy for CdAdamServerSide {
             enc: MarkovEncoder::new(dim, self.compressor.clone()),
             schedule: self.schedule.clone(),
             initialized: false,
+            agg: self.agg.clone(),
         })
     }
 }
@@ -96,24 +111,24 @@ struct SsServer {
     enc: MarkovEncoder,
     schedule: LrSchedule,
     initialized: bool,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for SsServer {
     fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
         let inv = 1.0 / uplinks.len() as f32;
-        for c in uplinks {
-            c.add_scaled_into(&mut self.ghat_agg, inv);
-        }
+        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
         if !self.initialized {
             // adopt the workers' initial params implicitly: server x starts
             // at 0 offset; workers apply deltas, so only Δ consistency
             // matters, not absolute x.
             self.initialized = true;
         }
-        // server-side AMSGrad step on its own replica
+        // server-side AMSGrad step on its own replica (disjoint field
+        // borrows — no per-round clone of the d-vector)
         self.prev_x.copy_from_slice(&self.x);
         let lr = self.schedule.at(round - 1);
-        self.opt.step(&mut self.x, &self.ghat_agg.clone(), lr);
+        self.opt.step(&mut self.x, &self.ghat_agg, lr);
         // Δ_t = prev_x − x  (the update the workers must apply)
         for ((d, &p), &q) in self.delta.iter_mut().zip(&self.prev_x).zip(&self.x) {
             *d = p - q;

@@ -8,10 +8,12 @@
 //! variance accumulates the quadratic error term of eq. (4.2) — the
 //! mechanism behind EF's stalling gradient norm in Fig. 2.
 
-use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 use crate::tensor;
+use crate::util::scratch::ScratchPool;
 
 /// Error-feedback AMSGrad (bidirectional).
 pub struct ErrorFeedback {
@@ -19,11 +21,17 @@ pub struct ErrorFeedback {
     pub beta1: f32,
     pub beta2: f32,
     pub nu: f32,
+    pub agg: AggEngine,
 }
 
 impl ErrorFeedback {
     pub fn new(compressor: Box<dyn Compressor>) -> Self {
-        ErrorFeedback { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+        ErrorFeedback { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8, agg: AggEngine::sequential() }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 }
 
@@ -48,6 +56,7 @@ impl Strategy for ErrorFeedback {
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
             buf: vec![0.0; dim],
+            agg: self.agg.clone(),
         })
     }
 }
@@ -93,12 +102,13 @@ struct EfServer {
     delta: Vec<f32>,
     e: Vec<f32>,
     buf: Vec<f32>,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for EfServer {
     fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        let mut avg = vec![0.0f32; self.buf.len()];
-        average_into(uplinks, &mut avg);
+        let mut avg = ScratchPool::global().take(self.buf.len());
+        self.agg.average_into(uplinks, &mut avg);
         ef_step(self.comp.as_mut(), &avg, &mut self.delta, &mut self.e, &mut self.buf)
     }
 }

@@ -8,6 +8,7 @@
 //! comm cost per round is identical by construction.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{Optimizer, SgdMomentum};
@@ -17,11 +18,17 @@ pub struct Ef21 {
     pub compressor: Box<dyn Compressor>,
     pub momentum: f32,
     pub weight_decay: f32,
+    pub agg: AggEngine,
 }
 
 impl Ef21 {
     pub fn new(compressor: Box<dyn Compressor>) -> Self {
-        Ef21 { compressor, momentum: 0.0, weight_decay: 0.0 }
+        Ef21 { compressor, momentum: 0.0, weight_decay: 0.0, agg: AggEngine::sequential() }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 
     pub fn with_momentum(mut self, m: f32) -> Self {
@@ -43,7 +50,7 @@ impl Strategy for Ef21 {
     fn make_worker(&self, dim: usize, worker_id: usize) -> Box<dyn WorkerAlgo> {
         Box::new(Ef21Worker {
             enc: MarkovEncoder::new(dim, self.compressor.fork_stream(worker_id as u64)),
-            dec: MarkovDecoder::new(dim),
+            dec: MarkovDecoder::with_engine(dim, self.agg.clone()),
             opt: SgdMomentum::new(dim, self.momentum).with_weight_decay(self.weight_decay),
         })
     }
@@ -52,6 +59,7 @@ impl Strategy for Ef21 {
         Box::new(Ef21Server {
             ghat_agg: vec![0.0; dim],
             enc: MarkovEncoder::new(dim, self.compressor.clone()),
+            agg: self.agg.clone(),
         })
     }
 }
@@ -76,14 +84,13 @@ impl WorkerAlgo for Ef21Worker {
 struct Ef21Server {
     ghat_agg: Vec<f32>,
     enc: MarkovEncoder,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for Ef21Server {
     fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
         let inv = 1.0 / uplinks.len() as f32;
-        for c in uplinks {
-            c.add_scaled_into(&mut self.ghat_agg, inv);
-        }
+        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
         self.enc.step(&self.ghat_agg)
     }
 }

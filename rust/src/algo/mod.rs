@@ -57,15 +57,11 @@ pub trait Strategy: Send + Sync {
     fn make_server(&self, dim: usize, n: usize) -> Box<dyn ServerAlgo>;
 }
 
-/// Shared helper: average-decode a set of uplinks into `out`
-/// (out = (1/n) Σ decode(c_i)).
-pub(crate) fn average_into(uplinks: &[CompressedMsg], out: &mut [f32]) {
-    out.fill(0.0);
-    let inv = 1.0 / uplinks.len() as f32;
-    for c in uplinks {
-        c.add_scaled_into(out, inv);
-    }
-}
+// The old free-standing `average_into` helper lives on as
+// `agg::AggEngine::average_into`: every strategy server now folds its
+// uplinks through an engine (sequential by default, shard-parallel when
+// the config's `server_threads` knob is set), so the decode/aggregate
+// hot path has exactly one implementation.
 
 #[cfg(test)]
 mod tests {

@@ -3,7 +3,8 @@
 //! compression error accumulates — exactly what Fig. 2's "naive" curve
 //! shows flat-lining above the others.
 
-use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 
@@ -13,11 +14,17 @@ pub struct Naive {
     pub beta1: f32,
     pub beta2: f32,
     pub nu: f32,
+    pub agg: AggEngine,
 }
 
 impl Naive {
     pub fn new(compressor: Box<dyn Compressor>) -> Self {
-        Naive { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+        Naive { compressor, beta1: 0.9, beta2: 0.99, nu: 1e-8, agg: AggEngine::sequential() }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 }
 
@@ -35,7 +42,11 @@ impl Strategy for Naive {
     }
 
     fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
-        Box::new(NaiveServer { comp: self.compressor.clone(), buf: vec![0.0; dim] })
+        Box::new(NaiveServer {
+            comp: self.compressor.clone(),
+            buf: vec![0.0; dim],
+            agg: self.agg.clone(),
+        })
     }
 }
 
@@ -59,11 +70,12 @@ impl WorkerAlgo for NaiveWorker {
 struct NaiveServer {
     comp: Box<dyn Compressor>,
     buf: Vec<f32>,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for NaiveServer {
     fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        average_into(uplinks, &mut self.buf);
+        self.agg.average_into(uplinks, &mut self.buf);
         self.comp.compress(&self.buf)
     }
 }

@@ -14,10 +14,12 @@
 //! Total bits/worker: 32d·2T₁ + (32+d)·2(T−T₁) (Table 2 row 3) — the
 //! warm-up term is what makes its per-bit curves lag CD-Adam in Fig. 1.
 
-use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{Adam, Optimizer};
 use crate::tensor;
+use crate::util::scratch::ScratchPool;
 
 /// 1-bit Adam strategy.
 pub struct OneBitAdam {
@@ -27,11 +29,24 @@ pub struct OneBitAdam {
     pub beta1: f32,
     pub beta2: f32,
     pub nu: f32,
+    pub agg: AggEngine,
 }
 
 impl OneBitAdam {
     pub fn new(compressor: Box<dyn Compressor>, warmup_rounds: usize) -> Self {
-        OneBitAdam { compressor, warmup_rounds, beta1: 0.9, beta2: 0.99, nu: 1e-8 }
+        OneBitAdam {
+            compressor,
+            warmup_rounds,
+            beta1: 0.9,
+            beta2: 0.99,
+            nu: 1e-8,
+            agg: AggEngine::sequential(),
+        }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 }
 
@@ -62,6 +77,7 @@ impl Strategy for OneBitAdam {
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
             buf: vec![0.0; dim],
+            agg: self.agg.clone(),
         })
     }
 }
@@ -105,16 +121,20 @@ struct OneBitServer {
     delta: Vec<f32>,
     e: Vec<f32>,
     buf: Vec<f32>,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for OneBitServer {
     fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        let mut avg = vec![0.0f32; self.buf.len()];
-        average_into(uplinks, &mut avg);
+        let mut avg = ScratchPool::global().take(self.buf.len());
+        self.agg.average_into(uplinks, &mut avg);
         if round <= self.warmup {
-            return CompressedMsg::Dense(avg);
+            // warm-up broadcasts the dense average; the message owns
+            // its vector, so detach the scratch buffer instead of
+            // copying it (same one-allocation profile as pre-pool).
+            return CompressedMsg::Dense(avg.into_vec());
         }
-        for ((ei, &ai), &di) in self.e.iter_mut().zip(&avg).zip(self.delta.iter()) {
+        for ((ei, &ai), &di) in self.e.iter_mut().zip(avg.iter()).zip(self.delta.iter()) {
             *ei = ai + di;
         }
         let c = self.comp.compress(&self.e);

@@ -2,7 +2,8 @@
 //! per coordinate in both directions — the paper's "Uncompressed" curve
 //! and the 32d·2T row of Table 2.
 
-use super::{average_into, ServerAlgo, Strategy, WorkerAlgo};
+use super::{ServerAlgo, Strategy, WorkerAlgo};
+use crate::agg::AggEngine;
 use crate::compress::CompressedMsg;
 use crate::optim::{AmsGrad, Optimizer, SgdMomentum};
 
@@ -20,15 +21,35 @@ pub struct Uncompressed {
     pub beta2: f32,
     pub nu: f32,
     pub weight_decay: f32,
+    pub agg: AggEngine,
 }
 
 impl Uncompressed {
     pub fn amsgrad() -> Self {
-        Uncompressed { rule: Rule::AmsGrad, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+        Uncompressed {
+            rule: Rule::AmsGrad,
+            beta1: 0.9,
+            beta2: 0.99,
+            nu: 1e-8,
+            weight_decay: 0.0,
+            agg: AggEngine::sequential(),
+        }
     }
 
     pub fn sgd(momentum: f32) -> Self {
-        Uncompressed { rule: Rule::Sgd { momentum }, beta1: 0.9, beta2: 0.99, nu: 1e-8, weight_decay: 0.0 }
+        Uncompressed {
+            rule: Rule::Sgd { momentum },
+            beta1: 0.9,
+            beta2: 0.99,
+            nu: 1e-8,
+            weight_decay: 0.0,
+            agg: AggEngine::sequential(),
+        }
+    }
+
+    pub fn with_agg(mut self, agg: AggEngine) -> Self {
+        self.agg = agg;
+        self
     }
 
     pub fn with_weight_decay(mut self, wd: f32) -> Self {
@@ -62,7 +83,7 @@ impl Strategy for Uncompressed {
     }
 
     fn make_server(&self, dim: usize, _n: usize) -> Box<dyn ServerAlgo> {
-        Box::new(UncompressedServer { buf: vec![0.0; dim] })
+        Box::new(UncompressedServer { buf: vec![0.0; dim], agg: self.agg.clone() })
     }
 }
 
@@ -84,11 +105,12 @@ impl WorkerAlgo for UncompressedWorker {
 
 struct UncompressedServer {
     buf: Vec<f32>,
+    agg: AggEngine,
 }
 
 impl ServerAlgo for UncompressedServer {
     fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        average_into(uplinks, &mut self.buf);
+        self.agg.average_into(uplinks, &mut self.buf);
         CompressedMsg::Dense(self.buf.clone())
     }
 }

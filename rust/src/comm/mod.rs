@@ -17,7 +17,13 @@ use std::sync::Arc;
 
 use crate::compress::CompressedMsg;
 
-/// A round-tagged message between worker and server.
+/// Anything the metered links can carry: must report its exact
+/// serialized size so the meters stay measurement, not estimate.
+pub trait Framed: Send {
+    fn wire_bits(&self) -> u64;
+}
+
+/// A round-tagged uplink message from one worker to the server.
 #[derive(Clone, Debug)]
 pub struct WireMsg {
     pub round: u64,
@@ -25,10 +31,34 @@ pub struct WireMsg {
     pub payload: CompressedMsg,
 }
 
-impl WireMsg {
+impl Framed for WireMsg {
     /// Exact on-the-wire size: 64-bit frame header (round+from packed)
     /// + 32-bit payload tag/len + payload bits.
+    fn wire_bits(&self) -> u64 {
+        64 + self.payload.wire_bits()
+    }
+}
+
+impl WireMsg {
     pub fn wire_bits(&self) -> u64 {
+        Framed::wire_bits(self)
+    }
+}
+
+/// The server's downlink broadcast: one payload shared by every worker
+/// link via `Arc`, so fan-out to n workers is n refcount bumps instead
+/// of n deep clones of the (potentially dense, d-sized) message. Each
+/// link still meters the full serialized size — on a real network every
+/// link would carry its own copy of the bytes.
+#[derive(Clone, Debug)]
+pub struct Broadcast {
+    pub round: u64,
+    pub payload: Arc<CompressedMsg>,
+}
+
+impl Framed for Broadcast {
+    /// Same framing as [`WireMsg`]: 64-bit header + payload bits.
+    fn wire_bits(&self) -> u64 {
         64 + self.payload.wire_bits()
     }
 }
@@ -51,13 +81,13 @@ impl Meter {
 }
 
 /// Sending half of a metered link.
-pub struct MeteredSender {
-    tx: Sender<WireMsg>,
+pub struct MeteredSender<T: Framed> {
+    tx: Sender<T>,
     meter: Arc<Meter>,
 }
 
-impl MeteredSender {
-    pub fn send(&self, msg: WireMsg) -> anyhow::Result<()> {
+impl<T: Framed> MeteredSender<T> {
+    pub fn send(&self, msg: T) -> anyhow::Result<()> {
         self.meter.bits.fetch_add(msg.wire_bits(), Ordering::Relaxed);
         self.meter.msgs.fetch_add(1, Ordering::Relaxed);
         self.tx.send(msg).map_err(|_| anyhow::anyhow!("link closed"))
@@ -65,39 +95,40 @@ impl MeteredSender {
 }
 
 /// Receiving half of a metered link.
-pub struct MeteredReceiver {
-    rx: Receiver<WireMsg>,
+pub struct MeteredReceiver<T: Framed> {
+    rx: Receiver<T>,
 }
 
-impl MeteredReceiver {
-    pub fn recv(&self) -> anyhow::Result<WireMsg> {
+impl<T: Framed> MeteredReceiver<T> {
+    pub fn recv(&self) -> anyhow::Result<T> {
         self.rx.recv().map_err(|_| anyhow::anyhow!("link closed"))
     }
 
-    pub fn try_recv(&self) -> Option<WireMsg> {
+    pub fn try_recv(&self) -> Option<T> {
         self.rx.try_recv().ok()
     }
 }
 
 /// Create a metered unidirectional link; the meter is shared so the
 /// coordinator can read cumulative traffic at any time.
-pub fn link() -> (MeteredSender, MeteredReceiver, Arc<Meter>) {
+pub fn link<T: Framed>() -> (MeteredSender<T>, MeteredReceiver<T>, Arc<Meter>) {
     let (tx, rx) = channel();
     let meter = Arc::new(Meter::default());
     (MeteredSender { tx, meter: meter.clone() }, MeteredReceiver { rx }, meter)
 }
 
 /// The full duplex topology for one worker: uplink to server + downlink
-/// back, with independent meters.
+/// back, with independent meters. Uplinks carry owned [`WireMsg`]s;
+/// downlinks carry the `Arc`-shared [`Broadcast`].
 pub struct WorkerLink {
-    pub up: MeteredSender,
-    pub down: MeteredReceiver,
+    pub up: MeteredSender<WireMsg>,
+    pub down: MeteredReceiver<Broadcast>,
 }
 
 /// The server's view of one worker.
 pub struct ServerLink {
-    pub up: MeteredReceiver,
-    pub down: MeteredSender,
+    pub up: MeteredReceiver<WireMsg>,
+    pub down: MeteredSender<Broadcast>,
 }
 
 /// Build n duplex worker↔server links; returns (worker sides, server
@@ -153,8 +184,28 @@ mod tests {
     }
 
     #[test]
+    fn broadcast_shares_payload_but_meters_full_size() {
+        // one Arc'd payload fanned out to every link: each link's meter
+        // still counts the full serialized size (a real network carries
+        // the bytes per link), while memory holds a single copy.
+        let (w, s, _um, dm) = topology(3);
+        let payload = Arc::new(CompressedMsg::Dense(vec![1.0; 10]));
+        for link in &s {
+            link.down.send(Broadcast { round: 7, payload: payload.clone() }).unwrap();
+        }
+        let received: Vec<Broadcast> = w.iter().map(|l| l.down.recv().unwrap()).collect();
+        for (i, got) in received.iter().enumerate() {
+            assert_eq!(got.round, 7);
+            assert!(Arc::ptr_eq(&got.payload, &payload), "worker {i} got a deep copy");
+            assert_eq!(dm[i].bits(), 64 + 320);
+        }
+        // 3 receiver handles + the local one, all the same allocation
+        assert_eq!(Arc::strong_count(&payload), 4);
+    }
+
+    #[test]
     fn closed_link_errors() {
-        let (tx, rx, _) = link();
+        let (tx, rx, _) = link::<WireMsg>();
         drop(rx);
         let r = tx.send(WireMsg { round: 0, from: 0, payload: CompressedMsg::Zero { d: 1 } });
         assert!(r.is_err());

@@ -37,7 +37,15 @@ pub enum CompressedMsg {
     Dense(Vec<f32>),
     /// Scaled sign: one f32 scale + d packed sign bits (1 = non-negative).
     SignScale { d: usize, scale: f32, bits: Vec<u64> },
-    /// Sparse top-k / rand-k: sorted coordinate indices + values.
+    /// Sparse top-k / rand-k coordinates + values.
+    ///
+    /// Invariant: `idx` is **strictly increasing** (sorted, duplicate-
+    /// free, < d). Every producer upholds it (top-k and blockwise top-k
+    /// sort their selections, rand-k samples sorted indices) and the
+    /// wire boundary rejects frames that violate it
+    /// (`comm::wire::decode` bails on non-increasing indices), so
+    /// consumers — in particular the binary-searched
+    /// [`Self::add_scaled_range`] — may rely on it.
     Sparse { d: usize, idx: Vec<u32>, val: Vec<f32> },
     /// All-zero vector (k = 0 edge case, or compressing an exact zero).
     Zero { d: usize },
@@ -136,6 +144,71 @@ impl CompressedMsg {
     /// out += decode(self)
     pub fn add_into(&self, out: &mut [f32]) {
         self.add_scaled_into(out, 1.0);
+    }
+
+    /// out += scale * decode(self)[start .. start + out.len()] — the
+    /// range-restricted apply that powers the shard-parallel aggregation
+    /// engine ([`crate::agg::AggEngine`]): one thread per disjoint
+    /// coordinate range folds that range of *every* uplink, no locks.
+    ///
+    /// Invariant: partitioning `[0, d)` into contiguous ranges and
+    /// applying each is **bit-identical** to [`Self::add_scaled_into`] —
+    /// every output element sees the same float ops in the same order,
+    /// whatever the partition (property-tested in this module and
+    /// re-proven end-to-end in `agg`).
+    pub fn add_scaled_range(&self, start: usize, out: &mut [f32], s: f32) {
+        let end = start + out.len();
+        assert!(end <= self.dim(), "range {start}..{end} out of bounds for d={}", self.dim());
+        match self {
+            CompressedMsg::Dense(v) => tensor::axpy(out, s, &v[start..end]),
+            CompressedMsg::SignScale { scale, bits, .. } => {
+                packing::add_signs_scaled_range(bits, *scale * s, start, out);
+            }
+            CompressedMsg::Sparse { idx, val, .. } => {
+                // binary search leans on the strictly-increasing `idx`
+                // invariant of the Sparse variant (enforced by every
+                // producer and by wire::decode — see the variant docs).
+                debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+                let lo = idx.partition_point(|&i| (i as usize) < start);
+                let hi = idx.partition_point(|&i| (i as usize) < end);
+                for (&i, &v) in idx[lo..hi].iter().zip(&val[lo..hi]) {
+                    out[i as usize - start] += s * v;
+                }
+            }
+            CompressedMsg::Zero { .. } => {}
+            CompressedMsg::Sharded { shards, .. } => {
+                let mut off = 0;
+                for sh in shards {
+                    let n = sh.dim();
+                    let (blk_lo, blk_hi) = (off, off + n);
+                    off = blk_hi;
+                    // overlap of [start, end) with this shard's block
+                    let (lo, hi) = (blk_lo.max(start), blk_hi.min(end));
+                    if lo < hi {
+                        sh.add_scaled_range(lo - blk_lo, &mut out[lo - start..hi - start], s);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Offsets of the shard boundaries of a `Sharded` message (block
+    /// starts, excluding 0 and d); empty for leaf messages. The
+    /// aggregation engine aligns its range partition to these so a
+    /// parallel fold never splits a shard's bit-level decode mid-block.
+    pub fn shard_boundaries(&self) -> Vec<usize> {
+        match self {
+            CompressedMsg::Sharded { shards, .. } => {
+                let mut cuts = Vec::with_capacity(shards.len().saturating_sub(1));
+                let mut off = 0;
+                for sh in &shards[..shards.len().saturating_sub(1)] {
+                    off += sh.dim();
+                    cuts.push(off);
+                }
+                cuts
+            }
+            _ => Vec::new(),
+        }
     }
 
     /// Decode into a fresh vector (test/convenience path).
@@ -308,6 +381,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_range_partition_matches_full_apply_bitwise() {
+        // the AggEngine soundness invariant: any contiguous partition of
+        // [0, d) applied range-by-range equals the monolithic apply
+        // bit-for-bit, for every message kind.
+        check("range partition == full apply", Config::default(), |g| {
+            let d = g.size(400).max(8);
+            let x = g.vec_normal(d, 1.5);
+            let mut msgs: Vec<CompressedMsg> = vec![
+                ScaledSign::new().compress(&x),
+                TopK::with_frac(0.2).compress(&x),
+                RandK::with_frac(0.15, 5).compress(&x),
+                ShardedCompressor::new(Box::new(ScaledSign::new()), 37, 2).compress(&x),
+                CompressedMsg::Dense(x.clone()),
+                CompressedMsg::Zero { d },
+            ];
+            // a sharded message whose blocks are themselves mixed kinds
+            msgs.push(ShardedCompressor::new(Box::new(TopK::with_frac(0.3)), 29, 3).compress(&x));
+            for msg in &msgs {
+                let mut full = g.vec_f32(d, 1.0);
+                let mut split = full.clone();
+                msg.add_scaled_into(&mut full, 0.61);
+                // unaligned 3-way partition (cuts not on shard edges)
+                let (a, b) = (d / 3 + 1, 2 * d / 3 + 1);
+                msg.add_scaled_range(0, &mut split[..a], 0.61);
+                msg.add_scaled_range(a, &mut split[a..b], 0.61);
+                msg.add_scaled_range(b, &mut split[b..], 0.61);
+                if full.iter().zip(&split).any(|(p, q)| p.to_bits() != q.to_bits()) {
+                    return Err(format!("range apply diverged (d={d})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shard_boundaries_reports_block_cuts() {
+        let m = CompressedMsg::Sharded {
+            d: 7,
+            shards: vec![
+                CompressedMsg::Zero { d: 3 },
+                CompressedMsg::Zero { d: 2 },
+                CompressedMsg::Dense(vec![1.0, 2.0]),
+            ],
+        };
+        assert_eq!(m.shard_boundaries(), vec![3, 5]);
+        assert!(CompressedMsg::Zero { d: 9 }.shard_boundaries().is_empty());
     }
 
     #[test]

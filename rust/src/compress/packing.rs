@@ -45,6 +45,32 @@ pub fn add_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
     }
 }
 
+/// out[k] += scale * (bit_{start+k} ? +1 : -1) — the range-restricted
+/// form of [`add_signs_scaled`] used by the shard-parallel aggregation
+/// engine. Per-element float ops are identical to the full-vector
+/// version (one `+=` of ±scale), so a range-partitioned apply is
+/// bit-for-bit the same as the monolithic one.
+///
+/// Only the (up to 63-element) unaligned head pays per-element word
+/// indexing; the aligned body runs the same 64-per-word chunked loop as
+/// [`add_signs_scaled`], so the parallel fold is not slower per element
+/// than the sequential kernel it replaces.
+pub fn add_signs_scaled_range(bits: &[u64], scale: f32, start: usize, out: &mut [f32]) {
+    debug_assert!(bits.len() * 64 >= start + out.len());
+    let head = ((64 - start % 64) % 64).min(out.len());
+    let (head_out, body_out) = out.split_at_mut(head);
+    for (k, o) in head_out.iter_mut().enumerate() {
+        let i = start + k;
+        *o += if bits[i / 64] >> (i % 64) & 1 == 1 { scale } else { -scale };
+    }
+    // start + head is 64-aligned (or body is empty): whole-word loop
+    for (chunk, &word) in body_out.chunks_mut(64).zip(&bits[(start + head) / 64..]) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o += if word >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
 /// Serialize packed words to little-endian bytes (wire encoding).
 pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
     let nbytes = d.div_ceil(8);
@@ -103,6 +129,27 @@ mod tests {
             unpack_signs_scaled(&back, 1.0, &mut out2);
             if out != out2 {
                 return Err("byte roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_range_add_matches_full_add() {
+        check("sign range add == full add", Config::default(), |g| {
+            let d = g.size(300);
+            let x = g.vec_f32(d, 2.0);
+            let bits = pack_signs(&x);
+            let mut full = g.vec_f32(d, 1.0);
+            let mut split = full.clone();
+            add_signs_scaled(&bits, 0.37, &mut full);
+            // apply the same bits in three unaligned ranges
+            let (a, b) = (d / 3, 2 * d / 3);
+            add_signs_scaled_range(&bits, 0.37, 0, &mut split[..a]);
+            add_signs_scaled_range(&bits, 0.37, a, &mut split[a..b]);
+            add_signs_scaled_range(&bits, 0.37, b, &mut split[b..]);
+            if full != split {
+                return Err("range apply diverged from full apply".into());
             }
             Ok(())
         });

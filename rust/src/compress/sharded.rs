@@ -1,6 +1,6 @@
 //! Block-sharded parallel compression: split a d-dimensional vector into
 //! fixed-size contiguous blocks and compress the blocks concurrently on
-//! scoped `std::thread` workers.
+//! the resident [`crate::util::workpool::WorkPool`].
 //!
 //! This is how real deployments of compressed adaptive methods structure
 //! the hot path (blockwise scaling in Efficient-Adam, arXiv:2205.14473;
@@ -20,6 +20,7 @@
 //! is simply never constructed).
 
 use super::{CompressedMsg, Compressor};
+use crate::util::workpool::WorkPool;
 
 /// Wraps any compressor into its block-sharded, thread-parallel variant.
 #[derive(Clone)]
@@ -34,10 +35,10 @@ pub struct ShardedCompressor {
 }
 
 impl ShardedCompressor {
-    /// Below this dimension the scoped-thread spawn cost (~tens of µs per
-    /// worker) exceeds the compression work itself, so `compress` stays
-    /// serial — a scheduling decision only, never a math one (the message
-    /// is identical either way; pinned by `parallel_equals_serial_bit_for_bit`).
+    /// Below this dimension waking the pool exceeds the compression work
+    /// itself, so `compress` stays serial — a scheduling decision only,
+    /// never a math one (the message is identical either way; pinned by
+    /// `parallel_equals_serial_bit_for_bit`).
     pub const MIN_PARALLEL_DIM: usize = 1 << 16;
 
     /// `shard_size` must be ≥ 1 (a `shard_size` of 0 means "unsharded"
@@ -86,27 +87,30 @@ impl Compressor for ShardedCompressor {
                 *out = comp.compress(chunk);
             }
         } else {
-            // Contiguous static partition: shard i goes to thread i/per.
-            // Each scoped worker owns disjoint &mut slices of the
-            // compressor pool and the result buffer, so no locks and no
-            // result reordering — shards land at their block offsets.
+            // Contiguous static partition: shard i goes to job i/per.
+            // Each job owns disjoint &mut slices of the compressor pool
+            // and the result buffer, so no locks and no result
+            // reordering — shards land at their block offsets. Jobs run
+            // on the resident process-wide pool (shared with the
+            // server-side aggregation engine), so no per-call spawns.
             let per = num_shards.div_ceil(threads);
-            std::thread::scope(|s| {
-                for ((comps_t, outs_t), chunks_t) in self
-                    .shard_comps
-                    .chunks_mut(per)
-                    .zip(shards.chunks_mut(per))
-                    .zip(chunks.chunks(per))
-                {
-                    s.spawn(move || {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                .shard_comps
+                .chunks_mut(per)
+                .zip(shards.chunks_mut(per))
+                .zip(chunks.chunks(per))
+                .map(|((comps_t, outs_t), chunks_t)| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                         for ((comp, out), chunk) in
                             comps_t.iter_mut().zip(outs_t.iter_mut()).zip(chunks_t)
                         {
                             *out = comp.compress(chunk);
                         }
                     });
-                }
-            });
+                    f
+                })
+                .collect();
+            WorkPool::global().run_scoped(jobs);
         }
         CompressedMsg::Sharded { d, shards }
     }

@@ -50,6 +50,15 @@ pub struct ExperimentConfig {
     /// Scoped worker threads used to compress shards concurrently
     /// (only meaningful when `shard_size > 0`; clamped to ≥ 1).
     pub compress_threads: usize,
+    /// Range jobs for the server-side decode/aggregate engine
+    /// ([`crate::agg::AggEngine`]); 0 = the sequential fold, bit-for-bit
+    /// identical to any thread count (scheduling knob, never math).
+    pub server_threads: usize,
+    /// Parallel cutover dimension for the aggregation engine (0 = the
+    /// engine's built-in `MIN_PARALLEL_DIM`). Not exposed on the CLI —
+    /// it exists so system tests can force the pool path at tiny d,
+    /// where the cutover would otherwise keep the fold sequential.
+    pub server_min_parallel_dim: usize,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -82,6 +91,8 @@ impl Default for ExperimentConfig {
             block_size: 0,
             shard_size: 0,
             compress_threads: 4,
+            server_threads: 0,
+            server_min_parallel_dim: 0,
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -176,6 +187,7 @@ impl ExperimentConfig {
                 cfg.eval_every = 5;
                 cfg.shard_size = 65_536;
                 cfg.compress_threads = 4;
+                cfg.server_threads = 4;
             }
             other => bail!("unknown preset {other:?}"),
         }
@@ -194,6 +206,7 @@ impl ExperimentConfig {
         self.block_size = args.usize("block-size", self.block_size)?;
         self.shard_size = args.usize("shard-size", self.shard_size)?;
         self.compress_threads = args.usize("compress-threads", self.compress_threads)?;
+        self.server_threads = args.usize("server-threads", self.server_threads)?;
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
         if let Some(t) = args.get("tau") {
@@ -243,36 +256,54 @@ impl ExperimentConfig {
             ));
         }
         let (b1, b2, nu) = (self.beta1 as f32, self.beta2 as f32, self.nu as f32);
+        // One decode/aggregate engine per strategy: the server fold and
+        // the worker downlink decoders run range-parallel on the shared
+        // work pool when `server_threads > 0` (0 = today's sequential
+        // path, bit-for-bit — the engine never changes the math).
+        let mut agg = crate::agg::AggEngine::new(self.server_threads);
+        if self.server_min_parallel_dim > 0 {
+            agg = agg.with_min_parallel_dim(self.server_min_parallel_dim);
+        }
         Ok(match self.strategy.as_str() {
             "cdadam" => Box::new(
                 CdAdam::new(comp)
                     .with_betas(b1, b2, nu)
-                    .with_weight_decay(self.weight_decay as f32),
+                    .with_weight_decay(self.weight_decay as f32)
+                    .with_agg(agg),
             ),
             "uncompressed" | "uncompressed_amsgrad" => Box::new(
-                Uncompressed::amsgrad().with_weight_decay(self.weight_decay as f32),
+                Uncompressed::amsgrad()
+                    .with_weight_decay(self.weight_decay as f32)
+                    .with_agg(agg),
             ),
             "uncompressed_sgd" => Box::new(
                 Uncompressed::sgd(self.momentum as f32)
-                    .with_weight_decay(self.weight_decay as f32),
+                    .with_weight_decay(self.weight_decay as f32)
+                    .with_agg(agg),
             ),
-            "naive" => Box::new(Naive::new(comp)),
-            "ef" => Box::new(ErrorFeedback::new(comp)),
+            "naive" => Box::new(Naive::new(comp).with_agg(agg)),
+            "ef" => Box::new(ErrorFeedback::new(comp).with_agg(agg)),
             "ef21" => Box::new(
                 Ef21::new(comp)
                     .with_momentum(self.momentum as f32)
-                    .with_weight_decay(self.weight_decay as f32),
+                    .with_weight_decay(self.weight_decay as f32)
+                    .with_agg(agg),
             ),
-            "onebit_adam" => Box::new(OneBitAdam::new(comp, self.effective_warmup())),
+            "onebit_adam" => {
+                Box::new(OneBitAdam::new(comp, self.effective_warmup()).with_agg(agg))
+            }
             // ablation: the server-side-update design §5 rejects
-            "cdadam_server" => Box::new(CdAdamServerSide::new(
-                comp,
-                crate::optim::LrSchedule::multi_step(
-                    self.lr as f32,
-                    &self.lr_milestones,
-                    self.lr_gamma as f32,
-                ),
-            )),
+            "cdadam_server" => Box::new(
+                CdAdamServerSide::new(
+                    comp,
+                    crate::optim::LrSchedule::multi_step(
+                        self.lr as f32,
+                        &self.lr_milestones,
+                        self.lr_gamma as f32,
+                    ),
+                )
+                .with_agg(agg),
+            ),
             other => bail!("unknown strategy {other:?}"),
         })
     }
@@ -343,14 +374,24 @@ mod tests {
     fn shard_args_override() {
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
         let args = Args::parse(
-            ["--shard-size", "4096", "--compress-threads", "8", "--block-size", "512"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--shard-size",
+                "4096",
+                "--compress-threads",
+                "8",
+                "--block-size",
+                "512",
+                "--server-threads",
+                "6",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.shard_size, 4096);
         assert_eq!(cfg.compress_threads, 8);
         assert_eq!(cfg.block_size, 512);
+        assert_eq!(cfg.server_threads, 6);
     }
 
     #[test]
@@ -376,6 +417,7 @@ mod tests {
         let cfg = ExperimentConfig::preset("large_d_sharded").unwrap();
         assert!(cfg.shard_size > 0);
         assert!(cfg.compress_threads >= 4);
+        assert!(cfg.server_threads >= 4, "large-d preset should exercise the agg engine");
         assert_eq!(cfg.task, Task::LogReg { dataset: "large_1m".into(), lambda: 0.1 });
     }
 

@@ -8,11 +8,12 @@
 //! replica-consistency invariant that makes worker-side updates sound.
 
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use super::{params_hash, setup};
-use crate::comm::{topology, WireMsg};
+use crate::comm::{topology, Broadcast, WireMsg};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -68,9 +69,12 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                 debug_assert_eq!(msg.round, t as u64);
                 ups.push(msg.payload);
             }
-            let down = server.round(t, &ups);
-            for (i, link) in links.iter_mut().enumerate() {
-                let _ = link.down.send(WireMsg { round: t as u64, from: i as u32, payload: down.clone() });
+            // one Arc'd broadcast fanned out to every link — n refcount
+            // bumps instead of n deep clones of the downlink message
+            // (each link still meters the full serialized size).
+            let down = Arc::new(server.round(t, &ups));
+            for link in links.iter_mut() {
+                let _ = link.down.send(Broadcast { round: t as u64, payload: down.clone() });
             }
         }
     })?;
@@ -97,7 +101,7 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                     let down = link.down.recv()?;
                     debug_assert_eq!(down.round, t as u64);
                     cum_bits += down.payload.wire_bits();
-                    worker.apply_downlink(t, &down.payload, &mut params, sched.at(t - 1));
+                    worker.apply_downlink(t, down.payload.as_ref(), &mut params, sched.at(t - 1));
                     if t % eval_every == 0 || t == rounds {
                         tx.send(EvalReport {
                             round: t,
@@ -205,6 +209,59 @@ mod tests {
             assert_eq!(x.round, y.round);
             assert_eq!(x.grad_norm, y.grad_norm, "round {}", x.round);
             assert_eq!(x.cum_bits, y.cum_bits, "round {}", x.round);
+        }
+    }
+
+    #[test]
+    fn matches_lockstep_exactly_with_parallel_server() {
+        // acceptance criterion: server_threads > 1 must leave
+        // trajectories, replica hashes (enforced inside the driver), and
+        // cum_bits untouched — threaded vs lockstep AND parallel vs
+        // sequential aggregation.
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 60;
+        cfg.eval_every = 20;
+        cfg.shard_size = 16; // sharded uplinks (d = 50 ⇒ 4 blocks)
+        cfg.compress_threads = 2;
+        let seq = run_lockstep(&cfg).unwrap();
+        cfg.server_threads = 3;
+        // force the engine past its parallel cutover so the pool path
+        // really runs at this tiny d — range jobs snap to shard edges
+        // and genuinely fold sharded uplinks in parallel.
+        cfg.server_min_parallel_dim = 1;
+        let par_lockstep = run_lockstep(&cfg).unwrap();
+        let par_threaded = run_threaded(&cfg).unwrap();
+        assert_eq!(seq.records.len(), par_threaded.records.len());
+        for ((a, b), c) in seq.records.iter().zip(&par_lockstep.records).zip(&par_threaded.records) {
+            assert_eq!(a.round, c.round);
+            assert_eq!(a.grad_norm, b.grad_norm, "parallel server changed the math at {}", a.round);
+            assert_eq!(a.grad_norm, c.grad_norm, "round {}", a.round);
+            assert_eq!(a.cum_bits, b.cum_bits, "round {}", a.round);
+            assert_eq!(a.cum_bits, c.cum_bits, "round {}", a.round);
+        }
+    }
+
+    #[test]
+    fn parallel_server_identical_across_strategies() {
+        // server_threads is a scheduling knob for every strategy server:
+        // sequential and 7-way runs must produce identical records.
+        // cdadam_server matters most — its round() was hand-refactored
+        // (engine fold + no-clone borrow), not mechanically translated.
+        for strat in
+            ["cdadam", "ef", "naive", "onebit_adam", "ef21", "uncompressed_amsgrad", "cdadam_server"]
+        {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.strategy = strat.into();
+            cfg.rounds = 30;
+            cfg.eval_every = 10;
+            let seq = run_threaded(&cfg).unwrap_or_else(|e| panic!("{strat}: {e}"));
+            cfg.server_threads = 7;
+            cfg.server_min_parallel_dim = 1; // force the pool path at d = 50
+            let par = run_threaded(&cfg).unwrap_or_else(|e| panic!("{strat}: {e}"));
+            for (a, b) in seq.records.iter().zip(&par.records) {
+                assert_eq!(a.grad_norm, b.grad_norm, "{strat} round {}", a.round);
+                assert_eq!(a.cum_bits, b.cum_bits, "{strat} round {}", a.round);
+            }
         }
     }
 

@@ -39,6 +39,7 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a bench target.
 
+pub mod agg;
 pub mod algo;
 pub mod analysis;
 pub mod comm;

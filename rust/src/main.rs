@@ -44,6 +44,8 @@ fn usage() -> ! {
            --block-size <int>    topk_block block size (0 = default 4096)\n\
            --shard-size <int>    block-sharded compression block size (0 = off)\n\
            --compress-threads <int>  threads for parallel shard compression\n\
+           --server-threads <int>  range jobs for the server decode/aggregate\n\
+                                 engine (0 = sequential, bit-identical)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\

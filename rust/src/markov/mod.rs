@@ -24,6 +24,7 @@
 //! they decode, and the state-agreement invariant is untouched (tested
 //! below).
 
+use crate::agg::AggEngine;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::tensor;
 
@@ -67,18 +68,30 @@ impl MarkovEncoder {
 }
 
 /// Receiver side: replays ŵ_t from the stream of messages.
+///
+/// `apply` folds through an [`AggEngine`], so a large sharded downlink
+/// decodes range-parallel on the resident work pool; the default
+/// sequential engine is bit-for-bit the historical walk (the engine is
+/// a scheduling knob, never a math knob).
 pub struct MarkovDecoder {
     ghat: Vec<f32>,
+    agg: AggEngine,
 }
 
 impl MarkovDecoder {
     pub fn new(dim: usize) -> Self {
-        MarkovDecoder { ghat: vec![0.0; dim] }
+        Self::with_engine(dim, AggEngine::sequential())
+    }
+
+    /// Decoder whose applies run on `agg` (shard-parallel when the
+    /// engine has threads and the message is large).
+    pub fn with_engine(dim: usize, agg: AggEngine) -> Self {
+        MarkovDecoder { ghat: vec![0.0; dim], agg }
     }
 
     /// Apply one message; returns the updated replica ŵ_t.
     pub fn apply(&mut self, c: &CompressedMsg) -> &[f32] {
-        c.add_into(&mut self.ghat);
+        self.agg.apply_one(c, &mut self.ghat);
         &self.ghat
     }
 
@@ -190,6 +203,33 @@ mod tests {
             let b = blockwise.step(&w);
             assert_eq!(a.to_dense(), b.to_dense());
             assert_eq!(sharded.state(), blockwise.state());
+        }
+    }
+
+    #[test]
+    fn parallel_decoder_replays_identical_state() {
+        // decode-side parallelism: a decoder driven by a threaded
+        // AggEngine must replay bit-identical ŵ state on sharded
+        // downlinks above the parallel threshold.
+        use crate::agg::AggEngine;
+        use crate::compress::ShardedCompressor;
+        let d = AggEngine::MIN_PARALLEL_DIM + 1000;
+        let mk = || Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 16_384, 2));
+        let mut enc = MarkovEncoder::new(d, mk());
+        let mut seq = MarkovDecoder::new(d);
+        let mut par = MarkovDecoder::with_engine(d, AggEngine::new(7));
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..3 {
+            let mut w = vec![0.0f32; d];
+            rng.fill_normal(&mut w, 1.0);
+            let c = enc.step(&w);
+            seq.apply(&c);
+            par.apply(&c);
+            assert!(
+                seq.state().iter().zip(par.state()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "parallel decoder diverged from sequential"
+            );
+            assert_eq!(enc.state(), seq.state());
         }
     }
 

@@ -9,7 +9,9 @@ pub mod args;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod scratch;
 pub mod timer;
+pub mod workpool;
 
 /// Round `x` to `digits` significant decimal digits (for log output).
 pub fn sig(x: f64, digits: i32) -> f64 {

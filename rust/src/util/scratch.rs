@@ -1,0 +1,161 @@
+//! Reusable scratch-buffer pool for round-loop temporaries.
+//!
+//! Strategy servers need a dense d-vector for one statement per round
+//! (the decoded average in EF / 1-bit Adam / naive). Allocating it fresh
+//! every round costs a d-sized `vec![]` + page faults on the hottest
+//! loop in the system; the pool hands back recycled buffers instead, so
+//! the steady-state round loop performs no heap allocation. Buffers
+//! come back correctly sized but with **unspecified contents** (no
+//! zeroing pass — every caller fully overwrites), and return to the
+//! pool on drop.
+
+use std::sync::Mutex;
+
+/// A bounded pool of reusable `Vec<f32>` buffers.
+pub struct ScratchPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+}
+
+/// How many idle buffers the pool keeps before letting extras drop.
+/// Retention is bounded by *peak concurrent takes* (put only recycles
+/// what take handed out), so after a run the pool holds at most as many
+/// buffers as servers were simultaneously mid-round — typically one or
+/// two — never 32 × the largest d.
+const MAX_POOLED: usize = 32;
+
+impl ScratchPool {
+    pub const fn new() -> Self {
+        ScratchPool { bufs: Mutex::new(Vec::new()) }
+    }
+
+    /// Process-wide pool (all strategies share one free list).
+    pub fn global() -> &'static ScratchPool {
+        static POOL: ScratchPool = ScratchPool::new();
+        &POOL
+    }
+
+    /// Take a buffer of length `dim` with **unspecified contents** (a
+    /// recycled buffer keeps its stale values — no zeroing pass, since
+    /// every caller fully overwrites, e.g. via `AggEngine::average_into`
+    /// which starts with `fill(0.0)`). Returns to the pool on drop.
+    pub fn take(&'static self, dim: usize) -> Scratch {
+        let mut buf = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        if buf.len() > dim {
+            buf.truncate(dim);
+        } else {
+            buf.resize(dim, 0.0);
+        }
+        Scratch { buf, pool: self }
+    }
+
+    fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return; // detached via into_vec — nothing to recycle
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < MAX_POOLED {
+            bufs.push(buf);
+        }
+    }
+
+    #[cfg(test)]
+    fn idle(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII guard: derefs to the borrowed buffer, recycles it on drop.
+pub struct Scratch {
+    buf: Vec<f32>,
+    pool: &'static ScratchPool,
+}
+
+impl Scratch {
+    /// Detach the buffer instead of recycling it — for the path that
+    /// must *keep* the vector (e.g. moving it into an owned
+    /// `CompressedMsg::Dense`). One allocation, zero copies: the same
+    /// profile as building the vector fresh, without losing pooling on
+    /// the paths that do recycle.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        self.pool.put(std::mem::take(&mut self.buf));
+    }
+}
+
+impl std::ops::Deref for Scratch {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tests share the global pool with the rest of the suite, so assert
+    // on deltas/contents, not absolute pool sizes.
+
+    #[test]
+    fn buffers_are_sized_and_writable() {
+        let pool = ScratchPool::global();
+        let mut a = pool.take(100);
+        assert_eq!(a.len(), 100);
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        assert_eq!(a[99], 99.0);
+        drop(a);
+        // contents of a recycled buffer are unspecified by contract —
+        // only the length is guaranteed.
+        let b = pool.take(64);
+        assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn recycles_capacity() {
+        static POOL: ScratchPool = ScratchPool::new();
+        let a = POOL.take(1000);
+        let cap_marker = a.as_ptr();
+        drop(a);
+        assert_eq!(POOL.idle(), 1);
+        let b = POOL.take(500);
+        // same allocation reused (capacity 1000 covers 500, no realloc)
+        assert_eq!(b.as_ptr(), cap_marker);
+        assert_eq!(b.len(), 500);
+    }
+
+    #[test]
+    fn into_vec_detaches_without_recycling() {
+        static POOL: ScratchPool = ScratchPool::new();
+        let a = POOL.take(10);
+        let v = a.into_vec();
+        assert_eq!(v.len(), 10);
+        assert_eq!(POOL.idle(), 0, "detached buffer must not return to the pool");
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        static POOL: ScratchPool = ScratchPool::new();
+        let guards: Vec<_> = (0..MAX_POOLED + 10).map(|_| POOL.take(8)).collect();
+        drop(guards);
+        assert!(POOL.idle() <= MAX_POOLED);
+    }
+}

@@ -1,0 +1,295 @@
+//! Persistent work pool: long-lived worker threads + a job queue, shared
+//! by every parallel hot path (shard compression in
+//! [`crate::compress::ShardedCompressor`], shard-parallel aggregation in
+//! [`crate::agg::AggEngine`]).
+//!
+//! `std::thread::scope` spawns and joins OS threads on every call —
+//! tens of microseconds per worker per round, paid once for the encode
+//! side *and* once for the aggregate side of every round. The pool pays
+//! the spawn cost once per process: [`WorkPool::run_scoped`] hands a
+//! batch of borrowed jobs to the resident workers and blocks until the
+//! whole batch has executed, which is what makes lending stack
+//! references to long-lived threads sound (the borrow cannot outlive the
+//! call; same contract as `std::thread::scope`, without the per-call
+//! spawn/join).
+//!
+//! Scheduling is deliberately dumb — one stack of boxed jobs under a
+//! mutex, workers woken by condvar (batch order is irrelevant: jobs
+//! within a batch are independent by construction). While a batch is
+//! pending its caller helps drain the queue, so a job that itself calls
+//! [`WorkPool::run_scoped`] (nested batches) cannot deadlock the pool. Jobs on these paths are coarse
+//! (a contiguous run of shards / a contiguous coordinate range), so
+//! queue contention is a handful of lock acquisitions per round, far
+//! below the work they fence off. Panics in a job are caught on the
+//! worker, and the batch's waiter re-panics on the calling thread, so a
+//! failing compressor still fails the round loudly instead of poisoning
+//! a resident thread.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct Queue {
+    jobs: Mutex<Vec<Job>>,
+    ready: Condvar,
+}
+
+/// Tracks one `run_scoped` batch: jobs remaining + first panic payload.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// A fixed set of resident worker threads executing queued jobs.
+pub struct WorkPool {
+    queue: &'static Queue,
+    threads: usize,
+}
+
+impl WorkPool {
+    /// Spawn `threads` resident workers (clamped to ≥ 1). The queue and
+    /// workers are leaked deliberately: pools live for the whole process
+    /// (the global pool) and a leaked idle thread parked on a condvar
+    /// costs nothing, which keeps job types free of lifetime plumbing.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let queue: &'static Queue =
+            Box::leak(Box::new(Queue { jobs: Mutex::new(Vec::new()), ready: Condvar::new() }));
+        for i in 0..threads {
+            std::thread::Builder::new()
+                .name(format!("workpool-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let mut jobs = queue.jobs.lock().unwrap();
+                        loop {
+                            if let Some(j) = jobs.pop() {
+                                break j;
+                            }
+                            jobs = queue.ready.wait(jobs).unwrap();
+                        }
+                    };
+                    job();
+                })
+                .expect("spawn workpool thread");
+        }
+        WorkPool { queue, threads }
+    }
+
+    /// The process-wide pool, sized to the machine (lazily created).
+    /// Encode (shard compression) and aggregate (server fold) both
+    /// schedule onto this one pool, so neither path re-pays thread
+    /// creation and the two cannot oversubscribe the machine against
+    /// each other.
+    pub fn global() -> &'static WorkPool {
+        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            WorkPool::new(n)
+        })
+    }
+
+    /// Number of resident worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute a batch of borrowed jobs on the pool and block until every
+    /// job has finished. Jobs may borrow from the caller's stack (the
+    /// `'scope` lifetime): the lifetime is erased to hand the job to the
+    /// resident threads, which is sound because this function does not
+    /// return until the batch count reaches zero — identical to the
+    /// guarantee `std::thread::scope` provides via join.
+    ///
+    /// If any job panics, the panic is re-raised here (first one wins).
+    /// A single-job batch runs inline on the caller.
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.len() <= 1 {
+            for j in jobs {
+                j();
+            }
+            return;
+        }
+        // The batch latch is Arc-shared with the workers so the mutex +
+        // condvar stay alive for as long as any worker touches them,
+        // whatever order caller and workers finish in.
+        let batch = Arc::new(Batch {
+            state: Mutex::new(BatchState { remaining: jobs.len(), panic: None }),
+            done: Condvar::new(),
+        });
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            for job in jobs {
+                // SAFETY: the job (and its borrows of 'scope data) only
+                // runs before the worker decrements `remaining`, and we
+                // block below until remaining == 0 — so the erased
+                // 'scope borrows never outlive this stack frame (the
+                // same guarantee `std::thread::scope` gives via join).
+                let job: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(job) };
+                let b = Arc::clone(&batch);
+                q.push(Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(job));
+                    let mut st = b.state.lock().unwrap();
+                    if let Err(p) = result {
+                        st.panic.get_or_insert(p);
+                    }
+                    st.remaining -= 1;
+                    if st.remaining == 0 {
+                        b.done.notify_all();
+                    }
+                }));
+            }
+            self.queue.ready.notify_all();
+        }
+        // Wait for the batch, *helping drain the queue* while it is
+        // pending. The caller executing queued jobs (its own or other
+        // batches' — all jobs are independent by construction, and the
+        // queued wrapper never unwinds into us) keeps nested
+        // `run_scoped` calls deadlock-free even on a single-worker
+        // pool: a pool job that schedules its own batch drains it right
+        // here instead of parking forever on workers that are all busy.
+        loop {
+            loop {
+                let job = self.queue.jobs.lock().unwrap().pop();
+                match job {
+                    Some(j) => j(),
+                    None => break,
+                }
+            }
+            let mut st = batch.state.lock().unwrap();
+            if st.remaining == 0 {
+                if let Some(p) = st.panic.take() {
+                    drop(st);
+                    resume_unwind(p);
+                }
+                return;
+            }
+            // short timed wait: a still-running job may push new work
+            // onto the queue, which `done` alone would never signal.
+            let (guard, _timeout) = batch
+                .done
+                .wait_timeout(st, std::time::Duration::from_millis(1))
+                .unwrap();
+            drop(guard);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_on_disjoint_slices() {
+        let pool = WorkPool::new(3);
+        let mut data = vec![0u64; 1000];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(137)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 1000 + j) as u64;
+                    }
+                });
+                f
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (i, chunk) in data.chunks(137).enumerate() {
+            for (j, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, (i * 1000 + j) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_many_batches() {
+        let pool = WorkPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                    f
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..3)
+                .map(|i| {
+                    let f: Box<dyn FnOnce() + Send> = Box::new(move || {
+                        if i == 1 {
+                            panic!("job boom");
+                        }
+                    });
+                    f
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }));
+        assert!(caught.is_err(), "panic was swallowed");
+        // the pool must still execute later batches
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                });
+                f
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn nested_batches_do_not_deadlock_on_tiny_pool() {
+        // a pool job scheduling its own batch must complete even when
+        // every resident worker is busy: waiters help drain the queue.
+        let pool = WorkPool::new(1);
+        let total = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                        .map(|_| {
+                            let g: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                            g
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                });
+                f
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = WorkPool::global() as *const _;
+        let b = WorkPool::global() as *const _;
+        assert_eq!(a, b);
+        assert!(WorkPool::global().threads() >= 1);
+    }
+}
