@@ -16,6 +16,7 @@
 //! ```
 
 use cdadam::agg::AggEngine;
+use cdadam::comm::wire::{self, FrameView, PayloadView};
 use cdadam::compress::{CompressedMsg, Compressor, ScaledSign, ShardedCompressor, TopK};
 use cdadam::config::ExperimentConfig;
 use cdadam::util::args::Args;
@@ -98,6 +99,59 @@ fn main() {
         }
     }
 
+    // --- ingest comparison: owned decode vs zero-copy views ------------
+    // What the server actually pays per round when uplinks arrive as
+    // bytes: the owned path materializes every frame into a
+    // CompressedMsg (heap Vecs for indices/values/sign words) before
+    // folding; the zero-copy path validates each frame once and folds
+    // borrowed views straight from the wire bytes.
+    for &n in &ns {
+        println!(
+            "\n--- ingest from wire bytes: n = {n} uplinks (sign, t = {max_threads}) ---\n{:<36} {:>12}  {:>17}  {:>7}",
+            "ingest", "per round", "throughput", "speedup"
+        );
+        let msgs = make_uplinks(
+            || -> Box<dyn Compressor> { Box::new(ScaledSign::new()) },
+            d,
+            shard,
+            preset.compress_threads,
+            n,
+        );
+        let frames: Vec<Vec<u8>> = msgs
+            .iter()
+            .enumerate()
+            .map(|(i, m)| wire::encode_parts(1, i as u32, m).expect("encode"))
+            .collect();
+        let engine = AggEngine::new(max_threads);
+        let mut out = vec![0.0f32; d];
+        let base = row("owned: decode → fold", d * n, iters, None, || {
+            let owned: Vec<CompressedMsg> =
+                frames.iter().map(|b| wire::decode(b).expect("decode").payload).collect();
+            engine.average_into(&owned, &mut out);
+            std::hint::black_box(&out);
+        });
+        row("zero-copy: parse views → fold", d * n, iters, Some(base), || {
+            let views: Vec<PayloadView> =
+                frames.iter().map(|b| FrameView::parse(b).expect("parse").payload).collect();
+            engine.average_views_into(&views, &mut out);
+            std::hint::black_box(&out);
+        });
+        // bit-equality assertion: both ingest modes produce the same
+        // aggregate, to the bit, at full thread count
+        let owned: Vec<CompressedMsg> =
+            frames.iter().map(|b| wire::decode(b).expect("decode").payload).collect();
+        let views: Vec<PayloadView> =
+            frames.iter().map(|b| FrameView::parse(b).expect("parse").payload).collect();
+        let mut via_owned = vec![0.0f32; d];
+        let mut via_views = vec![0.0f32; d];
+        engine.average_into(&owned, &mut via_owned);
+        engine.average_views_into(&views, &mut via_views);
+        assert!(
+            via_owned.iter().zip(&via_views).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "zero-copy ingest diverged from owned ingest"
+        );
+    }
+
     // sanity: the parallel fold really is the sequential fold, to the bit
     let msgs =
         make_uplinks(|| -> Box<dyn Compressor> { Box::new(ScaledSign::new()) }, d, shard, 2, 4);
@@ -110,4 +164,5 @@ fn main() {
         "parallel aggregate diverged from sequential fold"
     );
     println!("\nsanity: parallel == sequential fold, bit-for-bit ✓");
+    println!("sanity: zero-copy view ingest == owned ingest, bit-for-bit ✓");
 }

@@ -28,8 +28,82 @@
 //! all registered compressors and re-proven end-to-end by the
 //! coordinator tests.
 
+use crate::comm::wire::PayloadView;
 use crate::compress::CompressedMsg;
 use crate::util::workpool::WorkPool;
+
+/// Anything the engine can fold into a dense output: owned decoded
+/// messages, or borrowed zero-copy wire views
+/// ([`crate::comm::wire::PayloadView`]). Both implementations share the
+/// bit-identity invariant — range-partitioned applies equal the
+/// monolithic apply to the bit — so the engine's transposed fold is
+/// written once and is oblivious to which side feeds it.
+pub trait FoldSource: Sync {
+    fn dim(&self) -> usize;
+    fn add_scaled_into(&self, out: &mut [f32], s: f32);
+    fn add_scaled_range(&self, start: usize, out: &mut [f32], s: f32);
+    fn shard_boundaries(&self) -> Vec<usize>;
+}
+
+impl FoldSource for CompressedMsg {
+    fn dim(&self) -> usize {
+        CompressedMsg::dim(self)
+    }
+
+    fn add_scaled_into(&self, out: &mut [f32], s: f32) {
+        CompressedMsg::add_scaled_into(self, out, s)
+    }
+
+    fn add_scaled_range(&self, start: usize, out: &mut [f32], s: f32) {
+        CompressedMsg::add_scaled_range(self, start, out, s)
+    }
+
+    fn shard_boundaries(&self) -> Vec<usize> {
+        CompressedMsg::shard_boundaries(self)
+    }
+}
+
+impl FoldSource for PayloadView<'_> {
+    fn dim(&self) -> usize {
+        PayloadView::dim(self)
+    }
+
+    fn add_scaled_into(&self, out: &mut [f32], s: f32) {
+        PayloadView::add_scaled_into(self, out, s)
+    }
+
+    fn add_scaled_range(&self, start: usize, out: &mut [f32], s: f32) {
+        PayloadView::add_scaled_range(self, start, out, s)
+    }
+
+    fn shard_boundaries(&self) -> Vec<usize> {
+        PayloadView::shard_boundaries(self)
+    }
+}
+
+/// One round's worth of uplinks, in whichever form the recv path
+/// produced them: owned messages (historical path) or borrowed views
+/// over the received byte frames (zero-copy ingest). Strategy servers
+/// take this in [`crate::algo::ServerAlgo::round_ingest`] so the hot
+/// loop never has to materialize `CompressedMsg`s to reuse the same
+/// server code.
+pub enum Ingest<'a> {
+    Owned(&'a [CompressedMsg]),
+    Views(&'a [PayloadView<'a>]),
+}
+
+impl Ingest<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            Ingest::Owned(m) => m.len(),
+            Ingest::Views(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Parallel (or sequential) aggregator over compressed uplinks.
 ///
@@ -72,13 +146,52 @@ impl AggEngine {
         self.threads
     }
 
+    /// The single parallel-cutover gate shared by **every** entry point
+    /// (`add_scaled_into`, `add_scaled_views_into`, `apply_one`, and
+    /// the averaging wrappers): the pool path runs iff the engine has
+    /// more than one thread, there is at least one message, and the
+    /// output dimension reaches `min_parallel_dim`. `apply_one` used to
+    /// reach the gate only through its delegation chain, leaving the
+    /// threshold logic implicit and easy to fork accidentally; now the
+    /// decision has exactly one implementation, pinned by a boundary
+    /// test at `d = min_parallel_dim ± 1`.
+    pub fn uses_parallel_fold(&self, d: usize, n_msgs: usize) -> bool {
+        self.threads > 1 && n_msgs > 0 && d >= self.min_parallel_dim
+    }
+
     /// out += scale · Σ_i decode(msgs[i]) — the transposed parallel fold.
     pub fn add_scaled_into(&self, msgs: &[CompressedMsg], out: &mut [f32], scale: f32) {
+        self.add_scaled_sources_into(msgs, out, scale);
+    }
+
+    /// out += scale · Σ_i decode(views[i]) — the same transposed fold
+    /// reading **straight from the wire bytes**: range jobs consume
+    /// sign bitmaps via the byte-chunked kernel and binary-search
+    /// sparse windows in place, bit-identical to
+    /// [`Self::add_scaled_into`] over the owned decodes of the same
+    /// frames at any thread count.
+    pub fn add_scaled_views_into(&self, views: &[PayloadView<'_>], out: &mut [f32], scale: f32) {
+        self.add_scaled_sources_into(views, out, scale);
+    }
+
+    /// Fold either form of one round's uplinks (the strategy servers'
+    /// entry point).
+    pub fn add_scaled_ingest_into(&self, ups: &Ingest<'_>, out: &mut [f32], scale: f32) {
+        match ups {
+            Ingest::Owned(msgs) => self.add_scaled_into(msgs, out, scale),
+            Ingest::Views(views) => self.add_scaled_views_into(views, out, scale),
+        }
+    }
+
+    /// The generic transposed fold both named entry points delegate to
+    /// — public so embedders (and the work-pool stress tests) can fold
+    /// custom [`FoldSource`]s through the same scheduling machinery.
+    pub fn add_scaled_sources_into<S: FoldSource>(&self, msgs: &[S], out: &mut [f32], scale: f32) {
         let d = out.len();
         for m in msgs {
             assert_eq!(m.dim(), d, "uplink dimension mismatch");
         }
-        if self.threads <= 1 || d < self.min_parallel_dim || msgs.is_empty() {
+        if !self.uses_parallel_fold(d, msgs.len()) {
             for c in msgs {
                 c.add_scaled_into(out, scale);
             }
@@ -113,10 +226,33 @@ impl AggEngine {
         self.add_scaled_into(msgs, out, 1.0 / msgs.len() as f32);
     }
 
+    /// out = (1/n) Σ_i decode(views[i]) — the zero-copy averaging fold.
+    pub fn average_views_into(&self, views: &[PayloadView<'_>], out: &mut [f32]) {
+        out.fill(0.0);
+        if views.is_empty() {
+            return;
+        }
+        self.add_scaled_views_into(views, out, 1.0 / views.len() as f32);
+    }
+
+    /// Averaging fold over either form of one round's uplinks.
+    pub fn average_ingest_into(&self, ups: &Ingest<'_>, out: &mut [f32]) {
+        match ups {
+            Ingest::Owned(msgs) => self.average_into(msgs, out),
+            Ingest::Views(views) => self.average_views_into(views, out),
+        }
+    }
+
     /// out += decode(msg) — single-message apply (the Markov decoder
-    /// path), range-parallel for large sharded downlinks.
+    /// path), range-parallel for large sharded downlinks. Same
+    /// [`Self::uses_parallel_fold`] gate as the multi-message folds.
     pub fn apply_one(&self, msg: &CompressedMsg, out: &mut [f32]) {
         self.add_scaled_into(std::slice::from_ref(msg), out, 1.0);
+    }
+
+    /// out += decode(view) — the zero-copy single-message apply.
+    pub fn apply_one_view(&self, view: &PayloadView<'_>, out: &mut [f32]) {
+        self.add_scaled_views_into(std::slice::from_ref(view), out, 1.0);
     }
 
     /// Cut `[0, d)` into at most `threads` contiguous ranges. When the
@@ -124,7 +260,7 @@ impl AggEngine {
     /// range job never decodes a partial block of the dominant layout
     /// (correct either way — this is purely a locality/efficiency
     /// choice). Returns boundary offsets, first 0, last d.
-    fn partition(&self, msgs: &[CompressedMsg], d: usize) -> Vec<usize> {
+    fn partition<S: FoldSource>(&self, msgs: &[S], d: usize) -> Vec<usize> {
         // the min_parallel_dim gate already guarantees production-size
         // ranges (≥ min/threads elements each); just clamp to d.
         let want = self.threads.min(d).max(1);
@@ -281,6 +417,108 @@ mod tests {
         let (x_par, t_par) = drive(&par, 40, 4, 120, 0.05);
         assert!(x_seq.iter().zip(&x_par).all(|(a, b)| a.to_bits() == b.to_bits()));
         assert_eq!(t_seq, t_par);
+    }
+
+    #[test]
+    fn parallel_gate_unified_at_boundary_dim() {
+        // the min_parallel_dim gate has exactly one implementation,
+        // shared by apply_one and the multi-message folds; pin its
+        // decision at the boundary dimension and prove the fold stays
+        // bit-identical on both sides of the cutover.
+        let min = 4096;
+        let eng = AggEngine::new(4).with_min_parallel_dim(min);
+        assert!(!eng.uses_parallel_fold(min - 1, 1), "d = min-1 must stay sequential");
+        assert!(eng.uses_parallel_fold(min, 1), "d = min must take the pool path");
+        assert!(eng.uses_parallel_fold(min + 1, 5));
+        assert!(!eng.uses_parallel_fold(min, 0), "no messages, nothing to parallelize");
+        assert!(!AggEngine::new(1).with_min_parallel_dim(min).uses_parallel_fold(min, 5));
+        assert!(!AggEngine::sequential().with_min_parallel_dim(min).uses_parallel_fold(min, 5));
+        for d in [min - 1, min, min + 1] {
+            let msgs = uplinks(|| -> Box<dyn Compressor> { Box::new(ScaledSign::new()) }, d, 3);
+            let want = seq_fold(&msgs, d, 1.0);
+            let mut got = vec![0.0f32; d];
+            eng.add_scaled_into(&msgs, &mut got, 1.0);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fold diverged at boundary d = {d}"
+            );
+            // apply_one goes through the same gate and the same kernels
+            let mut one_seq = vec![0.25f32; d];
+            let mut one_par = one_seq.clone();
+            msgs[0].add_into(&mut one_seq);
+            eng.apply_one(&msgs[0], &mut one_par);
+            assert!(
+                one_seq.iter().zip(&one_par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "apply_one diverged at boundary d = {d}"
+            );
+        }
+    }
+
+    #[test]
+    fn view_fold_bit_identical_to_owned_fold() {
+        // bytes → FrameView → add_scaled_views_into must equal the
+        // owned CompressedMsg fold to the bit, across message families
+        // and thread counts (the acceptance criterion of the zero-copy
+        // ingest path, at the engine layer).
+        use crate::comm::wire::{encode_parts, FrameView};
+        let d = 40_000;
+        let n = 5;
+        let families: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()) as Box<dyn Compressor>)),
+            ("sparse", Box::new(|| Box::new(TopK::with_frac(0.01)) as Box<dyn Compressor>)),
+            (
+                "sharded",
+                Box::new(|| {
+                    Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 4096, 2))
+                        as Box<dyn Compressor>
+                }),
+            ),
+        ];
+        for (name, make) in &families {
+            let msgs = uplinks(make, d, n);
+            let frames: Vec<Vec<u8>> = msgs
+                .iter()
+                .enumerate()
+                .map(|(i, m)| encode_parts(1, i as u32, m).unwrap())
+                .collect();
+            let views: Vec<_> =
+                frames.iter().map(|b| FrameView::parse(b).unwrap().payload).collect();
+            let want = seq_fold(&msgs, d, 1.0 / n as f32);
+            for threads in [0usize, 2, 7] {
+                let engine = AggEngine::new(threads).with_min_parallel_dim(1);
+                let mut got = vec![0.0f32; d];
+                engine.average_views_into(&views, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{name}: view fold t={threads} diverged from owned sequential fold"
+                );
+                // and the Ingest dispatch reaches the same kernels
+                let mut via_ingest = vec![0.0f32; d];
+                engine.average_ingest_into(&Ingest::Views(&views), &mut via_ingest);
+                assert_eq!(got, via_ingest, "{name}: Ingest::Views dispatch diverged");
+            }
+            let mut owned_ingest = vec![0.0f32; d];
+            AggEngine::sequential().average_ingest_into(&Ingest::Owned(&msgs), &mut owned_ingest);
+            assert!(want.iter().zip(&owned_ingest).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn apply_one_view_matches_apply_one() {
+        use crate::comm::wire::{encode_parts, FrameView};
+        let d = 30_000;
+        let mut rng = Rng::new(77);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        let msg = ShardedCompressor::new(Box::new(ScaledSign::new()), 4096, 2).compress(&x);
+        let bytes = encode_parts(3, 0, &msg).unwrap();
+        let view = FrameView::parse(&bytes).unwrap().payload;
+        let engine = AggEngine::new(5).with_min_parallel_dim(1);
+        let mut a = vec![0.5f32; d];
+        let mut b = a.clone();
+        engine.apply_one(&msg, &mut a);
+        engine.apply_one_view(&view, &mut b);
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! (server ĝ == mean of worker ĝ^{(i)}) holds exactly — tested below.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, Optimizer};
@@ -122,9 +122,12 @@ pub struct CdAdamServer {
 }
 
 impl ServerAlgo for CdAdamServer {
-    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
+        // folds straight from whichever form arrived — owned messages
+        // or zero-copy wire views; ĝ (the only cross-round state) is
+        // dense, so nothing needs materializing.
         let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
+        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
         self.enc.step(&self.ghat_agg)
     }
 }

@@ -16,7 +16,7 @@
 //! number (the coordinator gives both sides the same schedule).
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, LrSchedule, Optimizer};
@@ -115,9 +115,9 @@ struct SsServer {
 }
 
 impl ServerAlgo for SsServer {
-    fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
         let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
+        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
         if !self.initialized {
             // adopt the workers' initial params implicitly: server x starts
             // at 0 offset; workers apply deltas, so only Δ consistency

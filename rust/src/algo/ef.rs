@@ -9,7 +9,7 @@
 //! mechanism behind EF's stalling gradient norm in Fig. 2.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 use crate::tensor;
@@ -106,9 +106,12 @@ struct EfServer {
 }
 
 impl ServerAlgo for EfServer {
-    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
+        // the EF memory δ (cross-round state) is dense — the uplinks
+        // fold into a scratch average and are dropped, so views work
+        // without materialization.
         let mut avg = ScratchPool::global().take(self.buf.len());
-        self.agg.average_into(uplinks, &mut avg);
+        self.agg.average_ingest_into(uplinks, &mut avg);
         ef_step(self.comp.as_mut(), &avg, &mut self.delta, &mut self.e, &mut self.buf)
     }
 }

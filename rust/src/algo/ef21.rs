@@ -8,7 +8,7 @@
 //! comm cost per round is identical by construction.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{Optimizer, SgdMomentum};
@@ -88,9 +88,9 @@ struct Ef21Server {
 }
 
 impl ServerAlgo for Ef21Server {
-    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
         let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_into(uplinks, &mut self.ghat_agg, inv);
+        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
         self.enc.step(&self.ghat_agg)
     }
 }

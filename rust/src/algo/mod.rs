@@ -31,6 +31,7 @@ pub mod naive;
 pub mod onebit_adam;
 pub mod uncompressed;
 
+use crate::agg::Ingest;
 use crate::compress::CompressedMsg;
 
 /// Per-worker half of a strategy (owns uplink compression state and the
@@ -45,9 +46,26 @@ pub trait WorkerAlgo: Send {
 
 /// Server half of a strategy (owns aggregation + downlink compression
 /// state; never owns model parameters).
+///
+/// Servers implement [`Self::round_ingest`], which consumes one round's
+/// uplinks in whichever form the recv path produced them — owned
+/// [`CompressedMsg`]s (historical path) or borrowed
+/// [`crate::comm::wire::PayloadView`]s over received byte frames (the
+/// zero-copy ingest path). No strategy server persists an uplink
+/// message across rounds (cross-round state — Markov replicas, EF
+/// memories — is dense), so every server folds views directly through
+/// its [`crate::agg::AggEngine`] and never materializes a message on
+/// the ingest side.
 pub trait ServerAlgo: Send {
-    /// Consume the n uplink messages of a round, produce the broadcast.
-    fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg;
+    /// Consume the n uplink messages of a round, produce the broadcast
+    /// (the owned-message convenience form).
+    fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+        self.round_ingest(round, &Ingest::Owned(uplinks))
+    }
+
+    /// Ingest-form round: the single implementation point — both the
+    /// owned and the zero-copy recv paths land here.
+    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg;
 }
 
 /// A strategy = factory for worker/server halves.

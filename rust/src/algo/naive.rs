@@ -4,7 +4,7 @@
 //! shows flat-lining above the others.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 
@@ -74,8 +74,8 @@ struct NaiveServer {
 }
 
 impl ServerAlgo for NaiveServer {
-    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        self.agg.average_into(uplinks, &mut self.buf);
+    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
+        self.agg.average_ingest_into(uplinks, &mut self.buf);
         self.comp.compress(&self.buf)
     }
 }

@@ -15,7 +15,7 @@
 //! warm-up term is what makes its per-bit curves lag CD-Adam in Fig. 1.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{Adam, Optimizer};
 use crate::tensor;
@@ -125,9 +125,9 @@ struct OneBitServer {
 }
 
 impl ServerAlgo for OneBitServer {
-    fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
+    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
         let mut avg = ScratchPool::global().take(self.buf.len());
-        self.agg.average_into(uplinks, &mut avg);
+        self.agg.average_ingest_into(uplinks, &mut avg);
         if round <= self.warmup {
             // warm-up broadcasts the dense average; the message owns
             // its vector, so detach the scratch buffer instead of

@@ -3,7 +3,7 @@
 //! and the 32d·2T row of Table 2.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::AggEngine;
+use crate::agg::{AggEngine, Ingest};
 use crate::compress::CompressedMsg;
 use crate::optim::{AmsGrad, Optimizer, SgdMomentum};
 
@@ -109,8 +109,8 @@ struct UncompressedServer {
 }
 
 impl ServerAlgo for UncompressedServer {
-    fn round(&mut self, _round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
-        self.agg.average_into(uplinks, &mut self.buf);
+    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
+        self.agg.average_ingest_into(uplinks, &mut self.buf);
         CompressedMsg::Dense(self.buf.clone())
     }
 }

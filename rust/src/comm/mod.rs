@@ -4,10 +4,12 @@
 //! Messages carry a [`CompressedMsg`] payload plus a round tag; the link
 //! meters the *serialized wire size* of every send (see [`wire`]), so
 //! the communication-bits axis in every figure is measured, not
-//! estimated. The serialized form is actually produced and parsed in
-//! tests (wire::encode/decode roundtrip), while the in-process fast path
-//! moves the structured message to avoid redundant copies — the metered
-//! size is identical either way (asserted by tests).
+//! estimated. Uplinks carry an [`UplinkFrame`] in one of two modes: the
+//! historical in-process fast path moves the structured message to avoid
+//! redundant copies, while the `zero_copy_ingest` mode really serializes
+//! each uplink ([`FrameBytes`]) so the server can validate once and fold
+//! borrowed [`wire::FrameView`]s straight into its aggregation engine.
+//! The metered size is identical in every mode (asserted by tests).
 
 pub mod wire;
 
@@ -42,6 +44,67 @@ impl Framed for WireMsg {
 impl WireMsg {
     pub fn wire_bits(&self) -> u64 {
         Framed::wire_bits(self)
+    }
+}
+
+/// A serialized uplink frame: the encoded bytes plus the metered
+/// payload size captured at encode time (see [`wire::encode_frame`]).
+/// This is what the zero-copy ingest path moves over the links — the
+/// server validates the bytes once with [`wire::FrameView::parse`] and
+/// folds borrowed views straight into the aggregation engine, never
+/// materializing a [`CompressedMsg`].
+#[derive(Clone, Debug)]
+pub struct FrameBytes {
+    pub round: u64,
+    pub from: u32,
+    /// Metered payload bits of the encoded message
+    /// ([`CompressedMsg::wire_bits`] — *not* `bytes.len() * 8`, which
+    /// additionally counts tag/d fields and bitmap byte padding), so
+    /// both ingest modes meter identical traffic.
+    pub payload_bits: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl Framed for FrameBytes {
+    /// Same framing as [`WireMsg`]: 64-bit header + payload bits.
+    fn wire_bits(&self) -> u64 {
+        64 + self.payload_bits
+    }
+}
+
+/// What an uplink channel carries: the structured in-process message
+/// (the historical owned-decode path) or the serialized frame (the
+/// `zero_copy_ingest` path). A run uses one mode uniformly; the enum
+/// keeps the topology monomorphic so the coordinator can switch modes
+/// with a config knob instead of a type parameter.
+#[derive(Clone, Debug)]
+pub enum UplinkFrame {
+    Msg(WireMsg),
+    Bytes(FrameBytes),
+}
+
+impl UplinkFrame {
+    pub fn round(&self) -> u64 {
+        match self {
+            UplinkFrame::Msg(m) => m.round,
+            UplinkFrame::Bytes(f) => f.round,
+        }
+    }
+
+    pub fn from(&self) -> u32 {
+        match self {
+            UplinkFrame::Msg(m) => m.from,
+            UplinkFrame::Bytes(f) => f.from,
+        }
+    }
+}
+
+impl Framed for UplinkFrame {
+    fn wire_bits(&self) -> u64 {
+        match self {
+            UplinkFrame::Msg(m) => Framed::wire_bits(m),
+            UplinkFrame::Bytes(f) => Framed::wire_bits(f),
+        }
     }
 }
 
@@ -118,16 +181,17 @@ pub fn link<T: Framed>() -> (MeteredSender<T>, MeteredReceiver<T>, Arc<Meter>) {
 }
 
 /// The full duplex topology for one worker: uplink to server + downlink
-/// back, with independent meters. Uplinks carry owned [`WireMsg`]s;
-/// downlinks carry the `Arc`-shared [`Broadcast`].
+/// back, with independent meters. Uplinks carry [`UplinkFrame`]s
+/// (structured messages, or serialized bytes when zero-copy ingest is
+/// on); downlinks carry the `Arc`-shared [`Broadcast`].
 pub struct WorkerLink {
-    pub up: MeteredSender<WireMsg>,
+    pub up: MeteredSender<UplinkFrame>,
     pub down: MeteredReceiver<Broadcast>,
 }
 
 /// The server's view of one worker.
 pub struct ServerLink {
-    pub up: MeteredReceiver<WireMsg>,
+    pub up: MeteredReceiver<UplinkFrame>,
     pub down: MeteredSender<Broadcast>,
 }
 
@@ -174,13 +238,27 @@ mod tests {
         assert_eq!(s.len(), 4);
         // independent meters per link
         w[2].up
-            .send(WireMsg { round: 0, from: 2, payload: CompressedMsg::Zero { d: 3 } })
+            .send(UplinkFrame::Msg(WireMsg { round: 0, from: 2, payload: CompressedMsg::Zero { d: 3 } }))
             .unwrap();
         assert_eq!(um[2].msgs(), 1);
         assert_eq!(um[0].msgs(), 0);
         assert_eq!(dm[2].msgs(), 0);
         let got = s[2].up.recv().unwrap();
-        assert_eq!(got.from, 2);
+        assert_eq!(got.from(), 2);
+    }
+
+    #[test]
+    fn uplink_frame_modes_meter_identically() {
+        // the audit identity the threaded driver enforces end-of-run
+        // rests on this: a structured message and its serialized frame
+        // meter the same bits on a link.
+        let payload = CompressedMsg::Dense(vec![1.0; 10]);
+        let msg = WireMsg { round: 3, from: 1, payload: payload.clone() };
+        let frame = wire::encode_frame(3, 1, &payload).unwrap();
+        assert_eq!(
+            Framed::wire_bits(&UplinkFrame::Msg(msg)),
+            Framed::wire_bits(&UplinkFrame::Bytes(frame))
+        );
     }
 
     #[test]

@@ -23,10 +23,41 @@
 //! shard dims must sum to d, and sharded payloads cannot nest. The
 //! `fuzz_decode_never_panics` test drives mutated and random frames
 //! through `decode` to hold the line.
+//!
+//! ## The view layer: zero-copy server ingest
+//!
+//! [`decode`] materializes an owned [`CompressedMsg`] — heap `Vec`s for
+//! indices, values, and sign words — which is an allocation-and-copy tax
+//! per uplink per round when the server only folds the message into a
+//! dense aggregate once and drops it. [`FrameView`] / [`PayloadView`]
+//! are the borrowed twins: [`FrameView::parse`] validates a received
+//! byte buffer **once** (same checks, same rejection set as [`decode`] —
+//! pinned by the `fuzz_decode_view_differential` oracle) and exposes the
+//! payload as slices borrowed straight from the frame:
+//!
+//! * the sign bitmap as its wire bytes (folded by the byte-chunked
+//!   [`packing::add_signs_scaled_range_bytes`] kernel — no
+//!   `bytes_to_words` pass),
+//! * sparse index/value arrays as raw little-endian `&[u8]` windows
+//!   (binary-searched in place for range folds),
+//! * shard sub-payloads as nested views over sub-slices of the frame.
+//!
+//! Borrowing contract: a `PayloadView<'a>` borrows from the frame bytes
+//! for `'a` and never outlives them; it is `Copy`-free but cheap (only a
+//! `Sharded` view owns a `Vec` of sub-views — one small enum per shard,
+//! never the shard data). Folding a view is **bit-identical** to folding
+//! the owned decode of the same frame: per output element both execute
+//! the same float ops in the same order (see
+//! [`PayloadView::add_scaled_range`]), which is what lets the
+//! `zero_copy_ingest` config knob be a scheduling/allocation knob and
+//! never a math knob. Where state must persist across rounds (Markov ŵ
+//! replicas, EF memories), [`PayloadView::to_msg`] materializes the
+//! owned message — that is the only place materialization remains on the
+//! ingest path.
 
 use anyhow::{bail, Result};
 
-use super::WireMsg;
+use super::{FrameBytes, WireMsg};
 use crate::compress::{packing, CompressedMsg};
 
 const TAG_DENSE: u8 = 0;
@@ -46,17 +77,34 @@ fn u32_field(x: usize, what: &str) -> Result<u32> {
 /// when `round` exceeds u32 or `from` exceeds u16 — the casts used to be
 /// unchecked `as` conversions that wrapped on overflow.
 pub fn encode(msg: &WireMsg) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(16 + msg.payload.wire_bits() as usize / 8);
-    let Ok(round) = u32::try_from(msg.round) else {
-        bail!("round {} overflows the u32 wire field", msg.round)
+    encode_parts(msg.round, msg.from, &msg.payload)
+}
+
+/// [`encode`] without requiring an owned [`WireMsg`] wrapper — the
+/// coordinators use this to serialize a borrowed payload for the
+/// zero-copy ingest path without cloning it into a `WireMsg` first.
+pub fn encode_parts(round: u64, from: u32, payload: &CompressedMsg) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16 + payload.wire_bits() as usize / 8);
+    let Ok(round) = u32::try_from(round) else {
+        bail!("round {round} overflows the u32 wire field")
     };
-    let Ok(from) = u16::try_from(msg.from) else {
-        bail!("worker id {} overflows the u16 wire field", msg.from)
+    let Ok(from) = u16::try_from(from) else {
+        bail!("worker id {from} overflows the u16 wire field")
     };
     out.extend_from_slice(&round.to_le_bytes());
     out.extend_from_slice(&from.to_le_bytes());
-    encode_payload(&msg.payload, &mut out, false)?;
+    encode_payload(payload, &mut out, false)?;
     Ok(out)
+}
+
+/// Serialize a payload into a metered [`FrameBytes`] uplink frame: the
+/// encoded bytes plus the payload's metered size, captured here so the
+/// comm meters report identical numbers on the owned and zero-copy
+/// paths (the byte encoding itself is slightly larger — explicit tag/d
+/// fields and bitmap padding — which the meters deliberately exclude;
+/// see `prop_serialized_size_matches_meter`).
+pub fn encode_frame(round: u64, from: u32, payload: &CompressedMsg) -> Result<FrameBytes> {
+    Ok(FrameBytes { round, from, payload_bits: payload.wire_bits(), bytes: encode_parts(round, from, payload)? })
 }
 
 fn encode_payload(payload: &CompressedMsg, out: &mut Vec<u8>, nested: bool) -> Result<()> {
@@ -251,6 +299,330 @@ fn decode_payload(r: &mut Reader, nested: bool) -> Result<CompressedMsg> {
     })
 }
 
+/// A validated, borrowed view of one serialized uplink frame — the
+/// zero-copy twin of [`decode`]. See the module docs for the layout and
+/// borrowing contract.
+#[derive(Clone, Debug)]
+pub struct FrameView<'a> {
+    pub round: u64,
+    pub from: u32,
+    pub payload: PayloadView<'a>,
+}
+
+impl<'a> FrameView<'a> {
+    /// Validate `bytes` once and borrow the payload in place. Accepts
+    /// exactly the frames [`decode`] accepts and rejects exactly the
+    /// frames it rejects (never panics on arbitrary bytes) — the
+    /// `fuzz_decode_view_differential` oracle holds the line.
+    pub fn parse(bytes: &'a [u8]) -> Result<FrameView<'a>> {
+        let mut r = Reader { b: bytes, i: 0 };
+        let round = r.u32()? as u64;
+        let from = r.u16()? as u32;
+        let payload = parse_payload(&mut r, false)?;
+        if r.i != bytes.len() {
+            bail!("trailing bytes");
+        }
+        Ok(FrameView { round, from, payload })
+    }
+
+    /// Metered frame size: 64-bit header + payload bits, identical to
+    /// [`crate::comm::WireMsg::wire_bits`] on the decoded message.
+    pub fn wire_bits(&self) -> u64 {
+        64 + self.payload.wire_bits()
+    }
+}
+
+/// A borrowed view of one payload inside a validated frame: the sign
+/// bitmap, sparse index/value arrays, and shard sub-payloads are
+/// `&[u8]` windows into the frame bytes — nothing is copied out.
+#[derive(Clone, Debug)]
+pub enum PayloadView<'a> {
+    /// `4·d` bytes of little-endian f32s.
+    Dense { bytes: &'a [u8] },
+    /// One f32 scale + the `⌈d/8⌉`-byte sign bitmap, as wire bytes
+    /// (bit i at byte `i/8`, position `i%8`).
+    Sign { d: usize, scale: f32, bytes: &'a [u8] },
+    /// `4·k` bytes of strictly-increasing little-endian u32 indices and
+    /// `4·k` bytes of little-endian f32 values (validated at parse).
+    Sparse { d: usize, idx: &'a [u8], val: &'a [u8] },
+    Zero { d: usize },
+    /// Borrowed sub-views per shard (block dims sum to `d`; leaf views
+    /// only — nesting is rejected at parse, mirroring [`decode`]).
+    Sharded { d: usize, shards: Vec<PayloadView<'a>> },
+}
+
+fn parse_payload<'a>(r: &mut Reader<'a>, nested: bool) -> Result<PayloadView<'a>> {
+    let tag = r.u8()?;
+    let _pad = r.u8()?;
+    let d = r.u32()? as usize;
+    Ok(match tag {
+        TAG_DENSE => {
+            if r.remaining() < 4 * d {
+                bail!("dense payload truncated (d = {d})");
+            }
+            PayloadView::Dense { bytes: r.take(4 * d)? }
+        }
+        TAG_SIGN => {
+            let scale = r.f32()?;
+            PayloadView::Sign { d, scale, bytes: r.take(d.div_ceil(8))? }
+        }
+        TAG_SPARSE => {
+            let k = r.u32()? as usize;
+            if k > d {
+                bail!("sparse k = {k} exceeds d = {d}");
+            }
+            if r.remaining() < 8 * k {
+                bail!("sparse payload truncated (k = {k})");
+            }
+            let idx = r.take(4 * k)?;
+            // same invariant checks as decode: strictly increasing, < d
+            for j in 0..k {
+                let i = idx_at(idx, j);
+                if i as usize >= d {
+                    bail!("sparse index {i} out of range (d = {d})");
+                }
+                if j > 0 && idx_at(idx, j - 1) >= i {
+                    bail!("sparse indices not strictly increasing at position {j}");
+                }
+            }
+            PayloadView::Sparse { d, idx, val: r.take(4 * k)? }
+        }
+        TAG_ZERO => PayloadView::Zero { d },
+        TAG_SHARDED => {
+            if nested {
+                bail!("nested sharded payload");
+            }
+            let count = r.u32()? as usize;
+            if count == 0 {
+                bail!("sharded payload with zero shards");
+            }
+            if count > r.remaining() / 6 {
+                bail!("shard count {count} exceeds frame size");
+            }
+            let mut shards = Vec::with_capacity(count);
+            let mut dims = 0usize;
+            for _ in 0..count {
+                let s = parse_payload(r, true)?;
+                dims = match dims.checked_add(s.dim()) {
+                    Some(v) => v,
+                    None => bail!("shard dims overflow"),
+                };
+                shards.push(s);
+            }
+            if dims != d {
+                bail!("shard dims sum to {dims}, frame says d = {d}");
+            }
+            PayloadView::Sharded { d, shards }
+        }
+        t => bail!("unknown tag {t}"),
+    })
+}
+
+/// j-th little-endian u32 of a packed index window (alignment-free).
+#[inline]
+fn idx_at(idx: &[u8], j: usize) -> u32 {
+    u32::from_le_bytes(idx[4 * j..4 * j + 4].try_into().unwrap())
+}
+
+/// j-th little-endian f32 of a packed value window.
+#[inline]
+fn f32_at(val: &[u8], j: usize) -> f32 {
+    f32::from_le_bytes(val[4 * j..4 * j + 4].try_into().unwrap())
+}
+
+/// First position `j` in `[0, k)` with `idx_at(j) >= target` — binary
+/// search straight over the wire bytes (the parse-time strictly-
+/// increasing check makes this sound), mirroring the owned Sparse
+/// fold's `partition_point`.
+fn lower_bound(idx: &[u8], k: usize, target: u32) -> usize {
+    let (mut lo, mut hi) = (0usize, k);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if idx_at(idx, mid) < target {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+impl<'a> PayloadView<'a> {
+    /// Logical dimension, mirroring [`CompressedMsg::dim`].
+    pub fn dim(&self) -> usize {
+        match self {
+            PayloadView::Dense { bytes } => bytes.len() / 4,
+            PayloadView::Sign { d, .. } => *d,
+            PayloadView::Sparse { d, .. } => *d,
+            PayloadView::Zero { d } => *d,
+            PayloadView::Sharded { d, .. } => *d,
+        }
+    }
+
+    /// Exact metered payload size in bits — parity with
+    /// [`CompressedMsg::wire_bits`] of the owned decode (pinned by the
+    /// differential oracle).
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            PayloadView::Dense { bytes } => 8 * bytes.len() as u64,
+            PayloadView::Sign { d, .. } => 32 + *d as u64,
+            PayloadView::Sparse { idx, .. } => 32 + 16 * idx.len() as u64,
+            PayloadView::Zero { .. } => 32,
+            PayloadView::Sharded { shards, .. } => {
+                32 + shards.iter().map(|s| s.wire_bits()).sum::<u64>()
+            }
+        }
+    }
+
+    /// Offsets of the shard boundaries (block starts, excluding 0 and
+    /// d); empty for leaf views — mirrors
+    /// [`CompressedMsg::shard_boundaries`] so the aggregation engine
+    /// snaps its range partition identically on both paths.
+    pub fn shard_boundaries(&self) -> Vec<usize> {
+        match self {
+            PayloadView::Sharded { shards, .. } => {
+                let mut cuts = Vec::with_capacity(shards.len().saturating_sub(1));
+                let mut off = 0;
+                for sh in &shards[..shards.len().saturating_sub(1)] {
+                    off += sh.dim();
+                    cuts.push(off);
+                }
+                cuts
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Materialize the owned message — the persistence escape hatch for
+    /// state that must outlive the frame (Markov replicas, EF memories)
+    /// and the differential-test bridge. Equals `decode(frame).payload`
+    /// by construction.
+    pub fn to_msg(&self) -> CompressedMsg {
+        match self {
+            PayloadView::Dense { bytes } => {
+                CompressedMsg::Dense((0..bytes.len() / 4).map(|j| f32_at(bytes, j)).collect())
+            }
+            PayloadView::Sign { d, scale, bytes } => CompressedMsg::SignScale {
+                d: *d,
+                scale: *scale,
+                bits: packing::bytes_to_words(bytes, *d),
+            },
+            PayloadView::Sparse { d, idx, val } => {
+                let k = idx.len() / 4;
+                CompressedMsg::Sparse {
+                    d: *d,
+                    idx: (0..k).map(|j| idx_at(idx, j)).collect(),
+                    val: (0..k).map(|j| f32_at(val, j)).collect(),
+                }
+            }
+            PayloadView::Zero { d } => CompressedMsg::Zero { d: *d },
+            PayloadView::Sharded { d, shards } => CompressedMsg::Sharded {
+                d: *d,
+                shards: shards.iter().map(|s| s.to_msg()).collect(),
+            },
+        }
+    }
+
+    /// out = decode(self), straight from the wire bytes. Assignment
+    /// semantics mirror [`CompressedMsg::decode_into`] exactly (values
+    /// are *written*, not added to zero — additive identity is not
+    /// bitwise identity for -0.0/NaN payloads a hostile frame can
+    /// carry, and the differential oracle compares to the bit).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim());
+        match self {
+            PayloadView::Sparse { idx, val, .. } => {
+                out.fill(0.0);
+                for j in 0..idx.len() / 4 {
+                    out[idx_at(idx, j) as usize] = f32_at(val, j);
+                }
+            }
+            PayloadView::Zero { .. } => out.fill(0.0),
+            PayloadView::Sign { d, scale, bytes } => {
+                for (i, o) in out[..*d].iter_mut().enumerate() {
+                    *o = if bytes[i / 8] >> (i % 8) & 1 == 1 { *scale } else { -*scale };
+                }
+            }
+            PayloadView::Dense { bytes } => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = f32_at(bytes, j);
+                }
+            }
+            PayloadView::Sharded { d, shards } => {
+                let mut off = 0;
+                for s in shards {
+                    let n = s.dim();
+                    s.decode_into(&mut out[off..off + n]);
+                    off += n;
+                }
+                debug_assert_eq!(off, *d);
+            }
+        }
+    }
+
+    /// out += scale * decode(self) — the full-vector fold.
+    pub fn add_scaled_into(&self, out: &mut [f32], s: f32) {
+        assert_eq!(out.len(), self.dim());
+        self.add_scaled_range(0, out, s);
+    }
+
+    /// out += scale * decode(self)[start .. start + out.len()] — the
+    /// range-restricted fold that powers
+    /// [`crate::agg::AggEngine::add_scaled_views_into`], reading
+    /// straight from the wire bytes.
+    ///
+    /// Invariant (shared with [`CompressedMsg::add_scaled_range`]): any
+    /// contiguous partition of `[0, d)` applied range-by-range is
+    /// **bit-identical** to the monolithic apply, and both are
+    /// bit-identical to folding the owned decode — per output element
+    /// the same float ops run in the same order (dense: one `+= s·v`
+    /// from the same f32 bits; sign: one `+=` of ±(scale·s) via the
+    /// byte kernel; sparse: one `+= s·v` per stored index found by
+    /// in-place binary search).
+    pub fn add_scaled_range(&self, start: usize, out: &mut [f32], s: f32) {
+        let end = start + out.len();
+        assert!(end <= self.dim(), "range {start}..{end} out of bounds for d={}", self.dim());
+        match self {
+            PayloadView::Dense { bytes } => {
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o += s * f32_at(bytes, start + k);
+                }
+            }
+            PayloadView::Sign { scale, bytes, .. } => {
+                packing::add_signs_scaled_range_bytes(bytes, *scale * s, start, out);
+            }
+            PayloadView::Sparse { idx, val, .. } => {
+                let k = idx.len() / 4;
+                let lo = lower_bound(idx, k, start as u32);
+                let hi = lower_bound(idx, k, end as u32);
+                for j in lo..hi {
+                    out[idx_at(idx, j) as usize - start] += s * f32_at(val, j);
+                }
+            }
+            PayloadView::Zero { .. } => {}
+            PayloadView::Sharded { shards, .. } => {
+                let mut off = 0;
+                for sh in shards {
+                    let n = sh.dim();
+                    let (blk_lo, blk_hi) = (off, off + n);
+                    off = blk_hi;
+                    let (lo, hi) = (blk_lo.max(start), blk_hi.min(end));
+                    if lo < hi {
+                        sh.add_scaled_range(lo - blk_lo, &mut out[lo - start..hi - start], s);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode into a fresh vector (test/convenience path).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut v = vec![0.0; self.dim()];
+        self.decode_into(&mut v);
+        v
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,11 +807,20 @@ mod tests {
         assert!(decode(&nested).is_err());
     }
 
-    #[test]
-    fn fuzz_decode_never_panics() {
-        // decode must return Ok or Err — never panic, never abort on a
-        // hostile allocation — for (a) every truncation, (b) byte
-        // mutations, and (c) random garbage. A panic fails the test.
+    /// Fuzz iteration budget: `CDADAM_FUZZ_ITERS` scales the random
+    /// mutation rounds per seed (CI's smoke step pins a fixed budget;
+    /// the default keeps `cargo test` fast).
+    fn fuzz_iters() -> usize {
+        std::env::var("CDADAM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
+    }
+
+    /// Drive `probe` over the shared fuzz corpus: (a) every truncation
+    /// of every seed frame, (b) systematic and random byte mutations,
+    /// (c) random garbage of assorted lengths, and finally the
+    /// untouched seeds (which `probe` may rely on being valid frames —
+    /// callers assert that separately).
+    fn probe_frames(mut probe: impl FnMut(&[u8])) -> Vec<Vec<u8>> {
+        let iters = fuzz_iters();
         let mut rng = Rng::new(0xF422);
         let mut x = vec![0.0f32; 96];
         rng.fill_normal(&mut x, 1.0);
@@ -463,11 +844,18 @@ mod tests {
                     .compress(&x),
             })
             .unwrap(),
+            encode(&WireMsg {
+                round: 7,
+                from: 1,
+                payload: ShardedCompressor::new(Box::new(TopK::with_frac(0.2)), 24, 2)
+                    .compress(&x),
+            })
+            .unwrap(),
         ];
         // (a) truncations
         for s in &seeds {
             for len in 0..s.len() {
-                let _ = decode(&s[..len]);
+                probe(&s[..len]);
             }
         }
         // (b) single- and double-byte mutations
@@ -476,31 +864,187 @@ mod tests {
                 let orig = s[pos];
                 for v in [0x00, 0x01, 0x7F, 0x80, 0xFE, 0xFF] {
                     s[pos] = v;
-                    let _ = decode(s);
+                    probe(s);
                 }
                 s[pos] = orig;
             }
-            for _ in 0..200 {
+            for _ in 0..iters {
                 let p1 = rng.below(s.len());
                 let p2 = rng.below(s.len());
                 let (o1, o2) = (s[p1], s[p2]);
                 s[p1] = rng.next_u64() as u8;
                 s[p2] = rng.next_u64() as u8;
-                let _ = decode(s);
+                probe(s);
                 s[p1] = o1;
                 s[p2] = o2;
             }
         }
         // (c) random garbage of assorted lengths
         for len in [0usize, 1, 5, 6, 7, 13, 64, 300] {
-            for _ in 0..50 {
+            for _ in 0..(iters / 4).max(10) {
                 let garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
-                let _ = decode(&garbage);
+                probe(&garbage);
             }
         }
-        // and one sanity anchor: untouched seeds still decode fine
+        for s in &seeds {
+            probe(s);
+        }
+        seeds
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        // decode must return Ok or Err — never panic, never abort on a
+        // hostile allocation — for every probe in the corpus.
+        let seeds = probe_frames(|bytes| {
+            let _ = decode(bytes);
+        });
+        // sanity anchor: untouched seeds still decode fine
         for s in &seeds {
             assert!(decode(s).is_ok());
+        }
+    }
+
+    /// The decode ≡ view oracle: on every accepted frame the two paths
+    /// must agree on round/from, metered bits, and the reconstruction
+    /// **to the bit** — and they must reject exactly the same frames.
+    /// Reconstruction equality is checked through capped range folds
+    /// (a hostile Sparse frame may claim d in the billions with k = 0,
+    /// so a full to_dense would be a hostile allocation).
+    fn assert_decode_view_agree(bytes: &[u8]) {
+        let owned = decode(bytes);
+        let view = FrameView::parse(bytes);
+        match (owned, view) {
+            (Err(_), Err(_)) => {}
+            (Ok(m), Ok(v)) => {
+                assert_eq!(m.round, v.round, "round disagrees");
+                assert_eq!(m.from, v.from, "from disagrees");
+                assert_eq!(m.wire_bits(), v.wire_bits(), "wire_bits parity broken");
+                assert_eq!(m.payload.dim(), v.payload.dim(), "dim disagrees");
+                let d = m.payload.dim();
+                // capped head window + a tail window exercise the
+                // sparse binary search and the sign byte kernel at
+                // unaligned offsets
+                let head = d.min(8192);
+                let tail_lo = d.saturating_sub(219).min(d);
+                let mut a = vec![0.125f32; head];
+                let mut b = a.clone();
+                m.payload.add_scaled_range(0, &mut a, 0.61);
+                v.payload.add_scaled_range(0, &mut b, 0.61);
+                assert!(
+                    a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "head fold diverged"
+                );
+                let mut a = vec![-0.5f32; d - tail_lo];
+                let mut b = a.clone();
+                m.payload.add_scaled_range(tail_lo, &mut a, -1.7);
+                v.payload.add_scaled_range(tail_lo, &mut b, -1.7);
+                assert!(
+                    a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "tail fold diverged"
+                );
+                if d <= 1 << 17 {
+                    let da = m.payload.to_dense();
+                    let db = v.payload.to_dense();
+                    assert!(
+                        da.iter().zip(&db).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "dense reconstruction diverged"
+                    );
+                    // and the materialization bridge reconstructs the
+                    // same message the owned decode produced
+                    let dc = v.payload.to_msg().to_dense();
+                    assert!(
+                        da.iter().zip(&dc).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "to_msg reconstruction diverged"
+                    );
+                }
+            }
+            (o, v) => panic!(
+                "decode/view acceptance disagrees on a {}-byte frame: owned {:?}, view {:?}",
+                bytes.len(),
+                o.map(|m| format!("Ok({} bits)", m.wire_bits())).unwrap_or_else(|e| format!("Err({e})")),
+                v.map(|f| format!("Ok({} bits)", f.wire_bits())).unwrap_or_else(|e| format!("Err({e})")),
+            ),
+        }
+    }
+
+    #[test]
+    fn fuzz_decode_view_differential() {
+        // the differential battery: both paths probed on every corpus
+        // entry — both reject, or both accept with identical metering
+        // and bit-identical reconstruction.
+        let seeds = probe_frames(assert_decode_view_agree);
+        // anchor: the untouched seeds are accepted by both paths
+        for s in &seeds {
+            assert!(decode(s).is_ok() && FrameView::parse(s).is_ok());
+        }
+    }
+
+    #[test]
+    fn view_roundtrip_matches_owned_decode() {
+        // structured (non-fuzz) parity across every payload variant,
+        // including unaligned multi-range folds on sharded frames.
+        let mut rng = Rng::new(0x51EE);
+        let mut x = vec![0.0f32; 300];
+        rng.fill_normal(&mut x, 1.5);
+        let payloads: Vec<CompressedMsg> = vec![
+            CompressedMsg::Dense(x.clone()),
+            ScaledSign::new().compress(&x),
+            TopK::with_frac(0.1).compress(&x),
+            CompressedMsg::Zero { d: 300 },
+            ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 2).compress(&x),
+            ShardedCompressor::new(Box::new(TopK::with_frac(0.2)), 37, 3).compress(&x),
+        ];
+        for payload in payloads {
+            let d = payload.dim();
+            let bytes = encode_parts(9, 3, &payload).unwrap();
+            let fv = FrameView::parse(&bytes).unwrap();
+            assert_eq!(fv.round, 9);
+            assert_eq!(fv.from, 3);
+            assert_eq!(fv.wire_bits(), 64 + payload.wire_bits());
+            assert_eq!(fv.payload.wire_bits(), payload.wire_bits());
+            assert_eq!(fv.payload.to_msg(), payload);
+            assert_eq!(fv.payload.shard_boundaries(), payload.shard_boundaries());
+            // full fold + unaligned 3-way partitioned fold, to the bit
+            let mut owned = vec![0.25f32; d];
+            let mut viewed = owned.clone();
+            payload.add_scaled_into(&mut owned, 0.73);
+            fv.payload.add_scaled_into(&mut viewed, 0.73);
+            assert!(owned.iter().zip(&viewed).all(|(p, q)| p.to_bits() == q.to_bits()));
+            let (a, b) = (d / 3 + 1, 2 * d / 3 + 1);
+            let mut owned = vec![-1.0f32; d];
+            let mut viewed = owned.clone();
+            payload.add_scaled_range(0, &mut owned[..a], 0.61);
+            payload.add_scaled_range(a, &mut owned[a..b], 0.61);
+            payload.add_scaled_range(b, &mut owned[b..], 0.61);
+            fv.payload.add_scaled_range(0, &mut viewed[..a], 0.61);
+            fv.payload.add_scaled_range(a, &mut viewed[a..b], 0.61);
+            fv.payload.add_scaled_range(b, &mut viewed[b..], 0.61);
+            assert!(owned.iter().zip(&viewed).all(|(p, q)| p.to_bits() == q.to_bits()));
+            // decode_into parity
+            let mut dec_owned = vec![7.0f32; d];
+            let mut dec_view = vec![7.0f32; d];
+            payload.decode_into(&mut dec_owned);
+            fv.payload.decode_into(&mut dec_view);
+            assert!(dec_owned.iter().zip(&dec_view).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    }
+
+    #[test]
+    fn encode_frame_carries_metered_bits() {
+        // the FrameBytes meter must equal the structured message's
+        // meter (64-bit header + payload bits), NOT the byte length —
+        // this is what keeps cum_bits identical across ingest modes.
+        let mut rng = Rng::new(0xAB);
+        let mut x = vec![0.0f32; 130];
+        rng.fill_normal(&mut x, 1.0);
+        for payload in [ScaledSign::new().compress(&x), TopK::with_frac(0.1).compress(&x)] {
+            let frame = encode_frame(4, 2, &payload).unwrap();
+            let msg = WireMsg { round: 4, from: 2, payload: payload.clone() };
+            assert_eq!(crate::comm::Framed::wire_bits(&frame), msg.wire_bits());
+            assert_ne!((frame.bytes.len() * 8) as u64, msg.wire_bits(), "byte length is not the meter");
+            let fv = FrameView::parse(&frame.bytes).unwrap();
+            assert_eq!(fv.wire_bits(), msg.wire_bits());
         }
     }
 }

@@ -71,6 +71,33 @@ pub fn add_signs_scaled_range(bits: &[u64], scale: f32, start: usize, out: &mut 
     }
 }
 
+/// out[k] += scale * (bit_{start+k} ? +1 : -1), reading the sign bitmap
+/// **straight from its little-endian wire bytes** — the zero-copy twin
+/// of [`add_signs_scaled_range`] used by the borrowed-view ingest path
+/// ([`crate::comm::wire::PayloadView`]). Bit i of the bitmap lives at
+/// byte `i / 8`, position `i % 8` (the `words_to_bytes` layout), so no
+/// `bytes_to_words` materialization is needed.
+///
+/// Per-element float ops are identical to the word-based kernels (one
+/// `+=` of ±scale), so a view-side fold is bit-for-bit the owned fold.
+/// Only the (up to 7-element) unaligned head pays per-element byte
+/// indexing; the aligned body runs a byte-chunked loop.
+pub fn add_signs_scaled_range_bytes(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
+    debug_assert!(bytes.len() * 8 >= start + out.len());
+    let head = ((8 - start % 8) % 8).min(out.len());
+    let (head_out, body_out) = out.split_at_mut(head);
+    for (k, o) in head_out.iter_mut().enumerate() {
+        let i = start + k;
+        *o += if bytes[i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale };
+    }
+    // start + head is 8-aligned (or body is empty): whole-byte loop
+    for (chunk, &byte) in body_out.chunks_mut(8).zip(&bytes[(start + head) / 8..]) {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o += if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
 /// Serialize packed words to little-endian bytes (wire encoding).
 pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
     let nbytes = d.div_ceil(8);
@@ -150,6 +177,28 @@ mod tests {
             add_signs_scaled_range(&bits, 0.37, b, &mut split[b..]);
             if full != split {
                 return Err("range apply diverged from full apply".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_byte_range_add_matches_word_range_add() {
+        check("sign byte-range add == word-range add", Config::default(), |g| {
+            let d = g.size(300);
+            let x = g.vec_f32(d, 2.0);
+            let bits = pack_signs(&x);
+            let bytes = words_to_bytes(&bits, d);
+            let mut word_side = g.vec_f32(d, 1.0);
+            let mut byte_side = word_side.clone();
+            // identical unaligned 3-way partitions on both kernels
+            let (a, b) = (d / 3, 2 * d / 3);
+            for (lo, hi) in [(0, a), (a, b), (b, d)] {
+                add_signs_scaled_range(&bits, -0.83, lo, &mut word_side[lo..hi]);
+                add_signs_scaled_range_bytes(&bytes, -0.83, lo, &mut byte_side[lo..hi]);
+            }
+            if word_side.iter().zip(&byte_side).any(|(p, q)| p.to_bits() != q.to_bits()) {
+                return Err("byte kernel diverged from word kernel".into());
             }
             Ok(())
         });

@@ -15,6 +15,25 @@ use crate::algo::{
 use crate::compress;
 use crate::util::args::Args;
 
+/// True only when `name` is set to an explicit truthy value ("1",
+/// "true", "yes", "on", case-insensitive) in the environment — the CI
+/// lever that flips config defaults (e.g. forcing zero-copy ingest
+/// across an entire test run). Anything else — including "0", "false",
+/// "no", "off", or a typo — leaves the default off, so a value meant to
+/// disable a feature can never silently enable it.
+fn env_flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => ["1", "true", "yes", "on"].iter().any(|t| v.eq_ignore_ascii_case(t)),
+        Err(_) => false,
+    }
+}
+
+/// Same truthy set for CLI `--flag[=value]` overrides (a bare `--flag`
+/// parses as "true").
+fn truthy(v: &str) -> bool {
+    ["1", "true", "yes", "on"].iter().any(|t| v.eq_ignore_ascii_case(t))
+}
+
 /// What model/data the run trains.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Task {
@@ -59,6 +78,17 @@ pub struct ExperimentConfig {
     /// it exists so system tests can force the pool path at tiny d,
     /// where the cutover would otherwise keep the fold sequential.
     pub server_min_parallel_dim: usize,
+    /// Zero-copy uplink ingest: workers serialize uplinks to wire bytes
+    /// and the server folds borrowed [`crate::comm::wire::FrameView`]s
+    /// straight into its aggregation engine, never materializing owned
+    /// [`crate::compress::CompressedMsg`]s on the recv path. Off (the
+    /// default) is the historical structured-message path verbatim;
+    /// trajectories, replica hashes, and cum_bits are bit-identical
+    /// either way (an allocation knob, never a math knob — pinned by
+    /// the trajectory golden tests). CLI `--zero-copy-ingest`; the
+    /// `CDADAM_ZERO_COPY_INGEST` env var flips the default so CI can
+    /// force the view path across the whole test suite.
+    pub zero_copy_ingest: bool,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -93,6 +123,7 @@ impl Default for ExperimentConfig {
             compress_threads: 4,
             server_threads: 0,
             server_min_parallel_dim: 0,
+            zero_copy_ingest: env_flag("CDADAM_ZERO_COPY_INGEST"),
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -207,6 +238,12 @@ impl ExperimentConfig {
         self.shard_size = args.usize("shard-size", self.shard_size)?;
         self.compress_threads = args.usize("compress-threads", self.compress_threads)?;
         self.server_threads = args.usize("server-threads", self.server_threads)?;
+        // bare `--zero-copy-ingest` turns the view path on; an explicit
+        // `--zero-copy-ingest false` (or =0/no/off) turns it off, so the
+        // CLI can override an env-forced default in either direction
+        if let Some(v) = args.get("zero-copy-ingest") {
+            self.zero_copy_ingest = truthy(v);
+        }
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
         if let Some(t) = args.get("tau") {
@@ -419,6 +456,30 @@ mod tests {
         assert!(cfg.compress_threads >= 4);
         assert!(cfg.server_threads >= 4, "large-d preset should exercise the agg engine");
         assert_eq!(cfg.task, Task::LogReg { dataset: "large_1m".into(), lambda: 0.1 });
+    }
+
+    #[test]
+    fn zero_copy_ingest_flag_parses() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--zero-copy-ingest"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.zero_copy_ingest);
+        // an explicit falsy value turns the knob OFF — the way back from
+        // an env-forced default
+        for off in ["false", "0", "no", "off"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.zero_copy_ingest = true;
+            let args = Args::parse(
+                ["--zero-copy-ingest", off].iter().map(|s| s.to_string()),
+            );
+            cfg.apply_args(&args).unwrap();
+            assert!(!cfg.zero_copy_ingest, "--zero-copy-ingest {off} should disable");
+        }
+        // absent flag leaves the (env-derived) default untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let before = cfg2.zero_copy_ingest;
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.zero_copy_ingest, before);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 use anyhow::Result;
 
 use super::setup;
+use crate::agg::Ingest;
 use crate::algo::{ServerAlgo, WorkerAlgo};
+use crate::comm::wire;
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -54,7 +56,26 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
             }
             ups.push(c);
         }
-        let down = server.round(t, &ups);
+        let down = if cfg.zero_copy_ingest {
+            // zero-copy ingest: serialize each uplink to its wire
+            // frame, validate once, and hand the server borrowed views
+            // — the server folds straight from the bytes and never
+            // materializes an owned message on the recv path. Bits are
+            // metered off the structured message above, so cum_bits is
+            // identical to the owned path (parity pinned in comm::wire).
+            let frames: Vec<Vec<u8>> = ups
+                .iter()
+                .enumerate()
+                .map(|(i, c)| wire::encode_parts(t as u64, i as u32, c))
+                .collect::<Result<_>>()?;
+            let views: Vec<wire::PayloadView> = frames
+                .iter()
+                .map(|b| wire::FrameView::parse(b).map(|f| f.payload))
+                .collect::<Result<_>>()?;
+            server.round_ingest(t, &Ingest::Views(&views))
+        } else {
+            server.round(t, &ups)
+        };
         let down_bits = down.wire_bits();
         // replica identity: apply through worker 0 only (see module docs)
         workers[0].apply_downlink(t, &down, &mut params, lr);

@@ -13,7 +13,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::{params_hash, setup};
-use crate::comm::{topology, Broadcast, WireMsg};
+use crate::agg::Ingest;
+use crate::comm::{topology, wire, Broadcast, FrameBytes, UplinkFrame, WireMsg};
+use crate::compress::CompressedMsg;
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -57,22 +59,47 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
 
     // --- server thread -------------------------------------------------
     let mut server = strat.make_server(dim, n);
+    let zero_copy = cfg.zero_copy_ingest;
     let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
         let mut links = server_links;
         for t in 1..=rounds {
-            let mut ups = Vec::with_capacity(links.len());
+            let mut ups: Vec<CompressedMsg> = Vec::with_capacity(links.len());
+            let mut frames: Vec<FrameBytes> =
+                Vec::with_capacity(if zero_copy { links.len() } else { 0 });
             for link in links.iter() {
                 let msg = match link.up.recv() {
                     Ok(m) => m,
                     Err(_) => return, // workers gone
                 };
-                debug_assert_eq!(msg.round, t as u64);
-                ups.push(msg.payload);
+                debug_assert_eq!(msg.round(), t as u64);
+                match msg {
+                    UplinkFrame::Msg(m) => ups.push(m.payload),
+                    UplinkFrame::Bytes(f) => frames.push(f),
+                }
             }
             // one Arc'd broadcast fanned out to every link — n refcount
             // bumps instead of n deep clones of the downlink message
             // (each link still meters the full serialized size).
-            let down = Arc::new(server.round(t, &ups));
+            let down = if frames.is_empty() {
+                Arc::new(server.round(t, &ups))
+            } else {
+                // zero-copy ingest: validate each received frame once
+                // and fold borrowed views straight into the server's
+                // engine — no CompressedMsg materialization on recv.
+                // The frames are self-produced, so a parse failure is
+                // a codec bug and fails the round loudly.
+                assert!(ups.is_empty(), "mixed uplink frame modes in round {t}");
+                let views: Vec<wire::PayloadView> = frames
+                    .iter()
+                    .map(|f| {
+                        let fv = wire::FrameView::parse(&f.bytes)
+                            .expect("corrupt self-produced uplink frame");
+                        debug_assert_eq!(fv.round, t as u64);
+                        fv.payload
+                    })
+                    .collect();
+                Arc::new(server.round_ingest(t, &Ingest::Views(&views)))
+            };
             for link in links.iter_mut() {
                 let _ = link.down.send(Broadcast { round: t as u64, payload: down.clone() });
             }
@@ -97,7 +124,15 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                     let loss = engine.loss_grad(&params, &mut grad);
                     let c = worker.uplink(t, &grad);
                     cum_bits += c.wire_bits();
-                    link.up.send(WireMsg { round: t as u64, from: i as u32, payload: c })?;
+                    let frame = if zero_copy {
+                        // serialize here so the server really receives
+                        // bytes; the metered size travels with the frame
+                        // (identical to the structured message's meter)
+                        UplinkFrame::Bytes(wire::encode_frame(t as u64, i as u32, &c)?)
+                    } else {
+                        UplinkFrame::Msg(WireMsg { round: t as u64, from: i as u32, payload: c })
+                    };
+                    link.up.send(frame)?;
                     let down = link.down.recv()?;
                     debug_assert_eq!(down.round, t as u64);
                     cum_bits += down.payload.wire_bits();
@@ -261,6 +296,48 @@ mod tests {
             for (a, b) in seq.records.iter().zip(&par.records) {
                 assert_eq!(a.grad_norm, b.grad_norm, "{strat} round {}", a.round);
                 assert_eq!(a.cum_bits, b.cum_bits, "{strat} round {}", a.round);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_copy_ingest_is_bit_for_bit() {
+        // the knob is allocation-only: {lockstep, threaded} ×
+        // {sequential, pool-forced} with zero-copy ingest on must
+        // reproduce the owned-path records exactly, sharded uplinks
+        // included (d = 50 ⇒ 4 blocks of 16).
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 40;
+        cfg.eval_every = 20;
+        cfg.shard_size = 16;
+        cfg.compress_threads = 2;
+        cfg.zero_copy_ingest = false;
+        let base = run_lockstep(&cfg).unwrap();
+        cfg.zero_copy_ingest = true;
+        for threads in [0usize, 4] {
+            cfg.server_threads = threads;
+            cfg.server_min_parallel_dim = usize::from(threads > 0); // force pool path at tiny d
+            let zc_lockstep = run_lockstep(&cfg).unwrap();
+            let zc_threaded = run_threaded(&cfg).unwrap();
+            assert_eq!(base.records.len(), zc_threaded.records.len());
+            for ((a, b), c) in
+                base.records.iter().zip(&zc_lockstep.records).zip(&zc_threaded.records)
+            {
+                assert_eq!(a.round, c.round);
+                assert_eq!(
+                    a.grad_norm.to_bits(),
+                    b.grad_norm.to_bits(),
+                    "zero-copy lockstep diverged at round {} (t={threads})",
+                    a.round
+                );
+                assert_eq!(
+                    a.grad_norm.to_bits(),
+                    c.grad_norm.to_bits(),
+                    "zero-copy threaded diverged at round {} (t={threads})",
+                    a.round
+                );
+                assert_eq!(a.cum_bits, b.cum_bits, "lockstep bits at round {}", a.round);
+                assert_eq!(a.cum_bits, c.cum_bits, "threaded bits at round {}", a.round);
             }
         }
     }

@@ -46,6 +46,8 @@ fn usage() -> ! {
            --compress-threads <int>  threads for parallel shard compression\n\
            --server-threads <int>  range jobs for the server decode/aggregate\n\
                                  engine (0 = sequential, bit-identical)\n\
+           --zero-copy-ingest    serve uplinks as wire bytes and fold borrowed\n\
+                                 views (bit-identical; off = owned decode path)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\

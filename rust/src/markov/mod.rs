@@ -95,6 +95,17 @@ impl MarkovDecoder {
         &self.ghat
     }
 
+    /// Apply one **borrowed wire view** ([`crate::comm::wire::PayloadView`])
+    /// without materializing the message: ŵ (the state that persists
+    /// across rounds) is dense, so the view folds straight through the
+    /// engine and the frame bytes can be dropped afterwards —
+    /// bit-identical to [`Self::apply`] on the owned decode of the same
+    /// frame.
+    pub fn apply_view(&mut self, v: &crate::comm::wire::PayloadView<'_>) -> &[f32] {
+        self.agg.apply_one_view(v, &mut self.ghat);
+        &self.ghat
+    }
+
     pub fn state(&self) -> &[f32] {
         &self.ghat
     }
@@ -230,6 +241,33 @@ mod tests {
                 "parallel decoder diverged from sequential"
             );
             assert_eq!(enc.state(), seq.state());
+        }
+    }
+
+    #[test]
+    fn view_decoder_replays_identical_state() {
+        // bytes → view → apply_view replays the identical ŵ replica as
+        // the owned apply — the zero-copy downlink-decode contract.
+        use crate::comm::wire::{encode_parts, FrameView};
+        use crate::compress::ShardedCompressor;
+        let d = 500;
+        let mk = || Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 64, 2));
+        let mut enc = MarkovEncoder::new(d, mk());
+        let mut owned = MarkovDecoder::new(d);
+        let mut viewed = MarkovDecoder::with_engine(d, crate::agg::AggEngine::new(3).with_min_parallel_dim(1));
+        let mut rng = crate::util::rng::Rng::new(61);
+        for t in 0..6 {
+            let mut w = vec![0.0f32; d];
+            rng.fill_normal(&mut w, 1.0);
+            let c = enc.step(&w);
+            let bytes = encode_parts(t, 0, &c).unwrap();
+            let fv = FrameView::parse(&bytes).unwrap();
+            owned.apply(&c);
+            viewed.apply_view(&fv.payload);
+            assert!(
+                owned.state().iter().zip(viewed.state()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "view decoder diverged at step {t}"
+            );
         }
     }
 

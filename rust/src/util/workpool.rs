@@ -286,6 +286,145 @@ mod tests {
     }
 
     #[test]
+    fn stress_interleaved_encode_and_view_fold_batches() {
+        // Ingest-load stress: several OS threads slam the *global* pool
+        // with interleaved batch kinds — shard-compression batches
+        // (ShardedCompressor above the encode cutover) and view-fold
+        // batches (AggEngine over parsed FrameViews, pool path forced).
+        // The earlier nesting tests only ever queued one batch kind at
+        // a time; this asserts the mixed queue neither deadlocks (a
+        // watchdog fails the test rather than wedging the suite) nor
+        // corrupts results (every fold is checked against the
+        // sequential owned fold, to the bit).
+        use crate::agg::AggEngine;
+        use crate::comm::wire::{encode_parts, FrameView};
+        use crate::compress::{Compressor, ScaledSign, ShardedCompressor};
+        use std::time::Duration;
+
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let driver = std::thread::spawn(move || {
+            // above the encode cutover so compression really batches
+            // onto the pool; folds force the pool via min_parallel_dim
+            let d = ShardedCompressor::MIN_PARALLEL_DIM + 512;
+            let handles: Vec<_> = (0..4u64)
+                .map(|tid| {
+                    std::thread::spawn(move || {
+                        let mut rng = crate::util::rng::Rng::new(0x57E55 + tid);
+                        let mut x = vec![0.0f32; d];
+                        rng.fill_normal(&mut x, 1.0);
+                        let mut comp =
+                            ShardedCompressor::new(Box::new(ScaledSign::new()), 4096, 4);
+                        let engine = AggEngine::new(3).with_min_parallel_dim(1);
+                        for _ in 0..4 {
+                            // encode batch …
+                            let msg = comp.compress(&x);
+                            // … immediately chased by a view-fold batch
+                            let bytes = encode_parts(1, tid as u32, &msg).unwrap();
+                            let view = FrameView::parse(&bytes).unwrap().payload;
+                            let views = vec![view.clone(), view];
+                            let mut got = vec![0.0f32; d];
+                            engine.average_views_into(&views, &mut got);
+                            let owned = vec![msg.clone(), msg];
+                            let mut want = vec![0.0f32; d];
+                            AggEngine::sequential().average_into(&owned, &mut want);
+                            assert!(
+                                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                                "mixed-batch fold corrupted (thread {tid})"
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("interleaved encode + view-fold batches deadlocked the pool");
+        driver.join().unwrap();
+    }
+
+    #[test]
+    fn panic_propagates_under_mixed_ingest_load() {
+        // A panicking fold job must re-raise on its caller — not on a
+        // bystander thread running encode batches on the same global
+        // pool — and the pool must stay serviceable afterwards.
+        use crate::agg::{AggEngine, FoldSource};
+        use crate::compress::{Compressor, ScaledSign, ShardedCompressor};
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+
+        struct Bomb {
+            d: usize,
+        }
+
+        impl FoldSource for Bomb {
+            fn dim(&self) -> usize {
+                self.d
+            }
+
+            fn add_scaled_into(&self, _out: &mut [f32], _s: f32) {
+                panic!("bomb fold (sequential)");
+            }
+
+            fn add_scaled_range(&self, start: usize, _out: &mut [f32], _s: f32) {
+                // panic in exactly one range job of the batch
+                if start > 0 {
+                    panic!("bomb fold (range {start})");
+                }
+            }
+
+            fn shard_boundaries(&self) -> Vec<usize> {
+                Vec::new()
+            }
+        }
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let bg_stop = Arc::clone(&stop);
+        let bg = std::thread::spawn(move || {
+            let d = ShardedCompressor::MIN_PARALLEL_DIM + 256;
+            let mut x = vec![0.0f32; d];
+            crate::util::rng::Rng::new(0xB6).fill_normal(&mut x, 1.0);
+            let mut comp = ShardedCompressor::new(Box::new(ScaledSign::new()), 8192, 3);
+            let mut n = 0u32;
+            while !bg_stop.load(Ordering::Relaxed) {
+                let msg = comp.compress(&x);
+                assert_eq!(msg.dim(), d);
+                n += 1;
+                if n > 10_000 {
+                    break; // safety valve; the foreground finishes long before
+                }
+            }
+        });
+
+        let engine = AggEngine::new(4).with_min_parallel_dim(1);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let bombs = [Bomb { d: 64 }];
+            let mut out = vec![0.0f32; 64];
+            engine.add_scaled_sources_into(&bombs, &mut out, 1.0);
+        }));
+        assert!(caught.is_err(), "fold panic was swallowed under mixed load");
+
+        stop.store(true, Ordering::Relaxed);
+        bg.join().expect("bystander encode thread caught someone else's panic");
+
+        // the global pool still executes fresh batches
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                });
+                f
+            })
+            .collect();
+        WorkPool::global().run_scoped(jobs);
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
     fn global_pool_is_shared() {
         let a = WorkPool::global() as *const _;
         let b = WorkPool::global() as *const _;

@@ -1,0 +1,183 @@
+//! Cross-strategy trajectory golden tests for the zero-copy ingest
+//! path: every strategy server must produce **bit-for-bit** the same
+//! seeded end-to-end trajectory (loss / grad-norm / test metrics /
+//! cum_bits stream) across the full ingest matrix —
+//!
+//!   {lockstep, threaded} × {owned, zero-copy views} × {server_threads 0, 4}
+//!
+//! — and that shared digest is pinned against a committed fixture
+//! (`tests/golden_trajectories.txt`) so a future change that shifts the
+//! math *uniformly* across all configurations still fails loudly.
+//!
+//! Blessing: digests hash exact f32/f64 bit patterns, which are stable
+//! per target/libm but not across platforms (the transcendentals in the
+//! logreg task differ between libms), so fixture entries are keyed
+//! `strategy@os-arch` and only the current platform's entries are ever
+//! checked or written. When the current platform has no committed digest
+//! yet (or with `CDADAM_BLESS=1`), the test appends the computed digests
+//! to the fixture and reports what it blessed — commit the updated file
+//! to arm the cross-time pin for that platform. Until then the
+//! cross-configuration matrix above is the enforced gate (it is the
+//! acceptance criterion; the committed pin additionally catches changes
+//! that shift the math uniformly across every configuration).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::{run_lockstep, run_threaded};
+use cdadam::metrics::RunLog;
+
+/// All seven strategy servers (every `ServerAlgo` in the tree).
+const STRATEGIES: [&str; 7] =
+    ["cdadam", "uncompressed_amsgrad", "naive", "ef", "ef21", "onebit_adam", "cdadam_server"];
+
+fn mix(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// FNV-1a digest of the full record stream: rounds, loss/grad-norm/test
+/// metric bit patterns, and cumulative bits. wall_ms and epoch are
+/// excluded (timing noise / derived field).
+fn digest(log: &RunLog) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    mix(&mut h, log.records.len() as u64);
+    for r in &log.records {
+        mix(&mut h, r.round as u64);
+        mix(&mut h, r.train_loss.to_bits());
+        mix(&mut h, r.grad_norm.to_bits());
+        mix(&mut h, r.test_loss.to_bits());
+        mix(&mut h, r.test_acc.to_bits());
+        mix(&mut h, r.cum_bits);
+    }
+    h
+}
+
+/// The seeded small preset every golden run uses: quickstart logreg
+/// (d = 50) with sharded uplinks (4 blocks of 16) so zero-copy ingest
+/// exercises Sharded frames, short horizon for CI speed.
+fn base_cfg(strategy: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+    cfg.strategy = strategy.into();
+    cfg.rounds = 30;
+    cfg.eval_every = 10;
+    cfg.warmup_rounds = 5; // 1-bit Adam: freeze early (others ignore it)
+    cfg.shard_size = 16;
+    cfg.compress_threads = 2;
+    // explicit baseline mode — the env default must not leak in
+    cfg.zero_copy_ingest = false;
+    cfg.server_threads = 0;
+    cfg.server_min_parallel_dim = 0;
+    cfg
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden_trajectories.txt")
+}
+
+/// Fixture key for one strategy on the current build platform —
+/// digests from other platforms are left untouched and never compared.
+fn fixture_key(strategy: &str) -> String {
+    format!("{strategy}@{}-{}", std::env::consts::OS, std::env::consts::ARCH)
+}
+
+fn read_fixture() -> BTreeMap<String, u64> {
+    let mut map = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(fixture_path()) else {
+        return map;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, hex)) = line.split_once(char::is_whitespace) {
+            if let Ok(v) = u64::from_str_radix(hex.trim().trim_start_matches("0x"), 16) {
+                map.insert(name.to_string(), v);
+            }
+        }
+    }
+    map
+}
+
+fn write_fixture(map: &BTreeMap<String, u64>) {
+    let mut out = String::from(
+        "# Golden trajectory digests (FNV-1a over the seeded record stream).\n\
+         # One line per strategy and platform: <strategy>@<os>-<arch> <digest-hex>.\n\
+         # Digests are target/libm specific, so each platform pins its own rows;\n\
+         # regenerate the current platform's with\n\
+         #   CDADAM_BLESS=1 cargo test --test trajectory_golden\n\
+         # and commit the updated file (see the module docs).\n",
+    );
+    for (k, v) in map {
+        let _ = writeln!(out, "{k} {v:016x}");
+    }
+    if let Err(e) = std::fs::write(fixture_path(), out) {
+        eprintln!("could not write golden fixture: {e}");
+    }
+}
+
+#[test]
+fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
+    let bless_all = std::env::var("CDADAM_BLESS").map(|v| v == "1").unwrap_or(false);
+    let mut committed = read_fixture();
+    let mut blessed = Vec::new();
+
+    for strategy in STRATEGIES {
+        // baseline: lockstep, owned ingest, sequential server fold —
+        // the historical path verbatim.
+        let baseline = digest(&run_lockstep(&base_cfg(strategy)).unwrap());
+
+        for threaded in [false, true] {
+            for zero_copy in [false, true] {
+                for server_threads in [0usize, 4] {
+                    let mut cfg = base_cfg(strategy);
+                    cfg.zero_copy_ingest = zero_copy;
+                    cfg.server_threads = server_threads;
+                    // force the pool path at d = 50, where the default
+                    // cutover would keep the fold sequential
+                    cfg.server_min_parallel_dim = usize::from(server_threads > 0);
+                    cfg.threaded = threaded;
+                    let log = if threaded {
+                        run_threaded(&cfg).unwrap()
+                    } else {
+                        run_lockstep(&cfg).unwrap()
+                    };
+                    assert_eq!(
+                        digest(&log),
+                        baseline,
+                        "{strategy}: trajectory diverged (threaded={threaded}, \
+                         zero_copy_ingest={zero_copy}, server_threads={server_threads})"
+                    );
+                }
+            }
+        }
+
+        let key = fixture_key(strategy);
+        match committed.get(&key).copied() {
+            Some(want) if !bless_all => assert_eq!(
+                baseline, want,
+                "{key}: trajectory digest {baseline:016x} != committed {want:016x} — \
+                 the seeded end-to-end math changed; if intentional, re-bless with \
+                 CDADAM_BLESS=1 and commit tests/golden_trajectories.txt"
+            ),
+            _ => {
+                committed.insert(key, baseline);
+                blessed.push(strategy);
+            }
+        }
+    }
+
+    if !blessed.is_empty() {
+        write_fixture(&committed);
+        eprintln!(
+            "blessed {} golden trajectory digest(s) ({}) — commit tests/golden_trajectories.txt",
+            blessed.len(),
+            blessed.join(", ")
+        );
+    }
+}
