@@ -1,0 +1,158 @@
+//! Pipelined vs unpipelined server round loop at model dimension:
+//! the staged [`PipelineServer`] engine (recv → parse → fold →
+//! broadcast, recv stage running ahead of the fold cursor) against the
+//! historical lockstep-per-round loop (`depth = 1`), at d = 2²⁰ for
+//! n = 8 and n = 32 round-synchronous producers doing real compression
+//! work per round.
+//!
+//! What the overlap buys: producer sends are staggered (n producers
+//! share a few cores, so frames arrive in waves), and at `depth ≥ 2`
+//! the fold stage ingests uplink i the moment it lands while uplinks
+//! i+1..n are still being compressed — the serial loop instead waits
+//! for the whole round before folding anything. The timed quantity is
+//! the end-to-end wall clock of the full run (producers + server), so
+//! the speedup column is exactly the fold latency the pipeline hides.
+//!
+//! Depth is a scheduling knob, never a math knob: worker 0 digests
+//! every broadcast it receives and the run asserts all modes produce
+//! bit-identical downlink streams.
+//!
+//! ```bash
+//! cargo bench --bench pipeline_throughput             # d = 2^20, n = 8/32
+//! cargo bench --bench pipeline_throughput -- --n 16 --rounds 4 --quick
+//! ```
+
+use cdadam::comm::{topology, wire, UplinkFrame};
+use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::pipeline::PipelineServer;
+use cdadam::util::args::Args;
+use cdadam::util::timer::Timer;
+
+/// FNV-1a over a byte stream (same mix the golden tests use).
+fn mix_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// One full run: n round-synchronous producers compress-and-send real
+/// frames over metered links while a strategy server consumes them
+/// through the pipeline engine at the given depth. Returns (total wall
+/// ms, digest of worker 0's downlink stream).
+fn run_mode(
+    depth: usize,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    shard: usize,
+    server_threads: usize,
+    pin_shards: bool,
+) -> (f64, u64) {
+    let mut cfg = ExperimentConfig::preset("quickstart").expect("preset");
+    cfg.strategy = "naive".into();
+    cfg.shard_size = shard;
+    cfg.compress_threads = 2;
+    cfg.server_threads = server_threads;
+    cfg.pin_shards = pin_shards;
+    let strat = cfg.build_strategy().expect("strategy");
+    let mut server = strat.make_server(d, n);
+
+    let (workers, servers, _um, _dm) = topology(n);
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| {
+            std::thread::spawn(move || {
+                let mut comp = ShardedCompressor::new(Box::new(ScaledSign::new()), shard, 2)
+                    .fork_stream(i as u64);
+                let mut g = vec![0.0f32; d];
+                let mut digest = 0xcbf2_9ce4_8422_2325u64;
+                for t in 1..=rounds {
+                    // deterministic per-(worker, round) "gradient": the
+                    // compute the server's fold hides behind
+                    for (j, gj) in g.iter_mut().enumerate() {
+                        *gj = ((i * 31 + j) % 97) as f32 * 0.13 - 6.0 + t as f32 * 0.01;
+                    }
+                    let c = comp.compress(&g);
+                    let fb = wire::encode_frame(t as u64, i as u32, &c).expect("encode");
+                    link.up.send(UplinkFrame::Bytes(fb)).expect("uplink closed");
+                    let down = link.down.recv().expect("downlink closed");
+                    assert_eq!(down.round, t as u64);
+                    if i == 0 {
+                        let bytes =
+                            wire::encode_parts(t as u64, 0, &down.payload).expect("encode down");
+                        mix_bytes(&mut digest, &bytes);
+                    }
+                }
+                digest
+            })
+        })
+        .collect();
+
+    let timer = Timer::start();
+    PipelineServer::new(rounds, depth).run(server.as_mut(), servers).expect("server loop");
+    let ms = timer.elapsed_ms();
+
+    let mut digest = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("producer panicked");
+        if i == 0 {
+            digest = got;
+        }
+    }
+    (ms, digest)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let d: usize = args.usize("d", 1 << 20).unwrap();
+    let shard: usize = args.usize("shard", 65_536).unwrap();
+    let rounds: usize = args.usize("rounds", if args.flag("quick") { 3 } else { 6 }).unwrap();
+    let ns: Vec<usize> = match args.get("n") {
+        Some(v) => vec![v.parse().expect("--n integer")],
+        None => vec![8, 32],
+    };
+
+    println!("### pipeline_throughput (d = {d}, shard = {shard}, {rounds} rounds, wall clock)");
+
+    for &n in &ns {
+        println!(
+            "\n--- n = {n} producers ---\n{:<44} {:>10}  {:>11}  {:>7}",
+            "server round loop", "total", "per round", "speedup"
+        );
+        // (label, depth, server_threads, pin_shards)
+        let modes: [(&str, usize, usize, bool); 3] = [
+            ("serial (depth 1)", 1, 0, false),
+            ("pipelined (depth 2)", 2, 0, false),
+            ("pipelined (depth 2) + pinned pool fold", 2, 2, true),
+        ];
+        let mut base_ms = None;
+        let mut base_digest = None;
+        for (label, depth, threads, pin) in modes {
+            let (ms, digest) = run_mode(depth, d, n, rounds, shard, threads, pin);
+            // bit-equality: scheduling must never change the broadcast
+            // stream worker 0 observed
+            match base_digest {
+                None => base_digest = Some(digest),
+                Some(want) => assert_eq!(
+                    digest, want,
+                    "{label}: pipelined round loop changed the math (n = {n})"
+                ),
+            }
+            let speedup = match base_ms {
+                None => {
+                    base_ms = Some(ms);
+                    "  1.00x".to_string()
+                }
+                Some(b) => format!("{:>6.2}x", b / ms),
+            };
+            println!(
+                "{label:<44} {ms:>8.1} ms  {:>8.1} ms  {speedup}",
+                ms / rounds as f64
+            );
+        }
+    }
+    println!("\nsanity: downlink streams bit-identical across all modes ✓");
+}

@@ -12,7 +12,11 @@
 //! slice of the output — no locks, no per-thread partial buffers to
 //! reduce, no allocation. Jobs run on the resident
 //! [`crate::util::workpool::WorkPool`], shared with the encode side, so
-//! neither path pays per-round thread spawns.
+//! neither path pays per-round thread spawns. With
+//! [`AggEngine::with_pinned_ranges`] each range job additionally names
+//! a stable pool lane (range k → worker k), keeping a shard range's
+//! slice of the output and its decode windows hot in one core's cache
+//! across rounds.
 //!
 //! ## Bit-exactness
 //!
@@ -103,6 +107,29 @@ impl Ingest<'_> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Borrow uplink `i` in whichever form this round carries — the
+    /// whole-round convenience wrappers iterate this to feed
+    /// [`crate::algo::ServerAlgo::ingest_one`].
+    pub fn get(&self, i: usize) -> UplinkRef<'_> {
+        match self {
+            Ingest::Owned(m) => UplinkRef::Owned(&m[i]),
+            Ingest::Views(v) => UplinkRef::View(&v[i]),
+        }
+    }
+}
+
+/// One uplink of one round, borrowed in whichever form the recv path
+/// produced it. This is the unit the pipelined round engine feeds to
+/// [`crate::algo::ServerAlgo::ingest_one`] as frames arrive — folding
+/// uplink `i` while uplinks `i+1..n` are still in flight is what lets
+/// the server hide its fold latency behind the workers' staggered
+/// sends. Folding per-uplink is bit-identical to folding the whole
+/// round at once: per output element the add chain is the same
+/// (message 0, then 1, … then n−1), only its scheduling changes.
+pub enum UplinkRef<'a> {
+    Owned(&'a CompressedMsg),
+    View(&'a PayloadView<'a>),
 }
 
 /// Parallel (or sequential) aggregator over compressed uplinks.
@@ -114,6 +141,13 @@ impl Ingest<'_> {
 pub struct AggEngine {
     threads: usize,
     min_parallel_dim: usize,
+    /// Pin each range job to a stable work-pool lane (`pin_shards`
+    /// knob): range k always targets pool worker k, so a shard range's
+    /// output slice and decode window stay hot in one core's cache
+    /// across rounds. Off = the symmetric shared-queue pool verbatim.
+    /// A scheduling preference only — never changes which jobs run or
+    /// what they compute (see `util::workpool`'s steal backstop).
+    pin_ranges: bool,
 }
 
 impl AggEngine {
@@ -131,7 +165,19 @@ impl AggEngine {
     /// Engine folding on up to `threads` concurrent range jobs
     /// (0 ⇒ sequential).
     pub fn new(threads: usize) -> Self {
-        AggEngine { threads, min_parallel_dim: Self::MIN_PARALLEL_DIM }
+        AggEngine { threads, min_parallel_dim: Self::MIN_PARALLEL_DIM, pin_ranges: false }
+    }
+
+    /// Pin range jobs to stable work-pool lanes (the `pin_shards`
+    /// config knob). Purely a locality hint: the fold is bit-identical
+    /// either way.
+    pub fn with_pinned_ranges(mut self, pin: bool) -> Self {
+        self.pin_ranges = pin;
+        self
+    }
+
+    pub fn pinned_ranges(&self) -> bool {
+        self.pin_ranges
     }
 
     /// Override the parallel cutover dimension. Tests and benches use
@@ -198,21 +244,55 @@ impl AggEngine {
             return;
         }
         let cuts = self.partition(msgs, d);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(cuts.len() - 1);
+        let mut jobs: Vec<crate::util::workpool::PinnedJob<'_>> =
+            Vec::with_capacity(cuts.len() - 1);
         let mut rest = out;
         let mut off = 0;
-        for w in cuts.windows(2) {
+        for (k, w) in cuts.windows(2).enumerate() {
             let (lo, hi) = (w[0], w[1]);
             let (slice, tail) = rest.split_at_mut(hi - off);
             rest = tail;
             off = hi;
-            jobs.push(Box::new(move || {
-                for c in msgs {
-                    c.add_scaled_range(lo, slice, scale);
-                }
-            }));
+            // pinned mode: range k targets pool lane k every round (the
+            // partition is deterministic for a fixed layout, so the
+            // mapping is stable and the range's data stays cache-hot).
+            let target = if self.pin_ranges { Some(k) } else { None };
+            jobs.push((
+                target,
+                Box::new(move || {
+                    for c in msgs {
+                        c.add_scaled_range(lo, slice, scale);
+                    }
+                }),
+            ));
         }
-        WorkPool::global().run_scoped(jobs);
+        WorkPool::global().run_scoped_pinned(jobs);
+    }
+
+    /// out += scale · decode(up) — fold a single uplink in whichever
+    /// form it arrived. This is the unit step of the pipelined round
+    /// engine: strategy servers call it from
+    /// [`crate::algo::ServerAlgo::ingest_one`] as frames arrive, so the
+    /// fold of uplink i overlaps the recv of uplinks i+1..n. Same
+    /// kernels, same [`Self::uses_parallel_fold`] gate, and — because
+    /// the per-element add chain only ever depends on message order —
+    /// n calls of this are bit-identical to one whole-round fold.
+    ///
+    /// Cost note: above the parallel cutover this schedules one pool
+    /// batch per uplink instead of one per round. That is a deliberate
+    /// trade — a few µs of dispatch per message (mutex + condvar wake)
+    /// against the ~ms-scale fold it lets the pipelined server overlap
+    /// with recv, and it keeps the server-side fold at exactly one
+    /// implementation instead of a batched/incremental pair.
+    pub fn add_scaled_uplink_into(&self, up: &UplinkRef<'_>, out: &mut [f32], scale: f32) {
+        match up {
+            UplinkRef::Owned(m) => {
+                self.add_scaled_sources_into(std::slice::from_ref(*m), out, scale)
+            }
+            UplinkRef::View(v) => {
+                self.add_scaled_sources_into(std::slice::from_ref(*v), out, scale)
+            }
+        }
     }
 
     /// out = (1/n) Σ_i decode(msgs[i]) — the averaging fold every
@@ -357,6 +437,95 @@ mod tests {
                     "{name}: t={threads} diverged from sequential fold"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pinned_ranges_bit_identical_to_symmetric_pool() {
+        // pin_shards is a lane-targeting hint: for every compressor
+        // family the pinned fold must equal the symmetric-pool fold
+        // (and hence the sequential fold) to the bit.
+        let d = AggEngine::MIN_PARALLEL_DIM + 2048;
+        let n = 4;
+        let families: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()) as Box<dyn Compressor>)),
+            ("sparse", Box::new(|| Box::new(TopK::with_frac(0.01)) as Box<dyn Compressor>)),
+            (
+                "sharded",
+                Box::new(|| {
+                    Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 8192, 2))
+                        as Box<dyn Compressor>
+                }),
+            ),
+        ];
+        for (name, make) in &families {
+            let msgs = uplinks(make, d, n);
+            let want = seq_fold(&msgs, d, 1.0 / n as f32);
+            for threads in [2usize, 5] {
+                let pinned = AggEngine::new(threads).with_pinned_ranges(true);
+                assert!(pinned.pinned_ranges());
+                let mut got = vec![0.0f32; d];
+                // pinned lanes stay bit-identical across repeated rounds
+                // (the stable range→lane mapping is the whole point)
+                for _ in 0..3 {
+                    pinned.average_into(&msgs, &mut got);
+                    assert!(
+                        want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{name}: pinned fold t={threads} diverged from sequential"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_uplink_fold_matches_whole_round_fold() {
+        // the pipelined round engine folds one uplink at a time as
+        // frames arrive; n single-uplink folds must equal the one-shot
+        // whole-round fold to the bit, owned and view forms alike.
+        use crate::comm::wire::{encode_parts, FrameView};
+        let d = 20_000;
+        let n = 5;
+        let msgs = uplinks(
+            || -> Box<dyn Compressor> {
+                Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 4096, 2))
+            },
+            d,
+            n,
+        );
+        let frames: Vec<Vec<u8>> = msgs
+            .iter()
+            .enumerate()
+            .map(|(i, m)| encode_parts(1, i as u32, m).unwrap())
+            .collect();
+        let views: Vec<_> = frames.iter().map(|b| FrameView::parse(b).unwrap().payload).collect();
+        for threads in [0usize, 3] {
+            let engine = AggEngine::new(threads).with_min_parallel_dim(1);
+            let mut whole = vec![0.0f32; d];
+            engine.add_scaled_into(&msgs, &mut whole, 1.0 / n as f32);
+            let mut inc_owned = vec![0.0f32; d];
+            for m in &msgs {
+                engine.add_scaled_uplink_into(&UplinkRef::Owned(m), &mut inc_owned, 1.0 / n as f32);
+            }
+            let mut inc_view = vec![0.0f32; d];
+            for v in &views {
+                engine.add_scaled_uplink_into(&UplinkRef::View(v), &mut inc_view, 1.0 / n as f32);
+            }
+            assert!(
+                whole.iter().zip(&inc_owned).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "incremental owned fold diverged (t={threads})"
+            );
+            assert!(
+                whole.iter().zip(&inc_view).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "incremental view fold diverged (t={threads})"
+            );
+            // and Ingest::get hands back the same per-uplink references
+            let mut via_get = vec![0.0f32; d];
+            let ing = Ingest::Views(&views);
+            for i in 0..ing.len() {
+                engine.add_scaled_uplink_into(&ing.get(i), &mut via_get, 1.0 / n as f32);
+            }
+            assert!(whole.iter().zip(&via_get).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     }
 

@@ -20,7 +20,7 @@
 //! (server ĝ == mean of worker ĝ^{(i)}) holds exactly — tested below.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, Optimizer};
@@ -122,12 +122,16 @@ pub struct CdAdamServer {
 }
 
 impl ServerAlgo for CdAdamServer {
-    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        // folds straight from whichever form arrived — owned messages
-        // or zero-copy wire views; ĝ (the only cross-round state) is
-        // dense, so nothing needs materializing.
-        let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
+    fn ingest_one(&mut self, _round: usize, _index: usize, n: usize, up: &UplinkRef<'_>) {
+        // folds straight from whichever form arrived — owned message
+        // or zero-copy wire view; ĝ (the only cross-round state) is
+        // dense, so nothing needs materializing, and the running sum
+        // lets the pipelined engine fold uplink i while i+1..n are
+        // still in flight.
+        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
         self.enc.step(&self.ghat_agg)
     }
 }

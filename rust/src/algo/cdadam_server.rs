@@ -16,7 +16,7 @@
 //! number (the coordinator gives both sides the same schedule).
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, LrSchedule, Optimizer};
@@ -115,9 +115,11 @@ struct SsServer {
 }
 
 impl ServerAlgo for SsServer {
-    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
+    fn ingest_one(&mut self, _round: usize, _index: usize, n: usize, up: &UplinkRef<'_>) {
+        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, round: usize) -> CompressedMsg {
         if !self.initialized {
             // adopt the workers' initial params implicitly: server x starts
             // at 0 offset; workers apply deltas, so only Δ consistency

@@ -9,11 +9,10 @@
 //! mechanism behind EF's stalling gradient norm in Fig. 2.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 use crate::tensor;
-use crate::util::scratch::ScratchPool;
 
 /// Error-feedback AMSGrad (bidirectional).
 pub struct ErrorFeedback {
@@ -56,6 +55,7 @@ impl Strategy for ErrorFeedback {
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
             buf: vec![0.0; dim],
+            avg: vec![0.0; dim],
             agg: self.agg.clone(),
         })
     }
@@ -102,17 +102,26 @@ struct EfServer {
     delta: Vec<f32>,
     e: Vec<f32>,
     buf: Vec<f32>,
+    /// round-average accumulator: uplinks fold into it one frame at a
+    /// time (pipelined ingest), so it must live across `ingest_one`
+    /// calls — a resident field, zeroed at each round's first uplink.
+    avg: Vec<f32>,
     agg: AggEngine,
 }
 
 impl ServerAlgo for EfServer {
-    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        // the EF memory δ (cross-round state) is dense — the uplinks
-        // fold into a scratch average and are dropped, so views work
+    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        // the EF memory δ (cross-round state) is dense — each uplink
+        // folds into the running average and is dropped, so views work
         // without materialization.
-        let mut avg = ScratchPool::global().take(self.buf.len());
-        self.agg.average_ingest_into(uplinks, &mut avg);
-        ef_step(self.comp.as_mut(), &avg, &mut self.delta, &mut self.e, &mut self.buf)
+        if index == 0 {
+            self.avg.fill(0.0);
+        }
+        self.agg.add_scaled_uplink_into(up, &mut self.avg, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
+        ef_step(self.comp.as_mut(), &self.avg, &mut self.delta, &mut self.e, &mut self.buf)
     }
 }
 

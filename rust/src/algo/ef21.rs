@@ -8,7 +8,7 @@
 //! comm cost per round is identical by construction.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{Optimizer, SgdMomentum};
@@ -88,9 +88,11 @@ struct Ef21Server {
 }
 
 impl ServerAlgo for Ef21Server {
-    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        let inv = 1.0 / uplinks.len() as f32;
-        self.agg.add_scaled_ingest_into(uplinks, &mut self.ghat_agg, inv);
+    fn ingest_one(&mut self, _round: usize, _index: usize, n: usize, up: &UplinkRef<'_>) {
+        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
         self.enc.step(&self.ghat_agg)
     }
 }

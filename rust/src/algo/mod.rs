@@ -31,7 +31,7 @@ pub mod naive;
 pub mod onebit_adam;
 pub mod uncompressed;
 
-use crate::agg::Ingest;
+use crate::agg::{Ingest, UplinkRef};
 use crate::compress::CompressedMsg;
 
 /// Per-worker half of a strategy (owns uplink compression state and the
@@ -47,25 +47,53 @@ pub trait WorkerAlgo: Send {
 /// Server half of a strategy (owns aggregation + downlink compression
 /// state; never owns model parameters).
 ///
-/// Servers implement [`Self::round_ingest`], which consumes one round's
-/// uplinks in whichever form the recv path produced them — owned
-/// [`CompressedMsg`]s (historical path) or borrowed
+/// Servers implement the **incremental ingest pair**
+/// [`Self::ingest_one`] / [`Self::finish_round`]: the pipelined round
+/// engine ([`crate::coordinator::pipeline`]) feeds uplink i into the
+/// server the moment its frame arrives, so the fold of uplink i runs
+/// while uplinks i+1..n are still being computed and sent — the
+/// recv/decode-fold overlap the star topology otherwise serializes.
+/// Uplinks arrive in whichever form the recv path produced them —
+/// owned [`CompressedMsg`]s (historical path) or borrowed
 /// [`crate::comm::wire::PayloadView`]s over received byte frames (the
-/// zero-copy ingest path). No strategy server persists an uplink
-/// message across rounds (cross-round state — Markov replicas, EF
-/// memories — is dense), so every server folds views directly through
-/// its [`crate::agg::AggEngine`] and never materializes a message on
-/// the ingest side.
+/// zero-copy ingest path; see [`UplinkRef`]). No strategy server
+/// persists an uplink message across rounds (cross-round state —
+/// Markov replicas, EF memories — is dense), so every server folds
+/// uplinks directly through its [`crate::agg::AggEngine`] and never
+/// materializes a message on the ingest side.
+///
+/// ## Contract
+///
+/// Per round the engine calls `ingest_one` exactly once per worker, in
+/// worker order `index = 0..n-1` (n ≥ 1), then `finish_round` exactly
+/// once. Because every server's fold is an ordered per-element add
+/// chain, incremental ingestion is **bit-identical** to the
+/// whole-round [`Self::round_ingest`] wrapper — scheduling, never
+/// math (pinned end-to-end by the trajectory golden matrix).
 pub trait ServerAlgo: Send {
+    /// Fold uplink `index` of an `n`-worker round into server state.
+    fn ingest_one(&mut self, round: usize, index: usize, n: usize, up: &UplinkRef<'_>);
+
+    /// All n uplinks of `round` ingested: finish the round's
+    /// server-side math and produce the broadcast.
+    fn finish_round(&mut self, round: usize) -> CompressedMsg;
+
     /// Consume the n uplink messages of a round, produce the broadcast
     /// (the owned-message convenience form).
     fn round(&mut self, round: usize, uplinks: &[CompressedMsg]) -> CompressedMsg {
         self.round_ingest(round, &Ingest::Owned(uplinks))
     }
 
-    /// Ingest-form round: the single implementation point — both the
-    /// owned and the zero-copy recv paths land here.
-    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg;
+    /// Whole-round ingest: the convenience wrapper over the incremental
+    /// pair — both recv forms land on the same `ingest_one` calls the
+    /// pipelined engine makes one frame at a time.
+    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
+        let n = uplinks.len();
+        for i in 0..n {
+            self.ingest_one(round, i, n, &uplinks.get(i));
+        }
+        self.finish_round(round)
+    }
 }
 
 /// A strategy = factory for worker/server halves.

@@ -4,7 +4,7 @@
 //! shows flat-lining above the others.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 
@@ -74,8 +74,17 @@ struct NaiveServer {
 }
 
 impl ServerAlgo for NaiveServer {
-    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        self.agg.average_ingest_into(uplinks, &mut self.buf);
+    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        // the round average accumulates in place: zero at the round's
+        // first uplink, then ordered scaled adds — the same fill+fold
+        // the whole-round average ran, one uplink at a time.
+        if index == 0 {
+            self.buf.fill(0.0);
+        }
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
         self.comp.compress(&self.buf)
     }
 }

@@ -15,11 +15,10 @@
 //! warm-up term is what makes its per-bit curves lag CD-Adam in Fig. 1.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{Adam, Optimizer};
 use crate::tensor;
-use crate::util::scratch::ScratchPool;
 
 /// 1-bit Adam strategy.
 pub struct OneBitAdam {
@@ -77,6 +76,7 @@ impl Strategy for OneBitAdam {
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
             buf: vec![0.0; dim],
+            avg: vec![0.0; dim],
             agg: self.agg.clone(),
         })
     }
@@ -121,20 +121,28 @@ struct OneBitServer {
     delta: Vec<f32>,
     e: Vec<f32>,
     buf: Vec<f32>,
+    /// round-average accumulator, resident so the pipelined engine can
+    /// fold uplinks one frame at a time (zeroed at index 0).
+    avg: Vec<f32>,
     agg: AggEngine,
 }
 
 impl ServerAlgo for OneBitServer {
-    fn round_ingest(&mut self, round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        let mut avg = ScratchPool::global().take(self.buf.len());
-        self.agg.average_ingest_into(uplinks, &mut avg);
-        if round <= self.warmup {
-            // warm-up broadcasts the dense average; the message owns
-            // its vector, so detach the scratch buffer instead of
-            // copying it (same one-allocation profile as pre-pool).
-            return CompressedMsg::Dense(avg.into_vec());
+    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        if index == 0 {
+            self.avg.fill(0.0);
         }
-        for ((ei, &ai), &di) in self.e.iter_mut().zip(avg.iter()).zip(self.delta.iter()) {
+        self.agg.add_scaled_uplink_into(up, &mut self.avg, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, round: usize) -> CompressedMsg {
+        if round <= self.warmup {
+            // warm-up broadcasts the dense average (one d-vector copy
+            // per warm-up round, the same profile as the historical
+            // detach-the-scratch path).
+            return CompressedMsg::Dense(self.avg.clone());
+        }
+        for ((ei, &ai), &di) in self.e.iter_mut().zip(self.avg.iter()).zip(self.delta.iter()) {
             *ei = ai + di;
         }
         let c = self.comp.compress(&self.e);

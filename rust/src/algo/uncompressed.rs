@@ -3,7 +3,7 @@
 //! and the 32d·2T row of Table 2.
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
-use crate::agg::{AggEngine, Ingest};
+use crate::agg::{AggEngine, UplinkRef};
 use crate::compress::CompressedMsg;
 use crate::optim::{AmsGrad, Optimizer, SgdMomentum};
 
@@ -109,8 +109,14 @@ struct UncompressedServer {
 }
 
 impl ServerAlgo for UncompressedServer {
-    fn round_ingest(&mut self, _round: usize, uplinks: &Ingest<'_>) -> CompressedMsg {
-        self.agg.average_ingest_into(uplinks, &mut self.buf);
+    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        if index == 0 {
+            self.buf.fill(0.0);
+        }
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
         CompressedMsg::Dense(self.buf.clone())
     }
 }

@@ -34,6 +34,18 @@ fn truthy(v: &str) -> bool {
     ["1", "true", "yes", "on"].iter().any(|t| v.eq_ignore_ascii_case(t))
 }
 
+/// Positive-integer env override with a default — the CI lever that
+/// forces a numeric config default across a whole test run (e.g.
+/// `CDADAM_PIPELINE_DEPTH=2`). Unset, unparsable, or zero values keep
+/// the default, so a typo can never zero out a knob.
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(default)
+}
+
 /// What model/data the run trains.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Task {
@@ -89,6 +101,25 @@ pub struct ExperimentConfig {
     /// `CDADAM_ZERO_COPY_INGEST` env var flips the default so CI can
     /// force the view path across the whole test suite.
     pub zero_copy_ingest: bool,
+    /// Pipeline depth of the threaded server's staged round engine
+    /// ([`crate::coordinator::pipeline`]): how many rounds of parked
+    /// uplink frames the recv stage may run ahead of the fold cursor.
+    /// 1 (or 0) = the historical lockstep-per-round loop verbatim;
+    /// 2 = double buffering (round t+1's recv overlaps round t's
+    /// view-fold, and uplink i's fold overlaps uplink i+1's send).
+    /// A scheduling knob, never a math knob — trajectories, replica
+    /// hashes, and cum_bits are bit-identical at every depth (pinned by
+    /// the trajectory golden matrix). CLI `--pipeline-depth`; the
+    /// `CDADAM_PIPELINE_DEPTH` env var flips the default so CI can
+    /// force the pipelined path across the whole test suite.
+    pub pipeline_depth: usize,
+    /// Pin each server-fold shard range to a stable work-pool lane
+    /// ([`crate::agg::AggEngine::with_pinned_ranges`]) so a range's
+    /// slice of the aggregate stays hot in one core's cache across
+    /// rounds. Off = the symmetric shared-queue pool verbatim; on is a
+    /// locality hint only (bit-identical either way). CLI
+    /// `--pin-shards`; env `CDADAM_PIN_SHARDS`.
+    pub pin_shards: bool,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -124,6 +155,8 @@ impl Default for ExperimentConfig {
             server_threads: 0,
             server_min_parallel_dim: 0,
             zero_copy_ingest: env_flag("CDADAM_ZERO_COPY_INGEST"),
+            pipeline_depth: env_usize("CDADAM_PIPELINE_DEPTH", 1),
+            pin_shards: env_flag("CDADAM_PIN_SHARDS"),
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -219,6 +252,11 @@ impl ExperimentConfig {
                 cfg.shard_size = 65_536;
                 cfg.compress_threads = 4;
                 cfg.server_threads = 4;
+                // showcase the full server hot path: double-buffered
+                // pipelined rounds with cache-pinned shard ranges (both
+                // bit-identical scheduling knobs)
+                cfg.pipeline_depth = 2;
+                cfg.pin_shards = true;
             }
             other => bail!("unknown preset {other:?}"),
         }
@@ -243,6 +281,13 @@ impl ExperimentConfig {
         // CLI can override an env-forced default in either direction
         if let Some(v) = args.get("zero-copy-ingest") {
             self.zero_copy_ingest = truthy(v);
+        }
+        self.pipeline_depth = args.usize("pipeline-depth", self.pipeline_depth)?;
+        // same truthy/falsy contract as --zero-copy-ingest: a bare
+        // `--pin-shards` enables, an explicit falsy value is the way
+        // back from an env-forced default
+        if let Some(v) = args.get("pin-shards") {
+            self.pin_shards = truthy(v);
         }
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
@@ -297,7 +342,8 @@ impl ExperimentConfig {
         // the worker downlink decoders run range-parallel on the shared
         // work pool when `server_threads > 0` (0 = today's sequential
         // path, bit-for-bit — the engine never changes the math).
-        let mut agg = crate::agg::AggEngine::new(self.server_threads);
+        let mut agg =
+            crate::agg::AggEngine::new(self.server_threads).with_pinned_ranges(self.pin_shards);
         if self.server_min_parallel_dim > 0 {
             agg = agg.with_min_parallel_dim(self.server_min_parallel_dim);
         }
@@ -480,6 +526,39 @@ mod tests {
         let before = cfg2.zero_copy_ingest;
         cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
         assert_eq!(cfg2.zero_copy_ingest, before);
+    }
+
+    #[test]
+    fn pipeline_knobs_parse_and_reach_the_engine() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(
+            ["--pipeline-depth", "3", "--pin-shards"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.pipeline_depth, 3);
+        assert!(cfg.pin_shards);
+        // explicit falsy value turns pinning back off (the way back
+        // from an env-forced default)
+        for off in ["false", "0", "no", "off"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.pin_shards = true;
+            let args = Args::parse(["--pin-shards", off].iter().map(|s| s.to_string()));
+            cfg.apply_args(&args).unwrap();
+            assert!(!cfg.pin_shards, "--pin-shards {off} should disable");
+        }
+        // absent flags leave (env-derived) defaults untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let (d, p) = (cfg2.pipeline_depth, cfg2.pin_shards);
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.pipeline_depth, d);
+        assert_eq!(cfg2.pin_shards, p);
+    }
+
+    #[test]
+    fn large_d_preset_pipelines_and_pins() {
+        let cfg = ExperimentConfig::preset("large_d_sharded").unwrap();
+        assert_eq!(cfg.pipeline_depth, 2);
+        assert!(cfg.pin_shards);
     }
 
     #[test]

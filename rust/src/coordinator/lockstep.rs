@@ -12,10 +12,9 @@
 
 use anyhow::Result;
 
-use super::setup;
-use crate::agg::Ingest;
+use super::{pipeline, setup};
 use crate::algo::{ServerAlgo, WorkerAlgo};
-use crate::comm::wire;
+use crate::comm::{wire, UplinkFrame, WireMsg};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -44,7 +43,7 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
         let lr = sched.at(t - 1);
         grad_avg.fill(0.0);
         let mut loss_sum = 0.0f64;
-        let mut ups = Vec::with_capacity(n);
+        let mut frames: Vec<UplinkFrame> = Vec::with_capacity(n);
         let mut up_bits_w0 = 0u64;
         for (i, (w, e)) in workers.iter_mut().zip(s.engines.iter_mut()).enumerate() {
             let loss = e.loss_grad(&params, &mut grad);
@@ -54,28 +53,21 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
             if i == 0 {
                 up_bits_w0 = c.wire_bits();
             }
-            ups.push(c);
+            frames.push(if cfg.zero_copy_ingest {
+                // zero-copy ingest: serialize the uplink to its wire
+                // frame here so the fold stage validates the bytes once
+                // and folds a borrowed view — no owned message on the
+                // recv path. Bits are metered off the structured
+                // message above, so cum_bits is identical to the owned
+                // path (parity pinned in comm::wire).
+                UplinkFrame::Bytes(wire::encode_frame(t as u64, i as u32, &c)?)
+            } else {
+                UplinkFrame::Msg(WireMsg { round: t as u64, from: i as u32, payload: c })
+            });
         }
-        let down = if cfg.zero_copy_ingest {
-            // zero-copy ingest: serialize each uplink to its wire
-            // frame, validate once, and hand the server borrowed views
-            // — the server folds straight from the bytes and never
-            // materializes an owned message on the recv path. Bits are
-            // metered off the structured message above, so cum_bits is
-            // identical to the owned path (parity pinned in comm::wire).
-            let frames: Vec<Vec<u8>> = ups
-                .iter()
-                .enumerate()
-                .map(|(i, c)| wire::encode_parts(t as u64, i as u32, c))
-                .collect::<Result<_>>()?;
-            let views: Vec<wire::PayloadView> = frames
-                .iter()
-                .map(|b| wire::FrameView::parse(b).map(|f| f.payload))
-                .collect::<Result<_>>()?;
-            server.round_ingest(t, &Ingest::Views(&views))
-        } else {
-            server.round(t, &ups)
-        };
+        // the server-side round math is the pipeline engine's fold
+        // stage — one implementation shared with the threaded driver.
+        let down = pipeline::fold_round(server.as_mut(), t, &frames)?;
         let down_bits = down.wire_bits();
         // replica identity: apply through worker 0 only (see module docs)
         workers[0].apply_downlink(t, &down, &mut params, lr);

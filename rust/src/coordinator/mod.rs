@@ -12,8 +12,16 @@
 //!   over bit-metered mpsc links. Asserts the replica invariant instead
 //!   of assuming it. Trajectories are bit-identical to lockstep (tested
 //!   in `tests/coordinator.rs`).
+//!
+//! Both drivers run their server-side round math on the staged
+//! [`pipeline`] engine (recv → parse → fold → broadcast): the threaded
+//! server thread is a [`pipeline::PipelineServer`] whose recv stage may
+//! run ahead of the fold cursor (`pipeline_depth` knob; depth 1 = the
+//! historical lockstep-per-round loop), and lockstep calls the same
+//! [`pipeline::fold_round`] stage inline.
 
 pub mod lockstep;
+pub mod pipeline;
 pub mod setup;
 pub mod threaded;
 

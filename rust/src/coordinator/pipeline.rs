@@ -1,0 +1,576 @@
+//! Pipelined round engine: the server side of the round loop as
+//! explicit **stages** — recv → parse → fold → broadcast — with the
+//! recv stage allowed to run ahead of the fold cursor.
+//!
+//! ## Why
+//!
+//! The paper's star topology makes the server the serial chokepoint:
+//! the historical loop finished receiving *all* n compressed uplinks
+//! before any folding began, even though PR 3's zero-copy ingest made a
+//! buffered round just n parked [`FrameBytes`](crate::comm::FrameBytes)
+//! (one `Vec<u8>` per worker). Related systems (COMP-AMS,
+//! arXiv:2205.05632; Efficient-Adam, arXiv:2205.14473) treat server
+//! aggregation latency as the quantity to hide behind communication;
+//! this engine does exactly that, two ways:
+//!
+//! * **Within a round** (`depth ≥ 2`): worker sends are staggered — n
+//!   workers share a few cores, so uplinks arrive in waves. The fold
+//!   stage ingests uplink i ([`ServerAlgo::ingest_one`]) the moment its
+//!   frame arrives, while uplinks i+1..n are still being computed and
+//!   sent, hiding per-message parse+fold latency behind the stragglers.
+//! * **Across rounds** (`depth ≥ 2`): a dedicated recv-stage thread
+//!   keeps draining the links while the fold stage is busy, parking up
+//!   to `depth − 1` rounds' worth of `FrameBytes` in a bounded channel —
+//!   round t+1's recv overlaps round t's view-fold (double-buffering at
+//!   `depth = 2`).
+//!
+//! ## The stages
+//!
+//! * **recv** — drains one frame per worker link, in worker order, and
+//!   enforces the wire protocol (uniform frame mode per round, round
+//!   tags). At `depth 1` it runs inline on the server thread; at
+//!   `depth ≥ 2` it is its own thread feeding a bounded channel of
+//!   capacity `n·(depth − 1)` frames.
+//! * **parse** — validates a received byte frame once
+//!   ([`wire::FrameView::parse`]) and borrows a
+//!   [`PayloadView`](crate::comm::wire::PayloadView) from the parked
+//!   bytes; structured in-process messages skip it.
+//! * **fold** — feeds the uplink to the strategy server
+//!   ([`ServerAlgo::ingest_one`], worker order 0..n−1), then closes the
+//!   round with [`ServerAlgo::finish_round`].
+//! * **broadcast** — fans the downlink out as one `Arc`'d
+//!   [`Broadcast`] per link.
+//!
+//! ## Invariants
+//!
+//! * **Depth is a scheduling knob, never a math knob.** `depth = 1` is
+//!   the historical lockstep-per-round behavior: receive the whole
+//!   round, then fold it, on one thread. Any `depth ≥ 2` produces
+//!   bit-identical trajectories, replica hashes, and `cum_bits`,
+//!   because folds still run in worker order 0..n−1 per round and the
+//!   per-element add chain never changes (pinned by the trajectory
+//!   golden matrix across `{lockstep, threaded} × {depth 1, 2} ×
+//!   {pin_shards on, off}`).
+//! * **Pinning is beneath, not inside, the engine.** The `pin_shards`
+//!   knob lives in [`crate::agg::AggEngine`]: each shard-range job
+//!   names a stable [`crate::util::workpool::WorkPool`] lane so a
+//!   range's data stays hot in one core's cache across rounds. The
+//!   pipeline is oblivious to it — another scheduling-only layer.
+//! * **Errors are named, never panics.** A corrupt self-produced
+//!   frame, mixed frame modes in a round, a round-tag mismatch, or a
+//!   worker vanishing mid-run all surface as [`PipelineError`]
+//!   variants; the driver distinguishes protocol faults (server-side
+//!   diagnostics) from disconnects (whose root cause is the worker's
+//!   own failure) when choosing what to report.
+//!
+//! Both coordinators run on this engine: the threaded driver's server
+//! thread is [`PipelineServer::run`]; the lockstep driver calls the
+//! same [`fold_round`] stage directly (it has no links to receive
+//! from), so the server-side round math has exactly one implementation.
+
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+use crate::agg::UplinkRef;
+use crate::algo::ServerAlgo;
+use crate::comm::{wire, Broadcast, MeteredReceiver, MeteredSender, ServerLink, UplinkFrame};
+use crate::compress::CompressedMsg;
+
+/// Everything that can go wrong in the server-side round loop, as a
+/// named error instead of a panic or a silent return (the driver turns
+/// these into clean diagnostics).
+#[derive(Clone, Debug)]
+pub enum PipelineError {
+    /// A worker's uplink closed before the run's last round — worker
+    /// death, distinct from the clean end-of-run link teardown.
+    WorkerDisconnected { worker: usize, round: usize },
+    /// A self-produced uplink frame failed wire validation — a codec
+    /// bug, reported with the validator's detail.
+    CorruptFrame { worker: usize, round: usize, detail: String },
+    /// One round mixed structured messages and serialized bytes — the
+    /// coordinator sets one mode per run.
+    MixedFrameModes { worker: usize, round: usize },
+    /// An uplink frame carried the wrong round tag.
+    RoundMismatch { worker: usize, round: usize, got: u64 },
+    /// A worker's downlink closed while broadcasting (the worker died
+    /// between its send and its recv).
+    DownlinkClosed { worker: usize, round: usize },
+    /// A pipeline stage thread died without reporting a cause.
+    StageDied { stage: &'static str },
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::WorkerDisconnected { worker, round } => write!(
+                f,
+                "worker {worker} disconnected during round {round} (unexpected: the run had \
+                 rounds left)"
+            ),
+            PipelineError::CorruptFrame { worker, round, detail } => write!(
+                f,
+                "corrupt self-produced uplink frame from worker {worker} in round {round}: \
+                 {detail}"
+            ),
+            PipelineError::MixedFrameModes { worker, round } => write!(
+                f,
+                "mixed uplink frame modes in round {round}: worker {worker} switched between \
+                 structured messages and serialized bytes"
+            ),
+            PipelineError::RoundMismatch { worker, round, got } => write!(
+                f,
+                "uplink round tag mismatch from worker {worker}: expected round {round}, frame \
+                 says {got}"
+            ),
+            PipelineError::DownlinkClosed { worker, round } => {
+                write!(f, "downlink to worker {worker} closed while broadcasting round {round}")
+            }
+            PipelineError::StageDied { stage } => write!(f, "pipeline {stage} stage died"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+impl PipelineError {
+    /// Protocol faults are server-side diagnoses (corruption, mixed
+    /// modes, bad round tags) that the driver should surface verbatim;
+    /// the rest are disconnects whose root cause is usually the
+    /// worker's own failure, reported second.
+    pub fn is_protocol_fault(&self) -> bool {
+        matches!(
+            self,
+            PipelineError::CorruptFrame { .. }
+                | PipelineError::MixedFrameModes { .. }
+                | PipelineError::RoundMismatch { .. }
+        )
+    }
+}
+
+/// Which form this round's uplinks arrived in (must be uniform).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FrameMode {
+    Structured,
+    Bytes,
+}
+
+/// The staged server-side round loop. Owns the recv → parse → fold →
+/// broadcast sequence for a whole run; see the module docs for the
+/// stage and depth semantics.
+pub struct PipelineServer {
+    rounds: usize,
+    depth: usize,
+}
+
+impl PipelineServer {
+    /// A server loop for `rounds` rounds at the given pipeline depth
+    /// (clamped to ≥ 1; `1` = the historical lockstep-per-round loop).
+    pub fn new(rounds: usize, depth: usize) -> Self {
+        PipelineServer { rounds, depth: depth.max(1) }
+    }
+
+    /// Run the full server side of a training run over the given links.
+    /// Returns when all rounds are broadcast, or with the first named
+    /// error once the loop cannot continue.
+    pub fn run(
+        &self,
+        server: &mut dyn ServerAlgo,
+        links: Vec<ServerLink>,
+    ) -> Result<(), PipelineError> {
+        let (ups, downs): (Vec<_>, Vec<_>) =
+            links.into_iter().map(|l| (l.up, l.down)).unzip();
+        if self.depth <= 1 {
+            return self.run_serial(server, &ups, &downs);
+        }
+        self.run_streaming(server, ups, downs)
+    }
+
+    /// depth = 1: the historical loop, verbatim — receive the whole
+    /// round, then parse+fold it, then broadcast, on one thread.
+    fn run_serial(
+        &self,
+        server: &mut dyn ServerAlgo,
+        ups: &[MeteredReceiver<UplinkFrame>],
+        downs: &[MeteredSender<Broadcast>],
+    ) -> Result<(), PipelineError> {
+        let n = ups.len();
+        for t in 1..=self.rounds {
+            let mut frames = Vec::with_capacity(n);
+            for (i, up) in ups.iter().enumerate() {
+                let frame = up
+                    .recv()
+                    .map_err(|_| PipelineError::WorkerDisconnected { worker: i, round: t })?;
+                frames.push(frame);
+            }
+            let down = Arc::new(fold_round(server, t, &frames)?);
+            broadcast_round(downs, t, &down)?;
+        }
+        Ok(())
+    }
+
+    /// depth ≥ 2: a recv-stage thread drains the links ahead of the
+    /// fold cursor; the fold stage ingests each frame as it arrives
+    /// (recv of uplink i+1 — and of round t+1 — overlaps the
+    /// parse+fold of what is already here).
+    fn run_streaming(
+        &self,
+        server: &mut dyn ServerAlgo,
+        ups: Vec<MeteredReceiver<UplinkFrame>>,
+        downs: Vec<MeteredSender<Broadcast>>,
+    ) -> Result<(), PipelineError> {
+        let n = ups.len();
+        let rounds = self.rounds;
+        // the parked-frame bound: the recv stage may run up to
+        // depth − 1 whole rounds of FrameBytes ahead of the fold stage
+        // (depth 2 = classic double buffering).
+        let cap = (n * (self.depth - 1)).max(1);
+        let (tx, rx) = sync_channel::<Result<UplinkFrame, PipelineError>>(cap);
+        let recv_stage = std::thread::Builder::new()
+            .name("pipeline-recv".into())
+            .spawn(move || {
+                'run: for t in 1..=rounds {
+                    for (i, up) in ups.iter().enumerate() {
+                        let item = up.recv().map_err(|_| PipelineError::WorkerDisconnected {
+                            worker: i,
+                            round: t,
+                        });
+                        let dead = item.is_err();
+                        if tx.send(item).is_err() || dead {
+                            // fold stage gone, or this link is — either
+                            // way the run is over for the recv stage.
+                            break 'run;
+                        }
+                    }
+                }
+            })
+            .map_err(|_| PipelineError::StageDied { stage: "recv" })?;
+
+        // fold + broadcast stages, on the server thread.
+        let result: Result<(), PipelineError> = (|| {
+            for t in 1..=rounds {
+                let mut mode = None;
+                for i in 0..n {
+                    let frame = rx
+                        .recv()
+                        .map_err(|_| PipelineError::StageDied { stage: "recv" })??;
+                    ingest_frame(server, t, i, n, &frame, &mut mode)?;
+                }
+                let down = Arc::new(server.finish_round(t));
+                broadcast_round(&downs, t, &down)?;
+            }
+            Ok(())
+        })();
+        // Unwind in dependency order: dropping the downlinks first
+        // unblocks any worker parked on its downlink recv, which lets
+        // the workers exit and close their uplinks, which unblocks the
+        // recv stage — so the join below cannot deadlock.
+        drop(downs);
+        drop(rx);
+        let joined = recv_stage.join();
+        match result {
+            Ok(()) => joined.map_err(|_| PipelineError::StageDied { stage: "recv" }),
+            err => err,
+        }
+    }
+}
+
+/// The parse+fold stage for one round of already-received frames — the
+/// single server-side round implementation shared by the lockstep
+/// driver (which has no links to receive from) and the depth-1 serial
+/// loop. Ingests frames in worker order and closes the round.
+pub fn fold_round(
+    server: &mut dyn ServerAlgo,
+    round: usize,
+    frames: &[UplinkFrame],
+) -> Result<CompressedMsg, PipelineError> {
+    let n = frames.len();
+    let mut mode = None;
+    for (i, frame) in frames.iter().enumerate() {
+        ingest_frame(server, round, i, n, frame, &mut mode)?;
+    }
+    Ok(server.finish_round(round))
+}
+
+/// Parse (if serialized) and fold a single uplink frame, enforcing the
+/// round tag and the uniform-mode protocol.
+fn ingest_frame(
+    server: &mut dyn ServerAlgo,
+    round: usize,
+    i: usize,
+    n: usize,
+    frame: &UplinkFrame,
+    mode: &mut Option<FrameMode>,
+) -> Result<(), PipelineError> {
+    if frame.round() != round as u64 {
+        return Err(PipelineError::RoundMismatch { worker: i, round, got: frame.round() });
+    }
+    let this = match frame {
+        UplinkFrame::Msg(_) => FrameMode::Structured,
+        UplinkFrame::Bytes(_) => FrameMode::Bytes,
+    };
+    match *mode {
+        None => *mode = Some(this),
+        Some(m) if m != this => {
+            return Err(PipelineError::MixedFrameModes { worker: i, round })
+        }
+        Some(_) => {}
+    }
+    match frame {
+        UplinkFrame::Msg(m) => server.ingest_one(round, i, n, &UplinkRef::Owned(&m.payload)),
+        UplinkFrame::Bytes(fb) => {
+            // zero-copy ingest: validate the received bytes once and
+            // fold a borrowed view straight into the server's engine —
+            // no CompressedMsg materialization on the recv path. The
+            // frames are self-produced, so a parse failure is a codec
+            // bug; it fails the round loudly, as a named error.
+            let fv = wire::FrameView::parse(&fb.bytes).map_err(|e| {
+                PipelineError::CorruptFrame { worker: i, round, detail: e.to_string() }
+            })?;
+            if fv.round != round as u64 {
+                return Err(PipelineError::RoundMismatch { worker: i, round, got: fv.round });
+            }
+            server.ingest_one(round, i, n, &UplinkRef::View(&fv.payload));
+        }
+    }
+    Ok(())
+}
+
+/// The broadcast stage: one `Arc`'d payload fanned out to every link —
+/// n refcount bumps instead of n deep clones of the downlink message
+/// (each link still meters the full serialized size).
+fn broadcast_round(
+    downs: &[MeteredSender<Broadcast>],
+    round: usize,
+    payload: &Arc<CompressedMsg>,
+) -> Result<(), PipelineError> {
+    for (i, link) in downs.iter().enumerate() {
+        link.send(Broadcast { round: round as u64, payload: Arc::clone(payload) })
+            .map_err(|_| PipelineError::DownlinkClosed { worker: i, round })?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::AggEngine;
+    use crate::comm::{topology, FrameBytes, WireMsg, WorkerLink};
+    use crate::compress::{Compressor, ScaledSign};
+
+    /// Minimal recording server: averages uplinks densely and logs the
+    /// exact (round, index, n) ingest order, so tests can pin the
+    /// engine's worker-order contract at any depth.
+    struct Recorder {
+        calls: Vec<(usize, usize, usize)>,
+        sum: Vec<f32>,
+    }
+
+    impl Recorder {
+        fn new(d: usize) -> Self {
+            Recorder { calls: Vec::new(), sum: vec![0.0; d] }
+        }
+    }
+
+    impl ServerAlgo for Recorder {
+        fn ingest_one(&mut self, round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+            self.calls.push((round, index, n));
+            if index == 0 {
+                self.sum.fill(0.0);
+            }
+            AggEngine::sequential().add_scaled_uplink_into(up, &mut self.sum, 1.0 / n as f32);
+        }
+
+        fn finish_round(&mut self, _round: usize) -> CompressedMsg {
+            CompressedMsg::Dense(self.sum.clone())
+        }
+    }
+
+    /// Spawn simple round-synchronous workers over the links: send a
+    /// deterministic uplink, await the broadcast, repeat.
+    fn spawn_workers(
+        links: Vec<WorkerLink>,
+        rounds: usize,
+        d: usize,
+        bytes_mode: bool,
+    ) -> Vec<std::thread::JoinHandle<Vec<f32>>> {
+        links
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    let mut comp = ScaledSign::new().fork_stream(i as u64);
+                    let mut last = Vec::new();
+                    for t in 1..=rounds {
+                        let g: Vec<f32> =
+                            (0..d).map(|j| ((i + 1) * (j + 1)) as f32 * t as f32).collect();
+                        let c = comp.compress(&g);
+                        let frame = if bytes_mode {
+                            UplinkFrame::Bytes(
+                                wire::encode_frame(t as u64, i as u32, &c).unwrap(),
+                            )
+                        } else {
+                            UplinkFrame::Msg(WireMsg {
+                                round: t as u64,
+                                from: i as u32,
+                                payload: c,
+                            })
+                        };
+                        link.up.send(frame).unwrap();
+                        let down = link.down.recv().unwrap();
+                        assert_eq!(down.round, t as u64);
+                        let mut buf = vec![0.0f32; d];
+                        down.payload.decode_into(&mut buf);
+                        last = buf;
+                    }
+                    last
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn depths_agree_bit_for_bit_and_ingest_in_worker_order() {
+        let (d, n, rounds) = (64usize, 3usize, 5usize);
+        for bytes_mode in [false, true] {
+            let mut finals: Vec<Vec<f32>> = Vec::new();
+            for depth in [1usize, 2, 3] {
+                let (workers, servers, _um, _dm) = topology(n);
+                let handles = spawn_workers(workers, rounds, d, bytes_mode);
+                let mut server = Recorder::new(d);
+                PipelineServer::new(rounds, depth).run(&mut server, servers).unwrap();
+                // ingest order: (1,0,n), (1,1,n), ... (rounds,n-1,n)
+                let want: Vec<(usize, usize, usize)> = (1..=rounds)
+                    .flat_map(|t| (0..n).map(move |i| (t, i, n)))
+                    .collect();
+                assert_eq!(server.calls, want, "depth {depth} broke the ingest order");
+                let mut outs: Vec<Vec<f32>> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                // every worker decoded the same final broadcast
+                for w in &outs[1..] {
+                    assert_eq!(&outs[0], w);
+                }
+                finals.push(outs.swap_remove(0));
+            }
+            for f in &finals[1..] {
+                assert!(
+                    finals[0].iter().zip(f.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "pipeline depth changed the math (bytes_mode={bytes_mode})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fold_round_matches_round_ingest() {
+        // the shared fold stage is the same math as the whole-round
+        // convenience wrapper, for both frame modes.
+        let d = 48;
+        let n = 4;
+        let msgs: Vec<CompressedMsg> = (0..n)
+            .map(|i| {
+                let g: Vec<f32> = (0..d).map(|j| (i * d + j) as f32 * 0.25 - 3.0).collect();
+                ScaledSign::new().fork_stream(i as u64).compress(&g)
+            })
+            .collect();
+        let mut direct = Recorder::new(d);
+        let want = direct.round(7, &msgs);
+        let owned_frames: Vec<UplinkFrame> = msgs
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                UplinkFrame::Msg(WireMsg { round: 7, from: i as u32, payload: m.clone() })
+            })
+            .collect();
+        let mut via_owned = Recorder::new(d);
+        assert_eq!(fold_round(&mut via_owned, 7, &owned_frames).unwrap(), want);
+        let byte_frames: Vec<UplinkFrame> = msgs
+            .iter()
+            .enumerate()
+            .map(|(i, m)| UplinkFrame::Bytes(wire::encode_frame(7, i as u32, m).unwrap()))
+            .collect();
+        let mut via_bytes = Recorder::new(d);
+        assert_eq!(fold_round(&mut via_bytes, 7, &byte_frames).unwrap(), want);
+    }
+
+    #[test]
+    fn corrupt_frame_is_a_named_error_at_any_depth() {
+        for depth in [1usize, 2] {
+            let (workers, servers, _um, _dm) = topology(2);
+            let good = wire::encode_frame(1, 0, &CompressedMsg::Dense(vec![1.0; 8])).unwrap();
+            workers[0].up.send(UplinkFrame::Bytes(good)).unwrap();
+            workers[1]
+                .up
+                .send(UplinkFrame::Bytes(FrameBytes {
+                    round: 1,
+                    from: 1,
+                    payload_bits: 64,
+                    bytes: vec![0xFF; 12],
+                }))
+                .unwrap();
+            let mut server = Recorder::new(8);
+            let err = PipelineServer::new(1, depth).run(&mut server, servers).unwrap_err();
+            assert!(err.is_protocol_fault());
+            match &err {
+                PipelineError::CorruptFrame { worker: 1, round: 1, .. } => {}
+                other => panic!("depth {depth}: expected CorruptFrame, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_frame_modes_are_a_named_error() {
+        for depth in [1usize, 2] {
+            let (workers, servers, _um, _dm) = topology(2);
+            let payload = CompressedMsg::Dense(vec![0.5; 8]);
+            workers[0]
+                .up
+                .send(UplinkFrame::Msg(WireMsg { round: 1, from: 0, payload: payload.clone() }))
+                .unwrap();
+            workers[1]
+                .up
+                .send(UplinkFrame::Bytes(wire::encode_frame(1, 1, &payload).unwrap()))
+                .unwrap();
+            let mut server = Recorder::new(8);
+            let err = PipelineServer::new(1, depth).run(&mut server, servers).unwrap_err();
+            assert!(err.is_protocol_fault());
+            match &err {
+                PipelineError::MixedFrameModes { worker: 1, round: 1 } => {}
+                other => panic!("depth {depth}: expected MixedFrameModes, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn vanished_worker_is_a_disconnect_not_a_fault() {
+        for depth in [1usize, 2] {
+            let (workers, servers, _um, _dm) = topology(2);
+            drop(workers); // both uplinks close before round 1
+            let mut server = Recorder::new(8);
+            let err = PipelineServer::new(3, depth).run(&mut server, servers).unwrap_err();
+            assert!(!err.is_protocol_fault());
+            match &err {
+                PipelineError::WorkerDisconnected { worker: 0, round: 1 } => {}
+                other => panic!("depth {depth}: expected WorkerDisconnected, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn round_tag_mismatch_is_a_named_error() {
+        let (workers, servers, _um, _dm) = topology(1);
+        workers[0]
+            .up
+            .send(UplinkFrame::Msg(WireMsg {
+                round: 9,
+                from: 0,
+                payload: CompressedMsg::Dense(vec![1.0; 4]),
+            }))
+            .unwrap();
+        let mut server = Recorder::new(4);
+        let err = PipelineServer::new(1, 1).run(&mut server, servers).unwrap_err();
+        match &err {
+            PipelineError::RoundMismatch { worker: 0, round: 1, got: 9 } => {}
+            other => panic!("expected RoundMismatch, got {other}"),
+        }
+    }
+}

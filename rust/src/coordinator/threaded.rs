@@ -8,14 +8,12 @@
 //! replica-consistency invariant that makes worker-side updates sound.
 
 use std::sync::mpsc::channel;
-use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::pipeline::PipelineServer;
 use super::{params_hash, setup};
-use crate::agg::Ingest;
-use crate::comm::{topology, wire, Broadcast, FrameBytes, UplinkFrame, WireMsg};
-use crate::compress::CompressedMsg;
+use crate::comm::{topology, wire, UplinkFrame, WireMsg};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -57,54 +55,19 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let (worker_links, server_links, up_meters, down_meters) = topology(n);
     let (report_tx, report_rx) = channel::<EvalReport>();
 
-    // --- server thread -------------------------------------------------
+    // --- server thread: the staged pipeline engine ----------------------
+    // recv → parse → fold → broadcast as explicit stages. At depth 1 the
+    // engine reproduces the historical lockstep-per-round loop; at depth
+    // ≥ 2 its recv stage runs ahead of the fold cursor, double-buffering
+    // parked uplink frames so round t+1's recv (and uplink i+1's send)
+    // overlaps round t's parse+fold. Any failure comes back as a named
+    // PipelineError instead of a panic or a silent return.
     let mut server = strat.make_server(dim, n);
     let zero_copy = cfg.zero_copy_ingest;
-    let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
-        let mut links = server_links;
-        for t in 1..=rounds {
-            let mut ups: Vec<CompressedMsg> = Vec::with_capacity(links.len());
-            let mut frames: Vec<FrameBytes> =
-                Vec::with_capacity(if zero_copy { links.len() } else { 0 });
-            for link in links.iter() {
-                let msg = match link.up.recv() {
-                    Ok(m) => m,
-                    Err(_) => return, // workers gone
-                };
-                debug_assert_eq!(msg.round(), t as u64);
-                match msg {
-                    UplinkFrame::Msg(m) => ups.push(m.payload),
-                    UplinkFrame::Bytes(f) => frames.push(f),
-                }
-            }
-            // one Arc'd broadcast fanned out to every link — n refcount
-            // bumps instead of n deep clones of the downlink message
-            // (each link still meters the full serialized size).
-            let down = if frames.is_empty() {
-                Arc::new(server.round(t, &ups))
-            } else {
-                // zero-copy ingest: validate each received frame once
-                // and fold borrowed views straight into the server's
-                // engine — no CompressedMsg materialization on recv.
-                // The frames are self-produced, so a parse failure is
-                // a codec bug and fails the round loudly.
-                assert!(ups.is_empty(), "mixed uplink frame modes in round {t}");
-                let views: Vec<wire::PayloadView> = frames
-                    .iter()
-                    .map(|f| {
-                        let fv = wire::FrameView::parse(&f.bytes)
-                            .expect("corrupt self-produced uplink frame");
-                        debug_assert_eq!(fv.round, t as u64);
-                        fv.payload
-                    })
-                    .collect();
-                Arc::new(server.round_ingest(t, &Ingest::Views(&views)))
-            };
-            for link in links.iter_mut() {
-                let _ = link.down.send(Broadcast { round: t as u64, payload: down.clone() });
-            }
-        }
-    })?;
+    let depth = cfg.pipeline_depth;
+    let server_join = std::thread::Builder::new()
+        .name("server".into())
+        .spawn(move || PipelineServer::new(rounds, depth).run(server.as_mut(), server_links))?;
 
     // --- worker threads --------------------------------------------------
     let mut joins = Vec::with_capacity(n);
@@ -208,10 +171,55 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
         }
     }
 
-    for j in joins {
-        j.join().map_err(|_| anyhow!("worker panicked"))??;
+    // --- shutdown triage -------------------------------------------------
+    // Join everything first (all threads terminate on every failure
+    // path: the pipeline drops the downlinks when it unwinds, which
+    // unblocks the workers, which closes the uplinks behind them), then
+    // pick the most causal diagnostic:
+    //   1. a worker panic — the root cause of any server-side
+    //      disconnect, reported first;
+    //   2. a server protocol fault (corrupt frame, mixed modes, bad
+    //      round tag) — a server-side diagnosis the workers' secondary
+    //      link-closed errors would otherwise mask;
+    //   3. a server panic — when no worker failed first, the server's
+    //      own crash is the root cause of every worker's dead link;
+    //   4. a worker's own *primary* error (one that is not just "link
+    //      closed" — those are downstream echoes of someone else's
+    //      death, and reporting the lowest-indexed echo would
+    //      misattribute the failure);
+    //   5. a server-side disconnect — an unexpected worker departure
+    //      that nothing above explains, surfaced, never swallowed;
+    //   6. failing all that, the first secondary link error.
+    let worker_results: Vec<std::thread::Result<Result<()>>> =
+        joins.into_iter().map(|j| j.join()).collect();
+    let server_result = server_join.join();
+    for (i, r) in worker_results.iter().enumerate() {
+        anyhow::ensure!(r.is_ok(), "worker {i} panicked");
     }
-    server_join.join().map_err(|_| anyhow!("server panicked"))?;
+    if let Ok(Err(e)) = &server_result {
+        if e.is_protocol_fault() {
+            return Err(anyhow::Error::new(e.clone()));
+        }
+    }
+    if server_result.is_err() {
+        bail!("server panicked");
+    }
+    let mut secondary = None;
+    for (i, r) in worker_results.into_iter().enumerate() {
+        if let Ok(Err(e)) = r {
+            if e.to_string().contains("link closed") {
+                secondary.get_or_insert((i, e));
+            } else {
+                return Err(e.context(format!("worker {i} failed")));
+            }
+        }
+    }
+    if let Ok(Err(e)) = server_result {
+        return Err(anyhow::Error::new(e));
+    }
+    if let Some((i, e)) = secondary {
+        return Err(e.context(format!("worker {i} lost its link")));
+    }
     log.records.sort_by_key(|r| r.round);
     // end-of-run accounting audit: the comm-layer meters (which include
     // the 64-bit frame headers) must agree with worker 0's payload count.
@@ -339,6 +347,45 @@ mod tests {
                 assert_eq!(a.cum_bits, b.cum_bits, "lockstep bits at round {}", a.round);
                 assert_eq!(a.cum_bits, c.cum_bits, "threaded bits at round {}", a.round);
             }
+        }
+    }
+
+    #[test]
+    fn pipelined_server_is_bit_for_bit_at_any_depth() {
+        // the pipeline-depth knob is scheduling only: depth 2 (and a
+        // deeper-than-useful 4) must reproduce the depth-1 records
+        // exactly, in both ingest modes, with the pool fold forced.
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 40;
+        cfg.eval_every = 20;
+        cfg.shard_size = 16;
+        cfg.compress_threads = 2;
+        cfg.server_threads = 3;
+        cfg.server_min_parallel_dim = 1;
+        cfg.pipeline_depth = 1;
+        for zero_copy in [false, true] {
+            cfg.zero_copy_ingest = zero_copy;
+            cfg.pipeline_depth = 1;
+            let base = run_threaded(&cfg).unwrap();
+            for depth in [2usize, 4] {
+                cfg.pipeline_depth = depth;
+                for pin in [false, true] {
+                    cfg.pin_shards = pin;
+                    let piped = run_threaded(&cfg).unwrap();
+                    assert_eq!(base.records.len(), piped.records.len());
+                    for (a, b) in base.records.iter().zip(&piped.records) {
+                        assert_eq!(a.round, b.round);
+                        assert_eq!(
+                            a.grad_norm.to_bits(),
+                            b.grad_norm.to_bits(),
+                            "depth {depth} pin {pin} zero_copy {zero_copy} diverged at {}",
+                            a.round
+                        );
+                        assert_eq!(a.cum_bits, b.cum_bits, "bits at round {}", a.round);
+                    }
+                }
+            }
+            cfg.pin_shards = false;
         }
     }
 

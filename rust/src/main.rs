@@ -48,6 +48,12 @@ fn usage() -> ! {
                                  engine (0 = sequential, bit-identical)\n\
            --zero-copy-ingest    serve uplinks as wire bytes and fold borrowed\n\
                                  views (bit-identical; off = owned decode path)\n\
+           --pipeline-depth <int>  rounds of parked uplink frames the threaded\n\
+                                 server's recv stage may run ahead of its fold\n\
+                                 stage (1 = lockstep-per-round, 2 = double\n\
+                                 buffering; bit-identical at any depth)\n\
+           --pin-shards          pin each server-fold shard range to a stable\n\
+                                 work-pool lane (cache locality; bit-identical)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\

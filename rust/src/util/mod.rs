@@ -9,7 +9,6 @@ pub mod args;
 pub mod json;
 pub mod prop;
 pub mod rng;
-pub mod scratch;
 pub mod timer;
 pub mod workpool;
 

@@ -13,8 +13,8 @@
 //! call; same contract as `std::thread::scope`, without the per-call
 //! spawn/join).
 //!
-//! Scheduling is deliberately dumb — one stack of boxed jobs under a
-//! mutex, workers woken by condvar (batch order is irrelevant: jobs
+//! Scheduling is deliberately dumb — a shared stack of boxed jobs under
+//! a mutex, workers woken by condvar (batch order is irrelevant: jobs
 //! within a batch are independent by construction). While a batch is
 //! pending its caller helps drain the queue, so a job that itself calls
 //! [`WorkPool::run_scoped`] (nested batches) cannot deadlock the pool. Jobs on these paths are coarse
@@ -24,15 +24,49 @@
 //! worker, and the batch's waiter re-panics on the calling thread, so a
 //! failing compressor still fails the round loudly instead of poisoning
 //! a resident thread.
+//!
+//! ## Pinned lanes
+//!
+//! [`WorkPool::run_scoped_pinned`] lets a job name its worker: each
+//! resident thread owns a private *lane* it drains before the shared
+//! stack, so a caller that targets the same lane for the same job every
+//! round keeps that job's data hot in one core's cache (the
+//! [`crate::agg::AggEngine`] uses this to give each shard range a stable
+//! worker across rounds — the `pin_shards` knob). Pinning is a locality
+//! *preference*, never a correctness contract: a waiter that has been
+//! stalled for a grace period steals pinned jobs as a liveness backstop,
+//! which is what keeps nested pinned batches deadlock-free (a pool job
+//! that pins an inner batch onto its own — busy — lane drains it from
+//! its own wait loop). Scheduling, pinned or not, never changes results:
+//! every job still runs exactly once and batches still join before
+//! `run_scoped*` returns.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send>;
 
+/// A borrowed batch job plus its optional target lane (`None` = the
+/// shared stack, `Some(w)` = pinned to lane `w % threads`).
+pub type PinnedJob<'scope> = (Option<usize>, Box<dyn FnOnce() + Send + 'scope>);
+
+/// How many 1 ms batch-waits a blocked caller tolerates before it starts
+/// stealing pinned jobs (the liveness backstop above). Long enough that
+/// an idle resident worker always wins the race for its own lane.
+const STEAL_GRACE_WAITS: u32 = 20;
+
 struct Queue {
-    jobs: Mutex<Vec<Job>>,
+    state: Mutex<QueueState>,
     ready: Condvar,
+}
+
+struct QueueState {
+    /// Untargeted jobs: any worker (or a helping waiter) takes them.
+    shared: Vec<Job>,
+    /// One pinned lane per resident worker; lane `i` is drained by
+    /// worker `i` (waiters steal only via the grace-period backstop).
+    lanes: Vec<Vec<Job>>,
 }
 
 /// Tracks one `run_scoped` batch: jobs remaining + first panic payload.
@@ -59,19 +93,29 @@ impl WorkPool {
     /// costs nothing, which keeps job types free of lifetime plumbing.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        let queue: &'static Queue =
-            Box::leak(Box::new(Queue { jobs: Mutex::new(Vec::new()), ready: Condvar::new() }));
+        let queue: &'static Queue = Box::leak(Box::new(Queue {
+            state: Mutex::new(QueueState {
+                shared: Vec::new(),
+                lanes: (0..threads).map(|_| Vec::new()).collect(),
+            }),
+            ready: Condvar::new(),
+        }));
         for i in 0..threads {
             std::thread::Builder::new()
                 .name(format!("workpool-{i}"))
                 .spawn(move || loop {
                     let job = {
-                        let mut jobs = queue.jobs.lock().unwrap();
+                        let mut st = queue.state.lock().unwrap();
                         loop {
-                            if let Some(j) = jobs.pop() {
+                            // own lane first (pinned work), then shared
+                            let next = match st.lanes[i].pop() {
+                                Some(j) => Some(j),
+                                None => st.shared.pop(),
+                            };
+                            if let Some(j) = next {
                                 break j;
                             }
-                            jobs = queue.ready.wait(jobs).unwrap();
+                            st = queue.ready.wait(st).unwrap();
                         }
                     };
                     job();
@@ -109,8 +153,20 @@ impl WorkPool {
     /// If any job panics, the panic is re-raised here (first one wins).
     /// A single-job batch runs inline on the caller.
     pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        self.run_scoped_pinned(jobs.into_iter().map(|j| (None, j)).collect());
+    }
+
+    /// [`Self::run_scoped`] with per-job worker targeting: each job may
+    /// name a worker (`Some(w)` lands on lane `w % threads`; `None`
+    /// goes to the shared stack). A caller that pins the same job index
+    /// to the same lane every batch keeps that job's working set hot in
+    /// one core's cache. Pinning is best-effort (see the module docs'
+    /// steal backstop) and purely a scheduling hint: results, panic
+    /// propagation, and the join-before-return guarantee are identical
+    /// to the unpinned path.
+    pub fn run_scoped_pinned<'scope>(&self, jobs: Vec<PinnedJob<'scope>>) {
         if jobs.len() <= 1 {
-            for j in jobs {
+            for (_, j) in jobs {
                 j();
             }
             return;
@@ -123,8 +179,8 @@ impl WorkPool {
             done: Condvar::new(),
         });
         {
-            let mut q = self.queue.jobs.lock().unwrap();
-            for job in jobs {
+            let mut q = self.queue.state.lock().unwrap();
+            for (target, job) in jobs {
                 // SAFETY: the job (and its borrows of 'scope data) only
                 // runs before the worker decrements `remaining`, and we
                 // block below until remaining == 0 — so the erased
@@ -133,7 +189,7 @@ impl WorkPool {
                 let job: Box<dyn FnOnce() + Send + 'static> =
                     unsafe { std::mem::transmute(job) };
                 let b = Arc::clone(&batch);
-                q.push(Box::new(move || {
+                let wrapped: Job = Box::new(move || {
                     let result = catch_unwind(AssertUnwindSafe(job));
                     let mut st = b.state.lock().unwrap();
                     if let Err(p) = result {
@@ -143,22 +199,36 @@ impl WorkPool {
                     if st.remaining == 0 {
                         b.done.notify_all();
                     }
-                }));
+                });
+                match target {
+                    Some(w) => {
+                        let lane = w % self.threads;
+                        q.lanes[lane].push(wrapped);
+                    }
+                    None => q.shared.push(wrapped),
+                }
             }
             self.queue.ready.notify_all();
         }
-        // Wait for the batch, *helping drain the queue* while it is
-        // pending. The caller executing queued jobs (its own or other
+        // Wait for the batch, *helping drain the shared queue* while it
+        // is pending. The caller executing queued jobs (its own or other
         // batches' — all jobs are independent by construction, and the
         // queued wrapper never unwinds into us) keeps nested
         // `run_scoped` calls deadlock-free even on a single-worker
         // pool: a pool job that schedules its own batch drains it right
         // here instead of parking forever on workers that are all busy.
+        // Pinned lanes are left to their workers until the grace period
+        // expires; then the waiter steals them too, so a nested batch
+        // pinned onto the waiter's own lane still completes.
+        let mut idle_waits = 0u32;
         loop {
             loop {
-                let job = self.queue.jobs.lock().unwrap().pop();
+                let job = self.queue.state.lock().unwrap().shared.pop();
                 match job {
-                    Some(j) => j(),
+                    Some(j) => {
+                        idle_waits = 0;
+                        j()
+                    }
                     None => break,
                 }
             }
@@ -172,11 +242,23 @@ impl WorkPool {
             }
             // short timed wait: a still-running job may push new work
             // onto the queue, which `done` alone would never signal.
-            let (guard, _timeout) = batch
-                .done
-                .wait_timeout(st, std::time::Duration::from_millis(1))
-                .unwrap();
+            let (guard, _timeout) =
+                batch.done.wait_timeout(st, Duration::from_millis(1)).unwrap();
             drop(guard);
+            idle_waits += 1;
+            if idle_waits >= STEAL_GRACE_WAITS {
+                // liveness backstop: the batch has stalled for the full
+                // grace period — steal one pinned job (any lane) so
+                // pinned work can never wedge a waiter.
+                let stolen = {
+                    let mut q = self.queue.state.lock().unwrap();
+                    q.lanes.iter_mut().find_map(|lane| lane.pop())
+                };
+                if let Some(j) = stolen {
+                    idle_waits = 0;
+                    j();
+                }
+            }
         }
     }
 }
@@ -283,6 +365,123 @@ mod tests {
             .collect();
         pool.run_scoped(jobs);
         assert_eq!(total.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pinned_jobs_prefer_their_lane() {
+        // each pinned job records the resident thread that ran it; in
+        // the common case (idle workers, sane scheduler) every job runs
+        // on its named lane. The steal backstop makes strict equality
+        // racy on a loaded machine, so require a strong majority over
+        // many batches instead of 100%.
+        let pool = WorkPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let total = AtomicUsize::new(0);
+        for _ in 0..30 {
+            let jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send + '_>)> = (0..3)
+                .map(|lane| {
+                    let hits = &hits;
+                    let total = &total;
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        total.fetch_add(1, Ordering::Relaxed);
+                        let on = std::thread::current()
+                            .name()
+                            .map(|n| n == format!("workpool-{lane}"))
+                            .unwrap_or(false);
+                        if on {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    (Some(lane), f)
+                })
+                .collect();
+            pool.run_scoped_pinned(jobs);
+        }
+        let (h, t) = (hits.load(Ordering::Relaxed), total.load(Ordering::Relaxed));
+        assert_eq!(t, 90);
+        assert!(h * 2 > t, "pinning is not sticking: {h}/{t} jobs ran on their lane");
+    }
+
+    #[test]
+    fn pinned_targets_wrap_modulo_threads() {
+        // a target beyond the worker count must still execute (lane =
+        // target % threads), with results intact.
+        let pool = WorkPool::new(2);
+        let mut data = vec![0u32; 8];
+        let jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send + '_>)> = data
+            .chunks_mut(1)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    chunk[0] = i as u32 + 1;
+                });
+                (Some(i * 7 + 13), f)
+            })
+            .collect();
+        pool.run_scoped_pinned(jobs);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn nested_pinned_batch_on_busy_lane_does_not_deadlock() {
+        // worst case for pinning: a pool job running on worker 0 pins
+        // its own inner batch onto lane 0 — the lane's worker is busy
+        // executing the outer job, so only the waiter's steal backstop
+        // can make progress.
+        let pool = WorkPool::new(1);
+        let total = AtomicUsize::new(0);
+        let jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send + '_>)> = (0..2)
+            .map(|_| {
+                let total = &total;
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let inner: Vec<(Option<usize>, Box<dyn FnOnce() + Send + '_>)> = (0..2)
+                        .map(|_| {
+                            let g: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                            (Some(0), g)
+                        })
+                        .collect();
+                    pool.run_scoped_pinned(inner);
+                });
+                (Some(0), f)
+            })
+            .collect();
+        pool.run_scoped_pinned(jobs);
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pinned_panic_propagates() {
+        let pool = WorkPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send>)> = (0..3)
+                .map(|i| {
+                    let f: Box<dyn FnOnce() + Send> = Box::new(move || {
+                        if i == 2 {
+                            panic!("pinned boom");
+                        }
+                    });
+                    (Some(i), f)
+                })
+                .collect();
+            pool.run_scoped_pinned(jobs);
+        }));
+        assert!(caught.is_err(), "pinned-job panic was swallowed");
+        // and the pool still runs fresh pinned batches afterwards
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<(Option<usize>, Box<dyn FnOnce() + Send + '_>)> = (0..4)
+            .map(|i| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                });
+                (Some(i), f)
+            })
+            .collect();
+        pool.run_scoped_pinned(jobs);
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -75,6 +75,79 @@ fn worker_death_surfaces_as_error_not_hang() {
 }
 
 #[test]
+fn worker_death_unwinds_pipelined_server_without_deadlock() {
+    // A worker dying mid-round must unwind the depth-2 pipelined server
+    // — recv stage, fold stage, and the surviving workers — without
+    // wedging. Watchdog-guarded: a deadlock fails the test instead of
+    // hanging the suite, and the driver must still report the root
+    // cause (the dead worker), not a bare "server panicked".
+    use std::time::Duration;
+    for zero_copy in [false, true] {
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let driver = std::thread::spawn(move || {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.rounds = 50;
+            cfg.eval_every = 10;
+            cfg.pipeline_depth = 2;
+            cfg.zero_copy_ingest = zero_copy;
+            let mut s = setup::build(&cfg).unwrap();
+            let dim = s.dim;
+            s.engines[1] = Box::new(DyingEngine { dim, ok_rounds: 5, calls: 0 });
+            let result = run_threaded_with(&cfg, s);
+            let _ = done_tx.send(result.err().map(|e| e.to_string()));
+        });
+        let err = done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("pipelined coordinator deadlocked on worker death");
+        let msg = err.expect("expected error from dying worker");
+        assert!(
+            msg.contains("worker 1"),
+            "diagnostic should name the dead worker, got: {msg}"
+        );
+        driver.join().unwrap();
+    }
+}
+
+#[test]
+fn pipeline_protocol_faults_are_clean_diagnostics() {
+    // The server loop's former panics (`expect` on a corrupt
+    // self-produced frame, `assert!` on mixed frame modes) are now
+    // named errors with worker + round attribution — checked end-to-end
+    // through the public pipeline API in
+    // `coordinator::pipeline::tests`; here we pin the *message* shape
+    // the driver would surface.
+    use cdadam::comm::{topology, FrameBytes, UplinkFrame};
+    use cdadam::coordinator::pipeline::{PipelineError, PipelineServer};
+
+    let cfg = ExperimentConfig::preset("quickstart").unwrap();
+    let strat = cfg.build_strategy().unwrap();
+    for depth in [1usize, 2] {
+        let (workers, servers, _um, _dm) = topology(2);
+        let good =
+            wire::encode_frame(1, 0, &CompressedMsg::Dense(vec![1.0; 8])).unwrap();
+        workers[0].up.send(UplinkFrame::Bytes(good)).unwrap();
+        workers[1]
+            .up
+            .send(UplinkFrame::Bytes(FrameBytes {
+                round: 1,
+                from: 1,
+                payload_bits: 64,
+                bytes: vec![0xAB; 16],
+            }))
+            .unwrap();
+        let mut server = strat.make_server(8, 2);
+        let err = PipelineServer::new(1, depth).run(server.as_mut(), servers).unwrap_err();
+        assert!(err.is_protocol_fault(), "corrupt frame must rank as a protocol fault");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("corrupt") && msg.contains("worker 1") && msg.contains("round 1"),
+            "diagnostic lost its attribution: {msg}"
+        );
+        assert!(matches!(err, PipelineError::CorruptFrame { worker: 1, round: 1, .. }));
+    }
+}
+
+#[test]
 fn nan_gradients_propagate_to_metrics_not_panic() {
     let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
     cfg.rounds = 10;

@@ -1,9 +1,11 @@
-//! Cross-strategy trajectory golden tests for the zero-copy ingest
+//! Cross-strategy trajectory golden tests for the server ingest/fold
 //! path: every strategy server must produce **bit-for-bit** the same
 //! seeded end-to-end trajectory (loss / grad-norm / test metrics /
-//! cum_bits stream) across the full ingest matrix —
+//! cum_bits stream) across the full scheduling matrix —
 //!
-//!   {lockstep, threaded} × {owned, zero-copy views} × {server_threads 0, 4}
+//!   {lockstep, threaded} × {owned, zero-copy views}
+//!     × {server_threads 0, 4} × {pipeline_depth 1, 2}
+//!     × {pin_shards off, on}
 //!
 //! — and that shared digest is pinned against a committed fixture
 //! (`tests/golden_trajectories.txt`) so a future change that shifts the
@@ -68,10 +70,12 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.warmup_rounds = 5; // 1-bit Adam: freeze early (others ignore it)
     cfg.shard_size = 16;
     cfg.compress_threads = 2;
-    // explicit baseline mode — the env default must not leak in
+    // explicit baseline mode — the env defaults must not leak in
     cfg.zero_copy_ingest = false;
     cfg.server_threads = 0;
     cfg.server_min_parallel_dim = 0;
+    cfg.pipeline_depth = 1;
+    cfg.pin_shards = false;
     cfg
 }
 
@@ -135,24 +139,33 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
         for threaded in [false, true] {
             for zero_copy in [false, true] {
                 for server_threads in [0usize, 4] {
-                    let mut cfg = base_cfg(strategy);
-                    cfg.zero_copy_ingest = zero_copy;
-                    cfg.server_threads = server_threads;
-                    // force the pool path at d = 50, where the default
-                    // cutover would keep the fold sequential
-                    cfg.server_min_parallel_dim = usize::from(server_threads > 0);
-                    cfg.threaded = threaded;
-                    let log = if threaded {
-                        run_threaded(&cfg).unwrap()
-                    } else {
-                        run_lockstep(&cfg).unwrap()
-                    };
-                    assert_eq!(
-                        digest(&log),
-                        baseline,
-                        "{strategy}: trajectory diverged (threaded={threaded}, \
-                         zero_copy_ingest={zero_copy}, server_threads={server_threads})"
-                    );
+                    for pipeline_depth in [1usize, 2] {
+                        for pin_shards in [false, true] {
+                            let mut cfg = base_cfg(strategy);
+                            cfg.zero_copy_ingest = zero_copy;
+                            cfg.server_threads = server_threads;
+                            // force the pool path at d = 50, where the
+                            // default cutover would keep the fold
+                            // sequential
+                            cfg.server_min_parallel_dim = usize::from(server_threads > 0);
+                            cfg.pipeline_depth = pipeline_depth;
+                            cfg.pin_shards = pin_shards;
+                            cfg.threaded = threaded;
+                            let log = if threaded {
+                                run_threaded(&cfg).unwrap()
+                            } else {
+                                run_lockstep(&cfg).unwrap()
+                            };
+                            assert_eq!(
+                                digest(&log),
+                                baseline,
+                                "{strategy}: trajectory diverged (threaded={threaded}, \
+                                 zero_copy_ingest={zero_copy}, \
+                                 server_threads={server_threads}, \
+                                 pipeline_depth={pipeline_depth}, pin_shards={pin_shards})"
+                            );
+                        }
+                    }
                 }
             }
         }
