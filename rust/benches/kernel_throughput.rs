@@ -64,6 +64,49 @@ fn main() {
         opt.step(&mut params, &x, 1e-3);
     });
 
+    // the unfused reference the fused kernel replaces: four separate
+    // d-length passes (m, v, v̂, params) — same math to the bit
+    // (property-pinned in tensor), ~2× the state-stream traffic
+    let mut mu = vec![0.0f32; d];
+    let mut vu = vec![0.0f32; d];
+    let mut vhu = vec![0.0f32; d];
+    let mut params_u = vec![0.0f32; d];
+    row("amsgrad unfused (4-pass)", d, 28.0, iters, || {
+        let (b1, b2, nu) = (0.9f32, 0.99f32, 1e-8f32);
+        for i in 0..d {
+            mu[i] = b1 * mu[i] + (1.0 - b1) * x[i];
+        }
+        for i in 0..d {
+            vu[i] = b2 * vu[i] + (1.0 - b2) * x[i] * x[i];
+        }
+        for i in 0..d {
+            vhu[i] = vhu[i].max(vu[i]);
+        }
+        for i in 0..d {
+            params_u[i] -= 1e-3 * mu[i] / (vhu[i] + nu).sqrt();
+        }
+    });
+
+    // EF residual δ = e − decode(C(e)): fused single pass off the
+    // message vs the historical decode-into-scratch + subtract pair
+    let sign_msg = ScaledSign::new().compress(&x);
+    let mut e = vec![0.0f32; d];
+    rng.fill_normal(&mut e, 1.0);
+    let mut delta = vec![0.0f32; d];
+    let mut dec_buf = vec![0.0f32; d];
+    row("ef residual decode+sub", d, 16.0, iters, || {
+        sign_msg.decode_into(&mut dec_buf);
+        cdadam::tensor::sub(&mut delta, &e, &dec_buf);
+    });
+    let mut delta_f = vec![0.0f32; d];
+    row("ef residual fused", d, 12.0, iters, || {
+        sign_msg.residual_into(&e, &mut delta_f);
+    });
+    assert!(
+        delta.iter().zip(&delta_f).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "fused EF residual diverged from decode+sub"
+    );
+
     // full CD-Adam worker round (compress + markov + decode + update)
     let mut enc2 = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
     let mut dec_state = vec![0.0f32; d];
@@ -72,5 +115,23 @@ fn main() {
         let c = enc2.step(&x);
         c.add_into(&mut dec_state);
         opt2.step(&mut params, &dec_state, 1e-3);
+    });
+
+    // the same worker round through the zero-copy egress writer: the
+    // Markov step encodes straight into a reused frame buffer and ĝ
+    // folds off the written bytes — no owned message, no encode copy
+    let mut enc3 = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
+    let mut dec_state3 = vec![0.0f32; d];
+    let mut opt3 = AmsGrad::paper_defaults(d);
+    let mut fw = cdadam::comm::wire::FrameWriter::new(2);
+    let mut t = 0u64;
+    row("cdadam worker round (egress)", d, 44.0, iters, || {
+        t += 1;
+        fw.begin(t, 0).unwrap();
+        enc3.step_into(&x, &mut fw).unwrap();
+        let frame = fw.finish();
+        let fv = cdadam::comm::wire::FrameView::parse(&frame.bytes).unwrap();
+        fv.payload.add_scaled_into(&mut dec_state3, 1.0);
+        opt3.step(&mut params, &dec_state3, 1e-3);
     });
 }

@@ -21,6 +21,7 @@
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
 use crate::agg::{AggEngine, UplinkRef};
+use crate::comm::wire::FrameWriter;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::markov::{MarkovDecoder, MarkovEncoder};
 use crate::optim::{AmsGrad, Optimizer};
@@ -103,6 +104,12 @@ pub struct CdAdamWorker {
 impl WorkerAlgo for CdAdamWorker {
     fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
         self.enc.step(grad)
+    }
+
+    fn uplink_into(&mut self, _round: usize, grad: &[f32], fw: &mut FrameWriter) -> anyhow::Result<()> {
+        // zero-copy egress: c_t encodes straight into the frame and ĝ
+        // advances off the written bytes (bit-identical Markov state)
+        self.enc.step_into(grad, fw)
     }
 
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {

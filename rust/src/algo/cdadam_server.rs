@@ -87,12 +87,20 @@ impl WorkerAlgo for SsWorker {
         self.enc.step(grad)
     }
 
+    fn uplink_into(
+        &mut self,
+        _round: usize,
+        grad: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        self.enc.step_into(grad, fw)
+    }
+
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], _lr: f32) {
-        // Δ̃ replica via the downlink Markov sequence; x ← x − Δ̃.
+        // Δ̃ replica via the downlink Markov sequence; x ← x − Δ̃
+        // (fused single-pass apply).
         self.dec.apply(msg);
-        for (p, d) in params.iter_mut().zip(self.dec.state()) {
-            *p -= d;
-        }
+        crate::tensor::sub_assign(params, self.dec.state());
         // Reset the decoder state? No: the Markov sequence is over the
         // *per-round update* Δ_t, so the replica must be re-based every
         // round. The server encodes Δ_t fresh against the previous

@@ -10,6 +10,7 @@
 
 use super::{ServerAlgo, Strategy, WorkerAlgo};
 use crate::agg::{AggEngine, UplinkRef};
+use crate::comm::wire::FrameWriter;
 use crate::compress::{CompressedMsg, Compressor};
 use crate::optim::{AmsGrad, Optimizer};
 use crate::tensor;
@@ -54,27 +55,21 @@ impl Strategy for ErrorFeedback {
             comp: self.compressor.clone(),
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
-            buf: vec![0.0; dim],
             avg: vec![0.0; dim],
             agg: self.agg.clone(),
         })
     }
 }
 
-/// Shared EF step: e = x + δ; c = C(e); δ = e − decode(c).
-fn ef_step(
-    comp: &mut dyn Compressor,
-    x: &[f32],
-    delta: &mut [f32],
-    e: &mut [f32],
-    buf: &mut [f32],
-) -> CompressedMsg {
-    for ((ei, &xi), &di) in e.iter_mut().zip(x).zip(delta.iter()) {
-        *ei = xi + di;
-    }
+/// Shared EF step: e = x + δ; c = C(e); δ = e − decode(c). Both halves
+/// are fused single passes (`tensor::add` builds the compress input,
+/// [`CompressedMsg::residual_into`] forms the residual straight off the
+/// message) — the historical decode-into-scratch + subtract pair is
+/// gone, bit-identically.
+fn ef_step(comp: &mut dyn Compressor, x: &[f32], delta: &mut [f32], e: &mut [f32]) -> CompressedMsg {
+    tensor::add(e, x, delta);
     let c = comp.compress(e);
-    c.decode_into(buf);
-    tensor::sub(delta, e, buf);
+    c.residual_into(e, delta);
     c
 }
 
@@ -82,13 +77,24 @@ struct EfWorker {
     comp: Box<dyn Compressor>,
     delta: Vec<f32>,
     e: Vec<f32>,
+    /// downlink decode scratch (the uplink path no longer needs one)
     buf: Vec<f32>,
     opt: AmsGrad,
 }
 
 impl WorkerAlgo for EfWorker {
     fn uplink(&mut self, _round: usize, grad: &[f32]) -> CompressedMsg {
-        ef_step(self.comp.as_mut(), grad, &mut self.delta, &mut self.e, &mut self.buf)
+        ef_step(self.comp.as_mut(), grad, &mut self.delta, &mut self.e)
+    }
+
+    fn uplink_into(&mut self, _round: usize, grad: &[f32], fw: &mut FrameWriter) -> anyhow::Result<()> {
+        // zero-copy egress EF step: e builds fused, C(e) encodes
+        // straight into the frame, and δ forms off the written bytes —
+        // same per-element ops as the owned ef_step, to the bit.
+        tensor::add(&mut self.e, grad, &self.delta);
+        self.comp.compress_into(&self.e, fw);
+        fw.payload_view()?.residual_into(&self.e, &mut self.delta);
+        Ok(())
     }
 
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
@@ -101,7 +107,6 @@ struct EfServer {
     comp: Box<dyn Compressor>,
     delta: Vec<f32>,
     e: Vec<f32>,
-    buf: Vec<f32>,
     /// round-average accumulator: uplinks fold into it one frame at a
     /// time (pipelined ingest), so it must live across `ingest_one`
     /// calls — a resident field, zeroed at each round's first uplink.
@@ -121,7 +126,7 @@ impl ServerAlgo for EfServer {
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {
-        ef_step(self.comp.as_mut(), &self.avg, &mut self.delta, &mut self.e, &mut self.buf)
+        ef_step(self.comp.as_mut(), &self.avg, &mut self.delta, &mut self.e)
     }
 }
 
@@ -139,13 +144,12 @@ mod tests {
         let d = 100;
         let mut delta = vec![0.0f32; d];
         let mut e = vec![0.0f32; d];
-        let mut buf = vec![0.0f32; d];
         let mut rng = Rng::new(5);
         let mut max_norm = 0.0f64;
         for _ in 0..300 {
             let mut g = vec![0.0f32; d];
             rng.fill_normal(&mut g, 1.0);
-            ef_step(comp.as_mut(), &g, &mut delta, &mut e, &mut buf);
+            ef_step(comp.as_mut(), &g, &mut delta, &mut e);
             max_norm = max_norm.max(tensor::norm2(&delta));
         }
         // ‖g‖ ≈ 10; EF theory bounds ‖δ‖ ≤ 2(1−π)^{-1}·max‖g‖·sqrt(π)-ish;

@@ -75,6 +75,15 @@ impl WorkerAlgo for Ef21Worker {
         self.enc.step(grad)
     }
 
+    fn uplink_into(
+        &mut self,
+        _round: usize,
+        grad: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        self.enc.step_into(grad, fw)
+    }
+
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
         self.dec.apply(msg);
         self.opt.step(params, self.dec.state(), lr);

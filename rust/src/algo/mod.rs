@@ -32,6 +32,7 @@ pub mod onebit_adam;
 pub mod uncompressed;
 
 use crate::agg::{Ingest, UplinkRef};
+use crate::comm::wire::{FrameWriter, PayloadSink};
 use crate::compress::CompressedMsg;
 
 /// Per-worker half of a strategy (owns uplink compression state and the
@@ -39,6 +40,29 @@ use crate::compress::CompressedMsg;
 pub trait WorkerAlgo: Send {
     /// Compress the local fresh gradient into the uplink message.
     fn uplink(&mut self, round: usize, grad: &[f32]) -> CompressedMsg;
+
+    /// Zero-copy egress twin of [`Self::uplink`]: compress this round's
+    /// uplink **straight into `fw`'s frame buffer** (the caller has
+    /// already opened the frame with [`FrameWriter::begin`] and will
+    /// [`FrameWriter::finish`] it). The emitted payload bytes and
+    /// metered bits must be byte-identical to encoding
+    /// [`Self::uplink`]'s message, and any worker state the uplink
+    /// advances (Markov ĝ replicas, EF memories δ) must land on
+    /// bit-identical values — strategies fold the just-written bytes
+    /// back through a borrowed [`crate::comm::wire::PayloadView`], whose
+    /// kernels are bit-identical to the owned ones. The default routes
+    /// through the owned path (correct for any worker); every strategy
+    /// in the tree overrides it with the direct encoder.
+    fn uplink_into(
+        &mut self,
+        round: usize,
+        grad: &[f32],
+        fw: &mut FrameWriter,
+    ) -> anyhow::Result<()> {
+        let c = self.uplink(round, grad);
+        fw.put_msg(&c);
+        Ok(())
+    }
 
     /// Apply the server broadcast: reconstruct g̃_t and update `params`.
     fn apply_downlink(&mut self, round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32);
@@ -112,7 +136,87 @@ pub trait Strategy: Send + Sync {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Compressor, RandK};
+    use crate::comm::wire;
+    use crate::compress::{Compressor, RandK, ScaledSign, ShardedCompressor};
+
+    #[test]
+    fn uplink_into_matches_owned_path_all_strategies() {
+        // the zero-copy egress contract at the strategy level: for every
+        // worker half, uplink_into must emit frames byte-identical to
+        // encoding uplink()'s message, round after round — which also
+        // proves the worker's internal state (Markov ĝ, EF δ, rand-k
+        // streams) stays bit-aligned across the two paths — and the
+        // post-downlink parameter replicas must agree to the bit.
+        let d = 48usize;
+        let rounds = 6usize;
+        let comps: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()))),
+            ("randk", Box::new(|| Box::new(RandK::with_frac(0.2, 5)))),
+            (
+                // forced-parallel sharded egress inside every strategy
+                "sharded_sign_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(ScaledSign::new()), 16, 2)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+        ];
+        for (clabel, mk_comp) in &comps {
+            let strats: Vec<Box<dyn Strategy>> = vec![
+                Box::new(cdadam::CdAdam::new(mk_comp())),
+                Box::new(uncompressed::Uncompressed::amsgrad()),
+                Box::new(uncompressed::Uncompressed::sgd(0.9)),
+                Box::new(naive::Naive::new(mk_comp())),
+                Box::new(ef::ErrorFeedback::new(mk_comp())),
+                Box::new(ef21::Ef21::new(mk_comp())),
+                Box::new(onebit_adam::OneBitAdam::new(mk_comp(), 3)), // warmup boundary inside the run
+                Box::new(cdadam_server::CdAdamServerSide::new(
+                    mk_comp(),
+                    crate::optim::LrSchedule::constant(0.01),
+                )),
+            ];
+            for s in &strats {
+                let mut owned = s.make_worker(d, 0);
+                let mut egress = s.make_worker(d, 0); // same id ⇒ same forked streams
+                let mut server = s.make_server(d, 1);
+                let mut fw = wire::FrameWriter::new(2);
+                let mut params_a = vec![0.25f32; d];
+                let mut params_b = params_a.clone();
+                let mut rng = crate::util::rng::Rng::new(0xA150);
+                let mut g = vec![0.0f32; d];
+                for t in 1..=rounds {
+                    rng.fill_normal(&mut g, 1.0);
+                    let c = owned.uplink(t, &g);
+                    let owned_frame = wire::encode_frame(t as u64, 0, &c).unwrap();
+                    fw.begin(t as u64, 0).unwrap();
+                    egress.uplink_into(t, &g, &mut fw).unwrap();
+                    let written = fw.finish();
+                    assert_eq!(
+                        owned_frame.payload_bits,
+                        written.payload_bits,
+                        "{}/{clabel}: metered bits diverged at round {t}",
+                        s.name()
+                    );
+                    assert_eq!(
+                        &owned_frame.bytes[..],
+                        &written.bytes[..],
+                        "{}/{clabel}: frame bytes diverged at round {t}",
+                        s.name()
+                    );
+                    let down = server.round(t, &[c]);
+                    owned.apply_downlink(t, &down, &mut params_a, 0.01);
+                    egress.apply_downlink(t, &down, &mut params_b, 0.01);
+                    assert!(
+                        params_a.iter().zip(&params_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{}/{clabel}: replicas diverged at round {t}",
+                        s.name()
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn workers_get_independent_randk_streams() {

@@ -61,6 +61,18 @@ impl WorkerAlgo for NaiveWorker {
         self.comp.compress(grad)
     }
 
+    fn uplink_into(
+        &mut self,
+        _round: usize,
+        grad: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        // no memory anywhere: the fresh gradient compresses straight
+        // into the frame
+        self.comp.compress_into(grad, fw);
+        Ok(())
+    }
+
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);

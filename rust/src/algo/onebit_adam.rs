@@ -75,7 +75,6 @@ impl Strategy for OneBitAdam {
             warmup: self.warmup_rounds,
             delta: vec![0.0; dim],
             e: vec![0.0; dim],
-            buf: vec![0.0; dim],
             avg: vec![0.0; dim],
             agg: self.agg.clone(),
         })
@@ -96,14 +95,30 @@ impl WorkerAlgo for OneBitWorker {
         if round <= self.warmup {
             return CompressedMsg::Dense(grad.to_vec());
         }
-        // EF-compressed uplink (stage 2)
-        for ((ei, &gi), &di) in self.e.iter_mut().zip(grad).zip(self.delta.iter()) {
-            *ei = gi + di;
-        }
+        // EF-compressed uplink (stage 2): fused e-build + fused residual
+        tensor::add(&mut self.e, grad, &self.delta);
         let c = self.comp.compress(&self.e);
-        c.decode_into(&mut self.buf);
-        tensor::sub(&mut self.delta, &self.e, &self.buf);
+        c.residual_into(&self.e, &mut self.delta);
         c
+    }
+
+    fn uplink_into(
+        &mut self,
+        round: usize,
+        grad: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        use crate::comm::wire::PayloadSink as _;
+        if round <= self.warmup {
+            // stage 1: the dense gradient goes straight to wire bytes
+            // (the owned path clones it into a message first)
+            fw.put_dense(grad);
+            return Ok(());
+        }
+        tensor::add(&mut self.e, grad, &self.delta);
+        self.comp.compress_into(&self.e, fw);
+        fw.payload_view()?.residual_into(&self.e, &mut self.delta);
+        Ok(())
     }
 
     fn apply_downlink(&mut self, round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
@@ -120,7 +135,6 @@ struct OneBitServer {
     warmup: usize,
     delta: Vec<f32>,
     e: Vec<f32>,
-    buf: Vec<f32>,
     /// round-average accumulator, resident so the pipelined engine can
     /// fold uplinks one frame at a time (zeroed at index 0).
     avg: Vec<f32>,
@@ -142,12 +156,9 @@ impl ServerAlgo for OneBitServer {
             // detach-the-scratch path).
             return CompressedMsg::Dense(self.avg.clone());
         }
-        for ((ei, &ai), &di) in self.e.iter_mut().zip(self.avg.iter()).zip(self.delta.iter()) {
-            *ei = ai + di;
-        }
+        tensor::add(&mut self.e, &self.avg, &self.delta);
         let c = self.comp.compress(&self.e);
-        c.decode_into(&mut self.buf);
-        tensor::sub(&mut self.delta, &self.e, &self.buf);
+        c.residual_into(&self.e, &mut self.delta);
         c
     }
 }

@@ -97,6 +97,20 @@ impl WorkerAlgo for UncompressedWorker {
         CompressedMsg::Dense(grad.to_vec())
     }
 
+    fn uplink_into(
+        &mut self,
+        _round: usize,
+        grad: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        // the owned path clones the gradient into a Dense message and
+        // then copies it again into the frame; the egress path is one
+        // pass straight to wire bytes
+        use crate::comm::wire::PayloadSink as _;
+        fw.put_dense(grad);
+        Ok(())
+    }
+
     fn apply_downlink(&mut self, _round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32) {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);

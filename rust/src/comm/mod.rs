@@ -62,7 +62,12 @@ pub struct FrameBytes {
     /// additionally counts tag/d fields and bitmap byte padding), so
     /// both ingest modes meter identical traffic.
     pub payload_bits: u64,
-    pub bytes: Vec<u8>,
+    /// The encoded frame. A [`wire::RingBuf`] so frames produced by the
+    /// zero-copy egress [`wire::FrameWriter`] return their buffer to
+    /// the worker's ring when the server drops them (steady-state
+    /// zero-alloc); owned-path frames are plain buffers
+    /// (`Vec<u8>::into`) that free normally.
+    pub bytes: wire::RingBuf,
 }
 
 impl Framed for FrameBytes {

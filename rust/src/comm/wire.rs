@@ -54,6 +54,57 @@
 //! replicas, EF memories), [`PayloadView::to_msg`] materializes the
 //! owned message — that is the only place materialization remains on the
 //! ingest path.
+//!
+//! ## The writer layer: zero-copy worker egress
+//!
+//! [`FrameWriter`] is the encode-side mirror of the view layer. The
+//! historical uplink path materializes an owned [`CompressedMsg`] (heap
+//! `Vec`s for the sign bitmap / sparse idx+val / per-shard messages)
+//! and then [`encode_frame`] copies the whole thing into a fresh byte
+//! buffer — an allocation-and-copy tax per worker per round that exists
+//! only because compression and serialization were separate passes.
+//! With the `zero_copy_egress` knob on, compressors encode **straight
+//! into the frame buffer** ([`crate::compress::Compressor::compress_into`]
+//! through the [`PayloadSink`] interface): the sign bitmap is packed in
+//! place as wire bytes (no `Vec<u64>` → `words_to_bytes` round trip),
+//! sparse idx/val windows append directly, and
+//! [`crate::compress::ShardedCompressor`] has its workpool jobs write
+//! each shard's sub-payload into a pre-sized disjoint [`ShardWindow`]
+//! of the same buffer (compacted in one pass afterwards).
+//!
+//! The produced bytes are **byte-identical** to
+//! `encode_frame(round, from, &compress(x))` — same layout, same float
+//! bit patterns, same metered `payload_bits` — pinned by the
+//! `fuzz_egress_writer_differential` oracle below, so `wire_bits`
+//! metering, cum_bits audits, and every trajectory golden are untouched
+//! by the knob. Where the sender needs the message it just wrote (the
+//! Markov encoder folds c_t into its own ĝ, EF forms δ = e − ĉ), it
+//! re-reads the frame through [`FrameWriter::payload_view`] — a
+//! validated borrowed view over the bytes it just produced, folded with
+//! the same bit-identical view kernels the server uses.
+//!
+//! ### Buffer-ring lifetime rules
+//!
+//! A finished frame ([`FrameWriter::finish`]) moves the buffer out of
+//! the writer into the [`FrameBytes`] that travels the link, so the
+//! writer cannot reuse it while the frame is alive. Instead of
+//! allocating per round, the writer owns a small **ring**: when the
+//! receiver drops the frame (after the fold stage ingests it), the
+//! buffer returns to the ring ([`RingBuf`]'s `Drop`), and the next
+//! [`FrameWriter::begin`] takes it back. The ring is sized by the
+//! caller to cover every buffer that can be out at once —
+//! `pipeline_depth + 2` slots on the threaded path (the recv stage may
+//! park up to `depth − 1` rounds ahead, plus the frame being folded,
+//! plus the one being written), `n + 1` on the lockstep path (a whole
+//! round's frames coexist until the fold) — so steady state allocates
+//! nothing: a buffer is
+//! always home by the time it is needed again, and if ever it is not
+//! (a slow consumer still holding every frame), `begin` falls back to a
+//! fresh allocation rather than blocking, and the ring caps how many
+//! buffers it retains so memory stays bounded. Frames that outlive the
+//! writer simply free their buffer (the ring is weakly referenced).
+
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::{bail, Result};
 
@@ -104,7 +155,12 @@ pub fn encode_parts(round: u64, from: u32, payload: &CompressedMsg) -> Result<Ve
 /// fields and bitmap padding — which the meters deliberately exclude;
 /// see `prop_serialized_size_matches_meter`).
 pub fn encode_frame(round: u64, from: u32, payload: &CompressedMsg) -> Result<FrameBytes> {
-    Ok(FrameBytes { round, from, payload_bits: payload.wire_bits(), bytes: encode_parts(round, from, payload)? })
+    Ok(FrameBytes {
+        round,
+        from,
+        payload_bits: payload.wire_bits(),
+        bytes: encode_parts(round, from, payload)?.into(),
+    })
 }
 
 fn encode_payload(payload: &CompressedMsg, out: &mut Vec<u8>, nested: bool) -> Result<()> {
@@ -122,7 +178,10 @@ fn encode_payload(payload: &CompressedMsg, out: &mut Vec<u8>, nested: bool) -> R
             out.push(0);
             out.extend_from_slice(&u32_field(*d, "sign dim")?.to_le_bytes());
             out.extend_from_slice(&scale.to_le_bytes());
-            out.extend_from_slice(&packing::words_to_bytes(bits, *d));
+            // stream the bitmap straight onto the frame — the old
+            // words_to_bytes round trip materialized (and immediately
+            // dropped) a ⌈d/8⌉-byte Vec per sign payload per round
+            packing::extend_words_as_bytes(bits, *d, out);
         }
         CompressedMsg::Sparse { d, idx, val } => {
             out.push(TAG_SPARSE);
@@ -329,6 +388,525 @@ impl<'a> FrameView<'a> {
     /// [`crate::comm::WireMsg::wire_bits`] on the decoded message.
     pub fn wire_bits(&self) -> u64 {
         64 + self.payload.wire_bits()
+    }
+}
+
+/// Parse one serialized **payload** (no round/from header) into a
+/// borrowed view — same validation set as a full [`FrameView::parse`].
+/// This is how a sender re-reads the payload it just wrote into a
+/// [`FrameWriter`] (Markov ĝ folds, EF residuals) without ever
+/// materializing an owned message on the egress path.
+pub fn parse_payload_slice(bytes: &[u8]) -> Result<PayloadView<'_>> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let payload = parse_payload(&mut r, false)?;
+    if r.i != bytes.len() {
+        bail!("trailing bytes");
+    }
+    Ok(payload)
+}
+
+/// Frame header bytes preceding the payload: round:u32 + from:u16.
+const HEADER_BYTES: usize = 6;
+
+/// Checked u32 wire field for the direct-encode (egress) path. The
+/// owned encoder returns an error here; on the egress path the value is
+/// always a self-produced dimension/count that the owned path would
+/// have rejected identically, so overflow is a programming error and
+/// fails loudly.
+fn dim_field(x: usize, what: &str) -> u32 {
+    u32::try_from(x).unwrap_or_else(|_| panic!("{what} {x} overflows the u32 wire field"))
+}
+
+/// The shared buffer pool behind a [`FrameWriter`]: recycled frame
+/// buffers, capped at `cap` retained slots (see the module docs'
+/// buffer-ring lifetime rules).
+#[derive(Debug)]
+struct Ring {
+    slots: Mutex<Vec<Vec<u8>>>,
+    cap: usize,
+}
+
+/// A frame byte buffer that swims back to its writer's ring when the
+/// receiver drops it. Derefs to `&[u8]`; clones and `From<Vec<u8>>`
+/// conversions are orphans (they free normally) so tests and the owned
+/// [`encode_frame`] path can build frames without a ring.
+#[derive(Debug)]
+pub struct RingBuf {
+    data: Vec<u8>,
+    home: Option<Weak<Ring>>,
+}
+
+impl std::ops::Deref for RingBuf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl Clone for RingBuf {
+    fn clone(&self) -> Self {
+        RingBuf { data: self.data.clone(), home: None }
+    }
+}
+
+impl From<Vec<u8>> for RingBuf {
+    fn from(data: Vec<u8>) -> Self {
+        RingBuf { data, home: None }
+    }
+}
+
+impl Drop for RingBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take().and_then(|w| w.upgrade()) {
+            let data = std::mem::take(&mut self.data);
+            if data.capacity() > 0 {
+                // the buffer keeps its length (= last frame's high-water
+                // mark): the writer tracks a logical cursor and never
+                // zeroes warm bytes, so recycling must not clear.
+                // Never block or double-panic in drop — a poisoned lock
+                // just forfeits the recycle.
+                if let Ok(mut slots) = home.slots.lock() {
+                    if slots.len() < home.cap {
+                        slots.push(data);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sink for directly-encoded wire payloads — the interface
+/// [`crate::compress::Compressor::compress_into`] writes through. Two
+/// implementations: [`FrameWriter`] appends to the frame being built
+/// (the monolithic / serial-sharded path), and [`ShardWindow`] writes
+/// into one pre-sized disjoint window of the frame so
+/// [`crate::compress::ShardedCompressor`]'s workpool jobs can encode
+/// shards concurrently with no locks.
+///
+/// Every `put_*` appends bytes **identical** to
+/// [`encode`]-ing the equivalent [`CompressedMsg`] payload and meters
+/// the identical [`CompressedMsg::wire_bits`] — the byte-equality
+/// contract the egress differential oracle pins.
+pub trait PayloadSink {
+    /// Append a dense payload (`32·len` metered bits).
+    fn put_dense(&mut self, x: &[f32]);
+
+    /// Append a zero payload (32 metered bits).
+    fn put_zero(&mut self, d: usize);
+
+    /// Append a sign payload: reserves the `⌈d/8⌉`-byte bitmap, calls
+    /// `fill` to pack it (in wire layout: bit i at byte `i/8`, position
+    /// `i%8`) and return the scale, then patches the scale field.
+    /// Contract: the window's prior contents are unspecified (reused
+    /// frame buffers are not re-zeroed), so `fill` must write **every**
+    /// bitmap byte. Mirroring [`crate::compress::ScaledSign`], a
+    /// returned scale of exactly `0.0` rewinds the payload to a zero
+    /// payload.
+    fn put_sign_with(&mut self, d: usize, fill: &mut dyn FnMut(&mut [u8]) -> f32);
+
+    /// Append a sparse payload, gathering `val[j] = x[idx[j]]` straight
+    /// from the source vector (`32 + 64·k` metered bits).
+    fn put_sparse(&mut self, d: usize, idx: &[u32], x: &[f32]);
+
+    /// Fallback: byte-identical [`encode`]-style serialization of an
+    /// owned message (the default `compress_into` for compressors
+    /// without a direct encoder).
+    fn put_msg(&mut self, msg: &CompressedMsg);
+
+    /// Downcast hook for [`crate::compress::ShardedCompressor`], whose
+    /// window orchestration needs the concrete frame writer. `None` in
+    /// nested contexts (shard windows), mirroring the wire codec's
+    /// no-nesting rule.
+    fn as_frame_writer(&mut self) -> Option<&mut FrameWriter> {
+        None
+    }
+}
+
+/// A reusable per-worker frame buffer that compressors encode into
+/// directly — the zero-copy egress twin of [`FrameView`]. See the
+/// module docs for the byte-equality contract and the buffer-ring
+/// lifetime rules.
+#[derive(Debug)]
+pub struct FrameWriter {
+    ring: Arc<Ring>,
+    /// Backing storage. Its `len` rides at the high-water mark of past
+    /// frames (recycled buffers come back un-cleared) so the hot path
+    /// never re-zeroes warm bytes — `self.len` below is the logical
+    /// cursor, and [`Self::finish`] truncates to it.
+    buf: Vec<u8>,
+    /// Logical end of the frame being written (≤ `buf.len()`).
+    len: usize,
+    payload_bits: u64,
+    round: u64,
+    from: u32,
+    in_sharded: bool,
+}
+
+impl FrameWriter {
+    /// A writer whose ring retains at most `ring_slots` recycled
+    /// buffers. Size it to cover every buffer this worker can have out
+    /// at once — frames in flight plus the one being written:
+    /// `pipeline_depth + 2` under the pipelined coordinator (see the
+    /// module docs). Undersizing never misbehaves — [`Self::begin`]
+    /// falls back to a fresh allocation when the ring is empty — it
+    /// just forfeits the steady-state zero-alloc property.
+    pub fn new(ring_slots: usize) -> Self {
+        FrameWriter {
+            ring: Arc::new(Ring {
+                slots: Mutex::new(Vec::with_capacity(ring_slots.max(1))),
+                cap: ring_slots.max(1),
+            }),
+            buf: Vec::new(),
+            len: 0,
+            payload_bits: 0,
+            round: 0,
+            from: 0,
+            in_sharded: false,
+        }
+    }
+
+    /// Start a new frame: reclaim a ring buffer if one is home (fresh
+    /// allocation otherwise — warm-up only, in steady state a buffer is
+    /// always back) and write the round/from header with the same
+    /// checked narrowing as [`encode_parts`]. The reclaimed buffer is
+    /// neither cleared nor zeroed — the cursor rewinds over it and
+    /// every emitted byte is written explicitly, so warm rounds pay no
+    /// memset (the owned path's encode never did either).
+    pub fn begin(&mut self, round: u64, from: u32) -> Result<()> {
+        let Ok(r32) = u32::try_from(round) else {
+            bail!("round {round} overflows the u32 wire field")
+        };
+        let Ok(f16) = u16::try_from(from) else {
+            bail!("worker id {from} overflows the u16 wire field")
+        };
+        if self.buf.capacity() == 0 {
+            if let Ok(mut slots) = self.ring.slots.lock() {
+                if let Some(b) = slots.pop() {
+                    self.buf = b;
+                }
+            }
+        }
+        self.len = 0;
+        self.payload_bits = 0;
+        self.round = round;
+        self.from = from;
+        self.in_sharded = false;
+        let w = self.grab(HEADER_BYTES);
+        w[..4].copy_from_slice(&r32.to_le_bytes());
+        w[4..6].copy_from_slice(&f16.to_le_bytes());
+        Ok(())
+    }
+
+    /// Metered bits of the payload written so far — parity with
+    /// [`CompressedMsg::wire_bits`] of the equivalent owned message.
+    pub fn payload_bits(&self) -> u64 {
+        self.payload_bits
+    }
+
+    /// Re-read the payload just written as a validated borrowed view —
+    /// how Markov encoders fold c_t into ĝ and EF workers form their
+    /// residual without materializing the message. A parse failure here
+    /// is a codec bug (the bytes are self-produced) and surfaces as an
+    /// error, mirroring the server-side `CorruptFrame` diagnosis.
+    pub fn payload_view(&self) -> Result<PayloadView<'_>> {
+        parse_payload_slice(&self.buf[HEADER_BYTES..self.len])
+    }
+
+    /// Seal the frame: the buffer (truncated to the logical cursor)
+    /// moves into the [`FrameBytes`] (homed to this writer's ring — it
+    /// returns on drop) and the writer is ready for the next
+    /// [`Self::begin`].
+    pub fn finish(&mut self) -> FrameBytes {
+        self.buf.truncate(self.len);
+        FrameBytes {
+            round: self.round,
+            from: self.from,
+            payload_bits: self.payload_bits,
+            bytes: RingBuf {
+                data: std::mem::take(&mut self.buf),
+                home: Some(Arc::downgrade(&self.ring)),
+            },
+        }
+    }
+
+    /// Number of recycled buffers currently home in the ring
+    /// (introspection for the steady-state zero-alloc bench assertion).
+    pub fn recycled_slots(&self) -> usize {
+        self.ring.slots.lock().map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Begin a sharded payload: outer tag/d/count header (32 metered
+    /// bits for the count field). Shard sub-payloads follow — appended
+    /// serially through the writer itself, or in parallel via
+    /// [`Self::sharded_region`] + [`Self::end_sharded`]. Panics on
+    /// nesting, mirroring [`encode`]'s structural bail.
+    pub(crate) fn begin_sharded(&mut self, d: usize, count: usize) {
+        assert!(!self.in_sharded, "sharded payloads cannot nest");
+        debug_assert!(count > 0, "sharded payload with zero shards");
+        self.in_sharded = true;
+        payload_header(self, TAG_SHARDED, d, "sharded dim");
+        let w = self.grab(4);
+        w.copy_from_slice(&dim_field(count, "shard count").to_le_bytes());
+        self.payload_bits += 32;
+    }
+
+    /// Reserve `total` bytes of scratch window space for parallel shard
+    /// encoding; returns the region offset and the mutable window
+    /// region to split among jobs. Window contents are unspecified
+    /// (stale bytes from earlier rounds) — each shard writes its
+    /// payload from its window start and only those bytes survive
+    /// compaction. Capacity is retained across rounds, so steady state
+    /// re-reserves without allocating or zeroing.
+    pub(crate) fn sharded_region(&mut self, total: usize) -> (usize, &mut [u8]) {
+        let off = self.len;
+        let region = self.grab(total);
+        (off, region)
+    }
+
+    /// Compact the max-sized windows of [`Self::sharded_region`] into
+    /// the contiguous wire layout: shard i's `lens[i]` actual bytes
+    /// (of its `maxes[i]`-byte window) slide left to close the gaps —
+    /// one forward `memmove` pass — and its metered bits are folded in.
+    /// The result is byte-identical to serially appending the shards.
+    pub(crate) fn end_sharded(&mut self, region_off: usize, maxes: &[usize], outs: &[(usize, u64)]) {
+        debug_assert_eq!(maxes.len(), outs.len());
+        let mut write = region_off;
+        let mut read = region_off;
+        for (&max, &(len, bits)) in maxes.iter().zip(outs) {
+            debug_assert!(len <= max, "shard payload overflowed its window");
+            if write != read {
+                self.buf.copy_within(read..read + len, write);
+            }
+            write += len;
+            read += max;
+            self.payload_bits += bits;
+        }
+        // rewind the cursor over the compacted-away window slack (the
+        // backing bytes stay for reuse; finish() truncates to the cursor)
+        self.len = write;
+    }
+}
+
+/// Byte-level cursor beneath the two [`PayloadSink`] implementations:
+/// exactly **one** copy of the direct-encode payload layout lives in
+/// the `payload_*` free functions below, written through this minimal
+/// grow/rewind interface — [`FrameWriter`] appends to its frame buffer,
+/// [`ShardWindow`] fills its pre-sized slice. ([`encode_payload`]
+/// remains the owned-message twin; the egress fuzz oracle pins the two
+/// byte-identical.)
+trait PayloadCursor {
+    /// Append `n` bytes to the payload and return them for filling.
+    fn grab(&mut self, n: usize) -> &mut [u8];
+
+    /// Current write position (for the sign → zero rewind).
+    fn pos(&self) -> usize;
+
+    /// Truncate back to a previous position.
+    fn rewind(&mut self, pos: usize);
+}
+
+/// tag + pad + u32 dim — the header every payload kind starts with.
+fn payload_header(c: &mut impl PayloadCursor, tag: u8, d: usize, what: &str) {
+    let w = c.grab(6);
+    w[0] = tag;
+    w[1] = 0;
+    w[2..6].copy_from_slice(&dim_field(d, what).to_le_bytes());
+}
+
+fn payload_dense(c: &mut impl PayloadCursor, x: &[f32]) -> u64 {
+    payload_header(c, TAG_DENSE, x.len(), "dense dim");
+    let w = c.grab(4 * x.len());
+    for (dst, v) in w.chunks_exact_mut(4).zip(x) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+    32 * x.len() as u64
+}
+
+fn payload_zero(c: &mut impl PayloadCursor, d: usize) -> u64 {
+    payload_header(c, TAG_ZERO, d, "zero dim");
+    32
+}
+
+fn payload_sign_with(
+    c: &mut impl PayloadCursor,
+    d: usize,
+    fill: &mut dyn FnMut(&mut [u8]) -> f32,
+) -> u64 {
+    let start = c.pos();
+    payload_header(c, TAG_SIGN, d, "sign dim");
+    let scale = {
+        // scale field + bitmap as one window: fill packs the bitmap,
+        // then the returned scale lands in front of it
+        let w = c.grab(4 + d.div_ceil(8));
+        let scale = fill(&mut w[4..]);
+        w[..4].copy_from_slice(&scale.to_le_bytes());
+        scale
+    };
+    if scale == 0.0 {
+        // mirror ScaledSign: an exactly-zero vector encodes as Zero
+        c.rewind(start);
+        return payload_zero(c, d);
+    }
+    32 + d as u64
+}
+
+fn payload_sparse(c: &mut impl PayloadCursor, d: usize, idx: &[u32], x: &[f32]) -> u64 {
+    payload_header(c, TAG_SPARSE, d, "sparse dim");
+    let w = c.grab(4 + 8 * idx.len());
+    w[..4].copy_from_slice(&dim_field(idx.len(), "sparse k").to_le_bytes());
+    let (wi, wv) = w[4..].split_at_mut(4 * idx.len());
+    for (dst, i) in wi.chunks_exact_mut(4).zip(idx) {
+        dst.copy_from_slice(&i.to_le_bytes());
+    }
+    for (dst, &i) in wv.chunks_exact_mut(4).zip(idx) {
+        dst.copy_from_slice(&x[i as usize].to_le_bytes());
+    }
+    32 + 64 * idx.len() as u64
+}
+
+impl PayloadCursor for FrameWriter {
+    fn grab(&mut self, n: usize) -> &mut [u8] {
+        let at = self.len;
+        self.len += n;
+        if self.len > self.buf.len() {
+            // cold: first time this frame size is seen. Warm rounds
+            // stay under the high-water mark and never touch the
+            // backing length, so no bytes are zeroed twice.
+            self.buf.resize(self.len, 0);
+        }
+        &mut self.buf[at..self.len]
+    }
+
+    fn pos(&self) -> usize {
+        self.len
+    }
+
+    fn rewind(&mut self, pos: usize) {
+        self.len = pos;
+    }
+}
+
+impl PayloadSink for FrameWriter {
+    fn put_dense(&mut self, x: &[f32]) {
+        let bits = payload_dense(self, x);
+        self.payload_bits += bits;
+    }
+
+    fn put_zero(&mut self, d: usize) {
+        let bits = payload_zero(self, d);
+        self.payload_bits += bits;
+    }
+
+    fn put_sign_with(&mut self, d: usize, fill: &mut dyn FnMut(&mut [u8]) -> f32) {
+        let bits = payload_sign_with(self, d, fill);
+        self.payload_bits += bits;
+    }
+
+    fn put_sparse(&mut self, d: usize, idx: &[u32], x: &[f32]) {
+        let bits = payload_sparse(self, d, idx, x);
+        self.payload_bits += bits;
+    }
+
+    fn put_msg(&mut self, msg: &CompressedMsg) {
+        // fallback path: encode_payload appends to the Vec, so align
+        // the backing length with the cursor first (drops the
+        // high-water tail — owned-message compressors never ride the
+        // warm-buffer fast path anyway). `in_sharded` doubles as the
+        // codec's nesting flag: a Sharded message appended inside a
+        // sharded frame fails here exactly like the owned encoder
+        // would.
+        self.buf.truncate(self.len);
+        encode_payload(msg, &mut self.buf, self.in_sharded)
+            .expect("self-produced payload failed wire encoding");
+        self.len = self.buf.len();
+        self.payload_bits += msg.wire_bits();
+    }
+
+    fn as_frame_writer(&mut self) -> Option<&mut FrameWriter> {
+        // inside a sharded payload the writer is a *nested* position:
+        // refusing the downcast here routes a nested sharded compressor
+        // onto the put_msg fallback, which fails with the codec's own
+        // no-nesting diagnostic instead of tripping begin_sharded's
+        // assert.
+        if self.in_sharded {
+            None
+        } else {
+            Some(self)
+        }
+    }
+}
+
+/// One pre-sized disjoint window of a [`FrameWriter`]'s sharded region:
+/// the per-job sink for parallel shard encoding. Writes are cursor-
+/// bumped into the borrowed slice (never past its end — windows are
+/// sized by [`crate::compress::Compressor::max_encoded_payload_bytes`])
+/// and the final `(len, bits)` pair feeds the compaction pass.
+pub struct ShardWindow<'a> {
+    buf: &'a mut [u8],
+    len: usize,
+    bits: u64,
+}
+
+impl<'a> ShardWindow<'a> {
+    pub fn new(buf: &'a mut [u8]) -> Self {
+        ShardWindow { buf, len: 0, bits: 0 }
+    }
+
+    /// (bytes written, metered payload bits) — the compaction inputs.
+    pub fn into_parts(self) -> (usize, u64) {
+        (self.len, self.bits)
+    }
+}
+
+impl PayloadCursor for ShardWindow<'_> {
+    fn grab(&mut self, n: usize) -> &mut [u8] {
+        let at = self.len;
+        self.len += n;
+        &mut self.buf[at..self.len]
+    }
+
+    fn pos(&self) -> usize {
+        self.len
+    }
+
+    fn rewind(&mut self, pos: usize) {
+        self.len = pos;
+    }
+}
+
+impl PayloadSink for ShardWindow<'_> {
+    fn put_dense(&mut self, x: &[f32]) {
+        let bits = payload_dense(self, x);
+        self.bits += bits;
+    }
+
+    fn put_zero(&mut self, d: usize) {
+        let bits = payload_zero(self, d);
+        self.bits += bits;
+    }
+
+    fn put_sign_with(&mut self, d: usize, fill: &mut dyn FnMut(&mut [u8]) -> f32) {
+        let bits = payload_sign_with(self, d, fill);
+        self.bits += bits;
+    }
+
+    fn put_sparse(&mut self, d: usize, idx: &[u32], x: &[f32]) {
+        let bits = payload_sparse(self, d, idx, x);
+        self.bits += bits;
+    }
+
+    fn put_msg(&mut self, msg: &CompressedMsg) {
+        // fallback only (custom compressors without a direct encoder):
+        // encode via a temporary, then copy into the window. Nested
+        // position ⇒ nested = true, so a Sharded message fails loudly
+        // here exactly like the owned encoder.
+        let mut tmp = Vec::new();
+        encode_payload(msg, &mut tmp, true).expect("self-produced payload failed wire encoding");
+        let lo = self.len;
+        self.buf[lo..lo + tmp.len()].copy_from_slice(&tmp);
+        self.len += tmp.len();
+        self.bits += msg.wire_bits();
     }
 }
 
@@ -611,6 +1189,45 @@ impl<'a> PayloadView<'a> {
                         sh.add_scaled_range(lo - blk_lo, &mut out[lo - start..hi - start], s);
                     }
                 }
+            }
+        }
+    }
+
+    /// delta = e − decode(self): the error-feedback residual, fused
+    /// into one pass straight off the wire bytes — the view twin of
+    /// [`CompressedMsg::residual_into`], bit-identical to the
+    /// historical `decode_into` + `tensor::sub` pair it replaces (per
+    /// element the same `e − dec` subtraction of the same values; for
+    /// coordinates the message does not carry, `e − 0.0` equals `e`
+    /// bitwise for every f32 including −0.0, so the copy is exact).
+    pub fn residual_into(&self, e: &[f32], delta: &mut [f32]) {
+        assert_eq!(e.len(), self.dim());
+        assert_eq!(delta.len(), self.dim());
+        match self {
+            PayloadView::Dense { bytes } => {
+                for (j, (dl, &ei)) in delta.iter_mut().zip(e).enumerate() {
+                    *dl = ei - f32_at(bytes, j);
+                }
+            }
+            PayloadView::Sign { d, scale, bytes } => {
+                packing::residual_signs_scaled_bytes(bytes, *scale, &e[..*d], &mut delta[..*d]);
+            }
+            PayloadView::Sparse { idx, val, .. } => {
+                delta.copy_from_slice(e);
+                for j in 0..idx.len() / 4 {
+                    let i = idx_at(idx, j) as usize;
+                    delta[i] = e[i] - f32_at(val, j);
+                }
+            }
+            PayloadView::Zero { .. } => delta.copy_from_slice(e),
+            PayloadView::Sharded { d, shards } => {
+                let mut off = 0;
+                for s in shards {
+                    let n = s.dim();
+                    s.residual_into(&e[off..off + n], &mut delta[off..off + n]);
+                    off += n;
+                }
+                debug_assert_eq!(off, *d);
             }
         }
     }
@@ -1028,6 +1645,237 @@ mod tests {
             fv.payload.decode_into(&mut dec_view);
             assert!(dec_owned.iter().zip(&dec_view).all(|(p, q)| p.to_bits() == q.to_bits()));
         }
+    }
+
+    #[test]
+    fn frame_writer_ring_recycles_buffers() {
+        let mut fw = FrameWriter::new(2);
+        let payload = ScaledSign::new().compress(&[1.0, -2.0, 0.5]);
+        fw.begin(1, 0).unwrap();
+        PayloadSink::put_msg(&mut fw, &payload);
+        let frame = fw.finish();
+        let first_bytes: Vec<u8> = frame.bytes.to_vec();
+        assert_eq!(fw.recycled_slots(), 0, "buffer still out in the frame");
+        // a clone is an orphan: dropping it must not feed the ring
+        let orphan = frame.clone();
+        drop(orphan);
+        assert_eq!(fw.recycled_slots(), 0);
+        drop(frame);
+        assert_eq!(fw.recycled_slots(), 1, "dropped frame returns its buffer");
+        // the recycled buffer is taken back and produces identical bytes
+        fw.begin(1, 0).unwrap();
+        PayloadSink::put_msg(&mut fw, &payload);
+        assert_eq!(fw.recycled_slots(), 0, "begin reclaimed the buffer");
+        let frame2 = fw.finish();
+        assert_eq!(first_bytes, frame2.bytes.to_vec());
+        // the ring cap bounds retention
+        let extra: Vec<FrameBytes> = (0..4)
+            .map(|t| {
+                fw.begin(t, 0).unwrap();
+                PayloadSink::put_msg(&mut fw, &payload);
+                fw.finish()
+            })
+            .collect();
+        drop(frame2);
+        drop(extra);
+        assert!(fw.recycled_slots() <= 2, "ring exceeded its cap");
+    }
+
+    /// A compressor with no `compress_into` override: exercises the
+    /// default put_msg fallback on both sink implementations (the
+    /// FrameWriter append path and the nested ShardWindow path).
+    #[derive(Clone)]
+    struct DefaultPathSign(ScaledSign);
+
+    impl Compressor for DefaultPathSign {
+        fn name(&self) -> &'static str {
+            "default_path_sign"
+        }
+
+        fn pi_bound(&self, d: usize) -> f64 {
+            self.0.pi_bound(d)
+        }
+
+        fn compress(&mut self, x: &[f32]) -> CompressedMsg {
+            self.0.compress(x)
+        }
+
+        fn box_clone(&self) -> Box<dyn Compressor> {
+            Box::new(self.clone())
+        }
+    }
+
+    /// Fuzz iteration budget shared with the decode corpus
+    /// (`CDADAM_FUZZ_ITERS`; CI smoke pins a larger fixed budget).
+    fn egress_iters() -> usize {
+        (fuzz_iters() / 4).max(20)
+    }
+
+    /// The egress differential oracle: for every compressor family ×
+    /// shard geometry, across evolving multi-round inputs (stateful
+    /// rand-k streams must stay aligned), the frame produced by
+    /// `compress_into` through a reused FrameWriter must be
+    /// **byte-identical** to `encode_frame(round, from, &compress(x))`
+    /// — and meter identical payload bits.
+    #[test]
+    fn fuzz_egress_writer_differential() {
+        use crate::compress::{Identity, RandK, TopKBlock};
+        // (label, paired constructors — one instance drives the owned
+        // path, its twin the writer path; identical construction ⇒
+        // identical streams)
+        let families: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()))),
+            ("topk", Box::new(|| Box::new(TopK::with_frac(0.2)))),
+            ("top1", Box::new(|| Box::new(TopK::with_k(1)))),
+            ("topk_block", Box::new(|| Box::new(TopKBlock::with_frac(0.25, 29)))),
+            ("randk", Box::new(|| Box::new(RandK::with_frac(0.15, 42)))),
+            ("identity", Box::new(|| Box::new(Identity))),
+            ("default_path", Box::new(|| Box::new(DefaultPathSign(ScaledSign::new())))),
+            (
+                "sharded_sign_serial",
+                Box::new(|| Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 16, 1))),
+            ),
+            (
+                "sharded_sign_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(ScaledSign::new()), 37, 2)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+            (
+                "sharded_topk_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(TopK::with_frac(0.2)), 24, 3)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+            (
+                "sharded_randk_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(RandK::with_frac(0.1, 7)), 32, 2)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+            (
+                "sharded_identity_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(Identity), 40, 2).with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+            (
+                "sharded_default_path_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(
+                            Box::new(DefaultPathSign(ScaledSign::new())),
+                            20,
+                            2,
+                        )
+                        .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+        ];
+        let mut rng = Rng::new(0xE63E55);
+        let iters = egress_iters();
+        for (label, mk) in &families {
+            let mut owned_c = mk();
+            let mut writer_c = mk();
+            let mut fw = FrameWriter::new(3);
+            for it in 0..iters {
+                let d = 1 + (rng.next_u64() % 150) as usize;
+                let mut x = vec![0.0f32; d];
+                match it % 5 {
+                    // all-zero: the sign → Zero rewind path
+                    0 => {}
+                    // zero head: sharded frames mix Zero and sign
+                    // shards ⇒ ragged window compaction
+                    1 => {
+                        let mut tail = vec![0.0f32; d - d / 2];
+                        rng.fill_normal(&mut tail, 1.0);
+                        x[d / 2..].copy_from_slice(&tail);
+                    }
+                    // signed-zero / constant structure
+                    2 => {
+                        for (i, v) in x.iter_mut().enumerate() {
+                            *v = if i % 3 == 0 { -0.0 } else { 1.5 };
+                        }
+                    }
+                    _ => rng.fill_normal(&mut x, 1.0),
+                }
+                // multi-round so stateful streams evolve in lockstep
+                for t in 0..2u64 {
+                    let round = it as u64 * 2 + t;
+                    let owned = encode_frame(round, 3, &owned_c.compress(&x)).unwrap();
+                    fw.begin(round, 3).unwrap();
+                    writer_c.compress_into(&x, &mut fw);
+                    let written = fw.finish();
+                    assert_eq!(
+                        owned.payload_bits, written.payload_bits,
+                        "{label}: metered bits diverged (d={d}, it={it})"
+                    );
+                    assert_eq!(
+                        &owned.bytes[..],
+                        &written.bytes[..],
+                        "{label}: frame bytes diverged (d={d}, it={it})"
+                    );
+                    // the written frame is a valid frame
+                    let fv = FrameView::parse(&written.bytes).unwrap();
+                    assert_eq!(fv.round, round);
+                    assert_eq!(fv.from, 3);
+                    assert_eq!(fv.payload.wire_bits(), written.payload_bits);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_view_residual_matches_decode_sub() {
+        // PayloadView::residual_into ≡ decode_into + sub, to the bit,
+        // for every payload kind including sharded mixes.
+        check("view residual == decode+sub", Config::default(), |g| {
+            let d = 8 + g.size(300);
+            let x = g.vec_normal(d, 1.5);
+            let mut e = g.vec_f32(d, 2.0);
+            e[0] = -0.0;
+            let payloads: Vec<CompressedMsg> = vec![
+                ScaledSign::new().compress(&x),
+                TopK::with_frac(0.15).compress(&x),
+                CompressedMsg::Dense(x.clone()),
+                CompressedMsg::Zero { d },
+                ShardedCompressor::new(Box::new(ScaledSign::new()), 37, 2).compress(&x),
+                ShardedCompressor::new(Box::new(TopK::with_frac(0.3)), 29, 2).compress(&x),
+            ];
+            for payload in payloads {
+                let bytes = encode_parts(1, 0, &payload).unwrap();
+                let fv = FrameView::parse(&bytes).unwrap();
+                let mut dec = vec![0.0f32; d];
+                payload.decode_into(&mut dec);
+                let mut want = vec![0.0f32; d];
+                crate::tensor::sub(&mut want, &e, &dec);
+                let mut got_owned = vec![9.0f32; d];
+                payload.residual_into(&e, &mut got_owned);
+                let mut got_view = vec![9.0f32; d];
+                fv.payload.residual_into(&e, &mut got_view);
+                for i in 0..d {
+                    if want[i].to_bits() != got_owned[i].to_bits() {
+                        return Err(format!("owned residual diverged at {i}"));
+                    }
+                    if want[i].to_bits() != got_view[i].to_bits() {
+                        return Err(format!("view residual diverged at {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

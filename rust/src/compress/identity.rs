@@ -20,6 +20,16 @@ impl Compressor for Identity {
         CompressedMsg::Dense(x.to_vec())
     }
 
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn crate::comm::wire::PayloadSink) {
+        // straight to wire bytes — the owned path's x.to_vec() clone
+        // plus its encode copy collapse into one pass into the frame
+        sink.put_dense(x);
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        6 + 4 * d
+    }
+
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
     }

@@ -211,6 +211,40 @@ impl CompressedMsg {
         }
     }
 
+    /// delta = e − decode(self): the error-feedback residual fused into
+    /// one pass — replaces the historical `decode_into(buf)` +
+    /// `tensor::sub(delta, e, buf)` pair (a full d-length scratch pass)
+    /// bit-for-bit: per element the same `e − dec` subtraction of the
+    /// same values runs, and for coordinates the message does not carry
+    /// `e − 0.0` equals `e` bitwise for every f32 (including −0.0), so
+    /// the copy is exact. Property-pinned against the two-pass form.
+    pub fn residual_into(&self, e: &[f32], delta: &mut [f32]) {
+        assert_eq!(e.len(), self.dim());
+        assert_eq!(delta.len(), self.dim());
+        match self {
+            CompressedMsg::Dense(v) => tensor::sub(delta, e, v),
+            CompressedMsg::SignScale { d, scale, bits } => {
+                packing::residual_signs_scaled(bits, *scale, &e[..*d], &mut delta[..*d]);
+            }
+            CompressedMsg::Sparse { idx, val, .. } => {
+                delta.copy_from_slice(e);
+                for (&i, &v) in idx.iter().zip(val) {
+                    delta[i as usize] = e[i as usize] - v;
+                }
+            }
+            CompressedMsg::Zero { .. } => delta.copy_from_slice(e),
+            CompressedMsg::Sharded { d, shards } => {
+                let mut off = 0;
+                for s in shards {
+                    let n = s.dim();
+                    s.residual_into(&e[off..off + n], &mut delta[off..off + n]);
+                    off += n;
+                }
+                debug_assert_eq!(off, *d);
+            }
+        }
+    }
+
     /// Decode into a fresh vector (test/convenience path).
     pub fn to_dense(&self) -> Vec<f32> {
         let mut v = vec![0.0; self.dim()];
@@ -230,6 +264,28 @@ pub trait Compressor: Send + Sync {
 
     /// Compress `x` into a wire message.
     fn compress(&mut self, x: &[f32]) -> CompressedMsg;
+
+    /// Zero-copy egress: compress `x` **straight into wire payload
+    /// bytes** through `sink`, producing output byte-identical to
+    /// serializing [`Self::compress`]'s message (same layout, same
+    /// float bit patterns, same metered bits — the
+    /// `fuzz_egress_writer_differential` oracle pins it per family).
+    /// Stateful compressors must consume the identical RNG stream on
+    /// both paths. The default routes through the owned message
+    /// (correct for any compressor); the hot families override it with
+    /// direct, steady-state-zero-alloc encoders.
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn crate::comm::wire::PayloadSink) {
+        sink.put_msg(&self.compress(x));
+    }
+
+    /// Upper bound on the encoded payload size of [`Self::compress_into`]
+    /// for a `d`-dimensional input, in bytes — how
+    /// [`ShardedCompressor`] pre-sizes the disjoint per-shard windows
+    /// its workpool jobs encode into. The default covers every message
+    /// kind (a sparse payload of k = d pairs); overrides tighten it.
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        10 + 8 * d
+    }
 
     /// Boxed clone for spawning per-worker instances.
     fn box_clone(&self) -> Box<dyn Compressor>;

@@ -98,15 +98,60 @@ pub fn add_signs_scaled_range_bytes(bytes: &[u8], scale: f32, start: usize, out:
     }
 }
 
+/// delta[i] = e[i] − scale·(bit_i ? +1 : −1) — the error-feedback
+/// residual δ = e − decode(C(e)) for a sign message, fused into one
+/// pass. Per element it runs the identical subtraction the historical
+/// `unpack_signs_scaled` + `tensor::sub` pair ran (same ±scale value,
+/// same `e − dec` op), so the fused form is bit-for-bit the two-pass
+/// form it replaces — without materializing the decode buffer.
+pub fn residual_signs_scaled(bits: &[u64], scale: f32, e: &[f32], delta: &mut [f32]) {
+    debug_assert_eq!(e.len(), delta.len());
+    debug_assert!(bits.len() * 64 >= delta.len());
+    for ((dchunk, echunk), &word) in delta.chunks_mut(64).zip(e.chunks(64)).zip(bits) {
+        for (j, (d, &ei)) in dchunk.iter_mut().zip(echunk).enumerate() {
+            *d = ei - if word >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+/// [`residual_signs_scaled`] reading the bitmap straight from its
+/// little-endian wire bytes (the zero-copy egress/ingest layout: bit i
+/// at byte `i/8`, position `i%8`) — per-element ops identical to the
+/// word kernel, so both residual forms agree to the bit.
+pub fn residual_signs_scaled_bytes(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
+    debug_assert_eq!(e.len(), delta.len());
+    debug_assert!(bytes.len() * 8 >= delta.len());
+    for ((dchunk, echunk), &byte) in delta.chunks_mut(8).zip(e.chunks(8)).zip(bytes) {
+        for (j, (d, &ei)) in dchunk.iter_mut().zip(echunk).enumerate() {
+            *d = ei - if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
 /// Serialize packed words to little-endian bytes (wire encoding).
 pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    extend_words_as_bytes(bits, d, &mut out);
+    out
+}
+
+/// Append the `⌈d/8⌉` wire bytes of a packed sign bitmap directly onto
+/// `out` — the streaming form of [`words_to_bytes`] used by the encode
+/// path, which used to materialize the byte vector just to
+/// `extend_from_slice` it into the frame and throw it away (a full
+/// extra pass over the bitmap per sign payload per round).
+pub fn extend_words_as_bytes(bits: &[u64], d: usize, out: &mut Vec<u8>) {
     let nbytes = d.div_ceil(8);
-    let mut out = Vec::with_capacity(nbytes);
-    for w in bits {
+    debug_assert!(bits.len() * 8 >= nbytes);
+    out.reserve(nbytes);
+    let full = nbytes / 8;
+    for w in &bits[..full] {
         out.extend_from_slice(&w.to_le_bytes());
     }
-    out.truncate(nbytes);
-    out
+    let rem = nbytes - full * 8;
+    if rem > 0 {
+        out.extend_from_slice(&bits[full].to_le_bytes()[..rem]);
+    }
 }
 
 /// Deserialize little-endian bytes back into packed words.
@@ -210,5 +255,57 @@ mod tests {
         let mut out = vec![10.0, 10.0];
         add_signs_scaled(&bits, 3.0, &mut out);
         assert_eq!(out, vec![13.0, 7.0]);
+    }
+
+    #[test]
+    fn prop_extend_words_matches_words_to_bytes() {
+        check("streamed bytes == materialized bytes", Config::default(), |g| {
+            let d = g.size(520);
+            let x = g.vec_f32(d, 3.0);
+            let bits = pack_signs(&x);
+            let mut streamed = vec![0xAAu8; 3]; // non-empty prefix preserved
+            extend_words_as_bytes(&bits, d, &mut streamed);
+            let mut want = vec![0xAAu8; 3];
+            want.extend_from_slice(&words_to_bytes(&bits, d));
+            if streamed != want {
+                return Err(format!("streamed encoding diverged at d={d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_residual_kernels_match_unpack_sub() {
+        // fused δ = e − decode must equal the historical two-pass
+        // unpack + sub to the bit, for both bitmap layouts, including
+        // signed zeros in e.
+        check("fused residual == unpack+sub", Config::default(), |g| {
+            let d = g.size(300);
+            let x = g.vec_f32(d, 2.0);
+            let mut e = g.vec_f32(d, 1.5);
+            if !e.is_empty() {
+                e[0] = -0.0; // exercise the −0.0 − (±scale) corner
+            }
+            let bits = pack_signs(&x);
+            let bytes = words_to_bytes(&bits, d);
+            let scale = 0.37f32;
+            let mut dec = vec![0.0f32; d];
+            unpack_signs_scaled(&bits, scale, &mut dec);
+            let mut want = vec![0.0f32; d];
+            crate::tensor::sub(&mut want, &e, &dec);
+            let mut via_words = vec![7.0f32; d];
+            residual_signs_scaled(&bits, scale, &e, &mut via_words);
+            let mut via_bytes = vec![7.0f32; d];
+            residual_signs_scaled_bytes(&bytes, scale, &e, &mut via_bytes);
+            for i in 0..d {
+                if want[i].to_bits() != via_words[i].to_bits() {
+                    return Err(format!("word residual diverged at {i}"));
+                }
+                if want[i].to_bits() != via_bytes[i].to_bits() {
+                    return Err(format!("byte residual diverged at {i}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -58,6 +58,29 @@ impl Compressor for RandK {
         CompressedMsg::Sparse { d, idx, val }
     }
 
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn crate::comm::wire::PayloadSink) {
+        let d = x.len();
+        let k = self.k_for(d);
+        if k >= d {
+            sink.put_dense(x);
+            return;
+        }
+        // identical RNG consumption as `compress` (same sampler, same
+        // stream position), so owned and egress paths pick the same
+        // coordinates round after round; values gather straight from x.
+        let idx = self.rng.sample_indices(d, k);
+        sink.put_sparse(d, &idx, x);
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        let k = self.k_for(d);
+        if k >= d {
+            6 + 4 * d
+        } else {
+            10 + 8 * k
+        }
+    }
+
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
     }

@@ -5,6 +5,7 @@
 //! π(x) = 1 − ‖x‖₁²/(d‖x‖₂²) ≤ 1 − 1/d (Supplemental A, eq. A.2).
 
 use super::{CompressedMsg, Compressor};
+use crate::comm::wire::PayloadSink;
 
 /// Stateless scaled-sign compressor.
 #[derive(Clone, Debug, Default)]
@@ -16,6 +17,32 @@ impl ScaledSign {
     pub fn new() -> Self {
         ScaledSign { _priv: () }
     }
+}
+
+/// The fused sign scan (§Perf iter 3), shared by the owned and the
+/// zero-copy egress encoders so the two cannot drift: pack each 64-wide
+/// sign word and accumulate the blockwise f32 L1 sum in the same sweep
+/// (sub-sums per 64 elements, combined per 1024 — the same few-ulp
+/// agreement with the Pallas two-pass reduction), emitting each word to
+/// the caller. Returns the L1 total; scale = total / d.
+fn scan_signs(x: &[f32], mut emit: impl FnMut(usize, u64)) -> f32 {
+    let mut total = 0.0f32;
+    let mut block = 0.0f32;
+    for (wi, chunk) in x.chunks(64).enumerate() {
+        let mut word = 0u64;
+        let mut s = 0.0f32;
+        for (j, &v) in chunk.iter().enumerate() {
+            word |= u64::from(v >= 0.0) << j;
+            s += v.abs();
+        }
+        emit(wi, word);
+        block += s;
+        if wi % 16 == 15 {
+            total += block;
+            block = 0.0;
+        }
+    }
+    total + block
 }
 
 impl Compressor for ScaledSign {
@@ -30,34 +57,36 @@ impl Compressor for ScaledSign {
 
     fn compress(&mut self, x: &[f32]) -> CompressedMsg {
         let d = x.len();
-        // Fused single pass (§Perf iter 3): pack the sign word and
-        // accumulate the blockwise f32 L1 sum in the same sweep, halving
-        // memory traffic vs norm1 + pack_signs. Accumulation stays
-        // blockwise (sub-sums per 64, combined per 1024) to keep the
-        // same few-ulp agreement with the Pallas two-pass reduction.
         let mut words = vec![0u64; d.div_ceil(64)];
-        let mut total = 0.0f32;
-        let mut block = 0.0f32;
-        for (wi, chunk) in x.chunks(64).enumerate() {
-            let mut word = 0u64;
-            let mut s = 0.0f32;
-            for (j, &v) in chunk.iter().enumerate() {
-                word |= u64::from(v >= 0.0) << j;
-                s += v.abs();
-            }
-            words[wi] = word;
-            block += s;
-            if wi % 16 == 15 {
-                total += block;
-                block = 0.0;
-            }
-        }
-        total += block;
+        let total = scan_signs(x, |wi, word| words[wi] = word);
         let scale = total / d as f32;
         if scale == 0.0 {
             return CompressedMsg::Zero { d };
         }
         CompressedMsg::SignScale { d, scale, bits: words }
+    }
+
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn PayloadSink) {
+        let d = x.len();
+        sink.put_sign_with(d, &mut |bitmap: &mut [u8]| {
+            // identical scan to `compress` — the words land as their
+            // little-endian wire bytes directly in the frame's bitmap
+            // window (no Vec<u64> → words_to_bytes round trip), and the
+            // scale accumulates in the same op order, so bytes AND
+            // float bits match the owned path exactly.
+            let total = scan_signs(x, |wi, word| {
+                let lo = wi * 8;
+                let n = bitmap.len().min(lo + 8) - lo;
+                bitmap[lo..lo + n].copy_from_slice(&word.to_le_bytes()[..n]);
+            });
+            total / d as f32
+        });
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        // sign payload: 6-byte tag/d header + 4-byte scale + bitmap
+        // (the zero-vector Zero payload is smaller)
+        10 + d.div_ceil(8)
     }
 
     fn box_clone(&self) -> Box<dyn Compressor> {

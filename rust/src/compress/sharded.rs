@@ -20,6 +20,7 @@
 //! is simply never constructed).
 
 use super::{CompressedMsg, Compressor};
+use crate::comm::wire::{PayloadSink, ShardWindow};
 use crate::util::workpool::WorkPool;
 
 /// Wraps any compressor into its block-sharded, thread-parallel variant.
@@ -28,10 +29,19 @@ pub struct ShardedCompressor {
     inner: Box<dyn Compressor>,
     shard_size: usize,
     threads: usize,
+    /// Serial/parallel cutover dimension (normally
+    /// [`Self::MIN_PARALLEL_DIM`]; injectable so tests can force the
+    /// pool path at tiny d, mirroring `AggEngine::with_min_parallel_dim`).
+    min_parallel_dim: usize,
     /// One forked instance per shard, grown lazily when the dimension is
     /// first seen — stateful inner compressors (rand-k) need one
     /// independent stream per shard, exactly like per-worker forking.
     shard_comps: Vec<Box<dyn Compressor>>,
+    /// Resident egress scratch: per-shard window sizes and per-shard
+    /// (bytes written, metered bits) results of the parallel direct
+    /// encode — reused across rounds.
+    win_max: Vec<usize>,
+    win_out: Vec<(usize, u64)>,
 }
 
 impl ShardedCompressor {
@@ -46,7 +56,23 @@ impl ShardedCompressor {
     /// `threads` is clamped to ≥ 1.
     pub fn new(inner: Box<dyn Compressor>, shard_size: usize, threads: usize) -> Self {
         assert!(shard_size > 0, "shard_size must be >= 1 (0 disables sharding in the config)");
-        ShardedCompressor { inner, shard_size, threads: threads.max(1), shard_comps: Vec::new() }
+        ShardedCompressor {
+            inner,
+            shard_size,
+            threads: threads.max(1),
+            min_parallel_dim: Self::MIN_PARALLEL_DIM,
+            shard_comps: Vec::new(),
+            win_max: Vec::new(),
+            win_out: Vec::new(),
+        }
+    }
+
+    /// Override the serial/parallel cutover (tests force the pool +
+    /// window path at tiny d, where the default would stay serial). A
+    /// scheduling knob only — the emitted bytes are identical.
+    pub fn with_min_parallel_dim(mut self, d: usize) -> Self {
+        self.min_parallel_dim = d.max(1);
+        self
     }
 
     pub fn shard_size(&self) -> usize {
@@ -79,7 +105,7 @@ impl Compressor for ShardedCompressor {
         self.ensure_shard_comps(num_shards);
         let chunks: Vec<&[f32]> = x.chunks(self.shard_size).collect();
         let mut shards: Vec<CompressedMsg> = vec![CompressedMsg::Zero { d: 0 }; num_shards];
-        let threads = if d < Self::MIN_PARALLEL_DIM { 1 } else { self.threads.min(num_shards) };
+        let threads = if d < self.min_parallel_dim { 1 } else { self.threads.min(num_shards) };
         if threads <= 1 {
             for ((comp, out), chunk) in
                 self.shard_comps.iter_mut().zip(shards.iter_mut()).zip(&chunks)
@@ -115,6 +141,97 @@ impl Compressor for ShardedCompressor {
         CompressedMsg::Sharded { d, shards }
     }
 
+    /// Zero-copy egress: shards encode **directly into disjoint windows
+    /// of one frame buffer**. Serially (below the cutover, or one
+    /// thread) each shard appends through the writer in order — already
+    /// the final layout. In parallel, each workpool job writes its
+    /// shard's sub-payload into a pre-sized window
+    /// ([`Compressor::max_encoded_payload_bytes`] of the shard dim) and
+    /// one compaction pass slides the actual bytes together — the
+    /// emitted frame is byte-identical to serializing [`Self::compress`]
+    /// either way (shard compressors and their streams are the same).
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn PayloadSink) {
+        let Some(fw) = sink.as_frame_writer() else {
+            // nested position (a sharded inner compressor inside another
+            // sharded frame) — the wire format rejects nesting; route
+            // through the owned encoder so it fails with the codec's
+            // own diagnostic.
+            let msg = self.compress(x);
+            sink.put_msg(&msg);
+            return;
+        };
+        let d = x.len();
+        if d == 0 {
+            fw.put_zero(0);
+            return;
+        }
+        let num_shards = d.div_ceil(self.shard_size);
+        self.ensure_shard_comps(num_shards);
+        let threads = if d < self.min_parallel_dim { 1 } else { self.threads.min(num_shards) };
+        fw.begin_sharded(d, num_shards);
+        if threads <= 1 {
+            for (comp, chunk) in self.shard_comps.iter_mut().zip(x.chunks(self.shard_size)) {
+                comp.compress_into(chunk, fw);
+            }
+            return;
+        }
+        // window sizing (resident scratch — no per-round growth)
+        self.win_max.clear();
+        for (comp, chunk) in self.shard_comps.iter().zip(x.chunks(self.shard_size)) {
+            self.win_max.push(comp.max_encoded_payload_bytes(chunk.len()));
+        }
+        let total: usize = self.win_max.iter().sum();
+        self.win_out.clear();
+        self.win_out.resize(num_shards, (0, 0));
+        let (region_off, region) = fw.sharded_region(total);
+        // split the region into per-shard windows
+        let mut windows: Vec<&mut [u8]> = Vec::with_capacity(num_shards);
+        let mut rest = region;
+        for &m in &self.win_max {
+            let (w, r) = rest.split_at_mut(m);
+            windows.push(w);
+            rest = r;
+        }
+        let chunks: Vec<&[f32]> = x.chunks(self.shard_size).collect();
+        // contiguous static partition, mirroring `compress`: shard i
+        // goes to job i/per; every job owns disjoint &mut slices of the
+        // compressor pool, the window set, and the result slots.
+        let per = num_shards.div_ceil(threads);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .shard_comps
+            .chunks_mut(per)
+            .zip(windows.chunks_mut(per))
+            .zip(chunks.chunks(per))
+            .zip(self.win_out.chunks_mut(per))
+            .map(|(((comps_t, wins_t), chunks_t), outs_t)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (((comp, win), chunk), out) in
+                        comps_t.iter_mut().zip(wins_t.iter_mut()).zip(chunks_t).zip(outs_t.iter_mut())
+                    {
+                        let mut w = ShardWindow::new(win);
+                        comp.compress_into(chunk, &mut w);
+                        *out = w.into_parts();
+                    }
+                });
+                f
+            })
+            .collect();
+        WorkPool::global().run_scoped(jobs);
+        fw.end_sharded(region_off, &self.win_max, &self.win_out);
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        // outer tag/d header + count field + per-shard maxima
+        let mut total = 10;
+        let mut off = 0;
+        while off < d {
+            let b = self.shard_size.min(d - off);
+            total += self.inner.max_encoded_payload_bytes(b);
+            off += b;
+        }
+        total
+    }
+
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
     }
@@ -127,7 +244,10 @@ impl Compressor for ShardedCompressor {
             inner: self.inner.fork_stream(stream),
             shard_size: self.shard_size,
             threads: self.threads,
+            min_parallel_dim: self.min_parallel_dim,
             shard_comps: Vec::new(),
+            win_max: Vec::new(),
+            win_out: Vec::new(),
         })
     }
 }
@@ -212,6 +332,37 @@ mod tests {
         let m0 = base.fork_stream(0).compress(&x);
         let m1 = base.fork_stream(1).compress(&x);
         assert_ne!(m0, m1, "forked wrappers replayed identical rand-k streams");
+    }
+
+    #[test]
+    fn egress_windows_match_owned_encoding_at_any_thread_count() {
+        // the parallel window + compaction path must emit exactly the
+        // bytes of encode_frame(compress(..)), for ragged shard mixes
+        // (trailing remainder block, Zero shards from an all-zero block).
+        use crate::comm::wire::{encode_frame, FrameWriter};
+        let d = 203; // 6 full blocks of 32 + remainder 11
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        for z in &mut x[64..96] {
+            *z = 0.0; // one all-zero block ⇒ a 6-byte Zero shard mid-frame
+        }
+        for threads in [1usize, 2, 4] {
+            let mut owned_c = ShardedCompressor::new(Box::new(ScaledSign::new()), 32, threads)
+                .with_min_parallel_dim(1);
+            let mut writer_c = ShardedCompressor::new(Box::new(ScaledSign::new()), 32, threads)
+                .with_min_parallel_dim(1);
+            let owned = encode_frame(9, 2, &owned_c.compress(&x)).unwrap();
+            let mut fw = FrameWriter::new(2);
+            for _ in 0..2 {
+                // twice: the second round reuses the recycled buffer
+                fw.begin(9, 2).unwrap();
+                writer_c.compress_into(&x, &mut fw);
+                let written = fw.finish();
+                assert_eq!(owned.payload_bits, written.payload_bits, "t={threads}");
+                assert_eq!(&owned.bytes[..], &written.bytes[..], "t={threads}");
+            }
+        }
     }
 
     #[test]

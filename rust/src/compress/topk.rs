@@ -17,6 +17,7 @@
 //! selecting ones.
 
 use super::{CompressedMsg, Compressor};
+use crate::comm::wire::PayloadSink;
 
 /// Top-k with either a fixed k or a fraction of the dimension.
 #[derive(Clone, Debug)]
@@ -25,19 +26,22 @@ pub struct TopK {
     k_frac: f64,
     /// scratch for quickselect (reused across calls; zero-alloc steady state)
     scratch: Vec<(f32, u32)>,
+    /// selected-index scratch for the zero-copy egress encoder (the
+    /// owned path builds the message's own `idx` Vec instead)
+    idx_scratch: Vec<u32>,
 }
 
 impl TopK {
     /// k = max(1, round(frac * d)) — the paper's K = 0.016·d style choice.
     pub fn with_frac(frac: f64) -> Self {
         assert!(frac > 0.0 && frac <= 1.0, "k fraction must be in (0,1]");
-        TopK { k_fixed: None, k_frac: frac, scratch: Vec::new() }
+        TopK { k_fixed: None, k_frac: frac, scratch: Vec::new(), idx_scratch: Vec::new() }
     }
 
     /// Fixed k (Top-1 in the paper's Fig. 4 ablation).
     pub fn with_k(k: usize) -> Self {
         assert!(k >= 1);
-        TopK { k_fixed: Some(k), k_frac: 0.0, scratch: Vec::new() }
+        TopK { k_fixed: Some(k), k_frac: 0.0, scratch: Vec::new(), idx_scratch: Vec::new() }
     }
 
     pub fn k_for(&self, d: usize) -> usize {
@@ -121,6 +125,29 @@ impl Compressor for TopK {
         CompressedMsg::Sparse { d, idx, val }
     }
 
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn PayloadSink) {
+        let d = x.len();
+        let k = self.k_for(d);
+        if k >= d {
+            sink.put_dense(x);
+            return;
+        }
+        // same selection as `compress`, into the resident index scratch;
+        // values gather straight from x into the frame bytes.
+        self.idx_scratch.clear();
+        select_topk_into(x, k, &mut self.scratch, &mut self.idx_scratch);
+        sink.put_sparse(d, &self.idx_scratch, x);
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        let k = self.k_for(d);
+        if k >= d {
+            6 + 4 * d // dense passthrough
+        } else {
+            10 + 8 * k // tag/d/k header + k (idx, val) pairs
+        }
+    }
+
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
     }
@@ -179,6 +206,8 @@ pub struct TopKBlock {
     k_frac: f64,
     block: usize,
     scratch: Vec<(f32, u32)>,
+    /// selected-index scratch for the zero-copy egress encoder
+    idx_scratch: Vec<u32>,
 }
 
 impl TopKBlock {
@@ -189,21 +218,29 @@ impl TopKBlock {
     pub fn with_frac(frac: f64, block: usize) -> Self {
         assert!(frac > 0.0 && frac <= 1.0, "k fraction must be in (0,1]");
         assert!(block >= 1, "block size must be >= 1");
-        TopKBlock { k_fixed: None, k_frac: frac, block, scratch: Vec::new() }
+        TopKBlock { k_fixed: None, k_frac: frac, block, scratch: Vec::new(), idx_scratch: Vec::new() }
     }
 
     /// Fixed k per block (clamped to the block size).
     pub fn with_k(k: usize, block: usize) -> Self {
         assert!(k >= 1);
         assert!(block >= 1, "block size must be >= 1");
-        TopKBlock { k_fixed: Some(k), k_frac: 0.0, block, scratch: Vec::new() }
+        TopKBlock { k_fixed: Some(k), k_frac: 0.0, block, scratch: Vec::new(), idx_scratch: Vec::new() }
     }
 
     fn k_for(&self, b: usize) -> usize {
-        match self.k_fixed {
-            Some(k) => k.min(b),
-            None => ((self.k_frac * b as f64).round() as usize).clamp(1, b),
+        block_k(self.k_fixed, self.k_frac, b)
+    }
+
+    /// Selected-coordinate count for dimension d (Σ per-block k) — the
+    /// window-sizing input for the egress encoder.
+    fn total_k(&self, d: usize) -> usize {
+        if d == 0 {
+            return 0;
         }
+        let full = d / self.block;
+        let rem = d % self.block;
+        full * self.k_for(self.block.min(d)) + if rem > 0 { self.k_for(rem) } else { 0 }
     }
 }
 
@@ -218,20 +255,11 @@ impl Compressor for TopKBlock {
 
     fn compress(&mut self, x: &[f32]) -> CompressedMsg {
         let d = x.len();
+        let (k_fixed, k_frac) = (self.k_fixed, self.k_frac);
         let mut idx: Vec<u32> = Vec::new();
-        for (b, chunk) in x.chunks(self.block).enumerate() {
-            let off = (b * self.block) as u32;
-            let k = self.k_for(chunk.len());
-            let base = idx.len();
-            if k >= chunk.len() {
-                idx.extend((0..chunk.len() as u32).map(|i| off + i));
-            } else {
-                select_topk_into(chunk, k, &mut self.scratch, &mut idx);
-                for i in idx[base..].iter_mut() {
-                    *i += off;
-                }
-            }
-        }
+        select_blockwise_into(x, self.block, &mut self.scratch, &mut idx, |b| {
+            block_k(k_fixed, k_frac, b)
+        });
         if idx.len() == d {
             return CompressedMsg::Dense(x.to_vec());
         }
@@ -239,8 +267,68 @@ impl Compressor for TopKBlock {
         CompressedMsg::Sparse { d, idx, val }
     }
 
+    fn compress_into(&mut self, x: &[f32], sink: &mut dyn PayloadSink) {
+        let d = x.len();
+        let (k_fixed, k_frac, block) = (self.k_fixed, self.k_frac, self.block);
+        // same per-block selection as `compress`, into the resident
+        // index scratch (disjoint-field borrows of the two scratches)
+        self.idx_scratch.clear();
+        let TopKBlock { scratch, idx_scratch, .. } = &mut *self;
+        select_blockwise_into(x, block, scratch, idx_scratch, |b| block_k(k_fixed, k_frac, b));
+        if self.idx_scratch.len() == d {
+            sink.put_dense(x);
+            return;
+        }
+        sink.put_sparse(d, &self.idx_scratch, x);
+    }
+
+    fn max_encoded_payload_bytes(&self, d: usize) -> usize {
+        let k = self.total_k(d);
+        if k >= d {
+            6 + 4 * d // dense passthrough (every block fully kept)
+        } else {
+            10 + 8 * k
+        }
+    }
+
     fn box_clone(&self) -> Box<dyn Compressor> {
         Box::new(self.clone())
+    }
+}
+
+/// Per-block k of [`TopKBlock`] as a free function, so the selection
+/// closures can use it without borrowing the whole compressor.
+fn block_k(k_fixed: Option<usize>, k_frac: f64, b: usize) -> usize {
+    match k_fixed {
+        Some(k) => k.min(b),
+        None => ((k_frac * b as f64).round() as usize).clamp(1, b),
+    }
+}
+
+/// The shared blockwise selection walk of [`TopKBlock`]: per block of
+/// `block` elements append the top-`k_of(len)` ascending global
+/// indices onto `idx` (whole block when k covers it). One
+/// implementation feeds both the owned and the egress encoders so the
+/// selections cannot drift.
+fn select_blockwise_into(
+    x: &[f32],
+    block: usize,
+    scratch: &mut Vec<(f32, u32)>,
+    idx: &mut Vec<u32>,
+    k_of: impl Fn(usize) -> usize,
+) {
+    for (b, chunk) in x.chunks(block).enumerate() {
+        let off = (b * block) as u32;
+        let k = k_of(chunk.len());
+        let base = idx.len();
+        if k >= chunk.len() {
+            idx.extend((0..chunk.len() as u32).map(|i| off + i));
+        } else {
+            select_topk_into(chunk, k, scratch, idx);
+            for i in idx[base..].iter_mut() {
+                *i += off;
+            }
+        }
     }
 }
 

@@ -81,6 +81,12 @@ pub struct ExperimentConfig {
     /// Scoped worker threads used to compress shards concurrently
     /// (only meaningful when `shard_size > 0`; clamped to ≥ 1).
     pub compress_threads: usize,
+    /// Parallel cutover dimension for the block-sharded compressor
+    /// (0 = [`crate::compress::ShardedCompressor::MIN_PARALLEL_DIM`]).
+    /// Not exposed on the CLI — it exists so system tests can force the
+    /// pool (and, with `zero_copy_egress`, the disjoint-window) encode
+    /// path at tiny d, mirroring `server_min_parallel_dim`.
+    pub compress_min_parallel_dim: usize,
     /// Range jobs for the server-side decode/aggregate engine
     /// ([`crate::agg::AggEngine`]); 0 = the sequential fold, bit-for-bit
     /// identical to any thread count (scheduling knob, never math).
@@ -101,6 +107,22 @@ pub struct ExperimentConfig {
     /// `CDADAM_ZERO_COPY_INGEST` env var flips the default so CI can
     /// force the view path across the whole test suite.
     pub zero_copy_ingest: bool,
+    /// Zero-copy uplink **egress** — the encode-side mirror of
+    /// `zero_copy_ingest`: workers compress straight into reusable
+    /// [`crate::comm::wire::FrameWriter`] frame buffers
+    /// (`Compressor::compress_into`; sharded uplinks encode each shard
+    /// into a disjoint window of one buffer on the work pool) instead
+    /// of materializing an owned `CompressedMsg` and serializing it in
+    /// a second pass. A buffer ring makes steady-state rounds
+    /// allocation-free. The produced frames are byte-identical to the
+    /// owned `encode_frame(compress(..))` path (fuzz-pinned), so
+    /// metering, cum_bits audits, and trajectories are untouched — an
+    /// allocation knob, never a math knob. Uplinks necessarily travel
+    /// as wire bytes with this on (the server folds borrowed views,
+    /// with or without `zero_copy_ingest`). Off (the default) is the
+    /// historical path verbatim. CLI `--zero-copy-egress`; env
+    /// `CDADAM_ZERO_COPY_EGRESS` flips the default for CI.
+    pub zero_copy_egress: bool,
     /// Pipeline depth of the threaded server's staged round engine
     /// ([`crate::coordinator::pipeline`]): how many rounds of parked
     /// uplink frames the recv stage may run ahead of the fold cursor.
@@ -152,9 +174,11 @@ impl Default for ExperimentConfig {
             block_size: 0,
             shard_size: 0,
             compress_threads: 4,
+            compress_min_parallel_dim: 0,
             server_threads: 0,
             server_min_parallel_dim: 0,
             zero_copy_ingest: env_flag("CDADAM_ZERO_COPY_INGEST"),
+            zero_copy_egress: env_flag("CDADAM_ZERO_COPY_EGRESS"),
             pipeline_depth: env_usize("CDADAM_PIPELINE_DEPTH", 1),
             pin_shards: env_flag("CDADAM_PIN_SHARDS"),
             warmup_rounds: 0,
@@ -257,6 +281,10 @@ impl ExperimentConfig {
                 // bit-identical scheduling knobs)
                 cfg.pipeline_depth = 2;
                 cfg.pin_shards = true;
+                // ...and the full worker hot path: compress straight
+                // into ring-buffered wire frames (bit-identical
+                // allocation knob, zero-alloc steady state)
+                cfg.zero_copy_egress = true;
             }
             other => bail!("unknown preset {other:?}"),
         }
@@ -281,6 +309,11 @@ impl ExperimentConfig {
         // CLI can override an env-forced default in either direction
         if let Some(v) = args.get("zero-copy-ingest") {
             self.zero_copy_ingest = truthy(v);
+        }
+        // same contract as --zero-copy-ingest: bare flag enables, an
+        // explicit falsy value is the way back from an env-forced default
+        if let Some(v) = args.get("zero-copy-egress") {
+            self.zero_copy_egress = truthy(v);
         }
         self.pipeline_depth = args.usize("pipeline-depth", self.pipeline_depth)?;
         // same truthy/falsy contract as --zero-copy-ingest: a bare
@@ -331,11 +364,15 @@ impl ExperimentConfig {
         // emits CompressedMsg::Sharded with exact per-shard accounting.
         // shard_size = 0 keeps today's monolithic path bit-for-bit.
         if self.shard_size > 0 {
-            comp = Box::new(compress::ShardedCompressor::new(
+            let mut sharded = compress::ShardedCompressor::new(
                 comp,
                 self.shard_size,
                 self.compress_threads.max(1),
-            ));
+            );
+            if self.compress_min_parallel_dim > 0 {
+                sharded = sharded.with_min_parallel_dim(self.compress_min_parallel_dim);
+            }
+            comp = Box::new(sharded);
         }
         let (b1, b2, nu) = (self.beta1 as f32, self.beta2 as f32, self.nu as f32);
         // One decode/aggregate engine per strategy: the server fold and
@@ -529,6 +566,29 @@ mod tests {
     }
 
     #[test]
+    fn zero_copy_egress_flag_parses() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--zero-copy-egress"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.zero_copy_egress);
+        // explicit falsy value turns the knob OFF — the way back from
+        // an env-forced default
+        for off in ["false", "0", "no", "off"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.zero_copy_egress = true;
+            let args =
+                Args::parse(["--zero-copy-egress", off].iter().map(|s| s.to_string()));
+            cfg.apply_args(&args).unwrap();
+            assert!(!cfg.zero_copy_egress, "--zero-copy-egress {off} should disable");
+        }
+        // absent flag leaves the (env-derived) default untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let before = cfg2.zero_copy_egress;
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.zero_copy_egress, before);
+    }
+
+    #[test]
     fn pipeline_knobs_parse_and_reach_the_engine() {
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
         let args = Args::parse(
@@ -559,6 +619,7 @@ mod tests {
         let cfg = ExperimentConfig::preset("large_d_sharded").unwrap();
         assert_eq!(cfg.pipeline_depth, 2);
         assert!(cfg.pin_shards);
+        assert!(cfg.zero_copy_egress, "large-d preset should exercise the egress writer");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use super::{pipeline, setup};
 use crate::algo::{ServerAlgo, WorkerAlgo};
-use crate::comm::{wire, UplinkFrame, WireMsg};
+use crate::comm::{wire, UplinkFrame};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -38,6 +38,11 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
     let mut log = RunLog::new(cfg.label());
     let mut cum_bits: u64 = 0;
     let timer = Timer::start();
+    // zero-copy egress: one reusable writer serves every worker in turn
+    // (frames of a round coexist until the fold consumes them, so the
+    // ring holds a whole round's worth of buffers — steady state is
+    // allocation-free on the encode path).
+    let mut writer = cfg.zero_copy_egress.then(|| wire::FrameWriter::new(n + 1));
 
     for t in 1..=cfg.rounds {
         let lr = sched.at(t - 1);
@@ -49,21 +54,21 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
             let loss = e.loss_grad(&params, &mut grad);
             loss_sum += loss as f64;
             tensor::axpy(&mut grad_avg, 1.0 / n as f32, &grad);
-            let c = w.uplink(t, &grad);
+            // one shared frame builder for all three uplink modes
+            // (egress writer / serialized bytes / structured message);
+            // bits are metered identically in every mode — fuzz-pinned.
+            let (frame, up_bits) = super::make_uplink_frame(
+                w.as_mut(),
+                writer.as_mut(),
+                cfg.zero_copy_ingest,
+                t,
+                i as u32,
+                &grad,
+            )?;
             if i == 0 {
-                up_bits_w0 = c.wire_bits();
+                up_bits_w0 = up_bits;
             }
-            frames.push(if cfg.zero_copy_ingest {
-                // zero-copy ingest: serialize the uplink to its wire
-                // frame here so the fold stage validates the bytes once
-                // and folds a borrowed view — no owned message on the
-                // recv path. Bits are metered off the structured
-                // message above, so cum_bits is identical to the owned
-                // path (parity pinned in comm::wire).
-                UplinkFrame::Bytes(wire::encode_frame(t as u64, i as u32, &c)?)
-            } else {
-                UplinkFrame::Msg(WireMsg { round: t as u64, from: i as u32, payload: c })
-            });
+            frames.push(frame);
         }
         // the server-side round math is the pipeline engine's fold
         // stage — one implementation shared with the threaded driver.

@@ -28,8 +28,48 @@ pub mod threaded;
 pub use lockstep::run_lockstep;
 pub use threaded::run_threaded;
 
+use crate::algo::WorkerAlgo;
+use crate::comm::{wire, UplinkFrame, WireMsg};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunLog;
+
+/// Build one worker uplink frame in whichever mode the run selects —
+/// the single implementation shared by both drivers so the three paths
+/// cannot drift:
+///
+/// * `writer = Some(..)` (zero-copy egress): the worker compresses
+///   straight into the reusable frame buffer;
+/// * `zero_copy_ingest` (owned egress, bytes on the wire): owned
+///   compress, serialized here;
+/// * neither: the historical structured in-process message.
+///
+/// Returns the frame plus its metered **payload** bits (what the
+/// per-worker `cum_bits` accounting adds; the 64-bit frame header is
+/// metered by the links) — identical in every mode.
+pub(crate) fn make_uplink_frame(
+    worker: &mut dyn WorkerAlgo,
+    writer: Option<&mut wire::FrameWriter>,
+    zero_copy_ingest: bool,
+    round: usize,
+    from: u32,
+    grad: &[f32],
+) -> anyhow::Result<(UplinkFrame, u64)> {
+    if let Some(fw) = writer {
+        fw.begin(round as u64, from)?;
+        worker.uplink_into(round, grad, fw)?;
+        let fb = fw.finish();
+        let bits = fb.payload_bits;
+        return Ok((UplinkFrame::Bytes(fb), bits));
+    }
+    let c = worker.uplink(round, grad);
+    let bits = c.wire_bits();
+    let frame = if zero_copy_ingest {
+        UplinkFrame::Bytes(wire::encode_frame(round as u64, from, &c)?)
+    } else {
+        UplinkFrame::Msg(WireMsg { round: round as u64, from, payload: c })
+    };
+    Ok((frame, bits))
+}
 
 /// Run with the driver selected by the config.
 pub fn run(cfg: &ExperimentConfig) -> anyhow::Result<RunLog> {

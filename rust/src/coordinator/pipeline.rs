@@ -504,7 +504,7 @@ mod tests {
                     round: 1,
                     from: 1,
                     payload_bits: 64,
-                    bytes: vec![0xFF; 12],
+                    bytes: vec![0xFF; 12].into(),
                 }))
                 .unwrap();
             let mut server = Recorder::new(8);

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::pipeline::PipelineServer;
 use super::{params_hash, setup};
-use crate::comm::{topology, wire, UplinkFrame, WireMsg};
+use crate::comm::{topology, wire};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -64,7 +64,8 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     // PipelineError instead of a panic or a silent return.
     let mut server = strat.make_server(dim, n);
     let zero_copy = cfg.zero_copy_ingest;
-    let depth = cfg.pipeline_depth;
+    let zero_copy_egress = cfg.zero_copy_egress;
+    let depth = cfg.pipeline_depth.max(1);
     let server_join = std::thread::Builder::new()
         .name("server".into())
         .spawn(move || PipelineServer::new(rounds, depth).run(server.as_mut(), server_links))?;
@@ -83,18 +84,29 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
             move || -> Result<()> {
                 let mut grad = vec![0.0f32; dim];
                 let mut cum_bits = 0u64;
+                // zero-copy egress: a reusable frame writer whose ring
+                // holds every frame that can be in flight at once — the
+                // recv stage parks up to depth − 1 rounds ahead of the
+                // fold cursor, plus the frame being folded and the one
+                // being written — so steady-state rounds are
+                // allocation-free on the encode path.
+                let mut writer =
+                    zero_copy_egress.then(|| wire::FrameWriter::new(depth + 2));
                 for t in 1..=rounds {
                     let loss = engine.loss_grad(&params, &mut grad);
-                    let c = worker.uplink(t, &grad);
-                    cum_bits += c.wire_bits();
-                    let frame = if zero_copy {
-                        // serialize here so the server really receives
-                        // bytes; the metered size travels with the frame
-                        // (identical to the structured message's meter)
-                        UplinkFrame::Bytes(wire::encode_frame(t as u64, i as u32, &c)?)
-                    } else {
-                        UplinkFrame::Msg(WireMsg { round: t as u64, from: i as u32, payload: c })
-                    };
+                    // one shared frame builder for all three uplink
+                    // modes (egress writer / serialized bytes /
+                    // structured message); the metered payload bits are
+                    // identical in every mode — fuzz-pinned.
+                    let (frame, up_bits) = super::make_uplink_frame(
+                        worker.as_mut(),
+                        writer.as_mut(),
+                        zero_copy,
+                        t,
+                        i as u32,
+                        &grad,
+                    )?;
+                    cum_bits += up_bits;
                     link.up.send(frame)?;
                     let down = link.down.recv()?;
                     debug_assert_eq!(down.round, t as u64);
@@ -346,6 +358,55 @@ mod tests {
                 );
                 assert_eq!(a.cum_bits, b.cum_bits, "lockstep bits at round {}", a.round);
                 assert_eq!(a.cum_bits, c.cum_bits, "threaded bits at round {}", a.round);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_copy_egress_is_bit_for_bit() {
+        // the egress knob is allocation-only: {lockstep, threaded} ×
+        // {ingest owned/views} × {pipeline depth 1, 2} with zero-copy
+        // egress on must reproduce the owned-path records exactly,
+        // sharded uplinks included — and the compress cutover is forced
+        // to 1 so the d = 50 uplinks (4 blocks of 16) really take the
+        // pool + disjoint-window egress path, ring-recycled round after
+        // round under the live coordinator.
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 40;
+        cfg.eval_every = 20;
+        cfg.shard_size = 16;
+        cfg.compress_threads = 2;
+        cfg.compress_min_parallel_dim = 1;
+        cfg.zero_copy_egress = false;
+        cfg.zero_copy_ingest = false;
+        let base = run_lockstep(&cfg).unwrap();
+        cfg.zero_copy_egress = true;
+        for ingest in [false, true] {
+            cfg.zero_copy_ingest = ingest;
+            for depth in [1usize, 2] {
+                cfg.pipeline_depth = depth;
+                let eg_lockstep = run_lockstep(&cfg).unwrap();
+                let eg_threaded = run_threaded(&cfg).unwrap();
+                assert_eq!(base.records.len(), eg_threaded.records.len());
+                for ((a, b), c) in
+                    base.records.iter().zip(&eg_lockstep.records).zip(&eg_threaded.records)
+                {
+                    assert_eq!(a.round, c.round);
+                    assert_eq!(
+                        a.grad_norm.to_bits(),
+                        b.grad_norm.to_bits(),
+                        "egress lockstep diverged at round {} (ingest={ingest})",
+                        a.round
+                    );
+                    assert_eq!(
+                        a.grad_norm.to_bits(),
+                        c.grad_norm.to_bits(),
+                        "egress threaded diverged at round {} (ingest={ingest}, depth={depth})",
+                        a.round
+                    );
+                    assert_eq!(a.cum_bits, b.cum_bits, "lockstep bits at round {}", a.round);
+                    assert_eq!(a.cum_bits, c.cum_bits, "threaded bits at round {}", a.round);
+                }
             }
         }
     }

@@ -48,6 +48,9 @@ fn usage() -> ! {
                                  engine (0 = sequential, bit-identical)\n\
            --zero-copy-ingest    serve uplinks as wire bytes and fold borrowed\n\
                                  views (bit-identical; off = owned decode path)\n\
+           --zero-copy-egress    workers compress straight into reusable wire\n\
+                                 frame buffers (byte-identical frames; off =\n\
+                                 owned compress + encode path)\n\
            --pipeline-depth <int>  rounds of parked uplink frames the threaded\n\
                                  server's recv stage may run ahead of its fold\n\
                                  stage (1 = lockstep-per-round, 2 = double\n\

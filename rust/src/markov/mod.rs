@@ -51,6 +51,29 @@ impl MarkovEncoder {
         c
     }
 
+    /// Zero-copy egress twin of [`Self::step`]: the compressed
+    /// difference is encoded **straight into `fw`'s frame buffer**
+    /// ([`crate::compress::Compressor::compress_into`]) and ŵ advances
+    /// by folding the just-written payload back through a borrowed
+    /// [`crate::comm::wire::PayloadView`] — bit-identical to the owned
+    /// `c.add_into(ŵ)` fold (the view kernels are the same per-element
+    /// op chains), so the Markov state agreement invariant between this
+    /// encoder and every decoder replica is untouched. A parse failure
+    /// on the self-produced bytes is a codec bug and surfaces as an
+    /// error (the coordinator's worker-failure triage reports it).
+    pub fn step_into(
+        &mut self,
+        w: &[f32],
+        fw: &mut crate::comm::wire::FrameWriter,
+    ) -> anyhow::Result<()> {
+        debug_assert_eq!(w.len(), self.ghat.len());
+        tensor::sub(&mut self.diff, w, &self.ghat);
+        self.compressor.compress_into(&self.diff, fw);
+        let view = fw.payload_view()?;
+        view.add_scaled_into(&mut self.ghat, 1.0);
+        Ok(())
+    }
+
     /// Current ŵ_t (the receiver's replica after it applies the last msg).
     pub fn state(&self) -> &[f32] {
         &self.ghat

@@ -94,6 +94,9 @@ impl MlpSpec {
     }
 
     /// Forward pass: returns per-layer activations (h[0] = input copy).
+    /// Allocating convenience path (predict / evaluation); the training
+    /// hot loop runs [`Self::forward_into`] over a resident
+    /// [`MlpScratch`] instead.
     fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
         let mut acts = Vec::with_capacity(self.n_layers() + 1);
         acts.push(x.to_vec());
@@ -110,7 +113,29 @@ impl MlpSpec {
         acts
     }
 
-    /// Mean cross-entropy loss + gradient (into `grad`, overwritten).
+    /// Forward pass into resident scratch: `s.acts[l]` receives layer
+    /// l's post-activation output; the input itself is read straight
+    /// from `x` (the allocating path's defensive input copy is gone).
+    /// Values are identical to [`Self::forward`].
+    fn forward_into(&self, params: &[f32], x: &[f32], batch: usize, s: &mut MlpScratch) {
+        for l in 0..self.n_layers() {
+            let (wo, bo) = self.offsets(l);
+            let (m, n) = (self.dims[l], self.dims[l + 1]);
+            // split so the previous layer's output can feed this one
+            let (prev, rest) = s.acts.split_at_mut(l);
+            let h = &mut rest[0][..batch * n];
+            let input: &[f32] = if l == 0 { x } else { &prev[l - 1][..batch * m] };
+            tensor::matmul_bias(h, input, &params[wo..bo], &params[bo..bo + n], batch, m, n);
+            if l + 1 < self.n_layers() {
+                tensor::relu(h);
+            }
+        }
+    }
+
+    /// Mean cross-entropy loss + gradient (into `grad`, overwritten) —
+    /// allocating convenience wrapper over [`Self::loss_grad_with`]
+    /// (tests, one-shot callers). Training engines hold a resident
+    /// [`MlpScratch`] and call the `_with` form directly.
     pub fn loss_grad(
         &self,
         params: &[f32],
@@ -119,49 +144,74 @@ impl MlpSpec {
         batch: usize,
         grad: &mut [f32],
     ) -> f32 {
+        let mut scratch = MlpScratch::new(self, batch);
+        self.loss_grad_with(params, x, y, batch, grad, &mut scratch)
+    }
+
+    /// [`Self::loss_grad`] over caller-owned scratch: zero allocations
+    /// per call once the scratch is warm (forward activations, the
+    /// log-softmax buffer, and the backprop ping-pong buffers are all
+    /// resident). Bit-identical to the allocating form — same kernels,
+    /// same op order (property-pinned in the tests below).
+    pub fn loss_grad_with(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        grad: &mut [f32],
+        s: &mut MlpScratch,
+    ) -> f32 {
         debug_assert_eq!(params.len(), self.param_count());
         debug_assert_eq!(grad.len(), params.len());
         let classes = *self.dims.last().unwrap();
-        let acts = self.forward(params, x, batch);
+        self.forward_into(params, x, batch, s);
         // log-softmax + NLL
-        let mut logp = acts.last().unwrap().clone();
-        tensor::log_softmax_rows(&mut logp, batch, classes);
+        let last = self.n_layers() - 1;
+        let logp = &mut s.logp[..batch * classes];
+        logp.copy_from_slice(&s.acts[last][..batch * classes]);
+        tensor::log_softmax_rows(logp, batch, classes);
         let mut loss = 0.0f64;
         for (b, &yb) in y.iter().enumerate() {
             loss -= logp[b * classes + yb as usize] as f64;
         }
         loss /= batch as f64;
-        // dlogits = (softmax − onehot)/batch
-        let mut dz: Vec<f32> = logp;
-        for v in dz.iter_mut() {
-            *v = v.exp();
+        // dlogits = (softmax − onehot)/batch, into the dz ping buffer
+        {
+            let dz = &mut s.dz[..batch * classes];
+            dz.copy_from_slice(&s.logp[..batch * classes]);
+            for v in dz.iter_mut() {
+                *v = v.exp();
+            }
+            for (b, &yb) in y.iter().enumerate() {
+                dz[b * classes + yb as usize] -= 1.0;
+            }
+            tensor::scale(dz, 1.0 / batch as f32);
         }
-        for (b, &yb) in y.iter().enumerate() {
-            dz[b * classes + yb as usize] -= 1.0;
-        }
-        tensor::scale(&mut dz, 1.0 / batch as f32);
         grad.fill(0.0);
-        // backprop
+        // backprop (dz/dh ping-pong through the two resident buffers)
         for l in (0..self.n_layers()).rev() {
             let (wo, bo) = self.offsets(l);
             let (m, n) = (self.dims[l], self.dims[l + 1]);
+            let dz_l = &s.dz[..batch * n];
+            let input: &[f32] = if l == 0 { x } else { &s.acts[l - 1][..batch * m] };
             // dW = h_{l}^T dz ; db = colsum(dz)
-            tensor::matmul_tn_acc(&mut grad[wo..bo], &acts[l], &dz, batch, m, n);
+            tensor::matmul_tn_acc(&mut grad[wo..bo], input, dz_l, batch, m, n);
             for b in 0..batch {
                 for j in 0..n {
-                    grad[bo + j] += dz[b * n + j];
+                    grad[bo + j] += dz_l[b * n + j];
                 }
             }
             if l > 0 {
-                let mut dh = vec![0.0f32; batch * m];
-                tensor::matmul_nt(&mut dh, &dz, &params[wo..bo], batch, m, n);
+                let dh = &mut s.dh[..batch * m];
+                tensor::matmul_nt(dh, &s.dz[..batch * n], &params[wo..bo], batch, m, n);
                 // relu mask from stored activations
-                for (dv, &hv) in dh.iter_mut().zip(&acts[l][..]) {
+                for (dv, &hv) in dh.iter_mut().zip(&s.acts[l - 1][..batch * m]) {
                     if hv <= 0.0 {
                         *dv = 0.0;
                     }
                 }
-                dz = dh;
+                std::mem::swap(&mut s.dz, &mut s.dh);
             }
         }
         loss as f32
@@ -185,6 +235,36 @@ impl MlpSpec {
     }
 }
 
+/// Resident forward/backward scratch for the MLP training hot path:
+/// per-layer activations, the log-softmax buffer, and the backprop
+/// ping-pong buffers, sized once for a maximum batch and reused across
+/// rounds. The forward pass used to allocate a fresh `Vec<Vec<f32>>`
+/// of activations per call — per worker per round at training scale.
+pub struct MlpScratch {
+    /// post-activation output of each layer (`acts[l]`: max_batch × dims[l+1])
+    acts: Vec<Vec<f32>>,
+    /// log-softmax buffer (max_batch × classes)
+    logp: Vec<f32>,
+    /// upstream-gradient ping-pong buffers (max_batch × widest layer)
+    dz: Vec<f32>,
+    dh: Vec<f32>,
+}
+
+impl MlpScratch {
+    pub fn new(spec: &MlpSpec, max_batch: usize) -> Self {
+        let acts: Vec<Vec<f32>> =
+            (0..spec.n_layers()).map(|l| vec![0.0; max_batch * spec.dims[l + 1]]).collect();
+        let widest = spec.dims.iter().copied().max().unwrap_or(0);
+        let classes = *spec.dims.last().unwrap();
+        MlpScratch {
+            acts,
+            logp: vec![0.0; max_batch * classes],
+            dz: vec![0.0; max_batch * widest],
+            dh: vec![0.0; max_batch * widest],
+        }
+    }
+}
+
 /// Per-worker MLP gradient engine over a shard of [`SynthImages`].
 pub struct MlpEngine {
     pub spec: MlpSpec,
@@ -194,12 +274,24 @@ pub struct MlpEngine {
     rng: Rng,
     xbuf: Vec<f32>,
     ybuf: Vec<i32>,
+    /// resident activation/backprop scratch, reused across rounds
+    scratch: MlpScratch,
 }
 
 impl MlpEngine {
     pub fn new(spec: MlpSpec, data: Arc<SynthImages>, shard: Shard, tau: usize, rng: Rng) -> Self {
         let dim = data.dim;
-        MlpEngine { spec, data, shard, tau, rng, xbuf: vec![0.0; tau * dim], ybuf: vec![0; tau] }
+        let scratch = MlpScratch::new(&spec, tau);
+        MlpEngine {
+            spec,
+            data,
+            shard,
+            tau,
+            rng,
+            xbuf: vec![0.0; tau * dim],
+            ybuf: vec![0; tau],
+            scratch,
+        }
     }
 }
 
@@ -212,7 +304,14 @@ impl GradEngine for MlpEngine {
         let idxs = self.shard.sample(self.tau, &mut self.rng);
         let b = idxs.len();
         self.data.fill_batch(&idxs, &mut self.xbuf[..b * self.data.dim], &mut self.ybuf[..b]);
-        self.spec.loss_grad(params, &self.xbuf[..b * self.data.dim], &self.ybuf[..b], b, grad_out)
+        self.spec.loss_grad_with(
+            params,
+            &self.xbuf[..b * self.data.dim],
+            &self.ybuf[..b],
+            b,
+            grad_out,
+            &mut self.scratch,
+        )
     }
 
     fn full_loss_grad(&mut self, params: &[f32], grad_out: &mut [f32]) -> f32 {
@@ -225,12 +324,13 @@ impl GradEngine for MlpEngine {
         for chunk in all.chunks(self.tau) {
             let b = chunk.len();
             self.data.fill_batch(chunk, &mut self.xbuf[..b * self.data.dim], &mut self.ybuf[..b]);
-            let l = self.spec.loss_grad(
+            let l = self.spec.loss_grad_with(
                 params,
                 &self.xbuf[..b * self.data.dim],
                 &self.ybuf[..b],
                 b,
                 &mut g,
+                &mut self.scratch,
             );
             tensor::axpy(&mut total, b as f32, &g);
             loss += l as f64 * b as f64;
@@ -353,6 +453,31 @@ mod tests {
             after.accuracy
         );
         assert!(after.loss < before.loss);
+    }
+
+    #[test]
+    fn resident_scratch_matches_allocating_path_bitwise() {
+        // loss_grad_with over a reused scratch must reproduce loss_grad
+        // exactly — across calls AND across shrinking batches (the last
+        // chunk of full_loss_grad is smaller than tau), where stale
+        // scratch tails must not leak into results.
+        let spec = MlpSpec::new(vec![6, 5, 4, 3]);
+        let params = spec.init(11);
+        let mut rng = Rng::new(13);
+        let mut scratch = MlpScratch::new(&spec, 8);
+        for &batch in &[8usize, 8, 3, 8, 1] {
+            let mut x = vec![0.0f32; batch * 6];
+            rng.fill_normal(&mut x, 1.0);
+            let y: Vec<i32> = (0..batch).map(|b| (b % 3) as i32).collect();
+            let mut g_alloc = vec![0.0f32; spec.param_count()];
+            let mut g_scratch = vec![0.0f32; spec.param_count()];
+            let l_alloc = spec.loss_grad(&params, &x, &y, batch, &mut g_alloc);
+            let l_scratch = spec.loss_grad_with(&params, &x, &y, batch, &mut g_scratch, &mut scratch);
+            assert_eq!(l_alloc.to_bits(), l_scratch.to_bits(), "loss diverged at batch {batch}");
+            for (i, (a, b)) in g_alloc.iter().zip(&g_scratch).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "grad[{i}] diverged at batch {batch}");
+            }
+        }
     }
 
     #[test]

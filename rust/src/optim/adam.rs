@@ -5,6 +5,7 @@
 //! CD-Adam against.
 
 use super::Optimizer;
+use crate::tensor;
 
 /// Adam state over a flat parameter vector.
 #[derive(Clone, Debug)]
@@ -54,21 +55,11 @@ impl Optimizer for Adam {
         } else {
             (1.0, 1.0)
         };
-        for i in 0..params.len() {
-            let g = grad[i];
-            let m = b1 * self.m[i] + (1.0 - b1) * g;
-            self.m[i] = m;
-            let v = if self.frozen {
-                self.v[i]
-            } else {
-                let v = b2 * self.v[i] + (1.0 - b2) * g * g;
-                self.v[i] = v;
-                v
-            };
-            let mhat = m / c1;
-            let vhat = v / c2;
-            params[i] -= lr * mhat / (vhat.sqrt() + nu);
-        }
+        // single fused pass (shared worker-update kernel; property-
+        // pinned against the unfused reference in `tensor`)
+        tensor::fused_adam_step(
+            params, grad, &mut self.m, &mut self.v, b1, b2, c1, c2, nu, lr, self.frozen,
+        );
     }
 
     fn reset(&mut self) {

@@ -8,10 +8,14 @@
 //! ```
 //!
 //! The update is a single fused pass (one load of each state vector, one
-//! store), mirroring the Pallas `fused_amsgrad` kernel; the two are
-//! cross-checked against the same golden vectors (tests/golden.rs).
+//! store) through [`crate::tensor::fused_amsgrad_step`] — the shared
+//! worker-side update kernel, mirroring the Pallas `fused_amsgrad`
+//! kernel; the two are cross-checked against the same golden vectors
+//! (tests/golden.rs), and the fused kernel is property-pinned against
+//! its unfused four-pass reference in `tensor`.
 
 use super::Optimizer;
+use crate::tensor;
 
 /// AMSGrad state (m, v, v̂) over a flat parameter vector.
 #[derive(Clone, Debug)]
@@ -58,21 +62,18 @@ impl Optimizer for AmsGrad {
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), grad.len());
         debug_assert_eq!(params.len(), self.m.len());
-        let (b1, b2, nu, wd) = (self.beta1, self.beta2, self.nu, self.weight_decay);
-        for i in 0..params.len() {
-            let g = grad[i];
-            let m = b1 * self.m[i] + (1.0 - b1) * g;
-            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let vh = self.vhat[i].max(v);
-            self.m[i] = m;
-            self.v[i] = v;
-            self.vhat[i] = vh;
-            let mut p = params[i];
-            if wd != 0.0 {
-                p -= lr * wd * p;
-            }
-            params[i] = p - lr * m / (vh + nu).sqrt();
-        }
+        tensor::fused_amsgrad_step(
+            params,
+            grad,
+            &mut self.m,
+            &mut self.v,
+            &mut self.vhat,
+            self.beta1,
+            self.beta2,
+            self.nu,
+            self.weight_decay,
+            lr,
+        );
     }
 
     fn reset(&mut self) {

@@ -3,6 +3,7 @@
 //! 1-bit Adam's compressed stage.
 
 use super::Optimizer;
+use crate::tensor;
 
 /// SGD + momentum: u ← μ·u + g;  x ← x − lr·u  (PyTorch convention).
 #[derive(Clone, Debug)]
@@ -30,13 +31,9 @@ impl Optimizer for SgdMomentum {
 
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
         debug_assert_eq!(params.len(), grad.len());
-        let (mu, wd) = (self.momentum, self.weight_decay);
-        for i in 0..params.len() {
-            let g = grad[i] + wd * params[i];
-            let u = mu * self.u[i] + g;
-            self.u[i] = u;
-            params[i] -= lr * u;
-        }
+        // single fused pass (shared worker-update kernel; property-
+        // pinned against the unfused reference in `tensor`)
+        tensor::fused_sgd_momentum_step(params, grad, &mut self.u, self.momentum, self.weight_decay, lr);
     }
 
     fn reset(&mut self) {

@@ -30,6 +30,26 @@ pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// out = a + b — the error-feedback compress-input build (e = g + δ)
+/// as a single fused pass.
+#[inline]
+pub fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(out.len() == a.len() && a.len() == b.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// y -= x — the worker-side apply of a decoded model update
+/// (x ← x − Δ̃, server-side-update ablation).
+#[inline]
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi -= xi;
+    }
+}
+
 /// x *= a
 #[inline]
 pub fn scale(x: &mut [f32], a: f32) {
@@ -131,6 +151,114 @@ pub fn matmul_tn_acc(dw: &mut [f32], x: &[f32], dout: &[f32], batch: usize, m: u
             }
             axpy(&mut dw[k * n..(k + 1) * n], xv, dor);
         }
+    }
+}
+
+/// Fused AMSGrad update (Algorithm 1 lines 13–16): m/v/v̂-max/step in
+/// **one loop** — one load of each state stream, one store, per
+/// element:
+///
+/// ```text
+///   m ← β₁m + (1−β₁)g;  v ← β₂v + (1−β₂)g²;  v̂ ← max(v̂, v)
+///   p ← p(1 − lr·wd) − lr·m/√(v̂ + ν)
+/// ```
+///
+/// This is *the* worker-side update kernel — every AMSGrad strategy
+/// half steps through it (via [`crate::optim::AmsGrad`]). The op order
+/// is pinned: it must stay bit-identical to the unfused four-pass
+/// reference (property-tested below) or every trajectory golden breaks.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn fused_amsgrad_step(
+    params: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    vhat: &mut [f32],
+    b1: f32,
+    b2: f32,
+    nu: f32,
+    wd: f32,
+    lr: f32,
+) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(params.len(), m.len());
+    debug_assert_eq!(params.len(), v.len());
+    debug_assert_eq!(params.len(), vhat.len());
+    for i in 0..params.len() {
+        let g = grad[i];
+        let mi = b1 * m[i] + (1.0 - b1) * g;
+        let vi = b2 * v[i] + (1.0 - b2) * g * g;
+        let vh = vhat[i].max(vi);
+        m[i] = mi;
+        v[i] = vi;
+        vhat[i] = vh;
+        let mut p = params[i];
+        if wd != 0.0 {
+            p -= lr * wd * p;
+        }
+        params[i] = p - lr * mi / (vh + nu).sqrt();
+    }
+}
+
+/// Fused Adam update with optional bias correction (`c1`/`c2` are the
+/// caller-computed `1 − βᵗ` divisors; pass 1.0 to disable) and the
+/// frozen-variance mode of 1-bit Adam's stage 2 (v is read, never
+/// written). Single pass, same op order as the unfused reference —
+/// bit-identity property-tested below.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn fused_adam_step(
+    params: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    c1: f32,
+    c2: f32,
+    nu: f32,
+    lr: f32,
+    frozen: bool,
+) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(params.len(), m.len());
+    debug_assert_eq!(params.len(), v.len());
+    for i in 0..params.len() {
+        let g = grad[i];
+        let mi = b1 * m[i] + (1.0 - b1) * g;
+        m[i] = mi;
+        let vi = if frozen {
+            v[i]
+        } else {
+            let vi = b2 * v[i] + (1.0 - b2) * g * g;
+            v[i] = vi;
+            vi
+        };
+        let mhat = mi / c1;
+        let vhat = vi / c2;
+        params[i] -= lr * mhat / (vhat.sqrt() + nu);
+    }
+}
+
+/// Fused heavy-ball SGD update (PyTorch convention):
+/// `u ← μu + (g + wd·p); p ← p − lr·u` in one pass.
+#[inline]
+pub fn fused_sgd_momentum_step(
+    params: &mut [f32],
+    grad: &[f32],
+    u: &mut [f32],
+    mu: f32,
+    wd: f32,
+    lr: f32,
+) {
+    debug_assert_eq!(params.len(), grad.len());
+    debug_assert_eq!(params.len(), u.len());
+    for i in 0..params.len() {
+        let g = grad[i] + wd * params[i];
+        let ui = mu * u[i] + g;
+        u[i] = ui;
+        params[i] -= lr * ui;
     }
 }
 
@@ -247,6 +375,144 @@ mod tests {
             let fd = (f(&x, &wp) - f(&x, &wm)) / (2.0 * eps as f64);
             assert!((fd - dw[i] as f64).abs() < 1e-2, "dw[{i}] fd {fd} got {}", dw[i]);
         }
+    }
+
+    #[test]
+    fn add_sub_assign_elementwise() {
+        let mut out = vec![0.0f32; 3];
+        add(&mut out, &[1.0, 2.0, 3.0], &[0.5, -0.5, 1.0]);
+        assert_eq!(out, vec![1.5, 1.5, 4.0]);
+        sub_assign(&mut out, &[1.0, 1.0, 1.0]);
+        assert_eq!(out, vec![0.5, 0.5, 3.0]);
+    }
+
+    /// Unfused AMSGrad reference: the same update as four separate
+    /// d-length passes (m pass, v pass, v̂ pass, param pass) — what the
+    /// fused kernel must reproduce to the bit.
+    #[allow(clippy::too_many_arguments)]
+    fn amsgrad_unfused(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        vhat: &mut [f32],
+        b1: f32,
+        b2: f32,
+        nu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        for i in 0..m.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * grad[i];
+        }
+        for i in 0..v.len() {
+            v[i] = b2 * v[i] + (1.0 - b2) * grad[i] * grad[i];
+        }
+        for i in 0..vhat.len() {
+            vhat[i] = vhat[i].max(v[i]);
+        }
+        for i in 0..params.len() {
+            let mut p = params[i];
+            if wd != 0.0 {
+                p -= lr * wd * p;
+            }
+            params[i] = p - lr * m[i] / (vhat[i] + nu).sqrt();
+        }
+    }
+
+    #[test]
+    fn prop_fused_amsgrad_equals_unfused_bitwise() {
+        use crate::util::prop::{check, Config};
+        check("fused amsgrad == 4-pass amsgrad", Config::default(), |gen| {
+            let d = gen.size(200);
+            let (b1, b2, nu) = (0.9f32, 0.99f32, 1e-8f32);
+            for wd in [0.0f32, 5e-4] {
+                let mut pf = gen.vec_normal(d, 1.0);
+                let mut pu = pf.clone();
+                let (mut mf, mut vf, mut vhf) =
+                    (vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+                let (mut mu_, mut vu, mut vhu) = (mf.clone(), vf.clone(), vhf.clone());
+                for _ in 0..6 {
+                    let g = gen.vec_normal(d, 1.5);
+                    fused_amsgrad_step(&mut pf, &g, &mut mf, &mut vf, &mut vhf, b1, b2, nu, wd, 0.01);
+                    amsgrad_unfused(&mut pu, &g, &mut mu_, &mut vu, &mut vhu, b1, b2, nu, wd, 0.01);
+                    for i in 0..d {
+                        if pf[i].to_bits() != pu[i].to_bits()
+                            || mf[i].to_bits() != mu_[i].to_bits()
+                            || vhf[i].to_bits() != vhu[i].to_bits()
+                        {
+                            return Err(format!("fused amsgrad diverged at coord {i} (wd={wd})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fused_adam_equals_unfused_bitwise() {
+        use crate::util::prop::{check, Config};
+        check("fused adam == multi-pass adam", Config::default(), |gen| {
+            let d = gen.size(150);
+            let (b1, b2, nu) = (0.9f32, 0.999f32, 1e-8f32);
+            let mut pf = gen.vec_normal(d, 1.0);
+            let mut pu = pf.clone();
+            let (mut mf, mut vf) = (vec![0.0f32; d], vec![0.0f32; d]);
+            let (mut mu_, mut vu) = (mf.clone(), vf.clone());
+            for t in 1..=8i32 {
+                let frozen = t > 5; // exercise 1-bit Adam's stage-2 mode
+                let (c1, c2) = (1.0 - b1.powi(t), 1.0 - b2.powi(t));
+                let g = gen.vec_normal(d, 1.0);
+                fused_adam_step(&mut pf, &g, &mut mf, &mut vf, b1, b2, c1, c2, nu, 0.01, frozen);
+                // unfused reference: m pass, v pass, param pass
+                for i in 0..d {
+                    mu_[i] = b1 * mu_[i] + (1.0 - b1) * g[i];
+                }
+                if !frozen {
+                    for i in 0..d {
+                        vu[i] = b2 * vu[i] + (1.0 - b2) * g[i] * g[i];
+                    }
+                }
+                for i in 0..d {
+                    pu[i] -= 0.01 * (mu_[i] / c1) / ((vu[i] / c2).sqrt() + nu);
+                }
+                for i in 0..d {
+                    if pf[i].to_bits() != pu[i].to_bits() || vf[i].to_bits() != vu[i].to_bits() {
+                        return Err(format!("fused adam diverged at coord {i} (t={t})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fused_sgd_momentum_equals_unfused_bitwise() {
+        use crate::util::prop::{check, Config};
+        check("fused sgd == 2-pass sgd", Config::default(), |gen| {
+            let d = gen.size(150);
+            let mut pf = gen.vec_normal(d, 1.0);
+            let mut pu = pf.clone();
+            let mut uf = vec![0.0f32; d];
+            let mut uu = uf.clone();
+            for _ in 0..6 {
+                let g = gen.vec_normal(d, 1.0);
+                fused_sgd_momentum_step(&mut pf, &g, &mut uf, 0.9, 5e-4, 0.05);
+                for i in 0..d {
+                    uu[i] = 0.9 * uu[i] + (g[i] + 5e-4 * pu[i]);
+                }
+                for i in 0..d {
+                    pu[i] -= 0.05 * uu[i];
+                }
+                for i in 0..d {
+                    if pf[i].to_bits() != pu[i].to_bits() || uf[i].to_bits() != uu[i].to_bits() {
+                        return Err(format!("fused sgd diverged at coord {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

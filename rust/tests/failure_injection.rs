@@ -132,7 +132,7 @@ fn pipeline_protocol_faults_are_clean_diagnostics() {
                 round: 1,
                 from: 1,
                 payload_bits: 64,
-                bytes: vec![0xAB; 16],
+                bytes: vec![0xAB; 16].into(),
             }))
             .unwrap();
         let mut server = strat.make_server(8, 2);

@@ -3,7 +3,8 @@
 //! seeded end-to-end trajectory (loss / grad-norm / test metrics /
 //! cum_bits stream) across the full scheduling matrix —
 //!
-//!   {lockstep, threaded} × {owned, zero-copy views}
+//!   {lockstep, threaded} × {ingest owned, zero-copy views}
+//!     × {egress owned, zero-copy writer}
 //!     × {server_threads 0, 4} × {pipeline_depth 1, 2}
 //!     × {pin_shards off, on}
 //!
@@ -72,6 +73,7 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.compress_threads = 2;
     // explicit baseline mode — the env defaults must not leak in
     cfg.zero_copy_ingest = false;
+    cfg.zero_copy_egress = false;
     cfg.server_threads = 0;
     cfg.server_min_parallel_dim = 0;
     cfg.pipeline_depth = 1;
@@ -138,32 +140,36 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
 
         for threaded in [false, true] {
             for zero_copy in [false, true] {
-                for server_threads in [0usize, 4] {
-                    for pipeline_depth in [1usize, 2] {
-                        for pin_shards in [false, true] {
-                            let mut cfg = base_cfg(strategy);
-                            cfg.zero_copy_ingest = zero_copy;
-                            cfg.server_threads = server_threads;
-                            // force the pool path at d = 50, where the
-                            // default cutover would keep the fold
-                            // sequential
-                            cfg.server_min_parallel_dim = usize::from(server_threads > 0);
-                            cfg.pipeline_depth = pipeline_depth;
-                            cfg.pin_shards = pin_shards;
-                            cfg.threaded = threaded;
-                            let log = if threaded {
-                                run_threaded(&cfg).unwrap()
-                            } else {
-                                run_lockstep(&cfg).unwrap()
-                            };
-                            assert_eq!(
-                                digest(&log),
-                                baseline,
-                                "{strategy}: trajectory diverged (threaded={threaded}, \
-                                 zero_copy_ingest={zero_copy}, \
-                                 server_threads={server_threads}, \
-                                 pipeline_depth={pipeline_depth}, pin_shards={pin_shards})"
-                            );
+                for zero_copy_egress in [false, true] {
+                    for server_threads in [0usize, 4] {
+                        for pipeline_depth in [1usize, 2] {
+                            for pin_shards in [false, true] {
+                                let mut cfg = base_cfg(strategy);
+                                cfg.zero_copy_ingest = zero_copy;
+                                cfg.zero_copy_egress = zero_copy_egress;
+                                cfg.server_threads = server_threads;
+                                // force the pool path at d = 50, where
+                                // the default cutover would keep the
+                                // fold sequential
+                                cfg.server_min_parallel_dim = usize::from(server_threads > 0);
+                                cfg.pipeline_depth = pipeline_depth;
+                                cfg.pin_shards = pin_shards;
+                                cfg.threaded = threaded;
+                                let log = if threaded {
+                                    run_threaded(&cfg).unwrap()
+                                } else {
+                                    run_lockstep(&cfg).unwrap()
+                                };
+                                assert_eq!(
+                                    digest(&log),
+                                    baseline,
+                                    "{strategy}: trajectory diverged (threaded={threaded}, \
+                                     zero_copy_ingest={zero_copy}, \
+                                     zero_copy_egress={zero_copy_egress}, \
+                                     server_threads={server_threads}, \
+                                     pipeline_depth={pipeline_depth}, pin_shards={pin_shards})"
+                                );
+                            }
                         }
                     }
                 }
