@@ -22,7 +22,7 @@
 //! cargo bench --bench pipeline_throughput -- --n 16 --rounds 4 --quick
 //! ```
 
-use cdadam::comm::{topology, wire, UplinkFrame};
+use cdadam::comm::{topology, wire, DownlinkPayload, UplinkFrame};
 use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
 use cdadam::config::ExperimentConfig;
 use cdadam::coordinator::pipeline::PipelineServer;
@@ -81,9 +81,14 @@ fn run_mode(
                     let down = link.down.recv().expect("downlink closed");
                     assert_eq!(down.round, t as u64);
                     if i == 0 {
-                        let bytes =
-                            wire::encode_parts(t as u64, 0, &down.payload).expect("encode down");
-                        mix_bytes(&mut digest, &bytes);
+                        match &down.payload {
+                            DownlinkPayload::Shared(m) => {
+                                let bytes =
+                                    wire::encode_parts(t as u64, 0, m).expect("encode down");
+                                mix_bytes(&mut digest, &bytes);
+                            }
+                            DownlinkPayload::Frame(fb) => mix_bytes(&mut digest, &fb.bytes),
+                        }
                     }
                 }
                 digest

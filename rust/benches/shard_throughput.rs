@@ -23,8 +23,11 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use cdadam::comm::wire::{encode_frame, FrameWriter};
-use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor, TopK, TopKBlock};
+use cdadam::algo::downlink::DownlinkChannel;
+use cdadam::algo::uncompressed::Uncompressed;
+use cdadam::algo::{Strategy, WorkerAlgo};
+use cdadam::comm::wire::{encode_frame, FrameView, FrameWriter};
+use cdadam::compress::{CompressedMsg, Compressor, ScaledSign, ShardedCompressor, TopK, TopKBlock};
 use cdadam::util::args::Args;
 use cdadam::util::rng::Rng;
 use cdadam::util::timer::bench;
@@ -233,4 +236,77 @@ fn main() {
         }
     }
     println!("steady-state allocation contract ✓");
+
+    // --- downlink: dense broadcast vs EF-compressed sign frames ---------
+    // The bidirectional-compression headline at model scale: the server's
+    // dense broadcast (uncompressed baseline / 1-bit Adam warm-up shape)
+    // vs the same update EF-compressed through the DownlinkChannel into a
+    // wire frame. Correctness first: the owned `process` path and the
+    // frame `process_into` path must leave a worker's model bit-identical
+    // after several EF rounds (replica identity makes one worker per path
+    // representative of all n).
+    println!("\n### downlink (dense broadcast vs EF-compressed sign frames)");
+    let strat = Uncompressed::amsgrad();
+    let lr = 0.001f32;
+    let warm_rounds = 3usize;
+    let mut w_owned = strat.make_worker(d, 0);
+    let mut w_frame = strat.make_worker(d, 0);
+    let mut p_owned = vec![0.0f32; d];
+    let mut p_frame = vec![0.0f32; d];
+    let mut ch_owned = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+    let mut ch_frame = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+    let mut dfw = FrameWriter::new(2);
+    let mut dense_bits = 0u64;
+    let mut comp_bits = 0u64;
+    let mut u = vec![0.0f32; d];
+    for t in 1..=warm_rounds {
+        rng.fill_normal(&mut u, 0.5);
+        let update = CompressedMsg::Dense(u.clone());
+        dense_bits += update.wire_bits();
+        let c = ch_owned.process(update.clone());
+        comp_bits += c.wire_bits();
+        w_owned.apply_downlink(t, &c, &mut p_owned, lr);
+        let fb = ch_frame.process_into(t as u64, &update, &mut dfw).unwrap();
+        assert_eq!(fb.payload_bits, c.wire_bits(), "round {t}: downlink metering diverged");
+        let fv = FrameView::parse(&fb.bytes).unwrap();
+        w_frame.apply_downlink_view(t, &fv.payload, &mut p_frame, lr);
+    }
+    assert!(
+        p_owned.iter().zip(&p_frame).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "owned vs frame downlink left different worker models"
+    );
+    println!("sanity: owned == frame downlink worker models (bit-exact, {warm_rounds} EF rounds) ✓");
+    // per-link bits: uplink stays dense (32d), the downlink drops from
+    // 32d to ~(32 + d) — total ≈ 48% below the dense-both-ways round.
+    let up = 32 * d as u64;
+    let dense_round = up + dense_bits / warm_rounds as u64;
+    let comp_round = up + comp_bits / warm_rounds as u64;
+    let drop = 100.0 * (1.0 - comp_round as f64 / dense_round as f64);
+    println!(
+        "per-link bits/round: dense {dense_round}  compressed {comp_round}  drop {drop:.1}%"
+    );
+    assert!(
+        drop >= 40.0,
+        "compressed downlink should cut total bits/round by ≥40%, got {drop:.1}%"
+    );
+    // timing: one server broadcast (encode + n-link Arc fan-out) per call
+    let update = CompressedMsg::Dense(u.clone());
+    for n in [8usize, 32] {
+        let base = row(&format!("downlink dense n={n}"), d, iters, None, || {
+            let fb = encode_frame(1, 0, &update).unwrap();
+            let arc = std::sync::Arc::new(fb);
+            for _ in 0..n {
+                std::hint::black_box(std::sync::Arc::clone(&arc));
+            }
+        });
+        let mut ch = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+        let mut fw = FrameWriter::new(2);
+        row(&format!("downlink EF-sign n={n}"), d, iters, Some(base), || {
+            let fb = ch.process_into(1, &update, &mut fw).unwrap();
+            let arc = std::sync::Arc::new(fb);
+            for _ in 0..n {
+                std::hint::black_box(std::sync::Arc::clone(&arc));
+            }
+        });
+    }
 }

@@ -23,6 +23,8 @@ struct Row {
     method: &'static str,
     s_per_iter: f64,
     bits: u64,
+    up_bits: u64,
+    down_bits: u64,
     formula: String,
     formula_bits: u64,
 }
@@ -36,17 +38,28 @@ fn main() -> anyhow::Result<()> {
                    strategy: &str,
                    compressor: &str,
                    k_frac: f64|
-     -> anyhow::Result<(f64, u64, usize, usize)> {
+     -> anyhow::Result<(f64, u64, u64, u64, usize, usize)> {
         let mut cfg = ExperimentConfig::preset("image_resnet_mini")?;
         cfg.strategy = strategy.into();
         cfg.compressor = compressor.into();
         cfg.k_frac = k_frac;
         cfg.rounds = rounds;
         cfg.eval_every = rounds; // single eval: measure pure iteration cost
+        // Table 2's closed forms count a dense broadcast for the methods
+        // that send one — keep the downlink EF stage out even when the
+        // suite runs with CDADAM_COMPRESS_DOWNLINK forced on.
+        cfg.compress_downlink = false;
         let log = run_lockstep(&cfg)?;
         let last = log.last().unwrap();
         let _ = method;
-        Ok((last.wall_ms / 1e3 / rounds as f64, last.cum_bits, rounds, cfg.effective_warmup()))
+        Ok((
+            last.wall_ms / 1e3 / rounds as f64,
+            last.cum_bits,
+            last.up_bits,
+            last.down_bits,
+            rounds,
+            cfg.effective_warmup(),
+        ))
     };
 
     // model dim of the reduced resnet_mini stand-in
@@ -56,53 +69,61 @@ fn main() -> anyhow::Result<()> {
     };
     let t = rounds as u64;
 
-    let (s, bits, ..) = run("Uncompressed", "uncompressed_amsgrad", "identity", 0.0)?;
+    let (s, bits, up, down, ..) = run("Uncompressed", "uncompressed_amsgrad", "identity", 0.0)?;
     rows.push(Row {
         method: "Uncompressed",
         s_per_iter: s,
         bits,
+        up_bits: up,
+        down_bits: down,
         formula: "32d x 2T".into(),
         formula_bits: 32 * d * 2 * t,
     });
 
-    let (s, bits, ..) = run("EF21", "ef21", "topk", 0.016)?;
+    let (s, bits, up, down, ..) = run("EF21", "ef21", "topk", 0.016)?;
     let k = ((0.016 * d as f64).round() as u64).max(1);
     rows.push(Row {
         method: "EF21",
         s_per_iter: s,
         bits,
+        up_bits: up,
+        down_bits: down,
         formula: "~(32k x 2) x 2T".into(),
         formula_bits: (32 + 64 * k) * 2 * t,
     });
 
-    let (s, bits, _, warm) = run("1-bit Adam", "onebit_adam", "scaled_sign", 0.0)?;
+    let (s, bits, up, down, _, warm) = run("1-bit Adam", "onebit_adam", "scaled_sign", 0.0)?;
     let t1 = warm as u64;
     rows.push(Row {
         method: "1-bit Adam",
         s_per_iter: s,
         bits,
+        up_bits: up,
+        down_bits: down,
         formula: "32d x 2T1 + (32+d) x 2(T-T1)".into(),
         formula_bits: 32 * d * 2 * t1 + (32 + d) * 2 * (t - t1),
     });
 
-    let (s, bits, ..) = run("CD-Adam", "cdadam", "scaled_sign", 0.0)?;
+    let (s, bits, up, down, ..) = run("CD-Adam", "cdadam", "scaled_sign", 0.0)?;
     rows.push(Row {
         method: "CD-Adam",
         s_per_iter: s,
         bits,
+        up_bits: up,
+        down_bits: down,
         formula: "(32+d) x 2T".into(),
         formula_bits: (32 + d) * 2 * t,
     });
 
     println!("### table2: avg runtime and total bits (d = {d}, T = {t})");
     println!(
-        "{:<14} {:>14} {:>16} {:>16}  {}",
-        "method", "s/iter", "metered bits", "formula bits", "formula"
+        "{:<14} {:>14} {:>16} {:>16} {:>16} {:>16}  {}",
+        "method", "s/iter", "metered bits", "up bits", "down bits", "formula bits", "formula"
     );
     for r in &rows {
         println!(
-            "{:<14} {:>14.4} {:>16} {:>16}  {}",
-            r.method, r.s_per_iter, r.bits, r.formula_bits, r.formula
+            "{:<14} {:>14.4} {:>16} {:>16} {:>16} {:>16}  {}",
+            r.method, r.s_per_iter, r.bits, r.up_bits, r.down_bits, r.formula_bits, r.formula
         );
         anyhow::ensure!(
             r.bits == r.formula_bits,
@@ -110,6 +131,14 @@ fn main() -> anyhow::Result<()> {
             r.method,
             r.bits,
             r.formula_bits
+        );
+        anyhow::ensure!(
+            r.up_bits + r.down_bits == r.bits,
+            "{}: up {} + down {} != cum {}",
+            r.method,
+            r.up_bits,
+            r.down_bits,
+            r.bits
         );
     }
     let base = rows[0].s_per_iter;

@@ -117,6 +117,19 @@ impl WorkerAlgo for CdAdamWorker {
         // disjoint-field borrows: g̃ lives in self.dec, state in self.opt.
         self.opt.step(params, self.dec.state(), lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        // zero-copy downlink ingest: g̃ advances straight off the wire
+        // view (bit-identical fold), frame bytes drop afterwards.
+        self.dec.apply_view(v);
+        self.opt.step(params, self.dec.state(), lr);
+    }
 }
 
 /// Server half: running ĝ aggregate + downlink Markov encoder.

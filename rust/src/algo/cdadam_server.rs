@@ -108,6 +108,17 @@ impl WorkerAlgo for SsWorker {
         // quantity each round is the current replica value.
         // (See SsServer::round — it encodes against the same state.)
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        _lr: f32,
+    ) {
+        self.dec.apply_view(v);
+        crate::tensor::sub_assign(params, self.dec.state());
+    }
 }
 
 struct SsServer {

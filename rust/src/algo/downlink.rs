@@ -1,0 +1,259 @@
+//! The server's downlink channel: symmetric twin of the worker uplink.
+//!
+//! With `compress_downlink` off the channel is the identity and the
+//! broadcast is the historical dense path, byte for byte. With it on,
+//! the channel carries a downlink [`Compressor`] plus a resident
+//! server-side error accumulator e_s (Efficient-Adam / COMP-AMS style):
+//! each round it compresses `update + e_s` and folds the residual back
+//! with the fused [`CompressedMsg::residual_into`] kernels, so the
+//! quantization error of round t is replayed into round t+1 instead of
+//! being lost — the property that keeps every strategy convergent under
+//! a biased downlink compressor.
+//!
+//! Only **effectively dense** updates are compressed: `Dense`, or
+//! `Sharded` whose shards are all `Dense` (the uncompressed baselines,
+//! 1-bit Adam's warmup phase, and identity-compressor runs). Servers
+//! whose `finish_round` already emits a compressed message — Markov
+//! difference streams (cdadam / ef21 / cdadam_server) and EF'd
+//! downlinks (ef, naive, 1-bit Adam post-warmup) — pass through
+//! verbatim: re-compressing a Markov c_t would desynchronize the
+//! encoder's ĝ replica from every worker's decoder, and those downlinks
+//! are already at the compressed bit budget.
+//!
+//! [`DownlinkChannel::process`] is the owned path (lockstep);
+//! [`DownlinkChannel::process_into`] is the zero-copy egress twin that
+//! encodes straight into a server [`FrameWriter`] frame — byte- and
+//! state-identical to encoding `process`'s output (pinned by the
+//! differential tests in `comm::wire`).
+
+use crate::comm::wire::{FrameWriter, PayloadSink as _};
+use crate::comm::FrameBytes;
+use crate::compress::{CompressedMsg, Compressor};
+
+/// Worker-id field stamped on server→worker frames. Downlink frames all
+/// originate at the single server, so the id carries no information;
+/// 0 keeps it inside the u16 wire field.
+pub const SERVER_FROM: u32 = 0;
+
+/// Is this update carried as raw dense floats (the only shape worth
+/// EF-compressing)? `Sharded` counts when every shard is `Dense` — the
+/// identity compressor under a sharded wrap produces exactly that.
+fn effectively_dense(msg: &CompressedMsg) -> bool {
+    match msg {
+        CompressedMsg::Dense(_) => true,
+        CompressedMsg::Sharded { shards, .. } => {
+            shards.iter().all(|s| matches!(s, CompressedMsg::Dense(_)))
+        }
+        _ => false,
+    }
+}
+
+/// Server-side downlink compression state: the compressor (None = dense
+/// passthrough channel) plus the resident error accumulator and its
+/// scratch buffer, both lazily sized to the model dimension on first
+/// use and reused every round after.
+pub struct DownlinkChannel {
+    comp: Option<Box<dyn Compressor>>,
+    /// e_s — the error-feedback memory (decode error of the last
+    /// compressed broadcast), replayed into the next round's input.
+    err: Vec<f32>,
+    /// Scratch for `update + e_s` (kept resident: zero steady-state
+    /// allocation on the hot path).
+    buf: Vec<f32>,
+}
+
+impl DownlinkChannel {
+    /// The identity channel: broadcasts pass through untouched — the
+    /// historical dense downlink, byte for byte.
+    pub fn dense() -> Self {
+        DownlinkChannel { comp: None, err: Vec::new(), buf: Vec::new() }
+    }
+
+    /// An EF-compressing channel over `comp`.
+    pub fn compressed(comp: Box<dyn Compressor>) -> Self {
+        DownlinkChannel { comp: Some(comp), err: Vec::new(), buf: Vec::new() }
+    }
+
+    /// Whether this channel compresses (i.e. `compress_downlink` is on).
+    pub fn enabled(&self) -> bool {
+        self.comp.is_some()
+    }
+
+    /// Would `msg` be EF-compressed (vs passed through verbatim)?
+    pub fn would_compress(&self, msg: &CompressedMsg) -> bool {
+        self.comp.is_some() && effectively_dense(msg)
+    }
+
+    fn ensure(&mut self, d: usize) {
+        if self.err.len() != d {
+            self.err = vec![0.0; d];
+            self.buf = vec![0.0; d];
+        }
+    }
+
+    /// buf = update + e_s (the EF input). Factored so the owned and
+    /// zero-copy paths consume bit-identical inputs.
+    fn stage(&mut self, msg: &CompressedMsg) {
+        self.ensure(msg.dim());
+        self.buf.copy_from_slice(&self.err);
+        msg.add_into(&mut self.buf);
+    }
+
+    /// Owned path: EF-compress an effectively-dense update (folding the
+    /// residual into e_s), or return it unchanged.
+    pub fn process(&mut self, msg: CompressedMsg) -> CompressedMsg {
+        if !self.would_compress(&msg) {
+            return msg;
+        }
+        self.stage(&msg);
+        let comp = self.comp.as_mut().expect("would_compress checked");
+        let c = comp.compress(&self.buf);
+        c.residual_into(&self.buf, &mut self.err);
+        c
+    }
+
+    /// Zero-copy egress twin of [`Self::process`]: the broadcast is
+    /// encoded straight into `fw`'s frame buffer (passthrough messages
+    /// via the byte-identical `put_msg` serialization; EF'd updates via
+    /// [`Compressor::compress_into`]) and e_s advances by folding the
+    /// just-written payload back through a borrowed view — bit-identical
+    /// to the owned `residual_into`. A parse failure on the
+    /// self-produced bytes is a codec bug and surfaces as an error.
+    pub fn process_into(
+        &mut self,
+        round: u64,
+        msg: &CompressedMsg,
+        fw: &mut FrameWriter,
+    ) -> anyhow::Result<FrameBytes> {
+        fw.begin(round, SERVER_FROM)?;
+        if self.would_compress(msg) {
+            self.stage(msg);
+            let comp = self.comp.as_mut().expect("would_compress checked");
+            comp.compress_into(&self.buf, fw);
+            fw.payload_view()?.residual_into(&self.buf, &mut self.err);
+        } else {
+            fw.put_msg(msg);
+        }
+        Ok(fw.finish())
+    }
+
+    /// The resident error accumulator (test introspection).
+    pub fn error_state(&self) -> &[f32] {
+        &self.err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::encode_frame;
+    use crate::compress::{ScaledSign, ShardedCompressor, TopK};
+    use crate::util::rng::Rng;
+
+    fn normal(d: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        Rng::new(seed).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn dense_channel_is_identity() {
+        let mut ch = DownlinkChannel::dense();
+        let x = normal(40, 1);
+        let out = ch.process(CompressedMsg::Dense(x.clone()));
+        assert_eq!(out.to_dense(), x);
+        assert!(ch.error_state().is_empty(), "identity channel must not touch EF state");
+    }
+
+    #[test]
+    fn compressed_messages_pass_through_verbatim() {
+        // Markov/EF servers already emit compressed downlinks — the
+        // channel must not re-compress them (that would desync every
+        // worker replica) nor advance e_s.
+        let mut ch = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+        let x = normal(40, 2);
+        let sign = ScaledSign::new().compress(&x);
+        let want = sign.to_dense();
+        let out = ch.process(sign);
+        assert_eq!(out.to_dense(), want);
+        assert!(ch.error_state().is_empty());
+    }
+
+    #[test]
+    fn ef_residual_matches_two_pass_form() {
+        let mut ch = DownlinkChannel::compressed(Box::new(TopK::with_frac(0.25)));
+        let x = normal(64, 3);
+        // round 1: e_s = 0, so input is x itself
+        let c1 = ch.process(CompressedMsg::Dense(x.clone()));
+        let mut want_e: Vec<f32> = x.clone();
+        for (e, d) in want_e.iter_mut().zip(c1.to_dense()) {
+            *e -= d;
+        }
+        assert_eq!(ch.error_state(), &want_e[..], "e_s != (x - decode(c)) after round 1");
+        // round 2: input is y + e_s
+        let y = normal(64, 4);
+        let mut staged: Vec<f32> = want_e.clone();
+        for (s, v) in staged.iter_mut().zip(&y) {
+            *s += *v;
+        }
+        let c2 = ch.process(CompressedMsg::Dense(y));
+        let mut want_e2 = staged.clone();
+        for (e, d) in want_e2.iter_mut().zip(c2.to_dense()) {
+            *e -= d;
+        }
+        assert_eq!(ch.error_state(), &want_e2[..], "e_s mismatch after round 2");
+    }
+
+    #[test]
+    fn sharded_dense_counts_as_dense() {
+        let x = normal(50, 5);
+        let msg = CompressedMsg::Sharded {
+            d: 50,
+            shards: vec![
+                CompressedMsg::Dense(x[..30].to_vec()),
+                CompressedMsg::Dense(x[30..].to_vec()),
+            ],
+        };
+        let mut ch = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+        assert!(ch.would_compress(&msg));
+        let out = ch.process(msg);
+        assert!(matches!(out, CompressedMsg::SignScale { .. }));
+        assert_eq!(ch.error_state().len(), 50);
+    }
+
+    #[test]
+    fn process_into_is_bit_identical_to_owned_process() {
+        // the lockstep (owned) and threaded (frame) downlinks must carry
+        // identical bytes and evolve identical e_s — the cross-schedule
+        // bit-equality the golden matrix enforces end-to-end.
+        for comp in [
+            || -> Box<dyn Compressor> { Box::new(ScaledSign::new()) },
+            || -> Box<dyn Compressor> {
+                Box::new(ShardedCompressor::new(Box::new(ScaledSign::new()), 16, 2))
+            },
+        ] {
+            let mut owned = DownlinkChannel::compressed(comp());
+            let mut framed = DownlinkChannel::compressed(comp());
+            let mut fw = FrameWriter::new(4);
+            for t in 1..=6u64 {
+                // alternate dense and already-compressed rounds
+                let x = normal(48, 100 + t);
+                let msg = if t % 3 == 0 {
+                    ScaledSign::new().compress(&x)
+                } else {
+                    CompressedMsg::Dense(x)
+                };
+                let a = owned.process(msg.clone());
+                let fb = framed.process_into(t, &msg, &mut fw).unwrap();
+                let want = encode_frame(t, SERVER_FROM, &a).unwrap();
+                assert_eq!(&*fb.bytes, &*want.bytes, "round {t}: frame bytes diverged");
+                assert_eq!(fb.payload_bits, a.wire_bits(), "round {t}: metered bits diverged");
+                assert_eq!(
+                    owned.error_state(),
+                    framed.error_state(),
+                    "round {t}: e_s diverged between owned and frame paths"
+                );
+            }
+        }
+    }
+}

@@ -101,6 +101,18 @@ impl WorkerAlgo for EfWorker {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        // view decode is bit-identical to the owned decode_into
+        v.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
 }
 
 struct EfServer {

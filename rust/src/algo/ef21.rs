@@ -88,6 +88,17 @@ impl WorkerAlgo for Ef21Worker {
         self.dec.apply(msg);
         self.opt.step(params, self.dec.state(), lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        self.dec.apply_view(v);
+        self.opt.step(params, self.dec.state(), lr);
+    }
 }
 
 struct Ef21Server {

@@ -25,6 +25,7 @@
 
 pub mod cdadam;
 pub mod cdadam_server;
+pub mod downlink;
 pub mod ef;
 pub mod ef21;
 pub mod naive;
@@ -32,7 +33,7 @@ pub mod onebit_adam;
 pub mod uncompressed;
 
 use crate::agg::{Ingest, UplinkRef};
-use crate::comm::wire::{FrameWriter, PayloadSink};
+use crate::comm::wire::{FrameWriter, PayloadSink, PayloadView};
 use crate::compress::CompressedMsg;
 
 /// Per-worker half of a strategy (owns uplink compression state and the
@@ -66,6 +67,25 @@ pub trait WorkerAlgo: Send {
 
     /// Apply the server broadcast: reconstruct g̃_t and update `params`.
     fn apply_downlink(&mut self, round: usize, msg: &CompressedMsg, params: &mut [f32], lr: f32);
+
+    /// Zero-copy ingest twin of [`Self::apply_downlink`]: apply the
+    /// broadcast straight from a borrowed wire view (the
+    /// `compress_downlink` frame path), without materializing a
+    /// [`CompressedMsg`]. Must land `params` and all worker state on
+    /// values bit-identical to [`Self::apply_downlink`] of the owned
+    /// decode of the same frame — the view kernels are bit-identical to
+    /// the owned ones, so overrides just swap the decode call. The
+    /// default materializes (correct for any worker); every strategy in
+    /// the tree overrides it with the direct view path.
+    fn apply_downlink_view(
+        &mut self,
+        round: usize,
+        v: &PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        self.apply_downlink(round, &v.to_msg(), params, lr);
+    }
 }
 
 /// Server half of a strategy (owns aggregation + downlink compression
@@ -208,6 +228,71 @@ mod tests {
                     let down = server.round(t, &[c]);
                     owned.apply_downlink(t, &down, &mut params_a, 0.01);
                     egress.apply_downlink(t, &down, &mut params_b, 0.01);
+                    assert!(
+                        params_a.iter().zip(&params_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{}/{clabel}: replicas diverged at round {t}",
+                        s.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_downlink_view_matches_owned_path_all_strategies() {
+        // the compressed-downlink ingest contract at the strategy level:
+        // for every worker half, applying the broadcast through a
+        // borrowed wire view must land the parameter replica and all
+        // worker state (Markov ĝ replicas, frozen variance, optimizer
+        // moments) on values bit-identical to the owned apply of the
+        // same frame, round after round.
+        let d = 48usize;
+        let rounds = 6usize;
+        let comps: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()))),
+            ("randk", Box::new(|| Box::new(RandK::with_frac(0.2, 5)))),
+            (
+                "sharded_sign_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(ScaledSign::new()), 16, 2)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+        ];
+        for (clabel, mk_comp) in &comps {
+            let strats: Vec<Box<dyn Strategy>> = vec![
+                Box::new(cdadam::CdAdam::new(mk_comp())),
+                Box::new(uncompressed::Uncompressed::amsgrad()),
+                Box::new(uncompressed::Uncompressed::sgd(0.9)),
+                Box::new(naive::Naive::new(mk_comp())),
+                Box::new(ef::ErrorFeedback::new(mk_comp())),
+                Box::new(ef21::Ef21::new(mk_comp())),
+                Box::new(onebit_adam::OneBitAdam::new(mk_comp(), 3)), // warmup boundary inside the run
+                Box::new(cdadam_server::CdAdamServerSide::new(
+                    mk_comp(),
+                    crate::optim::LrSchedule::constant(0.01),
+                )),
+            ];
+            for s in &strats {
+                let mut owned = s.make_worker(d, 0);
+                let mut viewed = s.make_worker(d, 0); // same id ⇒ same forked streams
+                let mut server = s.make_server(d, 1);
+                let mut params_a = vec![0.25f32; d];
+                let mut params_b = params_a.clone();
+                let mut rng = crate::util::rng::Rng::new(0xD01);
+                let mut g = vec![0.0f32; d];
+                for t in 1..=rounds {
+                    rng.fill_normal(&mut g, 1.0);
+                    let c = owned.uplink(t, &g);
+                    let c2 = viewed.uplink(t, &g);
+                    assert_eq!(c, c2, "{}/{clabel}: uplinks diverged at round {t}", s.name());
+                    let down = server.round(t, &[c]);
+                    let frame = wire::encode_frame(t as u64, 0, &down).unwrap();
+                    let fv = wire::FrameView::parse(&frame.bytes).unwrap();
+                    owned.apply_downlink(t, &down, &mut params_a, 0.01);
+                    viewed.apply_downlink_view(t, &fv.payload, &mut params_b, 0.01);
                     assert!(
                         params_a.iter().zip(&params_b).all(|(a, b)| a.to_bits() == b.to_bits()),
                         "{}/{clabel}: replicas diverged at round {t}",

@@ -77,6 +77,17 @@ impl WorkerAlgo for NaiveWorker {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        v.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
 }
 
 struct NaiveServer {

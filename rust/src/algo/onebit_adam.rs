@@ -128,6 +128,22 @@ impl WorkerAlgo for OneBitWorker {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        // the stage-boundary freeze keys off the round number, not the
+        // message shape, so both ingest paths hit it identically
+        if round == self.warmup + 1 && !self.opt.frozen {
+            self.opt.freeze_variance();
+        }
+        v.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
 }
 
 struct OneBitServer {

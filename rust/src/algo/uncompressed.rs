@@ -115,6 +115,19 @@ impl WorkerAlgo for UncompressedWorker {
         msg.decode_into(&mut self.buf);
         self.opt.step(params, &self.buf, lr);
     }
+
+    fn apply_downlink_view(
+        &mut self,
+        _round: usize,
+        v: &crate::comm::wire::PayloadView<'_>,
+        params: &mut [f32],
+        lr: f32,
+    ) {
+        // under compress_downlink the broadcast arrives sign/sparse
+        // instead of dense; the view decode is bit-identical either way
+        v.decode_into(&mut self.buf);
+        self.opt.step(params, &self.buf, lr);
+    }
 }
 
 struct UncompressedServer {

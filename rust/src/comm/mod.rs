@@ -113,15 +113,40 @@ impl Framed for UplinkFrame {
     }
 }
 
-/// The server's downlink broadcast: one payload shared by every worker
-/// link via `Arc`, so fan-out to n workers is n refcount bumps instead
-/// of n deep clones of the (potentially dense, d-sized) message. Each
-/// link still meters the full serialized size — on a real network every
-/// link would carry its own copy of the bytes.
+/// What the downlink broadcast carries: the structured in-process
+/// message (the historical dense path, verbatim) or a serialized frame
+/// produced by the server-side [`wire::FrameWriter`] when
+/// `compress_downlink` is on — the symmetric twin of [`UplinkFrame`].
+/// Either way one allocation is shared by every worker link via `Arc`,
+/// so fan-out to n workers is n refcount bumps instead of n deep clones
+/// of the (potentially dense, d-sized) payload.
+#[derive(Clone, Debug)]
+pub enum DownlinkPayload {
+    Shared(Arc<CompressedMsg>),
+    Frame(Arc<FrameBytes>),
+}
+
+impl DownlinkPayload {
+    /// Metered payload bits, excluding the 64-bit frame header. Both
+    /// variants report [`CompressedMsg::wire_bits`]-equivalent sizes
+    /// (frames capture it at encode time), so switching transport never
+    /// shifts the bits axis.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            DownlinkPayload::Shared(m) => m.wire_bits(),
+            DownlinkPayload::Frame(f) => f.payload_bits,
+        }
+    }
+}
+
+/// The server's downlink broadcast: one `Arc`-shared payload fanned out
+/// to every worker link. Each link still meters the full serialized
+/// size — on a real network every link would carry its own copy of the
+/// bytes.
 #[derive(Clone, Debug)]
 pub struct Broadcast {
     pub round: u64,
-    pub payload: Arc<CompressedMsg>,
+    pub payload: DownlinkPayload,
 }
 
 impl Framed for Broadcast {
@@ -274,16 +299,36 @@ mod tests {
         let (w, s, _um, dm) = topology(3);
         let payload = Arc::new(CompressedMsg::Dense(vec![1.0; 10]));
         for link in &s {
-            link.down.send(Broadcast { round: 7, payload: payload.clone() }).unwrap();
+            link.down
+                .send(Broadcast { round: 7, payload: DownlinkPayload::Shared(payload.clone()) })
+                .unwrap();
         }
         let received: Vec<Broadcast> = w.iter().map(|l| l.down.recv().unwrap()).collect();
         for (i, got) in received.iter().enumerate() {
             assert_eq!(got.round, 7);
-            assert!(Arc::ptr_eq(&got.payload, &payload), "worker {i} got a deep copy");
+            match &got.payload {
+                DownlinkPayload::Shared(p) => {
+                    assert!(Arc::ptr_eq(p, &payload), "worker {i} got a deep copy")
+                }
+                DownlinkPayload::Frame(_) => panic!("worker {i} got a frame"),
+            }
             assert_eq!(dm[i].bits(), 64 + 320);
         }
         // 3 receiver handles + the local one, all the same allocation
         assert_eq!(Arc::strong_count(&payload), 4);
+    }
+
+    #[test]
+    fn downlink_payload_modes_meter_identically() {
+        // the two downlink transports must meter the same bits for the
+        // same message — the audit identity in the threaded driver and
+        // the golden cum_bits streams both rest on this.
+        let payload = CompressedMsg::Dense(vec![1.0; 10]);
+        let frame = wire::encode_frame(9, 0, &payload).unwrap();
+        let shared = Broadcast { round: 9, payload: DownlinkPayload::Shared(Arc::new(payload)) };
+        let framed = Broadcast { round: 9, payload: DownlinkPayload::Frame(Arc::new(frame)) };
+        assert_eq!(Framed::wire_bits(&shared), Framed::wire_bits(&framed));
+        assert_eq!(Framed::wire_bits(&shared), 64 + 320);
     }
 
     #[test]

@@ -1598,6 +1598,106 @@ mod tests {
     }
 
     #[test]
+    fn fuzz_downlink_residual_view_parity() {
+        // the downlink EF channel advances e_s through residual_into on
+        // a borrowed view of the just-written broadcast; reuse the
+        // shared mutation/truncation corpus to pin that kernel's
+        // owned ≡ view parity on every frame both paths accept.
+        let seeds = probe_frames(|bytes| {
+            let (Ok(m), Ok(v)) = (decode(bytes), FrameView::parse(bytes)) else {
+                return;
+            };
+            let d = m.payload.dim();
+            if d == 0 || d > 1 << 17 {
+                return; // hostile dims: covered by the acceptance oracle
+            }
+            // deterministic varied EF input derived from the index
+            let staged: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37 - 3.0) * 0.11).collect();
+            let mut e_owned = vec![0.0f32; d];
+            let mut e_view = vec![0.0f32; d];
+            m.payload.residual_into(&staged, &mut e_owned);
+            v.payload.residual_into(&staged, &mut e_view);
+            assert!(
+                e_owned.iter().zip(&e_view).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "residual kernel diverged between owned and view paths ({d} dims)"
+            );
+        });
+        for s in &seeds {
+            assert!(decode(s).is_ok());
+        }
+    }
+
+    #[test]
+    fn fuzz_downlink_channel_differential() {
+        // the server-side downlink twin of the egress oracle: across
+        // compressor families and evolving multi-round EF state, the
+        // frame written by DownlinkChannel::process_into must be
+        // byte-identical to encoding process()'s output, meter the same
+        // payload bits, evolve the same e_s — and every broadcast frame
+        // must satisfy the decode ≡ view oracle the workers rely on.
+        use crate::algo::downlink::{DownlinkChannel, SERVER_FROM};
+        use crate::compress::RandK;
+        let families: Vec<(&str, Box<dyn Fn() -> Box<dyn Compressor>>)> = vec![
+            ("sign", Box::new(|| Box::new(ScaledSign::new()))),
+            ("topk", Box::new(|| Box::new(TopK::with_frac(0.2)))),
+            ("randk", Box::new(|| Box::new(RandK::with_frac(0.15, 11)))),
+            (
+                "sharded_sign_par",
+                Box::new(|| {
+                    Box::new(
+                        ShardedCompressor::new(Box::new(ScaledSign::new()), 37, 2)
+                            .with_min_parallel_dim(1),
+                    )
+                }),
+            ),
+        ];
+        let mut rng = Rng::new(0xD04711);
+        let iters = egress_iters();
+        for (label, mk) in &families {
+            let mut owned = DownlinkChannel::compressed(mk());
+            let mut framed = DownlinkChannel::compressed(mk());
+            let mut fw = FrameWriter::new(3);
+            let d = 120usize; // fixed dim: e_s is resident across rounds
+            for t in 1..=iters as u64 {
+                let mut x = vec![0.0f32; d];
+                match t % 3 {
+                    0 => {} // all-zero update: sign → Zero rewind path
+                    1 => rng.fill_normal(&mut x, 1.0),
+                    _ => {
+                        rng.fill_normal(&mut x, 0.1);
+                        let spike = rng.below(d);
+                        x[spike] = 40.0;
+                    }
+                }
+                let msg = match t % 4 {
+                    // passthrough round: already-compressed downlink
+                    0 => ScaledSign::new().compress(&x),
+                    // sharded-all-dense counts as effectively dense
+                    1 => CompressedMsg::Sharded {
+                        d,
+                        shards: vec![
+                            CompressedMsg::Dense(x[..d / 2].to_vec()),
+                            CompressedMsg::Dense(x[d / 2..].to_vec()),
+                        ],
+                    },
+                    _ => CompressedMsg::Dense(x.clone()),
+                };
+                let a = owned.process(msg.clone());
+                let fb = framed.process_into(t, &msg, &mut fw).unwrap();
+                let want = encode_frame(t, SERVER_FROM, &a).unwrap();
+                assert_eq!(&*fb.bytes, &*want.bytes, "{label} round {t}: frame bytes diverged");
+                assert_eq!(fb.payload_bits, a.wire_bits(), "{label} round {t}: metered bits");
+                assert_eq!(
+                    owned.error_state(),
+                    framed.error_state(),
+                    "{label} round {t}: e_s diverged"
+                );
+                assert_decode_view_agree(&fb.bytes);
+            }
+        }
+    }
+
+    #[test]
     fn view_roundtrip_matches_owned_decode() {
         // structured (non-fuzz) parity across every payload variant,
         // including unaligned multi-range folds on sharded frames.

@@ -46,6 +46,73 @@ fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// A boolean scheduling knob declared once: CLI flag name + env var.
+/// Historically each knob hand-wrote its default-from-env in `Default`
+/// and its truthy/falsy override in `apply_args` — three copies per
+/// knob that had to agree by inspection. The knob table below is now
+/// the single source of truth for both.
+struct SwitchKnob {
+    cli: &'static str,
+    env: &'static str,
+}
+
+impl SwitchKnob {
+    const fn new(cli: &'static str, env: &'static str) -> Self {
+        SwitchKnob { cli, env }
+    }
+
+    /// Config default: on only when the env var is explicitly truthy.
+    fn default(&self) -> bool {
+        env_flag(self.env)
+    }
+
+    /// CLI override: a bare `--flag` turns the knob on; an explicit
+    /// falsy value (`--flag false`/0/no/off) turns it off — the way
+    /// back from an env-forced default. Absent flag leaves the
+    /// (env-derived) default untouched.
+    fn apply(&self, args: &Args, field: &mut bool) {
+        if let Some(v) = args.get(self.cli) {
+            *field = truthy(v);
+        }
+    }
+}
+
+/// A positive-integer scheduling knob declared once (CLI flag + env var
+/// + built-in default), same dedup rationale as [`SwitchKnob`].
+struct UsizeKnob {
+    cli: &'static str,
+    env: &'static str,
+    base: usize,
+}
+
+impl UsizeKnob {
+    const fn new(cli: &'static str, env: &'static str, base: usize) -> Self {
+        UsizeKnob { cli, env, base }
+    }
+
+    fn default(&self) -> usize {
+        env_usize(self.env, self.base)
+    }
+
+    fn apply(&self, args: &Args, field: &mut usize) -> Result<()> {
+        *field = args.usize(self.cli, *field)?;
+        Ok(())
+    }
+}
+
+/// The knob table: every env-switchable scheduling/transport knob in
+/// one place (name ⇒ CLI flag ⇒ `CDADAM_*` env var ⇒ default).
+const KNOB_ZERO_COPY_INGEST: SwitchKnob =
+    SwitchKnob::new("zero-copy-ingest", "CDADAM_ZERO_COPY_INGEST");
+const KNOB_ZERO_COPY_EGRESS: SwitchKnob =
+    SwitchKnob::new("zero-copy-egress", "CDADAM_ZERO_COPY_EGRESS");
+const KNOB_PIN_SHARDS: SwitchKnob = SwitchKnob::new("pin-shards", "CDADAM_PIN_SHARDS");
+const KNOB_THREADED: SwitchKnob = SwitchKnob::new("threaded", "CDADAM_THREADED");
+const KNOB_COMPRESS_DOWNLINK: SwitchKnob =
+    SwitchKnob::new("compress-downlink", "CDADAM_COMPRESS_DOWNLINK");
+const KNOB_PIPELINE_DEPTH: UsizeKnob =
+    UsizeKnob::new("pipeline-depth", "CDADAM_PIPELINE_DEPTH", 1);
+
 /// What model/data the run trains.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Task {
@@ -142,6 +209,22 @@ pub struct ExperimentConfig {
     /// locality hint only (bit-identical either way). CLI
     /// `--pin-shards`; env `CDADAM_PIN_SHARDS`.
     pub pin_shards: bool,
+    /// Compress the server→worker broadcast through a downlink
+    /// [`crate::algo::downlink::DownlinkChannel`]: effectively-dense
+    /// updates (the uncompressed baselines, 1-bit Adam's warm-up) are
+    /// EF-compressed against a server-resident error accumulator e_s
+    /// (Efficient-Adam / COMP-AMS style) with the run's compressor
+    /// family; already-compressed downlinks (Markov difference streams,
+    /// EF'd broadcasts) pass through verbatim. Under the threaded
+    /// coordinator the broadcast then travels as wire bytes
+    /// ([`crate::comm::DownlinkPayload::Frame`]) and workers apply it
+    /// through borrowed views. **This is a math knob** — unlike every
+    /// other knob in this table it changes the trajectory (for the
+    /// strategies whose downlink was dense) — but off (the default) is
+    /// the historical dense broadcast byte-for-byte, and on, lockstep
+    /// and threaded remain bit-identical to each other. CLI
+    /// `--compress-downlink`; env `CDADAM_COMPRESS_DOWNLINK`.
+    pub compress_downlink: bool,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -177,10 +260,11 @@ impl Default for ExperimentConfig {
             compress_min_parallel_dim: 0,
             server_threads: 0,
             server_min_parallel_dim: 0,
-            zero_copy_ingest: env_flag("CDADAM_ZERO_COPY_INGEST"),
-            zero_copy_egress: env_flag("CDADAM_ZERO_COPY_EGRESS"),
-            pipeline_depth: env_usize("CDADAM_PIPELINE_DEPTH", 1),
-            pin_shards: env_flag("CDADAM_PIN_SHARDS"),
+            zero_copy_ingest: KNOB_ZERO_COPY_INGEST.default(),
+            zero_copy_egress: KNOB_ZERO_COPY_EGRESS.default(),
+            pipeline_depth: KNOB_PIPELINE_DEPTH.default(),
+            pin_shards: KNOB_PIN_SHARDS.default(),
+            compress_downlink: KNOB_COMPRESS_DOWNLINK.default(),
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -195,7 +279,7 @@ impl Default for ExperimentConfig {
             nu: 1e-8,
             seed: 0,
             eval_every: 10,
-            threaded: false,
+            threaded: KNOB_THREADED.default(),
         }
     }
 }
@@ -304,24 +388,15 @@ impl ExperimentConfig {
         self.shard_size = args.usize("shard-size", self.shard_size)?;
         self.compress_threads = args.usize("compress-threads", self.compress_threads)?;
         self.server_threads = args.usize("server-threads", self.server_threads)?;
-        // bare `--zero-copy-ingest` turns the view path on; an explicit
-        // `--zero-copy-ingest false` (or =0/no/off) turns it off, so the
-        // CLI can override an env-forced default in either direction
-        if let Some(v) = args.get("zero-copy-ingest") {
-            self.zero_copy_ingest = truthy(v);
-        }
-        // same contract as --zero-copy-ingest: bare flag enables, an
-        // explicit falsy value is the way back from an env-forced default
-        if let Some(v) = args.get("zero-copy-egress") {
-            self.zero_copy_egress = truthy(v);
-        }
-        self.pipeline_depth = args.usize("pipeline-depth", self.pipeline_depth)?;
-        // same truthy/falsy contract as --zero-copy-ingest: a bare
-        // `--pin-shards` enables, an explicit falsy value is the way
-        // back from an env-forced default
-        if let Some(v) = args.get("pin-shards") {
-            self.pin_shards = truthy(v);
-        }
+        // switch knobs share one CLI contract (see SwitchKnob::apply):
+        // bare `--flag` enables, an explicit falsy value (`false`/0/no/
+        // off) is the way back from an env-forced default, absent flag
+        // leaves the (env-derived) default untouched
+        KNOB_ZERO_COPY_INGEST.apply(args, &mut self.zero_copy_ingest);
+        KNOB_ZERO_COPY_EGRESS.apply(args, &mut self.zero_copy_egress);
+        KNOB_PIPELINE_DEPTH.apply(args, &mut self.pipeline_depth)?;
+        KNOB_PIN_SHARDS.apply(args, &mut self.pin_shards);
+        KNOB_COMPRESS_DOWNLINK.apply(args, &mut self.compress_downlink);
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
         if let Some(t) = args.get("tau") {
@@ -333,9 +408,7 @@ impl ExperimentConfig {
         self.weight_decay = args.f64("weight-decay", self.weight_decay)?;
         self.seed = args.u64("seed", self.seed)?;
         self.eval_every = args.usize("eval-every", self.eval_every)?;
-        if args.flag("threaded") {
-            self.threaded = true;
-        }
+        KNOB_THREADED.apply(args, &mut self.threaded);
         if args.flag("full") {
             if let Task::Images { full, .. } = &mut self.task {
                 *full = true;
@@ -426,6 +499,33 @@ impl ExperimentConfig {
             ),
             other => bail!("unknown strategy {other:?}"),
         })
+    }
+
+    /// Instantiate the downlink channel: the identity (dense
+    /// passthrough) when `compress_downlink` is off, else an
+    /// EF-compressing channel over the same compressor family (and
+    /// sharded wrap) as the uplink — on its own stream
+    /// (`seed ^ 0xD0`), so a stateful compressor's downlink draws never
+    /// mirror any worker's uplink stream.
+    pub fn build_downlink(&self) -> Result<crate::algo::downlink::DownlinkChannel> {
+        use crate::algo::downlink::DownlinkChannel;
+        if !self.compress_downlink {
+            return Ok(DownlinkChannel::dense());
+        }
+        let mut comp =
+            compress::by_name(&self.compressor, self.k_frac, self.block_size, self.seed ^ 0xD0)?;
+        if self.shard_size > 0 {
+            let mut sharded = compress::ShardedCompressor::new(
+                comp,
+                self.shard_size,
+                self.compress_threads.max(1),
+            );
+            if self.compress_min_parallel_dim > 0 {
+                sharded = sharded.with_min_parallel_dim(self.compress_min_parallel_dim);
+            }
+            comp = Box::new(sharded);
+        }
+        Ok(DownlinkChannel::compressed(comp))
     }
 
     /// Label used in CSV output: strategy[+compressor].
@@ -620,6 +720,50 @@ mod tests {
         assert_eq!(cfg.pipeline_depth, 2);
         assert!(cfg.pin_shards);
         assert!(cfg.zero_copy_egress, "large-d preset should exercise the egress writer");
+    }
+
+    #[test]
+    fn compress_downlink_flag_parses_and_builds_the_channel() {
+        // same truthy/falsy CLI contract as every switch knob
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--compress-downlink"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.compress_downlink);
+        assert!(cfg.build_downlink().unwrap().enabled());
+        for off in ["false", "0", "no", "off"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.compress_downlink = true;
+            let args =
+                Args::parse(["--compress-downlink", off].iter().map(|s| s.to_string()));
+            cfg.apply_args(&args).unwrap();
+            assert!(!cfg.compress_downlink, "--compress-downlink {off} should disable");
+        }
+        // absent flag leaves the (env-derived) default untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let before = cfg2.compress_downlink;
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.compress_downlink, before);
+        // off ⇒ the identity channel (historical dense broadcast)
+        cfg2.compress_downlink = false;
+        assert!(!cfg2.build_downlink().unwrap().enabled());
+    }
+
+    #[test]
+    fn downlink_channel_inherits_the_shard_wrap() {
+        use crate::compress::CompressedMsg;
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compress_downlink = true;
+        cfg.shard_size = 32;
+        cfg.compress_threads = 2;
+        let mut ch = cfg.build_downlink().unwrap();
+        let out = ch.process(CompressedMsg::Dense(vec![1.0; 100]));
+        match &out {
+            CompressedMsg::Sharded { d, shards } => {
+                assert_eq!(*d, 100);
+                assert_eq!(shards.len(), 4); // 32+32+32+4
+            }
+            other => panic!("expected sharded downlink, got {other:?}"),
+        }
     }
 
     #[test]

@@ -36,7 +36,11 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
     let mut grad = vec![0.0f32; dim];
     let mut grad_avg = vec![0.0f32; dim];
     let mut log = RunLog::new(cfg.label());
-    let mut cum_bits: u64 = 0;
+    let mut cum_up_bits: u64 = 0;
+    let mut cum_down_bits: u64 = 0;
+    // server→worker channel: identity when `compress_downlink` is off
+    // (historical dense broadcast, byte for byte), EF-compressing when on.
+    let mut downlink = cfg.build_downlink()?;
     let timer = Timer::start();
     // zero-copy egress: one reusable writer serves every worker in turn
     // (frames of a round coexist until the fold consumes them, so the
@@ -73,10 +77,15 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
         // the server-side round math is the pipeline engine's fold
         // stage — one implementation shared with the threaded driver.
         let down = pipeline::fold_round(server.as_mut(), t, &frames)?;
+        // the downlink channel sits between fold and broadcast: dense
+        // updates are EF-compressed here, already-compressed ones pass
+        // through untouched (identity when the knob is off).
+        let down = downlink.process(down);
         let down_bits = down.wire_bits();
         // replica identity: apply through worker 0 only (see module docs)
         workers[0].apply_downlink(t, &down, &mut params, lr);
-        cum_bits += up_bits_w0 + down_bits;
+        cum_up_bits += up_bits_w0;
+        cum_down_bits += down_bits;
 
         if t % cfg.eval_every == 0 || t == cfg.rounds {
             let grad_norm = s
@@ -91,7 +100,9 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
                 grad_norm,
                 test_loss: ev.loss,
                 test_acc: ev.accuracy,
-                cum_bits,
+                cum_bits: cum_up_bits + cum_down_bits,
+                up_bits: cum_up_bits,
+                down_bits: cum_down_bits,
                 wall_ms: timer.elapsed_ms(),
             });
         }
@@ -120,16 +131,23 @@ mod tests {
         // 64-bit frame headers metered by the comm layer (lockstep counts
         // payload only — Table 2 convention).
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compress_downlink = false; // closed form assumes dense downlink path
         cfg.rounds = 50;
         cfg.eval_every = 50;
         let log = run_lockstep(&cfg).unwrap();
         let d = 50u64; // tiny logreg dim
         assert_eq!(log.total_bits(), (32 + d) * 2 * 50);
+        // the split columns must reassemble the historical total
+        let last = log.last().unwrap();
+        assert_eq!(last.up_bits, (32 + d) * 50);
+        assert_eq!(last.down_bits, (32 + d) * 50);
+        assert_eq!(last.cum_bits, last.up_bits + last.down_bits);
     }
 
     #[test]
     fn bits_match_closed_form_uncompressed() {
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compress_downlink = false; // closed form assumes dense downlink path
         cfg.strategy = "uncompressed_amsgrad".into();
         cfg.rounds = 10;
         cfg.eval_every = 10;
@@ -141,6 +159,7 @@ mod tests {
     fn bits_match_closed_form_onebit_adam() {
         // 32d·2T₁ + (32+d)·2(T−T₁)
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compress_downlink = false; // closed form assumes dense downlink path
         cfg.strategy = "onebit_adam".into();
         cfg.warmup_rounds = 5;
         cfg.rounds = 20;
@@ -148,6 +167,73 @@ mod tests {
         let log = run_lockstep(&cfg).unwrap();
         let d = 50u64;
         assert_eq!(log.total_bits(), 32 * d * 2 * 5 + (32 + d) * 2 * 15);
+    }
+
+    #[test]
+    fn bits_match_closed_form_compressed_downlink() {
+        // knob on + sign downlink over a dense-broadcast strategy:
+        // uplink stays 32d, downlink drops from 32d to 32+d per round.
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compress_downlink = true;
+        cfg.strategy = "uncompressed_amsgrad".into();
+        cfg.compressor = "sign".into();
+        cfg.shard_size = 0; // unsharded downlink ⇒ exact sign closed form
+        cfg.rounds = 10;
+        cfg.eval_every = 10;
+        let log = run_lockstep(&cfg).unwrap();
+        let d = 50u64;
+        let last = log.last().unwrap();
+        assert_eq!(last.up_bits, 32 * d * 10);
+        assert_eq!(last.down_bits, (32 + d) * 10);
+        assert_eq!(last.cum_bits, last.up_bits + last.down_bits);
+    }
+
+    #[test]
+    fn markov_downlinks_unaffected_by_the_knob() {
+        // cdadam's downlink is an already-compressed Markov diff: the
+        // channel must pass it through, so the whole trajectory (bits
+        // included) is bit-identical with the knob on or off.
+        let mut on = ExperimentConfig::preset("quickstart").unwrap();
+        on.compress_downlink = true;
+        let mut off = on.clone();
+        off.compress_downlink = false;
+        let (a, b) = (run_lockstep(&on).unwrap(), run_lockstep(&off).unwrap());
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.grad_norm, y.grad_norm);
+            assert_eq!(x.cum_bits, y.cum_bits);
+            assert_eq!(x.down_bits, y.down_bits);
+        }
+    }
+
+    #[test]
+    fn compressed_downlink_strategies_converge() {
+        // the strategies whose broadcast is actually dense (and therefore
+        // EF-compressed by the channel) must still make progress — the
+        // error-feedback accumulator is what guarantees this.
+        for strat in ["uncompressed_amsgrad", "uncompressed_sgd", "onebit_adam"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.compress_downlink = true;
+            cfg.strategy = strat.into();
+            cfg.rounds = 150;
+            if strat == "uncompressed_sgd" {
+                cfg.lr = 0.05; // SGD scale
+            }
+            if strat == "onebit_adam" {
+                cfg.warmup_rounds = 20;
+                cfg.lr = 0.001;
+            }
+            let log = run_lockstep(&cfg).unwrap();
+            let first = &log.records[0];
+            let last = log.last().unwrap();
+            let best = log.records.iter().map(|r| r.grad_norm).fold(f64::INFINITY, f64::min);
+            assert!(last.grad_norm.is_finite(), "{strat} diverged under compressed downlink");
+            assert!(
+                best < first.grad_norm,
+                "{strat}: no progress under compressed downlink, {} -> best {best}",
+                first.grad_norm
+            );
+        }
     }
 
     #[test]

@@ -72,8 +72,11 @@ use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
 use crate::agg::UplinkRef;
+use crate::algo::downlink::DownlinkChannel;
 use crate::algo::ServerAlgo;
-use crate::comm::{wire, Broadcast, MeteredReceiver, MeteredSender, ServerLink, UplinkFrame};
+use crate::comm::{
+    wire, Broadcast, DownlinkPayload, MeteredReceiver, MeteredSender, ServerLink, UplinkFrame,
+};
 use crate::compress::CompressedMsg;
 
 /// Everything that can go wrong in the server-side round loop, as a
@@ -95,6 +98,9 @@ pub enum PipelineError {
     /// A worker's downlink closed while broadcasting (the worker died
     /// between its send and its recv).
     DownlinkClosed { worker: usize, round: usize },
+    /// Encoding the server's own downlink frame failed — a codec bug in
+    /// the compressed-downlink egress path.
+    DownlinkEncode { round: usize, detail: String },
     /// A pipeline stage thread died without reporting a cause.
     StageDied { stage: &'static str },
 }
@@ -125,6 +131,9 @@ impl std::fmt::Display for PipelineError {
             PipelineError::DownlinkClosed { worker, round } => {
                 write!(f, "downlink to worker {worker} closed while broadcasting round {round}")
             }
+            PipelineError::DownlinkEncode { round, detail } => {
+                write!(f, "failed to encode the round-{round} downlink frame: {detail}")
+            }
             PipelineError::StageDied { stage } => write!(f, "pipeline {stage} stage died"),
         }
     }
@@ -143,6 +152,7 @@ impl PipelineError {
             PipelineError::CorruptFrame { .. }
                 | PipelineError::MixedFrameModes { .. }
                 | PipelineError::RoundMismatch { .. }
+                | PipelineError::DownlinkEncode { .. }
         )
     }
 }
@@ -160,20 +170,33 @@ enum FrameMode {
 pub struct PipelineServer {
     rounds: usize,
     depth: usize,
+    /// server→worker channel: the identity for the historical dense
+    /// broadcast, or EF-compressing when `compress_downlink` is on.
+    downlink: DownlinkChannel,
 }
 
 impl PipelineServer {
     /// A server loop for `rounds` rounds at the given pipeline depth
     /// (clamped to ≥ 1; `1` = the historical lockstep-per-round loop).
     pub fn new(rounds: usize, depth: usize) -> Self {
-        PipelineServer { rounds, depth: depth.max(1) }
+        PipelineServer { rounds, depth: depth.max(1), downlink: DownlinkChannel::dense() }
+    }
+
+    /// Install the downlink channel. When it compresses, broadcasts
+    /// switch from the historical `Arc<CompressedMsg>` payload to
+    /// serialized [`DownlinkPayload::Frame`] bytes (encoded through the
+    /// server's own [`wire::FrameWriter`]); a dense channel keeps the
+    /// historical shared-message transport byte for byte.
+    pub fn with_downlink(mut self, channel: DownlinkChannel) -> Self {
+        self.downlink = channel;
+        self
     }
 
     /// Run the full server side of a training run over the given links.
     /// Returns when all rounds are broadcast, or with the first named
     /// error once the loop cannot continue.
     pub fn run(
-        &self,
+        &mut self,
         server: &mut dyn ServerAlgo,
         links: Vec<ServerLink>,
     ) -> Result<(), PipelineError> {
@@ -185,15 +208,48 @@ impl PipelineServer {
         self.run_streaming(server, ups, downs)
     }
 
+    /// Produce the round's broadcast payload: through the downlink
+    /// channel into a server frame when compressing, or as the
+    /// historical `Arc`-shared message when dense.
+    fn make_downlink(
+        downlink: &mut DownlinkChannel,
+        fw: Option<&mut wire::FrameWriter>,
+        round: usize,
+        update: CompressedMsg,
+    ) -> Result<DownlinkPayload, PipelineError> {
+        match fw {
+            Some(fw) => {
+                let fb = downlink
+                    .process_into(round as u64, &update, fw)
+                    .map_err(|e| PipelineError::DownlinkEncode {
+                        round,
+                        detail: e.to_string(),
+                    })?;
+                Ok(DownlinkPayload::Frame(Arc::new(fb)))
+            }
+            None => Ok(DownlinkPayload::Shared(Arc::new(downlink.process(update)))),
+        }
+    }
+
+    /// One reusable frame writer for the compressed-downlink egress
+    /// path (None keeps the historical shared-message transport). The
+    /// round structure bounds in-flight downlink frames to ~2, the ring
+    /// holds a couple extra so a slow worker never forces a fresh
+    /// allocation.
+    fn downlink_writer(&self) -> Option<wire::FrameWriter> {
+        self.downlink.enabled().then(|| wire::FrameWriter::new(4))
+    }
+
     /// depth = 1: the historical loop, verbatim — receive the whole
     /// round, then parse+fold it, then broadcast, on one thread.
     fn run_serial(
-        &self,
+        &mut self,
         server: &mut dyn ServerAlgo,
         ups: &[MeteredReceiver<UplinkFrame>],
         downs: &[MeteredSender<Broadcast>],
     ) -> Result<(), PipelineError> {
         let n = ups.len();
+        let mut fw = self.downlink_writer();
         for t in 1..=self.rounds {
             let mut frames = Vec::with_capacity(n);
             for (i, up) in ups.iter().enumerate() {
@@ -202,7 +258,8 @@ impl PipelineServer {
                     .map_err(|_| PipelineError::WorkerDisconnected { worker: i, round: t })?;
                 frames.push(frame);
             }
-            let down = Arc::new(fold_round(server, t, &frames)?);
+            let update = fold_round(server, t, &frames)?;
+            let down = Self::make_downlink(&mut self.downlink, fw.as_mut(), t, update)?;
             broadcast_round(downs, t, &down)?;
         }
         Ok(())
@@ -213,7 +270,7 @@ impl PipelineServer {
     /// (recv of uplink i+1 — and of round t+1 — overlaps the
     /// parse+fold of what is already here).
     fn run_streaming(
-        &self,
+        &mut self,
         server: &mut dyn ServerAlgo,
         ups: Vec<MeteredReceiver<UplinkFrame>>,
         downs: Vec<MeteredSender<Broadcast>>,
@@ -246,6 +303,8 @@ impl PipelineServer {
             .map_err(|_| PipelineError::StageDied { stage: "recv" })?;
 
         // fold + broadcast stages, on the server thread.
+        let mut fw = self.downlink_writer();
+        let downlink = &mut self.downlink;
         let result: Result<(), PipelineError> = (|| {
             for t in 1..=rounds {
                 let mut mode = None;
@@ -255,7 +314,8 @@ impl PipelineServer {
                         .map_err(|_| PipelineError::StageDied { stage: "recv" })??;
                     ingest_frame(server, t, i, n, &frame, &mut mode)?;
                 }
-                let down = Arc::new(server.finish_round(t));
+                let update = server.finish_round(t);
+                let down = Self::make_downlink(downlink, fw.as_mut(), t, update)?;
                 broadcast_round(&downs, t, &down)?;
             }
             Ok(())
@@ -336,15 +396,15 @@ fn ingest_frame(
 }
 
 /// The broadcast stage: one `Arc`'d payload fanned out to every link —
-/// n refcount bumps instead of n deep clones of the downlink message
-/// (each link still meters the full serialized size).
+/// n refcount bumps instead of n deep clones of the downlink message or
+/// frame bytes (each link still meters the full serialized size).
 fn broadcast_round(
     downs: &[MeteredSender<Broadcast>],
     round: usize,
-    payload: &Arc<CompressedMsg>,
+    payload: &DownlinkPayload,
 ) -> Result<(), PipelineError> {
     for (i, link) in downs.iter().enumerate() {
-        link.send(Broadcast { round: round as u64, payload: Arc::clone(payload) })
+        link.send(Broadcast { round: round as u64, payload: payload.clone() })
             .map_err(|_| PipelineError::DownlinkClosed { worker: i, round })?;
     }
     Ok(())
@@ -419,7 +479,14 @@ mod tests {
                         let down = link.down.recv().unwrap();
                         assert_eq!(down.round, t as u64);
                         let mut buf = vec![0.0f32; d];
-                        down.payload.decode_into(&mut buf);
+                        match &down.payload {
+                            DownlinkPayload::Shared(m) => m.decode_into(&mut buf),
+                            DownlinkPayload::Frame(fb) => {
+                                let fv = wire::FrameView::parse(&fb.bytes).unwrap();
+                                assert_eq!(fv.round, t as u64);
+                                fv.payload.decode_into(&mut buf);
+                            }
+                        }
                         last = buf;
                     }
                     last
@@ -455,6 +522,84 @@ mod tests {
                 assert!(
                     finals[0].iter().zip(f.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
                     "pipeline depth changed the math (bytes_mode={bytes_mode})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_downlink_frames_match_owned_channel_at_any_depth() {
+        // with a compressing channel the broadcast must arrive as Frame
+        // bytes, identical across workers and depths, and decode to
+        // exactly what the owned lockstep-style channel produces from
+        // the same fold outputs (EF state and all).
+        let (d, n, rounds) = (32usize, 2usize, 4usize);
+        fn worker_grad(d: usize, i: usize, t: usize) -> Vec<f32> {
+            (0..d).map(|j| ((i + 1) * (j + 1)) as f32 * 0.01 * t as f32 - 0.2).collect()
+        }
+        for depth in [1usize, 2] {
+            let (workers, servers, _um, _dm) = topology(n);
+            let handles: Vec<_> = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, link)| {
+                    std::thread::spawn(move || {
+                        let mut outs = Vec::new();
+                        for t in 1..=rounds {
+                            let g = worker_grad(d, i, t);
+                            link.up
+                                .send(UplinkFrame::Msg(WireMsg {
+                                    round: t as u64,
+                                    from: i as u32,
+                                    payload: CompressedMsg::Dense(g),
+                                }))
+                                .unwrap();
+                            let down = link.down.recv().unwrap();
+                            let mut buf = vec![0.0f32; d];
+                            match &down.payload {
+                                DownlinkPayload::Frame(fb) => {
+                                    let fv = wire::FrameView::parse(&fb.bytes).unwrap();
+                                    assert_eq!(fv.round, t as u64);
+                                    assert_eq!(fv.from, crate::algo::downlink::SERVER_FROM);
+                                    fv.payload.decode_into(&mut buf);
+                                }
+                                DownlinkPayload::Shared(_) => {
+                                    panic!("compressing channel must broadcast frames")
+                                }
+                            }
+                            outs.push(buf);
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            let mut server = Recorder::new(d);
+            PipelineServer::new(rounds, depth)
+                .with_downlink(DownlinkChannel::compressed(Box::new(ScaledSign::new())))
+                .run(&mut server, servers)
+                .unwrap();
+            let outs: Vec<Vec<Vec<f32>>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(outs[0], outs[1], "depth {depth}: workers decoded different downlinks");
+            // owned replay of the same run: identical fold + owned process
+            let mut replay = Recorder::new(d);
+            let mut ch = DownlinkChannel::compressed(Box::new(ScaledSign::new()));
+            for t in 1..=rounds {
+                let frames: Vec<UplinkFrame> = (0..n)
+                    .map(|i| {
+                        UplinkFrame::Msg(WireMsg {
+                            round: t as u64,
+                            from: i as u32,
+                            payload: CompressedMsg::Dense(worker_grad(d, i, t)),
+                        })
+                    })
+                    .collect();
+                let down = ch.process(fold_round(&mut replay, t, &frames).unwrap());
+                let mut want = vec![0.0f32; d];
+                down.decode_into(&mut want);
+                assert_eq!(
+                    outs[0][t - 1], want,
+                    "depth {depth}, round {t}: frame path diverged from owned channel"
                 );
             }
         }

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::pipeline::PipelineServer;
 use super::{params_hash, setup};
-use crate::comm::{topology, wire};
+use crate::comm::{topology, wire, DownlinkPayload};
 use crate::config::ExperimentConfig;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::optim::LrSchedule;
@@ -28,11 +28,13 @@ struct EvalReport {
     loss: f32,
     grad_norm_contrib: Vec<f32>,
     params: Option<Vec<f32>>,
-    /// cumulative payload bits on this worker's link (up + down) as of
-    /// this round — counted in the worker loop so the number is exact
-    /// even while other workers race ahead (the shared meters are only
-    /// used for end-of-run totals).
-    cum_bits: u64,
+    /// cumulative uplink payload bits on this worker's link as of this
+    /// round — counted in the worker loop so the number is exact even
+    /// while other workers race ahead (the shared meters are only used
+    /// for end-of-run totals).
+    up_bits: u64,
+    /// cumulative downlink payload bits, same convention.
+    down_bits: u64,
 }
 
 /// Run one experiment through the threaded coordinator.
@@ -66,9 +68,14 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let zero_copy = cfg.zero_copy_ingest;
     let zero_copy_egress = cfg.zero_copy_egress;
     let depth = cfg.pipeline_depth.max(1);
-    let server_join = std::thread::Builder::new()
-        .name("server".into())
-        .spawn(move || PipelineServer::new(rounds, depth).run(server.as_mut(), server_links))?;
+    // the downlink channel (identity unless `compress_downlink`) lives
+    // on the server thread, beside the strategy server it post-processes.
+    let downlink = cfg.build_downlink()?;
+    let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
+        PipelineServer::new(rounds, depth)
+            .with_downlink(downlink)
+            .run(server.as_mut(), server_links)
+    })?;
 
     // --- worker threads --------------------------------------------------
     let mut joins = Vec::with_capacity(n);
@@ -83,7 +90,8 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
         joins.push(std::thread::Builder::new().name(format!("worker-{i}")).spawn(
             move || -> Result<()> {
                 let mut grad = vec![0.0f32; dim];
-                let mut cum_bits = 0u64;
+                let mut cum_up_bits = 0u64;
+                let mut cum_down_bits = 0u64;
                 // zero-copy egress: a reusable frame writer whose ring
                 // holds every frame that can be in flight at once — the
                 // recv stage parks up to depth − 1 rounds ahead of the
@@ -106,12 +114,30 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                         i as u32,
                         &grad,
                     )?;
-                    cum_bits += up_bits;
+                    cum_up_bits += up_bits;
                     link.up.send(frame)?;
                     let down = link.down.recv()?;
                     debug_assert_eq!(down.round, t as u64);
-                    cum_bits += down.payload.wire_bits();
-                    worker.apply_downlink(t, down.payload.as_ref(), &mut params, sched.at(t - 1));
+                    cum_down_bits += down.payload.wire_bits();
+                    let lr = sched.at(t - 1);
+                    match &down.payload {
+                        // historical dense broadcast: the shared message
+                        DownlinkPayload::Shared(m) => {
+                            worker.apply_downlink(t, m.as_ref(), &mut params, lr);
+                        }
+                        // compressed downlink: parse the server's frame
+                        // once and apply a borrowed view — no
+                        // CompressedMsg materialization on the recv path.
+                        // Frames are self-produced, so a parse failure is
+                        // a codec bug and fails the worker loudly.
+                        DownlinkPayload::Frame(fb) => {
+                            let fv = wire::FrameView::parse(&fb.bytes).map_err(|e| {
+                                anyhow!("corrupt downlink frame at round {t}: {e}")
+                            })?;
+                            debug_assert_eq!(fv.round, t as u64);
+                            worker.apply_downlink_view(t, &fv.payload, &mut params, lr);
+                        }
+                    }
                     if t % eval_every == 0 || t == rounds {
                         tx.send(EvalReport {
                             round: t,
@@ -120,7 +146,8 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                             loss,
                             grad_norm_contrib: grad.clone(),
                             params: if i == 0 { Some(params.clone()) } else { None },
-                            cum_bits,
+                            up_bits: cum_up_bits,
+                            down_bits: cum_down_bits,
                         })
                         .map_err(|_| anyhow!("driver gone"))?;
                     }
@@ -168,8 +195,11 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
             // bits: per-worker link (paper convention), snapshotted by
             // worker 0 at this round — payload bits only, so lockstep and
             // threaded report identical numbers.
-            let cum_bits =
-                reports.iter().find(|r| r.worker == 0).map(|r| r.cum_bits).unwrap_or(0);
+            let (up_bits, down_bits) = reports
+                .iter()
+                .find(|r| r.worker == 0)
+                .map(|r| (r.up_bits, r.down_bits))
+                .unwrap_or((0, 0));
             log.push(RoundRecord {
                 round,
                 epoch: round as f64 * (n * s.tau_effective) as f64 / s.total_samples as f64,
@@ -177,7 +207,9 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                 grad_norm,
                 test_loss: ev.loss,
                 test_acc: ev.accuracy,
-                cum_bits,
+                cum_bits: up_bits + down_bits,
+                up_bits,
+                down_bits,
                 wall_ms: timer.elapsed_ms(),
             });
         }
@@ -447,6 +479,36 @@ mod tests {
                 }
             }
             cfg.pin_shards = false;
+        }
+    }
+
+    #[test]
+    fn compressed_downlink_matches_lockstep_at_any_depth() {
+        // with the knob on, lockstep runs the owned channel and threaded
+        // runs the frame-egress twin — the trajectories, bit splits, and
+        // replica hashes (enforced inside the driver) must be identical
+        // at every pipeline depth. uncompressed_amsgrad is the strategy
+        // whose broadcast actually gets EF-compressed here.
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.strategy = "uncompressed_amsgrad".into();
+        cfg.compress_downlink = true;
+        cfg.rounds = 60;
+        cfg.eval_every = 20;
+        let a = run_lockstep(&cfg).unwrap();
+        assert!(
+            a.last().unwrap().down_bits < a.last().unwrap().up_bits,
+            "sanity: the downlink should be the compressed direction here"
+        );
+        for depth in [1usize, 2] {
+            cfg.pipeline_depth = depth;
+            let b = run_threaded(&cfg).unwrap();
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.round, y.round);
+                assert_eq!(x.grad_norm, y.grad_norm, "depth {depth} round {}", x.round);
+                assert_eq!(x.up_bits, y.up_bits, "depth {depth} round {}", x.round);
+                assert_eq!(x.down_bits, y.down_bits, "depth {depth} round {}", x.round);
+            }
         }
     }
 

@@ -57,6 +57,11 @@ fn usage() -> ! {
                                  buffering; bit-identical at any depth)\n\
            --pin-shards          pin each server-fold shard range to a stable\n\
                                  work-pool lane (cache locality; bit-identical)\n\
+           --compress-downlink   EF-compress the server broadcast (compress\n\
+                                 update + e_s, fold the residual back) and ship\n\
+                                 it as a wire frame; changes the trajectory for\n\
+                                 dense-broadcast strategies (off = dense\n\
+                                 broadcast, byte-for-byte the historical path)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\
@@ -106,11 +111,12 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn print_log(log: &RunLog) {
-    println!("round\tepoch\ttrain_loss\tgrad_norm\ttest_acc\tcum_bits");
+    println!("round\tepoch\ttrain_loss\tgrad_norm\ttest_acc\tcum_bits\tup_bits\tdown_bits");
     for r in &log.records {
         println!(
-            "{}\t{:.2}\t{:.5}\t{:.5}\t{:.4}\t{}",
-            r.round, r.epoch, r.train_loss, r.grad_norm, r.test_acc, r.cum_bits
+            "{}\t{:.2}\t{:.5}\t{:.5}\t{:.4}\t{}\t{}\t{}",
+            r.round, r.epoch, r.train_loss, r.grad_norm, r.test_acc, r.cum_bits, r.up_bits,
+            r.down_bits
         );
     }
 }

@@ -21,7 +21,13 @@ pub struct RoundRecord {
     pub test_loss: f64,
     pub test_acc: f64,
     /// cumulative uplink + downlink bits across all links
+    /// (= `up_bits + down_bits`; kept so CSV consumers and golden
+    /// digests keyed on the historical column stay stable)
     pub cum_bits: u64,
+    /// cumulative uplink (worker→server) component of `cum_bits`
+    pub up_bits: u64,
+    /// cumulative downlink (server→worker) component of `cum_bits`
+    pub down_bits: u64,
     pub wall_ms: f64,
 }
 
@@ -52,14 +58,14 @@ impl RunLog {
 
     /// CSV header shared by all experiment outputs.
     pub const CSV_HEADER: &'static str =
-        "label,round,epoch,train_loss,grad_norm,test_loss,test_acc,cum_bits,wall_ms";
+        "label,round,epoch,train_loss,grad_norm,test_loss,test_acc,cum_bits,up_bits,down_bits,wall_ms";
 
     pub fn to_csv_rows(&self) -> String {
         let mut out = String::new();
         for r in &self.records {
             let _ = writeln!(
                 out,
-                "{},{},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{},{:.2}",
+                "{},{},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{},{},{},{:.2}",
                 self.label,
                 r.round,
                 r.epoch,
@@ -68,6 +74,8 @@ impl RunLog {
                 r.test_loss,
                 r.test_acc,
                 r.cum_bits,
+                r.up_bits,
+                r.down_bits,
                 r.wall_ms
             );
         }
@@ -130,9 +138,17 @@ mod tests {
             test_loss: 1.1,
             test_acc: 0.3,
             cum_bits: 100,
+            up_bits: 60,
+            down_bits: 40,
             wall_ms: 5.0,
         });
-        run.push(RoundRecord { round: 2, cum_bits: 200, ..run.records[0].clone() });
+        run.push(RoundRecord {
+            round: 2,
+            cum_bits: 200,
+            up_bits: 120,
+            down_bits: 80,
+            ..run.records[0].clone()
+        });
         run
     }
 
@@ -143,6 +159,18 @@ mod tests {
         assert_eq!(rows.lines().count(), 2);
         assert!(rows.starts_with("cdadam,1,0.5"));
         assert_eq!(run.total_bits(), 200);
+        // the split columns ride between cum_bits and wall_ms, and the
+        // invariant cum = up + down holds for every record
+        let first = rows.lines().next().unwrap();
+        assert!(first.contains(",100,60,40,"), "row missing bit split: {first}");
+        for r in &run.records {
+            assert_eq!(r.cum_bits, r.up_bits + r.down_bits);
+        }
+        assert_eq!(
+            RunLog::CSV_HEADER.split(',').count(),
+            first.split(',').count(),
+            "header/row column mismatch"
+        );
     }
 
     #[test]

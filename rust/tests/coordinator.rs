@@ -100,8 +100,10 @@ fn comm_ratio_32x_headline() {
     // a magic constant.
     let mut a = quick("quickstart");
     a.strategy = "cdadam".into();
+    a.compress_downlink = false; // the formula assumes the dense downlink path
     let mut b = quick("quickstart");
     b.strategy = "uncompressed_amsgrad".into();
+    b.compress_downlink = false;
     let la = run_lockstep(&a).unwrap();
     let lb = run_lockstep(&b).unwrap();
     let d = 50u64;
@@ -121,6 +123,10 @@ fn fig2_shape_holds_on_tiny_logreg() {
     let runs = sweep("quickstart", &fig2_variants("scaled_sign"), |c| {
         c.rounds = 1500;
         c.eval_every = 300;
+        // the paper's Fig. 2 baselines broadcast dense — keep this
+        // reproduction pinned to that setting even when the suite runs
+        // with CDADAM_COMPRESS_DOWNLINK forced on.
+        c.compress_downlink = false;
     })
     .unwrap();
     let get = |label: &str| {

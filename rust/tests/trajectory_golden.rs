@@ -3,10 +3,19 @@
 //! seeded end-to-end trajectory (loss / grad-norm / test metrics /
 //! cum_bits stream) across the full scheduling matrix —
 //!
-//!   {lockstep, threaded} × {ingest owned, zero-copy views}
+//!   {dense downlink, compressed downlink}
+//!     × {lockstep, threaded} × {ingest owned, zero-copy views}
 //!     × {egress owned, zero-copy writer}
 //!     × {server_threads 0, 4} × {pipeline_depth 1, 2}
 //!     × {pin_shards off, on}
+//!
+//! `compress_downlink` is the one *math* knob in the matrix: it changes
+//! the trajectory for dense-broadcast strategies (their downlink gets
+//! EF-compressed), so each setting pins its own digest — fixture rows
+//! for the compressed-downlink runs are keyed `<strategy>+down@…`. All
+//! the scheduling knobs must still agree bit-for-bit *within* each
+//! downlink setting (the threaded frame egress twin vs the lockstep
+//! owned channel, in particular).
 //!
 //! — and that shared digest is pinned against a committed fixture
 //! (`tests/golden_trajectories.txt`) so a future change that shifts the
@@ -78,6 +87,7 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.server_min_parallel_dim = 0;
     cfg.pipeline_depth = 1;
     cfg.pin_shards = false;
+    cfg.compress_downlink = false;
     cfg
 }
 
@@ -85,10 +95,17 @@ fn fixture_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden_trajectories.txt")
 }
 
-/// Fixture key for one strategy on the current build platform —
-/// digests from other platforms are left untouched and never compared.
-fn fixture_key(strategy: &str) -> String {
-    format!("{strategy}@{}-{}", std::env::consts::OS, std::env::consts::ARCH)
+/// Fixture key for one strategy × downlink setting on the current build
+/// platform — digests from other platforms are left untouched and never
+/// compared. Compressed-downlink rows get a `+down` suffix (a separate
+/// pin: the knob legitimately changes the math for dense broadcasters).
+fn fixture_key(strategy: &str, compress_downlink: bool) -> String {
+    format!(
+        "{strategy}{}@{}-{}",
+        if compress_downlink { "+down" } else { "" },
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    )
 }
 
 fn read_fixture() -> BTreeMap<String, u64> {
@@ -134,59 +151,78 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
     let mut blessed = Vec::new();
 
     for strategy in STRATEGIES {
-        // baseline: lockstep, owned ingest, sequential server fold —
-        // the historical path verbatim.
-        let baseline = digest(&run_lockstep(&base_cfg(strategy)).unwrap());
+        for compress_downlink in [false, true] {
+            // baseline: lockstep, owned ingest, sequential server fold —
+            // the historical path verbatim (with this downlink setting).
+            let mut bcfg = base_cfg(strategy);
+            bcfg.compress_downlink = compress_downlink;
+            let blog = run_lockstep(&bcfg).unwrap();
+            let baseline = digest(&blog);
+            // the knob must never break convergence: every strategy makes
+            // progress with the compressed downlink on (EF guarantee).
+            let (first, last) = (&blog.records[0], blog.last().unwrap());
+            assert!(
+                last.grad_norm.is_finite() && last.grad_norm < first.grad_norm * 100.0,
+                "{strategy} (down={compress_downlink}) diverged: {} -> {}",
+                first.grad_norm,
+                last.grad_norm
+            );
 
-        for threaded in [false, true] {
-            for zero_copy in [false, true] {
-                for zero_copy_egress in [false, true] {
-                    for server_threads in [0usize, 4] {
-                        for pipeline_depth in [1usize, 2] {
-                            for pin_shards in [false, true] {
-                                let mut cfg = base_cfg(strategy);
-                                cfg.zero_copy_ingest = zero_copy;
-                                cfg.zero_copy_egress = zero_copy_egress;
-                                cfg.server_threads = server_threads;
-                                // force the pool path at d = 50, where
-                                // the default cutover would keep the
-                                // fold sequential
-                                cfg.server_min_parallel_dim = usize::from(server_threads > 0);
-                                cfg.pipeline_depth = pipeline_depth;
-                                cfg.pin_shards = pin_shards;
-                                cfg.threaded = threaded;
-                                let log = if threaded {
-                                    run_threaded(&cfg).unwrap()
-                                } else {
-                                    run_lockstep(&cfg).unwrap()
-                                };
-                                assert_eq!(
-                                    digest(&log),
-                                    baseline,
-                                    "{strategy}: trajectory diverged (threaded={threaded}, \
-                                     zero_copy_ingest={zero_copy}, \
-                                     zero_copy_egress={zero_copy_egress}, \
-                                     server_threads={server_threads}, \
-                                     pipeline_depth={pipeline_depth}, pin_shards={pin_shards})"
-                                );
+            for threaded in [false, true] {
+                for zero_copy in [false, true] {
+                    for zero_copy_egress in [false, true] {
+                        for server_threads in [0usize, 4] {
+                            for pipeline_depth in [1usize, 2] {
+                                for pin_shards in [false, true] {
+                                    let mut cfg = base_cfg(strategy);
+                                    cfg.compress_downlink = compress_downlink;
+                                    cfg.zero_copy_ingest = zero_copy;
+                                    cfg.zero_copy_egress = zero_copy_egress;
+                                    cfg.server_threads = server_threads;
+                                    // force the pool path at d = 50, where
+                                    // the default cutover would keep the
+                                    // fold sequential
+                                    cfg.server_min_parallel_dim =
+                                        usize::from(server_threads > 0);
+                                    cfg.pipeline_depth = pipeline_depth;
+                                    cfg.pin_shards = pin_shards;
+                                    cfg.threaded = threaded;
+                                    let log = if threaded {
+                                        run_threaded(&cfg).unwrap()
+                                    } else {
+                                        run_lockstep(&cfg).unwrap()
+                                    };
+                                    assert_eq!(
+                                        digest(&log),
+                                        baseline,
+                                        "{strategy}: trajectory diverged \
+                                         (compress_downlink={compress_downlink}, \
+                                         threaded={threaded}, \
+                                         zero_copy_ingest={zero_copy}, \
+                                         zero_copy_egress={zero_copy_egress}, \
+                                         server_threads={server_threads}, \
+                                         pipeline_depth={pipeline_depth}, \
+                                         pin_shards={pin_shards})"
+                                    );
+                                }
                             }
                         }
                     }
                 }
             }
-        }
 
-        let key = fixture_key(strategy);
-        match committed.get(&key).copied() {
-            Some(want) if !bless_all => assert_eq!(
-                baseline, want,
-                "{key}: trajectory digest {baseline:016x} != committed {want:016x} — \
-                 the seeded end-to-end math changed; if intentional, re-bless with \
-                 CDADAM_BLESS=1 and commit tests/golden_trajectories.txt"
-            ),
-            _ => {
-                committed.insert(key, baseline);
-                blessed.push(strategy);
+            let key = fixture_key(strategy, compress_downlink);
+            match committed.get(&key).copied() {
+                Some(want) if !bless_all => assert_eq!(
+                    baseline, want,
+                    "{key}: trajectory digest {baseline:016x} != committed {want:016x} — \
+                     the seeded end-to-end math changed; if intentional, re-bless with \
+                     CDADAM_BLESS=1 and commit tests/golden_trajectories.txt"
+                ),
+                _ => {
+                    committed.insert(key.clone(), baseline);
+                    blessed.push(key);
+                }
             }
         }
     }
