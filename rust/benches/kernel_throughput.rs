@@ -1,21 +1,86 @@
 //! L3 hot-path micro-benchmarks: the per-round kernels at model
 //! dimension — sign pack/unpack, top-k selection, Markov step, fused
-//! AMSGrad update, EF step. Feeds the §Perf optimization loop
-//! (EXPERIMENTS.md): each row is elements/s and effective GB/s.
+//! AMSGrad update, EF step — plus the **scalar vs SIMD** section: every
+//! kernel routed through the [`cdadam::simd`] runtime dispatch, timed
+//! once with the knob forced off (scalar reference) and once forced on
+//! (detected vector backend), with bit-equality asserted before timing.
+//! Feeds the §Perf optimization loop (EXPERIMENTS.md): each row is
+//! elements/s and effective GB/s, and every row is also appended to the
+//! machine-readable `BENCH_kernels.json` (see `util::bench_json`).
 
 use cdadam::compress::{packing, Compressor, ScaledSign, TopK};
 use cdadam::markov::MarkovEncoder;
 use cdadam::optim::{AmsGrad, Optimizer};
+use cdadam::simd::with_forced;
+use cdadam::tensor;
 use cdadam::util::args::Args;
+use cdadam::util::bench_json::BenchSink;
+use cdadam::util::json::Json;
 use cdadam::util::rng::Rng;
 use cdadam::util::timer::bench;
 
-fn row(name: &str, d: usize, bytes_per_elem: f64, iters: usize, f: impl FnMut()) {
+/// One timed row: human table line + JSON record. `mode` is "env"
+/// (dispatch follows the process knob), "scalar" or "simd" (forced);
+/// `vs` is the scalar baseline ms for forced-simd rows.
+#[allow(clippy::too_many_arguments)]
+fn row(
+    sink: &mut BenchSink,
+    name: &str,
+    mode: &str,
+    d: usize,
+    bytes_per_elem: f64,
+    iters: usize,
+    vs: Option<f64>,
+    f: impl FnMut(),
+) -> f64 {
     let st = bench(3, iters, f);
     let ms = st.mean();
     let meps = d as f64 / ms / 1e3; // million elements / s
     let gbps = d as f64 * bytes_per_elem / (ms * 1e-3) / 1e9;
-    println!("{name:<26} d={d:>9}  {ms:>9.3} ms  {meps:>9.1} Melem/s  {gbps:>7.2} GB/s");
+    let speedup = vs.map(|b| b / ms);
+    let tag = match speedup {
+        Some(s) => format!("  {s:>5.2}x"),
+        None => String::new(),
+    };
+    let label = if mode == "env" { name.to_string() } else { format!("{name} [{mode}]") };
+    println!("{label:<34} d={d:>9}  {ms:>9.3} ms  {meps:>9.1} Melem/s  {gbps:>7.2} GB/s{tag}");
+    let mut fields = vec![
+        ("kernel", Json::Str(name.to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("d", Json::Num(d as f64)),
+        ("ms", Json::Num(ms)),
+        ("melem_per_s", Json::Num(meps)),
+        ("gb_per_s", Json::Num(gbps)),
+    ];
+    if let Some(s) = speedup {
+        fields.push(("speedup_vs_scalar", Json::Num(s)));
+    }
+    sink.row(&fields);
+    ms
+}
+
+/// Scalar-vs-SIMD row pair over one kernel closure: the same body is
+/// timed under both forcings (bit-equality is asserted by the caller
+/// before timing — `f` may mutate persistent state).
+fn svs(
+    sink: &mut BenchSink,
+    name: &str,
+    d: usize,
+    bytes_per_elem: f64,
+    iters: usize,
+    mut f: impl FnMut(),
+) {
+    let base = row(sink, name, "scalar", d, bytes_per_elem, iters, None, || {
+        with_forced(false, &mut f)
+    });
+    row(sink, name, "simd", d, bytes_per_elem, iters, Some(base), || with_forced(true, &mut f));
+}
+
+fn bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert!(
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{what}: scalar and SIMD outputs differ"
+    );
 }
 
 fn main() {
@@ -26,41 +91,46 @@ fn main() {
     let mut x = vec![0.0f32; d];
     rng.fill_normal(&mut x, 1.0);
 
+    let mut sink = BenchSink::new("kernel_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("iters", Json::Num(iters as f64));
+    sink.meta("backend", Json::Str(format!("{:?}", cdadam::simd::cpu_backend())));
+
     println!("### kernel_throughput (d = {d}, {iters} iters, mean)");
 
     let mut bits = packing::pack_signs(&x);
-    row("pack_signs", d, 4.0, iters, || {
+    row(&mut sink, "pack_signs", "env", d, 4.0, iters, None, || {
         bits = packing::pack_signs(&x);
     });
 
     let mut out = vec![0.0f32; d];
-    row("unpack_signs_scaled", d, 4.0, iters, || {
+    row(&mut sink, "unpack_signs_scaled", "env", d, 4.0, iters, None, || {
         packing::unpack_signs_scaled(&bits, 0.5, &mut out);
     });
 
-    row("add_signs_scaled", d, 8.0, iters, || {
+    row(&mut sink, "add_signs_scaled", "env", d, 8.0, iters, None, || {
         packing::add_signs_scaled(&bits, 0.5, &mut out);
     });
 
     let mut ss = ScaledSign::new();
-    row("scaled_sign compress", d, 8.0, iters, || {
+    row(&mut sink, "scaled_sign compress", "env", d, 8.0, iters, None, || {
         std::hint::black_box(ss.compress(&x));
     });
 
     let mut tk = TopK::with_frac(0.016);
-    row("topk compress (k=1.6%)", d, 8.0, iters, || {
+    row(&mut sink, "topk compress (k=1.6%)", "env", d, 8.0, iters, None, || {
         std::hint::black_box(tk.compress(&x));
     });
 
     let mut enc = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
-    row("markov sign step", d, 16.0, iters, || {
+    row(&mut sink, "markov sign step", "env", d, 16.0, iters, None, || {
         std::hint::black_box(enc.step(&x));
     });
 
     let mut opt = AmsGrad::paper_defaults(d);
     let mut params = vec![0.0f32; d];
     // 7 vector streams: m,v,vhat read+write, params read+write, grad read
-    row("fused amsgrad step", d, 28.0, iters, || {
+    row(&mut sink, "fused amsgrad step", "env", d, 28.0, iters, None, || {
         opt.step(&mut params, &x, 1e-3);
     });
 
@@ -71,7 +141,7 @@ fn main() {
     let mut vu = vec![0.0f32; d];
     let mut vhu = vec![0.0f32; d];
     let mut params_u = vec![0.0f32; d];
-    row("amsgrad unfused (4-pass)", d, 28.0, iters, || {
+    row(&mut sink, "amsgrad unfused (4-pass)", "env", d, 28.0, iters, None, || {
         let (b1, b2, nu) = (0.9f32, 0.99f32, 1e-8f32);
         for i in 0..d {
             mu[i] = b1 * mu[i] + (1.0 - b1) * x[i];
@@ -94,12 +164,12 @@ fn main() {
     rng.fill_normal(&mut e, 1.0);
     let mut delta = vec![0.0f32; d];
     let mut dec_buf = vec![0.0f32; d];
-    row("ef residual decode+sub", d, 16.0, iters, || {
+    row(&mut sink, "ef residual decode+sub", "env", d, 16.0, iters, None, || {
         sign_msg.decode_into(&mut dec_buf);
         cdadam::tensor::sub(&mut delta, &e, &dec_buf);
     });
     let mut delta_f = vec![0.0f32; d];
-    row("ef residual fused", d, 12.0, iters, || {
+    row(&mut sink, "ef residual fused", "env", d, 12.0, iters, None, || {
         sign_msg.residual_into(&e, &mut delta_f);
     });
     assert!(
@@ -111,7 +181,7 @@ fn main() {
     let mut enc2 = MarkovEncoder::new(d, Box::new(ScaledSign::new()));
     let mut dec_state = vec![0.0f32; d];
     let mut opt2 = AmsGrad::paper_defaults(d);
-    row("cdadam worker round", d, 44.0, iters, || {
+    row(&mut sink, "cdadam worker round", "env", d, 44.0, iters, None, || {
         let c = enc2.step(&x);
         c.add_into(&mut dec_state);
         opt2.step(&mut params, &dec_state, 1e-3);
@@ -125,7 +195,7 @@ fn main() {
     let mut opt3 = AmsGrad::paper_defaults(d);
     let mut fw = cdadam::comm::wire::FrameWriter::new(2);
     let mut t = 0u64;
-    row("cdadam worker round (egress)", d, 44.0, iters, || {
+    row(&mut sink, "cdadam worker round (egress)", "env", d, 44.0, iters, None, || {
         t += 1;
         fw.begin(t, 0).unwrap();
         enc3.step_into(&x, &mut fw).unwrap();
@@ -134,4 +204,178 @@ fn main() {
         fv.payload.add_scaled_into(&mut dec_state3, 1.0);
         opt3.step(&mut params, &dec_state3, 1e-3);
     });
+
+    // --- scalar vs SIMD: every dispatched kernel, forced both ways ------
+    // Bit-equality is asserted before each pair is timed; the [simd]
+    // row's trailing column is its speedup over the scalar row. On a
+    // host without AVX2/NEON the forced-on run degrades to scalar and
+    // the speedup column reads ~1.0x.
+    println!(
+        "\n### scalar vs SIMD (backend {:?}; bit-equality asserted per kernel)",
+        cdadam::simd::cpu_backend()
+    );
+    let scale = 0.5f32;
+    let start = 9usize; // unaligned range start — exercises head/tail peel
+
+    let bits_s = with_forced(false, || packing::pack_signs(&x));
+    let bits_v = with_forced(true, || packing::pack_signs(&x));
+    assert_eq!(bits_s, bits_v, "pack_signs: scalar and SIMD words differ");
+    let bytes = packing::words_to_bytes(&bits_s, d);
+    svs(&mut sink, "pack_signs", d, 4.0, iters, || {
+        std::hint::black_box(packing::pack_signs(&x));
+    });
+
+    let mut us = vec![0.0f32; d];
+    let mut uv = vec![0.0f32; d];
+    with_forced(false, || packing::unpack_signs_scaled(&bits_s, scale, &mut us));
+    with_forced(true, || packing::unpack_signs_scaled(&bits_s, scale, &mut uv));
+    bits_eq(&us, &uv, "unpack_signs_scaled");
+    svs(&mut sink, "unpack_signs_scaled", d, 4.0, iters, || {
+        packing::unpack_signs_scaled(&bits_s, scale, &mut us);
+    });
+    with_forced(false, || packing::unpack_signs_scaled_bytes(&bytes, scale, &mut us));
+    with_forced(true, || packing::unpack_signs_scaled_bytes(&bytes, scale, &mut uv));
+    bits_eq(&us, &uv, "unpack_signs_scaled_bytes");
+    svs(&mut sink, "unpack_signs_scaled_bytes", d, 4.0, iters, || {
+        packing::unpack_signs_scaled_bytes(&bytes, scale, &mut us);
+    });
+
+    let mut as_ = e.clone();
+    let mut av = e.clone();
+    with_forced(false, || packing::add_signs_scaled(&bits_s, scale, &mut as_));
+    with_forced(true, || packing::add_signs_scaled(&bits_s, scale, &mut av));
+    bits_eq(&as_, &av, "add_signs_scaled");
+    svs(&mut sink, "add_signs_scaled", d, 8.0, iters, || {
+        packing::add_signs_scaled(&bits_s, scale, &mut as_);
+    });
+    let mut as_ = e[start..d - 3].to_vec();
+    let mut av = e[start..d - 3].to_vec();
+    with_forced(false, || packing::add_signs_scaled_range(&bits_s, scale, start, &mut as_));
+    with_forced(true, || packing::add_signs_scaled_range(&bits_s, scale, start, &mut av));
+    bits_eq(&as_, &av, "add_signs_scaled_range");
+    svs(&mut sink, "add_signs_scaled_range", d - 3 - start, 8.0, iters, || {
+        packing::add_signs_scaled_range(&bits_s, scale, start, &mut as_);
+    });
+    with_forced(false, || packing::add_signs_scaled_range_bytes(&bytes, scale, start, &mut as_));
+    with_forced(true, || packing::add_signs_scaled_range_bytes(&bytes, scale, start, &mut av));
+    bits_eq(&as_, &av, "add_signs_scaled_range_bytes");
+    svs(&mut sink, "add_signs_scaled_range_bytes", d - 3 - start, 8.0, iters, || {
+        packing::add_signs_scaled_range_bytes(&bytes, scale, start, &mut as_);
+    });
+
+    let mut rs = vec![0.0f32; d];
+    let mut rv = vec![0.0f32; d];
+    with_forced(false, || packing::residual_signs_scaled(&bits_s, scale, &e, &mut rs));
+    with_forced(true, || packing::residual_signs_scaled(&bits_s, scale, &e, &mut rv));
+    bits_eq(&rs, &rv, "residual_signs_scaled");
+    svs(&mut sink, "residual_signs_scaled", d, 12.0, iters, || {
+        packing::residual_signs_scaled(&bits_s, scale, &e, &mut rs);
+    });
+    with_forced(false, || packing::residual_signs_scaled_bytes(&bytes, scale, &e, &mut rs));
+    with_forced(true, || packing::residual_signs_scaled_bytes(&bytes, scale, &e, &mut rv));
+    bits_eq(&rs, &rv, "residual_signs_scaled_bytes");
+    svs(&mut sink, "residual_signs_scaled_bytes", d, 12.0, iters, || {
+        packing::residual_signs_scaled_bytes(&bytes, scale, &e, &mut rs);
+    });
+
+    // word/byte conversion fast paths
+    let mut conv_b = Vec::new();
+    let mut conv_w = Vec::new();
+    with_forced(false, || packing::words_to_bytes_into(&bits_s, d, &mut conv_b));
+    assert_eq!(conv_b, bytes, "words_to_bytes_into scalar");
+    with_forced(true, || packing::words_to_bytes_into(&bits_s, d, &mut conv_b));
+    assert_eq!(conv_b, bytes, "words_to_bytes_into simd");
+    with_forced(false, || packing::bytes_to_words_into(&bytes, d, &mut conv_w));
+    assert_eq!(conv_w, bits_s, "bytes_to_words_into scalar");
+    with_forced(true, || packing::bytes_to_words_into(&bytes, d, &mut conv_w));
+    assert_eq!(conv_w, bits_s, "bytes_to_words_into simd");
+    svs(&mut sink, "words_to_bytes_into", d, 0.25, iters, || {
+        packing::words_to_bytes_into(&bits_s, d, &mut conv_b);
+    });
+    svs(&mut sink, "bytes_to_words_into", d, 0.25, iters, || {
+        packing::bytes_to_words_into(&bytes, d, &mut conv_w);
+    });
+
+    // whole scaled-sign compressor (scan keeps its sequential L1 chain;
+    // only the sign extraction vectorizes, so the win here is partial)
+    {
+        let a = with_forced(false, || ScaledSign::new().compress(&x)).to_dense();
+        let b = with_forced(true, || ScaledSign::new().compress(&x)).to_dense();
+        bits_eq(&a, &b, "scaled_sign compress");
+    }
+    let mut ss2 = ScaledSign::new();
+    svs(&mut sink, "scaled_sign compress", d, 8.0, iters, || {
+        std::hint::black_box(ss2.compress(&x));
+    });
+
+    // elementwise add / sub_assign
+    with_forced(false, || tensor::add(&mut rs, &x, &e));
+    with_forced(true, || tensor::add(&mut rv, &x, &e));
+    bits_eq(&rs, &rv, "add");
+    svs(&mut sink, "add", d, 12.0, iters, || {
+        tensor::add(&mut rs, &x, &e);
+    });
+    let mut ys = x.clone();
+    let mut yv = x.clone();
+    with_forced(false, || tensor::sub_assign(&mut ys, &e));
+    with_forced(true, || tensor::sub_assign(&mut yv, &e));
+    bits_eq(&ys, &yv, "sub_assign");
+    svs(&mut sink, "sub_assign", d, 12.0, iters, || {
+        tensor::sub_assign(&mut ys, &e);
+    });
+
+    // fused optimizer kernels: one-step bit check on cloned state, then
+    // timed on persistent state under each forcing (state drift between
+    // the two timed rows is fine — the math is identical by the check)
+    let (b1, b2, nu, wd, lr, mu_c) = (0.9f32, 0.999f32, 1e-8f32, 5e-4f32, 1e-3f32, 0.9f32);
+    {
+        let mk = || (x.clone(), vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut p1, mut m1, mut v1, mut h1) = mk();
+        let (mut p2, mut m2, mut v2, mut h2) = mk();
+        with_forced(false, || {
+            tensor::fused_amsgrad_step(&mut p1, &e, &mut m1, &mut v1, &mut h1, b1, b2, nu, wd, lr)
+        });
+        with_forced(true, || {
+            tensor::fused_amsgrad_step(&mut p2, &e, &mut m2, &mut v2, &mut h2, b1, b2, nu, wd, lr)
+        });
+        bits_eq(&p1, &p2, "fused_amsgrad_step params");
+        bits_eq(&h1, &h2, "fused_amsgrad_step vhat");
+        svs(&mut sink, "fused_amsgrad_step", d, 28.0, iters, || {
+            tensor::fused_amsgrad_step(&mut p1, &e, &mut m1, &mut v1, &mut h1, b1, b2, nu, wd, lr);
+        });
+    }
+    {
+        let (mut p1, mut m1, mut v1) = (x.clone(), vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut p2, mut m2, mut v2) = (x.clone(), vec![0.0f32; d], vec![0.0f32; d]);
+        with_forced(false, || {
+            tensor::fused_adam_step(&mut p1, &e, &mut m1, &mut v1, b1, b2, 0.1, 0.001, nu, lr, false)
+        });
+        with_forced(true, || {
+            tensor::fused_adam_step(&mut p2, &e, &mut m2, &mut v2, b1, b2, 0.1, 0.001, nu, lr, false)
+        });
+        bits_eq(&p1, &p2, "fused_adam_step params");
+        bits_eq(&v1, &v2, "fused_adam_step v");
+        svs(&mut sink, "fused_adam_step", d, 24.0, iters, || {
+            tensor::fused_adam_step(
+                &mut p1, &e, &mut m1, &mut v1, b1, b2, 0.1, 0.001, nu, lr, false,
+            );
+        });
+    }
+    {
+        let (mut p1, mut u1) = (x.clone(), vec![0.0f32; d]);
+        let (mut p2, mut u2) = (x.clone(), vec![0.0f32; d]);
+        with_forced(false, || tensor::fused_sgd_momentum_step(&mut p1, &e, &mut u1, mu_c, wd, lr));
+        with_forced(true, || tensor::fused_sgd_momentum_step(&mut p2, &e, &mut u2, mu_c, wd, lr));
+        bits_eq(&p1, &p2, "fused_sgd_momentum_step params");
+        bits_eq(&u1, &u2, "fused_sgd_momentum_step u");
+        svs(&mut sink, "fused_sgd_momentum_step", d, 16.0, iters, || {
+            tensor::fused_sgd_momentum_step(&mut p1, &e, &mut u1, mu_c, wd, lr);
+        });
+    }
+    println!("scalar == SIMD bit-equality ✓ (all dispatched kernels)");
+
+    match sink.flush() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
 }

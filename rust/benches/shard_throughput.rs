@@ -22,6 +22,7 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use cdadam::algo::downlink::DownlinkChannel;
 use cdadam::algo::uncompressed::Uncompressed;
@@ -29,6 +30,8 @@ use cdadam::algo::{Strategy, WorkerAlgo};
 use cdadam::comm::wire::{encode_frame, FrameView, FrameWriter};
 use cdadam::compress::{CompressedMsg, Compressor, ScaledSign, ShardedCompressor, TopK, TopKBlock};
 use cdadam::util::args::Args;
+use cdadam::util::bench_json::BenchSink;
+use cdadam::util::json::Json;
 use cdadam::util::rng::Rng;
 use cdadam::util::timer::bench;
 
@@ -69,6 +72,10 @@ fn alloc_delta(since: (u64, u64)) -> (u64, u64) {
     (now.0 - since.0, now.1 - since.1)
 }
 
+/// Rows collected for `BENCH_kernels.json` — a process-global so `row`
+/// keeps its call-site-friendly signature (flushed once from `main`).
+static JSON_ROWS: Mutex<Vec<Json>> = Mutex::new(Vec::new());
+
 fn row(name: &str, d: usize, iters: usize, baseline_ms: Option<f64>, f: impl FnMut()) -> f64 {
     let st = bench(2, iters, f);
     let ms = st.mean();
@@ -78,6 +85,20 @@ fn row(name: &str, d: usize, iters: usize, baseline_ms: Option<f64>, f: impl FnM
         None => "  1.00x".into(),
     };
     println!("{name:<34} {ms:>9.3} ms  {meps:>9.1} Melem/s  {speedup}");
+    let mut fields = vec![
+        ("kernel", Json::Str(name.to_string())),
+        ("d", Json::Num(d as f64)),
+        ("ms", Json::Num(ms)),
+        ("melem_per_s", Json::Num(meps)),
+    ];
+    if let Some(b) = baseline_ms {
+        fields.push(("speedup_vs_baseline", Json::Num(b / ms)));
+    }
+    let mut obj = std::collections::BTreeMap::new();
+    for (k, v) in fields {
+        obj.insert(k.to_string(), v);
+    }
+    JSON_ROWS.lock().unwrap().push(Json::Obj(obj));
     ms
 }
 
@@ -308,5 +329,19 @@ fn main() {
                 std::hint::black_box(std::sync::Arc::clone(&arc));
             }
         });
+    }
+
+    // machine-readable mirror of every table row (see util::bench_json)
+    let mut sink = BenchSink::new("shard_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("iters", Json::Num(iters as f64));
+    sink.meta("backend", Json::Str(format!("{:?}", cdadam::simd::cpu_backend())));
+    for r in JSON_ROWS.lock().unwrap().drain(..) {
+        sink.push(r);
+    }
+    match sink.flush() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
     }
 }

@@ -31,6 +31,14 @@
 //! historical sequential loop verbatim. Property-tested below across
 //! all registered compressors and re-proven end-to-end by the
 //! coordinator tests.
+//!
+//! The per-range sign folds themselves
+//! ([`crate::compress::packing::add_signs_scaled_range`] and its wire-
+//! byte twin) dispatch through [`crate::simd`]: with the `simd_kernels`
+//! knob on, every range job runs the AVX2/NEON fold body — bit-identical
+//! to the scalar reference by the same per-element-chain argument, so
+//! the invariant above is unchanged. The pool's lane threads read the
+//! process-global knob at call time; no per-job plumbing is needed.
 
 use crate::comm::wire::PayloadView;
 use crate::compress::CompressedMsg;

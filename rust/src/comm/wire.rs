@@ -1117,9 +1117,7 @@ impl<'a> PayloadView<'a> {
             }
             PayloadView::Zero { .. } => out.fill(0.0),
             PayloadView::Sign { d, scale, bytes } => {
-                for (i, o) in out[..*d].iter_mut().enumerate() {
-                    *o = if bytes[i / 8] >> (i % 8) & 1 == 1 { *scale } else { -*scale };
-                }
+                packing::unpack_signs_scaled_bytes(bytes, *scale, &mut out[..*d]);
             }
             PayloadView::Dense { bytes } => {
                 for (j, o) in out.iter_mut().enumerate() {

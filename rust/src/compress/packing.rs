@@ -4,45 +4,257 @@
 //! sign(0) := +1 convention shared with python/compile/kernels/ref.py).
 //! This is the L3 hot path for scaled-sign — `pack_signs` runs once per
 //! worker per round on a vector of model dimension.
+//!
+//! ## Runtime SIMD dispatch
+//!
+//! Every public kernel here dispatches through [`crate::simd`]: when the
+//! `simd_kernels` knob is on **and** the one-time CPU probe found AVX2
+//! (x86_64) or NEON (aarch64), the vector bodies below run; otherwise
+//! the scalar reference bodies run — exactly the historical code. The
+//! vector bodies replicate the scalar per-element operation sequence
+//! (compare-ge for the pack, a sign-bit XOR for ±scale, the same
+//! add/sub per element), so both sides are **bit-identical** on every
+//! input, including NaN, ±0.0, and denormals; this is property- and
+//! fuzz-tested (`fuzz_simd_differential`) and pinned by the
+//! trajectory-golden matrix.
+//!
+//! ## One bit-source, one SIMD body per kernel
+//!
+//! The word-array (`&[u64]`) and wire-byte (`&[u8]`) kernel twins share
+//! their scalar inner loop through the [`BitSource`] trait, and share
+//! their *SIMD* body through a stronger observation: on little-endian
+//! targets the `&[u64]` sign words reinterpreted as bytes **are** the
+//! wire-byte layout (bit i at byte i/8, position i%8 — what
+//! `words_to_bytes` emits), so the byte-wise vector body exists exactly
+//! once per kernel and serves both sources. On big-endian targets the
+//! reinterpret is invalid and word-sourced kernels simply fall back to
+//! the scalar reference.
+
+/// A packed sign stream readable bit-by-bit or byte-by-byte — the one
+/// generic bit-source behind the word/byte kernel twins. Byte `bi`
+/// holds bits `8·bi .. 8·bi+8` (bit j of the byte = stream bit
+/// `8·bi + j`), the wire layout.
+trait BitSource {
+    /// Bit `i` of the stream.
+    fn bit(&self, i: usize) -> bool;
+    /// Byte `bi` of the stream (bits `8·bi..8·bi+8`).
+    fn byte_at(&self, bi: usize) -> u8;
+}
+
+impl BitSource for [u64] {
+    #[inline(always)]
+    fn bit(&self, i: usize) -> bool {
+        self[i / 64] >> (i % 64) & 1 == 1
+    }
+    #[inline(always)]
+    fn byte_at(&self, bi: usize) -> u8 {
+        (self[bi / 8] >> (8 * (bi % 8))) as u8
+    }
+}
+
+impl BitSource for [u8] {
+    #[inline(always)]
+    fn bit(&self, i: usize) -> bool {
+        self[i / 8] >> (i % 8) & 1 == 1
+    }
+    #[inline(always)]
+    fn byte_at(&self, bi: usize) -> u8 {
+        self[bi]
+    }
+}
+
+/// The little-endian wire-byte view of a word-packed bitmap: on LE
+/// targets the in-memory bytes of the `u64` array are exactly the
+/// `words_to_bytes` layout, so the byte kernels can fold straight out
+/// of it. `None` on big-endian (callers fall back to scalar).
+#[cfg(target_endian = "little")]
+#[inline]
+fn words_as_bytes(bits: &[u64]) -> Option<&[u8]> {
+    // SAFETY: u64 has no padding and u8 alignment is 1; the view covers
+    // exactly the same allocation, read-only.
+    Some(unsafe { std::slice::from_raw_parts(bits.as_ptr() as *const u8, bits.len() * 8) })
+}
+
+#[cfg(not(target_endian = "little"))]
+#[inline]
+fn words_as_bytes(_bits: &[u64]) -> Option<&[u8]> {
+    None
+}
+
+/// Mutable twin of [`words_as_bytes`] for the pack direction.
+#[cfg(target_endian = "little")]
+#[inline]
+fn words_as_bytes_mut(bits: &mut [u64]) -> Option<&mut [u8]> {
+    // SAFETY: as above; exclusive borrow transfers to the byte view.
+    Some(unsafe { std::slice::from_raw_parts_mut(bits.as_mut_ptr() as *mut u8, bits.len() * 8) })
+}
+
+#[cfg(not(target_endian = "little"))]
+#[inline]
+fn words_as_bytes_mut(_bits: &mut [u64]) -> Option<&mut [u8]> {
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch table
+// ---------------------------------------------------------------------------
+
+type PackBytesFn = fn(&[f32], &mut [u8]);
+type UnpackBytesFn = fn(&[u8], f32, &mut [f32]);
+type AddRangeBytesFn = fn(&[u8], f32, usize, &mut [f32]);
+type ResidualBytesFn = fn(&[u8], f32, &[f32], &mut [f32]);
+
+/// Per-kernel function table for one vector backend. All entries take
+/// the wire-byte bitmap layout; word-sourced calls reach them through
+/// [`words_as_bytes`].
+struct PackKernels {
+    pack_bytes: PackBytesFn,
+    unpack_bytes: UnpackBytesFn,
+    add_range_bytes: AddRangeBytesFn,
+    residual_bytes: ResidualBytesFn,
+}
+
+/// The active backend's kernel table, or `None` when dispatch resolves
+/// to scalar — the `None` path keeps the historical `#[inline]` scalar
+/// bodies as direct calls (no function-pointer indirection when the
+/// knob is off).
+#[inline]
+fn kernels() -> Option<&'static PackKernels> {
+    match crate::simd::active() {
+        crate::simd::Backend::Scalar => None,
+        #[cfg(target_arch = "x86_64")]
+        crate::simd::Backend::Avx2 => Some(&avx2::KERNELS),
+        #[cfg(target_arch = "aarch64")]
+        crate::simd::Backend::Neon => Some(&neon::KERNELS),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference bodies (the bit-reference; shared by both twins)
+// ---------------------------------------------------------------------------
+
+/// Pack the signs of up to 64 values into one word (bit j = chunk[j] ≥
+/// 0) — the historical `pack_signs` inner loop, also the per-word unit
+/// the fused scaled-sign scan uses.
+#[inline]
+fn scalar_pack_word(chunk: &[f32]) -> u64 {
+    let mut word = 0u64;
+    for (j, &v) in chunk.iter().enumerate() {
+        // v >= 0.0 is true for +0.0 and -0.0 alike, matching the
+        // oracle's `where(x >= 0, +1, -1)`.
+        word |= u64::from(v >= 0.0) << j;
+    }
+    word
+}
+
+/// out[i] = scale·(bit_i ? +1 : −1), any bit source.
+#[inline]
+fn scalar_unpack<B: BitSource + ?Sized>(src: &B, scale: f32, out: &mut [f32]) {
+    for (bi, chunk) in out.chunks_mut(8).enumerate() {
+        let byte = src.byte_at(bi);
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+/// out[k] += scale·(bit_{start+k} ? +1 : −1), any bit source. Only the
+/// (up to 7-element) unaligned head pays per-element bit indexing; the
+/// aligned body runs a byte-chunked loop. Per-element float ops are one
+/// `+=` of ±scale regardless of source or alignment, so every
+/// range-partitioned apply is bit-for-bit the monolithic one.
+#[inline]
+fn scalar_add_range<B: BitSource + ?Sized>(src: &B, scale: f32, start: usize, out: &mut [f32]) {
+    let head = ((8 - start % 8) % 8).min(out.len());
+    let (head_out, body_out) = out.split_at_mut(head);
+    for (k, o) in head_out.iter_mut().enumerate() {
+        *o += if src.bit(start + k) { scale } else { -scale };
+    }
+    // start + head is 8-aligned (or body is empty): whole-byte loop
+    let base = (start + head) / 8;
+    for (ci, chunk) in body_out.chunks_mut(8).enumerate() {
+        let byte = src.byte_at(base + ci);
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o += if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+/// delta[i] = e[i] − scale·(bit_i ? +1 : −1), any bit source — the
+/// fused error-feedback residual δ = e − decode(C(e)). Per element it
+/// runs the identical subtraction the historical `unpack_signs_scaled`
+/// + `tensor::sub` pair ran (same ±scale value, same `e − dec` op), so
+/// the fused form is bit-for-bit the two-pass form it replaces.
+#[inline]
+fn scalar_residual<B: BitSource + ?Sized>(src: &B, scale: f32, e: &[f32], delta: &mut [f32]) {
+    for (bi, (dchunk, echunk)) in delta.chunks_mut(8).zip(e.chunks(8)).enumerate() {
+        let byte = src.byte_at(bi);
+        for (j, (d, &ei)) in dchunk.iter_mut().zip(echunk).enumerate() {
+            *d = ei - if byte >> j & 1 == 1 { scale } else { -scale };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels (dispatching)
+// ---------------------------------------------------------------------------
 
 /// Pack the signs of `x` (1 = non-negative) into u64 words.
 pub fn pack_signs(x: &[f32]) -> Vec<u64> {
     let mut words = vec![0u64; x.len().div_ceil(64)];
-    // Branchless: the IEEE-754 sign bit of f32 is bit 31; non-negative
-    // (incl. +0.0) has sign bit 0. -0.0 would misclassify, but -0.0 is
-    // not produced by subtraction of distinct values and decodes to the
-    // same magnitude either way at reconstruction tolerance; we still
-    // normalize it for exactness.
-    for (w, chunk) in words.iter_mut().zip(x.chunks(64)) {
-        let mut word = 0u64;
-        for (j, &v) in chunk.iter().enumerate() {
-            // v >= 0.0 is true for +0.0 and -0.0 alike, matching the
-            // oracle's `where(x >= 0, +1, -1)`.
-            word |= u64::from(v >= 0.0) << j;
+    if let Some(t) = kernels() {
+        if let Some(bytes) = words_as_bytes_mut(&mut words) {
+            (t.pack_bytes)(x, &mut bytes[..x.len().div_ceil(8)]);
+            return words;
         }
-        *w = word;
+    }
+    for (w, chunk) in words.iter_mut().zip(x.chunks(64)) {
+        *w = scalar_pack_word(chunk);
     }
     words
+}
+
+/// Pack the signs of one ≤64-element chunk into a word (bit j =
+/// chunk[j] ≥ 0) — the per-word unit of [`pack_signs`], exposed so the
+/// fused scaled-sign scan (`scan_signs`) shares the dispatched SIMD
+/// pack while keeping its sequential L1 accumulation untouched.
+#[inline]
+pub fn pack_word(chunk: &[f32]) -> u64 {
+    debug_assert!(chunk.len() <= 64);
+    if let Some(t) = kernels() {
+        let mut b = [0u8; 8];
+        (t.pack_bytes)(chunk, &mut b[..chunk.len().div_ceil(8)]);
+        return u64::from_le_bytes(b);
+    }
+    scalar_pack_word(chunk)
 }
 
 /// out[i] = scale * (bit_i ? +1 : -1)
 pub fn unpack_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
     debug_assert!(bits.len() * 64 >= out.len());
-    for (chunk, &word) in out.chunks_mut(64).zip(bits) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o = if word >> j & 1 == 1 { scale } else { -scale };
+    if let Some(t) = kernels() {
+        if let Some(bytes) = words_as_bytes(bits) {
+            return (t.unpack_bytes)(bytes, scale, out);
         }
     }
+    scalar_unpack(bits, scale, out)
+}
+
+/// [`unpack_signs_scaled`] reading the bitmap straight from its
+/// little-endian wire bytes — used by the borrowed-view decode path,
+/// which historically open-coded this loop.
+pub fn unpack_signs_scaled_bytes(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert!(bytes.len() * 8 >= out.len());
+    if let Some(t) = kernels() {
+        return (t.unpack_bytes)(bytes, scale, out);
+    }
+    scalar_unpack(bytes, scale, out)
 }
 
 /// out[i] += scale * (bit_i ? +1 : -1)
 pub fn add_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
     debug_assert!(bits.len() * 64 >= out.len());
-    for (chunk, &word) in out.chunks_mut(64).zip(bits) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o += if word >> j & 1 == 1 { scale } else { -scale };
-        }
-    }
+    add_signs_scaled_range(bits, scale, 0, out)
 }
 
 /// out[k] += scale * (bit_{start+k} ? +1 : -1) — the range-restricted
@@ -50,25 +262,14 @@ pub fn add_signs_scaled(bits: &[u64], scale: f32, out: &mut [f32]) {
 /// engine. Per-element float ops are identical to the full-vector
 /// version (one `+=` of ±scale), so a range-partitioned apply is
 /// bit-for-bit the same as the monolithic one.
-///
-/// Only the (up to 63-element) unaligned head pays per-element word
-/// indexing; the aligned body runs the same 64-per-word chunked loop as
-/// [`add_signs_scaled`], so the parallel fold is not slower per element
-/// than the sequential kernel it replaces.
 pub fn add_signs_scaled_range(bits: &[u64], scale: f32, start: usize, out: &mut [f32]) {
     debug_assert!(bits.len() * 64 >= start + out.len());
-    let head = ((64 - start % 64) % 64).min(out.len());
-    let (head_out, body_out) = out.split_at_mut(head);
-    for (k, o) in head_out.iter_mut().enumerate() {
-        let i = start + k;
-        *o += if bits[i / 64] >> (i % 64) & 1 == 1 { scale } else { -scale };
-    }
-    // start + head is 64-aligned (or body is empty): whole-word loop
-    for (chunk, &word) in body_out.chunks_mut(64).zip(&bits[(start + head) / 64..]) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o += if word >> j & 1 == 1 { scale } else { -scale };
+    if let Some(t) = kernels() {
+        if let Some(bytes) = words_as_bytes(bits) {
+            return (t.add_range_bytes)(bytes, scale, start, out);
         }
     }
+    scalar_add_range(bits, scale, start, out)
 }
 
 /// out[k] += scale * (bit_{start+k} ? +1 : -1), reading the sign bitmap
@@ -77,41 +278,26 @@ pub fn add_signs_scaled_range(bits: &[u64], scale: f32, start: usize, out: &mut 
 /// ([`crate::comm::wire::PayloadView`]). Bit i of the bitmap lives at
 /// byte `i / 8`, position `i % 8` (the `words_to_bytes` layout), so no
 /// `bytes_to_words` materialization is needed.
-///
-/// Per-element float ops are identical to the word-based kernels (one
-/// `+=` of ±scale), so a view-side fold is bit-for-bit the owned fold.
-/// Only the (up to 7-element) unaligned head pays per-element byte
-/// indexing; the aligned body runs a byte-chunked loop.
 pub fn add_signs_scaled_range_bytes(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
     debug_assert!(bytes.len() * 8 >= start + out.len());
-    let head = ((8 - start % 8) % 8).min(out.len());
-    let (head_out, body_out) = out.split_at_mut(head);
-    for (k, o) in head_out.iter_mut().enumerate() {
-        let i = start + k;
-        *o += if bytes[i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale };
+    if let Some(t) = kernels() {
+        return (t.add_range_bytes)(bytes, scale, start, out);
     }
-    // start + head is 8-aligned (or body is empty): whole-byte loop
-    for (chunk, &byte) in body_out.chunks_mut(8).zip(&bytes[(start + head) / 8..]) {
-        for (j, o) in chunk.iter_mut().enumerate() {
-            *o += if byte >> j & 1 == 1 { scale } else { -scale };
-        }
-    }
+    scalar_add_range(bytes, scale, start, out)
 }
 
 /// delta[i] = e[i] − scale·(bit_i ? +1 : −1) — the error-feedback
 /// residual δ = e − decode(C(e)) for a sign message, fused into one
-/// pass. Per element it runs the identical subtraction the historical
-/// `unpack_signs_scaled` + `tensor::sub` pair ran (same ±scale value,
-/// same `e − dec` op), so the fused form is bit-for-bit the two-pass
-/// form it replaces — without materializing the decode buffer.
+/// pass (see [`scalar_residual`] for the bit-exactness argument).
 pub fn residual_signs_scaled(bits: &[u64], scale: f32, e: &[f32], delta: &mut [f32]) {
     debug_assert_eq!(e.len(), delta.len());
     debug_assert!(bits.len() * 64 >= delta.len());
-    for ((dchunk, echunk), &word) in delta.chunks_mut(64).zip(e.chunks(64)).zip(bits) {
-        for (j, (d, &ei)) in dchunk.iter_mut().zip(echunk).enumerate() {
-            *d = ei - if word >> j & 1 == 1 { scale } else { -scale };
+    if let Some(t) = kernels() {
+        if let Some(bytes) = words_as_bytes(bits) {
+            return (t.residual_bytes)(bytes, scale, e, delta);
         }
     }
+    scalar_residual(bits, scale, e, delta)
 }
 
 /// [`residual_signs_scaled`] reading the bitmap straight from its
@@ -121,12 +307,15 @@ pub fn residual_signs_scaled(bits: &[u64], scale: f32, e: &[f32], delta: &mut [f
 pub fn residual_signs_scaled_bytes(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
     debug_assert_eq!(e.len(), delta.len());
     debug_assert!(bytes.len() * 8 >= delta.len());
-    for ((dchunk, echunk), &byte) in delta.chunks_mut(8).zip(e.chunks(8)).zip(bytes) {
-        for (j, (d, &ei)) in dchunk.iter_mut().zip(echunk).enumerate() {
-            *d = ei - if byte >> j & 1 == 1 { scale } else { -scale };
-        }
+    if let Some(t) = kernels() {
+        return (t.residual_bytes)(bytes, scale, e, delta);
     }
+    scalar_residual(bytes, scale, e, delta)
 }
+
+// ---------------------------------------------------------------------------
+// Word <-> byte conversions
+// ---------------------------------------------------------------------------
 
 /// Serialize packed words to little-endian bytes (wire encoding).
 pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
@@ -135,14 +324,35 @@ pub fn words_to_bytes(bits: &[u64], d: usize) -> Vec<u8> {
     out
 }
 
+/// [`words_to_bytes`] into caller-owned scratch: clears `out` (keeping
+/// its capacity) and writes the `⌈d/8⌉` wire bytes, so steady-state
+/// call sites with resident scratch allocate nothing.
+pub fn words_to_bytes_into(bits: &[u64], d: usize, out: &mut Vec<u8>) {
+    out.clear();
+    extend_words_as_bytes(bits, d, out);
+}
+
 /// Append the `⌈d/8⌉` wire bytes of a packed sign bitmap directly onto
 /// `out` — the streaming form of [`words_to_bytes`] used by the encode
 /// path, which used to materialize the byte vector just to
 /// `extend_from_slice` it into the frame and throw it away (a full
 /// extra pass over the bitmap per sign payload per round).
+///
+/// With the `simd_kernels` knob on, little-endian targets skip the
+/// per-word `to_le_bytes` loop entirely: the word array's in-memory
+/// bytes *are* the wire layout, so this is one `memcpy`. Byte output is
+/// identical either way (the loop below literally reproduces LE memory
+/// order); the fast path is still knob-gated so knob-off remains the
+/// historical code verbatim.
 pub fn extend_words_as_bytes(bits: &[u64], d: usize, out: &mut Vec<u8>) {
     let nbytes = d.div_ceil(8);
     debug_assert!(bits.len() * 8 >= nbytes);
+    if crate::simd::knob_on() {
+        if let Some(bytes) = words_as_bytes(bits) {
+            out.extend_from_slice(&bytes[..nbytes]);
+            return;
+        }
+    }
     out.reserve(nbytes);
     let full = nbytes / 8;
     for w in &bits[..full] {
@@ -156,16 +366,321 @@ pub fn extend_words_as_bytes(bits: &[u64], d: usize, out: &mut Vec<u8>) {
 
 /// Deserialize little-endian bytes back into packed words.
 pub fn bytes_to_words(bytes: &[u8], d: usize) -> Vec<u64> {
-    let mut words = vec![0u64; d.div_ceil(64)];
-    for (i, b) in bytes.iter().enumerate() {
+    let mut words = Vec::new();
+    bytes_to_words_into(bytes, d, &mut words);
+    words
+}
+
+/// [`bytes_to_words`] into caller-owned scratch: clears and re-fills
+/// `words` (keeping its capacity), so decode paths with resident
+/// scratch allocate nothing in steady state. With the `simd_kernels`
+/// knob on, little-endian targets fill the zeroed word buffer with one
+/// `memcpy` instead of the per-byte shift-or loop (identical words: the
+/// loop reproduces LE memory order bit-for-bit).
+pub fn bytes_to_words_into(bytes: &[u8], d: usize, words: &mut Vec<u64>) {
+    words.clear();
+    words.resize(d.div_ceil(64), 0);
+    let n = bytes.len().min(words.len() * 8);
+    #[cfg(target_endian = "little")]
+    if crate::simd::knob_on() {
+        // SAFETY: copying n ≤ words.len()·8 plain bytes into the zeroed
+        // word buffer; u64 has no padding, trailing bytes stay zero.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), words.as_mut_ptr() as *mut u8, n);
+        }
+        return;
+    }
+    for (i, b) in bytes[..n].iter().enumerate() {
         words[i / 8] |= (*b as u64) << (8 * (i % 8));
     }
-    words
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies (x86_64)
+// ---------------------------------------------------------------------------
+
+/// AVX2 kernel bodies: 8 f32 lanes, one sign byte per vector.
+///
+/// Bit-exactness: the pack uses `VCMPPS(GE_OQ)` + `MOVMSKPS`, which is
+/// lane-for-lane the scalar `v >= 0.0` (true for ±0.0, false for NaN);
+/// the apply kernels build ±scale by XOR-ing the IEEE sign bit into a
+/// `scale` splat (exactly scalar unary negation) and then run the
+/// identical single add/sub per element. No FMA, no reassociation.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    pub(super) static KERNELS: super::PackKernels = super::PackKernels {
+        pack_bytes,
+        unpack_bytes,
+        add_range_bytes,
+        residual_bytes,
+    };
+
+    // Safe shims: the table above is only ever returned after the
+    // runtime probe confirmed AVX2 (see `simd::cpu_backend`), so the
+    // target-feature contract of each inner fn holds.
+    fn pack_bytes(x: &[f32], out: &mut [u8]) {
+        unsafe { pack_bytes_impl(x, out) }
+    }
+    fn unpack_bytes(bytes: &[u8], scale: f32, out: &mut [f32]) {
+        unsafe { unpack_bytes_impl(bytes, scale, out) }
+    }
+    fn add_range_bytes(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
+        unsafe { add_range_bytes_impl(bytes, scale, start, out) }
+    }
+    fn residual_bytes(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
+        unsafe { residual_bytes_impl(bytes, scale, e, delta) }
+    }
+
+    /// ±scale vector for one sign byte: lane j = `scale` when bit j is
+    /// set, `-scale` otherwise, via a sign-bit XOR (bit-exact for every
+    /// f32 including NaN and denormals).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn pm_vec(byte: u8, sv: __m256) -> __m256 {
+        let bitsel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let signbit = _mm256_set1_epi32(i32::MIN);
+        let b = _mm256_set1_epi32(byte as i32);
+        let hit = _mm256_cmpeq_epi32(_mm256_and_si256(b, bitsel), bitsel);
+        let neg = _mm256_andnot_si256(hit, signbit);
+        _mm256_xor_ps(sv, _mm256_castsi256_ps(neg))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn pack_bytes_impl(x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(out.len(), x.len().div_ceil(8));
+        let zero = _mm256_setzero_ps();
+        let full = x.len() / 8;
+        for (bi, o) in out[..full].iter_mut().enumerate() {
+            let v = _mm256_loadu_ps(x.as_ptr().add(bi * 8));
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(v, zero);
+            *o = _mm256_movemask_ps(ge) as u8;
+        }
+        if let Some(last) = out.get_mut(full) {
+            let mut byte = 0u8;
+            for (j, &v) in x[full * 8..].iter().enumerate() {
+                byte |= u8::from(v >= 0.0) << j;
+            }
+            *last = byte;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack_bytes_impl(bytes: &[u8], scale: f32, out: &mut [f32]) {
+        let sv = _mm256_set1_ps(scale);
+        let full = out.len() / 8;
+        for bi in 0..full {
+            let pm = pm_vec(bytes[bi], sv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(bi * 8), pm);
+        }
+        let tail = &mut out[full * 8..];
+        if !tail.is_empty() {
+            let byte = bytes[full];
+            for (j, o) in tail.iter_mut().enumerate() {
+                *o = if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_range_bytes_impl(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
+        let head = ((8 - start % 8) % 8).min(out.len());
+        let (head_out, body_out) = out.split_at_mut(head);
+        for (k, o) in head_out.iter_mut().enumerate() {
+            let i = start + k;
+            *o += if bytes[i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale };
+        }
+        let base = (start + head) / 8;
+        let sv = _mm256_set1_ps(scale);
+        let full = body_out.len() / 8;
+        let p = body_out.as_mut_ptr();
+        for bi in 0..full {
+            let pm = pm_vec(bytes[base + bi], sv);
+            let cur = _mm256_loadu_ps(p.add(bi * 8));
+            _mm256_storeu_ps(p.add(bi * 8), _mm256_add_ps(cur, pm));
+        }
+        let tail = &mut body_out[full * 8..];
+        if !tail.is_empty() {
+            let byte = bytes[base + full];
+            for (j, o) in tail.iter_mut().enumerate() {
+                *o += if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn residual_bytes_impl(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
+        debug_assert_eq!(e.len(), delta.len());
+        let sv = _mm256_set1_ps(scale);
+        let full = delta.len() / 8;
+        for bi in 0..full {
+            let pm = pm_vec(bytes[bi], sv);
+            let ev = _mm256_loadu_ps(e.as_ptr().add(bi * 8));
+            _mm256_storeu_ps(delta.as_mut_ptr().add(bi * 8), _mm256_sub_ps(ev, pm));
+        }
+        if full * 8 < delta.len() {
+            let byte = bytes[full];
+            for (j, (d, &ei)) in
+                delta[full * 8..].iter_mut().zip(&e[full * 8..]).enumerate()
+            {
+                *d = ei - if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON bodies (aarch64)
+// ---------------------------------------------------------------------------
+
+/// NEON kernel bodies: 4 f32 lanes, two vectors per sign byte. Same
+/// bit-exactness construction as the AVX2 module (`FCMGE` for the pack,
+/// sign-bit XOR for ±scale, one add/sub per element).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub(super) static KERNELS: super::PackKernels = super::PackKernels {
+        pack_bytes,
+        unpack_bytes,
+        add_range_bytes,
+        residual_bytes,
+    };
+
+    // Safe shims — the table is only reachable after the runtime probe
+    // confirmed NEON.
+    fn pack_bytes(x: &[f32], out: &mut [u8]) {
+        unsafe { pack_bytes_impl(x, out) }
+    }
+    fn unpack_bytes(bytes: &[u8], scale: f32, out: &mut [f32]) {
+        unsafe { unpack_bytes_impl(bytes, scale, out) }
+    }
+    fn add_range_bytes(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
+        unsafe { add_range_bytes_impl(bytes, scale, start, out) }
+    }
+    fn residual_bytes(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
+        unsafe { residual_bytes_impl(bytes, scale, e, delta) }
+    }
+
+    /// Lane-select masks for the low/high nibble of a sign byte.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn bitsel(hi: bool) -> uint32x4_t {
+        let v: [u32; 4] = if hi { [16, 32, 64, 128] } else { [1, 2, 4, 8] };
+        vld1q_u32(v.as_ptr())
+    }
+
+    /// ±scale vector for one nibble of a sign byte (sign-bit XOR, as in
+    /// the AVX2 module).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn pm_vec(byte: u8, sel: uint32x4_t, sv: float32x4_t) -> float32x4_t {
+        let hit = vtstq_u32(vdupq_n_u32(byte as u32), sel);
+        let neg = vbicq_u32(vdupq_n_u32(0x8000_0000), hit);
+        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(sv), neg))
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn pack_bytes_impl(x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(out.len(), x.len().div_ceil(8));
+        let zero = vdupq_n_f32(0.0);
+        let sel = bitsel(false);
+        let full = x.len() / 8;
+        for (bi, o) in out[..full].iter_mut().enumerate() {
+            let p = x.as_ptr().add(bi * 8);
+            // FCMGE: true for ±0.0 ≥ 0, false for NaN — scalar v >= 0.0.
+            let lo = vcgeq_f32(vld1q_f32(p), zero);
+            let hi = vcgeq_f32(vld1q_f32(p.add(4)), zero);
+            // distinct power-of-two lane masks: horizontal add == OR
+            let bl = vaddvq_u32(vandq_u32(lo, sel));
+            let bh = vaddvq_u32(vandq_u32(hi, sel));
+            *o = (bl | (bh << 4)) as u8;
+        }
+        if let Some(last) = out.get_mut(full) {
+            let mut byte = 0u8;
+            for (j, &v) in x[full * 8..].iter().enumerate() {
+                byte |= u8::from(v >= 0.0) << j;
+            }
+            *last = byte;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn unpack_bytes_impl(bytes: &[u8], scale: f32, out: &mut [f32]) {
+        let sv = vdupq_n_f32(scale);
+        let (sel_lo, sel_hi) = (bitsel(false), bitsel(true));
+        let full = out.len() / 8;
+        for bi in 0..full {
+            let p = out.as_mut_ptr().add(bi * 8);
+            vst1q_f32(p, pm_vec(bytes[bi], sel_lo, sv));
+            vst1q_f32(p.add(4), pm_vec(bytes[bi], sel_hi, sv));
+        }
+        let tail = &mut out[full * 8..];
+        if !tail.is_empty() {
+            let byte = bytes[full];
+            for (j, o) in tail.iter_mut().enumerate() {
+                *o = if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_range_bytes_impl(bytes: &[u8], scale: f32, start: usize, out: &mut [f32]) {
+        let head = ((8 - start % 8) % 8).min(out.len());
+        let (head_out, body_out) = out.split_at_mut(head);
+        for (k, o) in head_out.iter_mut().enumerate() {
+            let i = start + k;
+            *o += if bytes[i / 8] >> (i % 8) & 1 == 1 { scale } else { -scale };
+        }
+        let base = (start + head) / 8;
+        let sv = vdupq_n_f32(scale);
+        let (sel_lo, sel_hi) = (bitsel(false), bitsel(true));
+        let full = body_out.len() / 8;
+        let p = body_out.as_mut_ptr();
+        for bi in 0..full {
+            let byte = bytes[base + bi];
+            let q = p.add(bi * 8);
+            vst1q_f32(q, vaddq_f32(vld1q_f32(q), pm_vec(byte, sel_lo, sv)));
+            vst1q_f32(q.add(4), vaddq_f32(vld1q_f32(q.add(4)), pm_vec(byte, sel_hi, sv)));
+        }
+        let tail = &mut body_out[full * 8..];
+        if !tail.is_empty() {
+            let byte = bytes[base + full];
+            for (j, o) in tail.iter_mut().enumerate() {
+                *o += if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn residual_bytes_impl(bytes: &[u8], scale: f32, e: &[f32], delta: &mut [f32]) {
+        debug_assert_eq!(e.len(), delta.len());
+        let sv = vdupq_n_f32(scale);
+        let (sel_lo, sel_hi) = (bitsel(false), bitsel(true));
+        let full = delta.len() / 8;
+        for bi in 0..full {
+            let byte = bytes[bi];
+            let ep = e.as_ptr().add(bi * 8);
+            let dp = delta.as_mut_ptr().add(bi * 8);
+            vst1q_f32(dp, vsubq_f32(vld1q_f32(ep), pm_vec(byte, sel_lo, sv)));
+            vst1q_f32(dp.add(4), vsubq_f32(vld1q_f32(ep.add(4)), pm_vec(byte, sel_hi, sv)));
+        }
+        if full * 8 < delta.len() {
+            let byte = bytes[full];
+            for (j, (d, &ei)) in
+                delta[full * 8..].iter_mut().zip(&e[full * 8..]).enumerate()
+            {
+                *d = ei - if byte >> j & 1 == 1 { scale } else { -scale };
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simd::with_forced;
     use crate::util::prop::{check, Config};
 
     #[test]
@@ -307,5 +822,125 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_capacity() {
+        let x: Vec<f32> = (0..137).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+        let bits = pack_signs(&x);
+        let mut bytes = Vec::with_capacity(64);
+        let cap = bytes.capacity();
+        words_to_bytes_into(&bits, x.len(), &mut bytes);
+        assert_eq!(bytes, words_to_bytes(&bits, x.len()));
+        assert_eq!(bytes.capacity(), cap, "resident byte scratch must be reused");
+        let mut words = Vec::with_capacity(8);
+        let cap = words.capacity();
+        bytes_to_words_into(&bytes, x.len(), &mut words);
+        assert_eq!(words, bytes_to_words(&bytes, x.len()));
+        assert_eq!(words.capacity(), cap, "resident word scratch must be reused");
+        // stale contents from a previous (larger) decode must not leak
+        let mut words = vec![u64::MAX; 9];
+        bytes_to_words_into(&bytes, x.len(), &mut words);
+        assert_eq!(words, bytes_to_words(&bytes, x.len()));
+    }
+
+    #[test]
+    fn conversion_fast_paths_match_scalar_loops() {
+        // the knob-gated LE memcpy paths must emit exactly what the
+        // historical loops emit, at byte-boundary-hostile dims.
+        for d in [1usize, 7, 8, 9, 63, 64, 65, 100, 127, 128, 129] {
+            let x: Vec<f32> = (0..d).map(|i| if i % 5 < 2 { -1.0 } else { 1.0 }).collect();
+            let bits = pack_signs(&x);
+            let (slow_b, fast_b) = (
+                with_forced(false, || words_to_bytes(&bits, d)),
+                with_forced(true, || words_to_bytes(&bits, d)),
+            );
+            assert_eq!(slow_b, fast_b, "byte encoding diverged at d={d}");
+            let (slow_w, fast_w) = (
+                with_forced(false, || bytes_to_words(&slow_b, d)),
+                with_forced(true, || bytes_to_words(&slow_b, d)),
+            );
+            assert_eq!(slow_w, fast_w, "word decoding diverged at d={d}");
+            assert_eq!(slow_w, bits);
+        }
+    }
+
+    /// Satellite: scalar ≡ SIMD bit-equality for every packing kernel at
+    /// tail-heavy dims (not multiples of the 64-bit word or the 8/4-lane
+    /// vector width), with ±0.0 and denormal sign edge cases planted. On
+    /// hosts without AVX2/NEON both sides run scalar and the test is a
+    /// tautology — CI's SIMD-capable runners arm it.
+    #[test]
+    fn scalar_simd_bit_equal_at_tail_heavy_dims() {
+        let dims = [1usize, 63, 64, 65, 1000, (1 << 20) - 1];
+        let mut rng = crate::util::rng::Rng::new(0x51D);
+        for &d in &dims {
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            let mut e = vec![0.0f32; d];
+            rng.fill_normal(&mut e, 1.5);
+            // sign edge cases: signed zeros and denormals on both sides
+            // of zero, planted at the front and at the vector tail.
+            let edge = [0.0f32, -0.0, 1.0e-41, -1.0e-41, f32::MIN_POSITIVE, -f32::MIN_POSITIVE];
+            for (i, &v) in edge.iter().enumerate() {
+                if i < d {
+                    x[i] = v;
+                }
+                if d > i + 1 {
+                    let n = d - 1 - i;
+                    x[n] = v;
+                }
+            }
+            let scale = 0.37f32;
+            let start = if d > 9 { 9 } else { 0 }; // unaligned range start
+            let run = |simd: bool| {
+                with_forced(simd, || {
+                    let bits = pack_signs(&x);
+                    let bytes = words_to_bytes(&bits, d);
+                    let mut unpacked = vec![0.0f32; d];
+                    unpack_signs_scaled(&bits, scale, &mut unpacked);
+                    let mut unpacked_b = vec![0.0f32; d];
+                    unpack_signs_scaled_bytes(&bytes, scale, &mut unpacked_b);
+                    let mut added = e.clone();
+                    add_signs_scaled(&bits, scale, &mut added);
+                    let mut added_r = e[start..].to_vec();
+                    add_signs_scaled_range(&bits, scale, start, &mut added_r);
+                    let mut added_rb = e[start..].to_vec();
+                    add_signs_scaled_range_bytes(&bytes, scale, start, &mut added_rb);
+                    let mut resid = vec![0.0f32; d];
+                    residual_signs_scaled(&bits, scale, &e, &mut resid);
+                    let mut resid_b = vec![0.0f32; d];
+                    residual_signs_scaled_bytes(&bytes, scale, &e, &mut resid_b);
+                    let word = pack_word(&x[..d.min(64)]);
+                    (bits, bytes, unpacked, unpacked_b, added, added_r, added_rb, resid, resid_b, word)
+                })
+            };
+            let scalar = run(false);
+            let simd = run(true);
+            assert_eq!(scalar.0, simd.0, "pack_signs diverged at d={d}");
+            assert_eq!(scalar.1, simd.1, "words_to_bytes diverged at d={d}");
+            assert_eq!(scalar.9, simd.9, "pack_word diverged at d={d}");
+            let float_pairs: [(&[f32], &[f32], &str); 7] = [
+                (&scalar.2, &simd.2, "unpack_signs_scaled"),
+                (&scalar.3, &simd.3, "unpack_signs_scaled_bytes"),
+                (&scalar.4, &simd.4, "add_signs_scaled"),
+                (&scalar.5, &simd.5, "add_signs_scaled_range"),
+                (&scalar.6, &simd.6, "add_signs_scaled_range_bytes"),
+                (&scalar.7, &simd.7, "residual_signs_scaled"),
+                (&scalar.8, &simd.8, "residual_signs_scaled_bytes"),
+            ];
+            for (s, v, name) in float_pairs {
+                assert_eq!(s.len(), v.len());
+                for i in 0..s.len() {
+                    assert_eq!(
+                        s[i].to_bits(),
+                        v[i].to_bits(),
+                        "{name} diverged at d={d} i={i}: scalar {} simd {}",
+                        s[i],
+                        v[i]
+                    );
+                }
+            }
+        }
     }
 }

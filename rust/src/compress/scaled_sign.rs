@@ -25,14 +25,21 @@ impl ScaledSign {
 /// (sub-sums per 64 elements, combined per 1024 — the same few-ulp
 /// agreement with the Pallas two-pass reduction), emitting each word to
 /// the caller. Returns the L1 total; scale = total / d.
+///
+/// The sign extraction runs through the dispatched
+/// [`packing::pack_word`] (SIMD with the `simd_kernels` knob on,
+/// bit-identical either way); the L1 sum stays a sequential scalar
+/// chain — its blockwise f32 reduction order is part of the scale's bit
+/// contract and cannot be vectorized without reassociating it. Each
+/// 64-element chunk is in cache for the second pass, so the split scan
+/// costs one extra in-cache sweep, not one extra memory pass.
 fn scan_signs(x: &[f32], mut emit: impl FnMut(usize, u64)) -> f32 {
     let mut total = 0.0f32;
     let mut block = 0.0f32;
     for (wi, chunk) in x.chunks(64).enumerate() {
-        let mut word = 0u64;
+        let word = crate::compress::packing::pack_word(chunk);
         let mut s = 0.0f32;
-        for (j, &v) in chunk.iter().enumerate() {
-            word |= u64::from(v >= 0.0) << j;
+        for &v in chunk {
             s += v.abs();
         }
         emit(wi, word);

@@ -110,6 +110,7 @@ const KNOB_PIN_SHARDS: SwitchKnob = SwitchKnob::new("pin-shards", "CDADAM_PIN_SH
 const KNOB_THREADED: SwitchKnob = SwitchKnob::new("threaded", "CDADAM_THREADED");
 const KNOB_COMPRESS_DOWNLINK: SwitchKnob =
     SwitchKnob::new("compress-downlink", "CDADAM_COMPRESS_DOWNLINK");
+const KNOB_SIMD_KERNELS: SwitchKnob = SwitchKnob::new("simd-kernels", "CDADAM_SIMD_KERNELS");
 const KNOB_PIPELINE_DEPTH: UsizeKnob =
     UsizeKnob::new("pipeline-depth", "CDADAM_PIPELINE_DEPTH", 1);
 
@@ -225,6 +226,19 @@ pub struct ExperimentConfig {
     /// and threaded remain bit-identical to each other. CLI
     /// `--compress-downlink`; env `CDADAM_COMPRESS_DOWNLINK`.
     pub compress_downlink: bool,
+    /// Explicit SIMD kernel floor ([`crate::simd`]): route the sign
+    /// pack/unpack/fold kernels and the fused AMSGrad/Adam/momentum
+    /// update kernels through runtime-dispatched AVX2 (x86_64) / NEON
+    /// (aarch64) bodies, falling back to the scalar references on CPUs
+    /// without the feature. The vector bodies replicate the scalar
+    /// per-element op order exactly (no FMA, no reassociation), so this
+    /// is a throughput knob, never a math knob — trajectories, replica
+    /// hashes, and cum_bits are **bit-identical** on and off (pinned by
+    /// the trajectory golden matrix and a scalar≡SIMD differential fuzz
+    /// oracle). Off (the default) runs the historical scalar kernels
+    /// verbatim. CLI `--simd-kernels`; env `CDADAM_SIMD_KERNELS` flips
+    /// the default so CI can force the vector path suite-wide.
+    pub simd_kernels: bool,
     /// 1-bit Adam warm-up rounds (its T₁).
     pub warmup_rounds: usize,
     /// number of workers n.
@@ -265,6 +279,7 @@ impl Default for ExperimentConfig {
             pipeline_depth: KNOB_PIPELINE_DEPTH.default(),
             pin_shards: KNOB_PIN_SHARDS.default(),
             compress_downlink: KNOB_COMPRESS_DOWNLINK.default(),
+            simd_kernels: KNOB_SIMD_KERNELS.default(),
             warmup_rounds: 0,
             n: 4,
             tau: usize::MAX,
@@ -369,6 +384,9 @@ impl ExperimentConfig {
                 // into ring-buffered wire frames (bit-identical
                 // allocation knob, zero-alloc steady state)
                 cfg.zero_copy_egress = true;
+                // ...on vectorized kernels (bit-identical throughput
+                // knob — the scalar references are the bit-reference)
+                cfg.simd_kernels = true;
             }
             other => bail!("unknown preset {other:?}"),
         }
@@ -397,6 +415,7 @@ impl ExperimentConfig {
         KNOB_PIPELINE_DEPTH.apply(args, &mut self.pipeline_depth)?;
         KNOB_PIN_SHARDS.apply(args, &mut self.pin_shards);
         KNOB_COMPRESS_DOWNLINK.apply(args, &mut self.compress_downlink);
+        KNOB_SIMD_KERNELS.apply(args, &mut self.simd_kernels);
         self.warmup_rounds = args.usize("warmup-rounds", self.warmup_rounds)?;
         self.n = args.usize("n", self.n)?;
         if let Some(t) = args.get("tau") {
@@ -720,6 +739,29 @@ mod tests {
         assert_eq!(cfg.pipeline_depth, 2);
         assert!(cfg.pin_shards);
         assert!(cfg.zero_copy_egress, "large-d preset should exercise the egress writer");
+        assert!(cfg.simd_kernels, "large-d preset should exercise the vector kernels");
+    }
+
+    #[test]
+    fn simd_kernels_flag_parses() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--simd-kernels"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.simd_kernels);
+        // explicit falsy value turns the knob OFF — the way back from
+        // an env-forced default
+        for off in ["false", "0", "no", "off"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.simd_kernels = true;
+            let args = Args::parse(["--simd-kernels", off].iter().map(|s| s.to_string()));
+            cfg.apply_args(&args).unwrap();
+            assert!(!cfg.simd_kernels, "--simd-kernels {off} should disable");
+        }
+        // absent flag leaves the (env-derived) default untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let before = cfg2.simd_kernels;
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.simd_kernels, before);
     }
 
     #[test]

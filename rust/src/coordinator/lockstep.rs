@@ -23,6 +23,9 @@ use crate::util::timer::Timer;
 
 /// Run one experiment in lockstep mode.
 pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
+    // arm (or disarm) the vector kernel floor for this process — a
+    // bit-exact throughput knob, so racing concurrent runs is harmless
+    crate::simd::set_enabled(cfg.simd_kernels);
     let mut s = setup::build(cfg)?;
     let strat = cfg.build_strategy()?;
     let dim = s.dim;

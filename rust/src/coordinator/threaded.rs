@@ -47,6 +47,9 @@ pub fn run_threaded(cfg: &ExperimentConfig) -> Result<RunLog> {
 /// inject faulty engines (worker-death propagation) and lets embedders
 /// drive custom models through the coordinator.
 pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<RunLog> {
+    // arm (or disarm) the vector kernel floor for this process — a
+    // bit-exact throughput knob, so racing concurrent runs is harmless
+    crate::simd::set_enabled(cfg.simd_kernels);
     let strat = cfg.build_strategy()?;
     let dim = s.dim;
     let n = cfg.n;

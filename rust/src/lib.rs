@@ -53,6 +53,7 @@ pub mod metrics;
 pub mod models;
 pub mod optim;
 pub mod runtime;
+pub mod simd;
 pub mod tensor;
 pub mod util;
 

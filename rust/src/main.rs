@@ -57,6 +57,10 @@ fn usage() -> ! {
                                  buffering; bit-identical at any depth)\n\
            --pin-shards          pin each server-fold shard range to a stable\n\
                                  work-pool lane (cache locality; bit-identical)\n\
+           --simd-kernels        runtime-dispatched AVX2/NEON bodies for the\n\
+                                 sign pack/fold and fused optimizer kernels\n\
+                                 (bit-identical to the scalar references; off\n\
+                                 = scalar code verbatim)\n\
            --compress-downlink   EF-compress the server broadcast (compress\n\
                                  update + e_s, fold the residual back) and ship\n\
                                  it as a wire frame; changes the trajectory for\n\

@@ -1,0 +1,221 @@
+//! Runtime SIMD dispatch state for the kernel floor.
+//!
+//! This module owns exactly three things:
+//!
+//! 1. the **one-time CPU feature probe** (`is_x86_feature_detected!` /
+//!    `is_aarch64_feature_detected!`), cached in a [`std::sync::OnceLock`]
+//!    so every kernel call after the first is a plain atomic load;
+//! 2. the **`simd_kernels` knob state** — a process-global switch set
+//!    from config (`simd_kernels` field ⇒ `--simd-kernels` CLI ⇒
+//!    `CDADAM_SIMD_KERNELS` env), off by default: off = the scalar
+//!    kernels run verbatim, exactly the historical code;
+//! 3. a **thread-local force override** ([`with_forced`]) so tests and
+//!    benches can pin one side of a scalar≡SIMD differential without
+//!    racing the global knob.
+//!
+//! The per-kernel function tables live next to their scalar reference
+//! implementations (`compress::packing::kernels()`,
+//! `tensor::kernels()`): each returns `None` when [`active`] resolves to
+//! [`Backend::Scalar`], so the knob-off path is a *direct* call into the
+//! same `#[inline]` scalar bodies the crate has always shipped — no
+//! function-pointer indirection is ever paid unless the knob is on.
+//!
+//! **Bit-exactness contract.** Every vector body in this crate
+//! replicates its scalar reference's per-element operation sequence
+//! exactly (same ops, same order, no FMA contraction, no reassociated
+//! reductions), so `simd_kernels` is a scheduling knob like `--threaded`
+//! or `--zero-copy-ingest`: trajectories are bit-for-bit identical on
+//! and off. The trajectory-golden matrix, the fused≡unfused property
+//! tests, and a dedicated scalar≡SIMD differential fuzz oracle all pin
+//! this.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which vector ISA the dispatched kernels should use. `Scalar` is
+/// always available and is the bit-reference; the arch variants only
+/// exist on their target so a match over `Backend` never carries dead
+/// arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The always-available scalar reference kernels.
+    Scalar,
+    /// AVX2 256-bit kernels (8 × f32 lanes), x86_64 only.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON 128-bit kernels (4 × f32 lanes), aarch64 only.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// One-time CPU probe: the best backend this machine can run,
+/// independent of the knob. Cached — after the first call this is a
+/// single relaxed load inside `OnceLock`.
+pub fn cpu_backend() -> Backend {
+    static PROBE: OnceLock<Backend> = OnceLock::new();
+    *PROBE.get_or_init(probe)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe() -> Backend {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn probe() -> Backend {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn probe() -> Backend {
+    Backend::Scalar
+}
+
+// Global knob: UNSET resolves lazily from the env (the same
+// explicit-truthy contract as every other CDADAM_* switch), so library
+// consumers that never touch a config — benches, unit tests — still
+// honor the CI-forced environment.
+const UNSET: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+static ENABLED: AtomicU8 = AtomicU8::new(UNSET);
+
+thread_local! {
+    static FORCED: Cell<Option<bool>> = const { Cell::new(None) };
+}
+
+/// True only for an explicit truthy value ("1", "true", "yes", "on",
+/// case-insensitive) — mirrors `config::env_flag` so
+/// `CDADAM_SIMD_KERNELS=0` can never enable the knob.
+fn env_truthy(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => ["1", "true", "yes", "on"].iter().any(|t| v.eq_ignore_ascii_case(t)),
+        Err(_) => false,
+    }
+}
+
+/// Set the process-global knob — called by the coordinators from
+/// `cfg.simd_kernels` at run entry. Safe to race: every dispatched
+/// kernel is bit-exact, so a transiently mixed on/off view across
+/// threads cannot change any result.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Resolved knob state: thread-local force, then the global switch,
+/// then (first use only) the `CDADAM_SIMD_KERNELS` env default. Also
+/// gates the non-ISA fast paths (e.g. the little-endian bitmap memcpy)
+/// so knob-off always means "historical code verbatim".
+pub fn knob_on() -> bool {
+    if let Some(f) = FORCED.with(|c| c.get()) {
+        return f;
+    }
+    match ENABLED.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = env_truthy("CDADAM_SIMD_KERNELS");
+            // keep UNSET→resolved sticky, but never overwrite a
+            // concurrent set_enabled
+            let _ = ENABLED.compare_exchange(
+                UNSET,
+                if on { ON } else { OFF },
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            knob_on()
+        }
+    }
+}
+
+/// The backend kernels should dispatch to *right now*: [`cpu_backend`]
+/// when the knob is on, [`Backend::Scalar`] otherwise.
+pub fn active() -> Backend {
+    if knob_on() {
+        cpu_backend()
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Run `f` with the knob forced on/off **on this thread only** — the
+/// lever tests and benches use to compare both sides of a dispatched
+/// kernel without racing the process-global switch. Restores the
+/// previous force state even on panic (drop guard).
+pub fn with_forced<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<bool>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(FORCED.with(|c| c.replace(Some(on))));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// set_enabled → knob_on round-trip, tolerant of the coordinator
+    /// unit tests arming the same process-global knob concurrently
+    /// (they all write the env-default value; retry shrinks the race
+    /// window to nothing).
+    fn settles_to(want: bool) -> bool {
+        for _ in 0..1000 {
+            set_enabled(want);
+            if knob_on() == want {
+                return true;
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn forced_overrides_global_and_restores() {
+        // the force is thread-local, so these never race other tests
+        with_forced(true, || assert!(knob_on()));
+        with_forced(false, || {
+            assert!(!knob_on());
+            assert_eq!(active(), Backend::Scalar);
+            with_forced(true, || {
+                assert!(knob_on());
+                assert_eq!(active(), cpu_backend());
+            });
+            assert!(!knob_on(), "nested force must restore");
+        });
+        assert!(FORCED.with(|c| c.get()).is_none(), "force must clear on exit");
+        // global round-trip, race-tolerantly
+        assert!(settles_to(true));
+        assert!(settles_to(false));
+    }
+
+    #[test]
+    fn forced_restores_on_panic() {
+        let r = std::panic::catch_unwind(|| {
+            with_forced(true, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert!(
+            FORCED.with(|c| c.get()).is_none(),
+            "force must unwind with the panic"
+        );
+    }
+
+    #[test]
+    fn active_scalar_when_off() {
+        with_forced(false, || assert_eq!(active(), Backend::Scalar));
+        // when forced on, active() is whatever the host supports — just
+        // check it equals the probe.
+        with_forced(true, || assert_eq!(active(), cpu_backend()));
+    }
+}

@@ -5,6 +5,28 @@
 //! are written to autovectorize (no bounds checks in the hot bodies via
 //! exact-length zips, accumulation in f32 with f64 only where a *norm*
 //! feeds a decision).
+//!
+//! ## Runtime SIMD dispatch
+//!
+//! The worker-update hot kernels — the fused AMSGrad/Adam/momentum
+//! steps plus `add`/`sub_assign` — dispatch through [`crate::simd`]:
+//! with the `simd_kernels` knob on and a capable CPU (AVX2 / NEON),
+//! explicit vector bodies run; otherwise the scalar references below
+//! run verbatim. The vector bodies replicate the scalar per-element
+//! operation sequence exactly (same mul/add/sub/div/sqrt/max order, no
+//! FMA contraction — `a*b + c` is compiled as a multiply then an add on
+//! both sides), so both are **bit-identical**; the fused≡unfused
+//! property tests below, the `fuzz_simd_differential` oracle, and the
+//! trajectory-golden matrix all pin this.
+//!
+//! Domain note: the only dispatched `max` is AMSGrad's v̂ update. On
+//! AVX2, VMAXPS returns its *second* operand when either input is NaN,
+//! so the body passes v̂ second: a NaN vᵢ yields v̂, exactly like scalar
+//! `vhat.max(vi)` (Rust `f32::max` returns the non-NaN operand; NEON's
+//! FMAX does natively). The remaining edge pairs (NaN v̂, mixed-sign
+//! zeros) are unreachable: v/v̂ start at +0.0 and stay non-negative
+//! (β₂v + (1−β₂)g² with 0 ≤ β₂ ≤ 1; (−0)·(−0) = +0), and v̂ can never
+//! absorb a NaN under either max.
 
 /// y += a * x
 #[inline]
@@ -35,6 +57,14 @@ pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
 #[inline]
 pub fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
     debug_assert!(out.len() == a.len() && a.len() == b.len());
+    if let Some(t) = kernels() {
+        return (t.add)(out, a, b);
+    }
+    scalar_add(out, a, b)
+}
+
+#[inline]
+fn scalar_add(out: &mut [f32], a: &[f32], b: &[f32]) {
     for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
         *o = x + y;
     }
@@ -45,6 +75,14 @@ pub fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
 #[inline]
 pub fn sub_assign(y: &mut [f32], x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
+    if let Some(t) = kernels() {
+        return (t.sub_assign)(y, x);
+    }
+    scalar_sub_assign(y, x)
+}
+
+#[inline]
+fn scalar_sub_assign(y: &mut [f32], x: &[f32]) {
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi -= xi;
     }
@@ -185,6 +223,28 @@ pub fn fused_amsgrad_step(
     debug_assert_eq!(params.len(), m.len());
     debug_assert_eq!(params.len(), v.len());
     debug_assert_eq!(params.len(), vhat.len());
+    if let Some(t) = kernels() {
+        return (t.amsgrad)(params, grad, m, v, vhat, b1, b2, nu, wd, lr);
+    }
+    scalar_fused_amsgrad_step(params, grad, m, v, vhat, b1, b2, nu, wd, lr)
+}
+
+/// The scalar AMSGrad reference body — the bit-reference every vector
+/// backend must reproduce, and the tail kernel at lane boundaries.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn scalar_fused_amsgrad_step(
+    params: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    vhat: &mut [f32],
+    b1: f32,
+    b2: f32,
+    nu: f32,
+    wd: f32,
+    lr: f32,
+) {
     for i in 0..params.len() {
         let g = grad[i];
         let mi = b1 * m[i] + (1.0 - b1) * g;
@@ -224,6 +284,28 @@ pub fn fused_adam_step(
     debug_assert_eq!(params.len(), grad.len());
     debug_assert_eq!(params.len(), m.len());
     debug_assert_eq!(params.len(), v.len());
+    if let Some(t) = kernels() {
+        return (t.adam)(params, grad, m, v, b1, b2, c1, c2, nu, lr, frozen);
+    }
+    scalar_fused_adam_step(params, grad, m, v, b1, b2, c1, c2, nu, lr, frozen)
+}
+
+/// Scalar Adam reference body (bit-reference + lane-boundary tail).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn scalar_fused_adam_step(
+    params: &mut [f32],
+    grad: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    b1: f32,
+    b2: f32,
+    c1: f32,
+    c2: f32,
+    nu: f32,
+    lr: f32,
+    frozen: bool,
+) {
     for i in 0..params.len() {
         let g = grad[i];
         let mi = b1 * m[i] + (1.0 - b1) * g;
@@ -254,6 +336,22 @@ pub fn fused_sgd_momentum_step(
 ) {
     debug_assert_eq!(params.len(), grad.len());
     debug_assert_eq!(params.len(), u.len());
+    if let Some(t) = kernels() {
+        return (t.sgd_momentum)(params, grad, u, mu, wd, lr);
+    }
+    scalar_fused_sgd_momentum_step(params, grad, u, mu, wd, lr)
+}
+
+/// Scalar momentum reference body (bit-reference + lane-boundary tail).
+#[inline]
+fn scalar_fused_sgd_momentum_step(
+    params: &mut [f32],
+    grad: &[f32],
+    u: &mut [f32],
+    mu: f32,
+    wd: f32,
+    lr: f32,
+) {
     for i in 0..params.len() {
         let g = grad[i] + wd * params[i];
         let ui = mu * u[i] + g;
@@ -309,6 +407,514 @@ pub fn sigmoid(z: f64) -> f64 {
     } else {
         let e = z.exp();
         e / (1.0 + e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD dispatch
+// ---------------------------------------------------------------------------
+
+type AddFn = fn(&mut [f32], &[f32], &[f32]);
+type SubAssignFn = fn(&mut [f32], &[f32]);
+type SgdFn = fn(&mut [f32], &[f32], &mut [f32], f32, f32, f32);
+type AmsgradFn =
+    fn(&mut [f32], &[f32], &mut [f32], &mut [f32], &mut [f32], f32, f32, f32, f32, f32);
+type AdamFn =
+    fn(&mut [f32], &[f32], &mut [f32], &mut [f32], f32, f32, f32, f32, f32, f32, bool);
+
+/// Per-kernel function table for one vector backend (see the module
+/// docs for the bit-exactness contract each entry upholds).
+struct TensorKernels {
+    add: AddFn,
+    sub_assign: SubAssignFn,
+    sgd_momentum: SgdFn,
+    amsgrad: AmsgradFn,
+    adam: AdamFn,
+}
+
+/// The active backend's kernel table, or `None` when dispatch resolves
+/// to scalar — the `None` path keeps the historical `#[inline]` scalar
+/// bodies as direct calls (no function-pointer indirection when the
+/// knob is off).
+#[inline]
+fn kernels() -> Option<&'static TensorKernels> {
+    match crate::simd::active() {
+        crate::simd::Backend::Scalar => None,
+        #[cfg(target_arch = "x86_64")]
+        crate::simd::Backend::Avx2 => Some(&avx2::KERNELS),
+        #[cfg(target_arch = "aarch64")]
+        crate::simd::Backend::Neon => Some(&neon::KERNELS),
+    }
+}
+
+/// AVX2 bodies: 8 f32 lanes, scalar tail via the reference kernels.
+/// Every arithmetic op mirrors the scalar body's op order exactly; no
+/// FMA (contraction would change rounding), and `_mm256_sqrt_ps` /
+/// `_mm256_div_ps` are IEEE correctly-rounded, so lanes match scalar
+/// bit-for-bit.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    pub(super) static KERNELS: super::TensorKernels = super::TensorKernels {
+        add,
+        sub_assign,
+        sgd_momentum,
+        amsgrad,
+        adam,
+    };
+
+    // Safe shims: the table is only reachable after the runtime probe
+    // confirmed AVX2 (see `simd::cpu_backend`).
+    fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
+        unsafe { add_impl(out, a, b) }
+    }
+    fn sub_assign(y: &mut [f32], x: &[f32]) {
+        unsafe { sub_assign_impl(y, x) }
+    }
+    fn sgd_momentum(params: &mut [f32], grad: &[f32], u: &mut [f32], mu: f32, wd: f32, lr: f32) {
+        unsafe { sgd_momentum_impl(params, grad, u, mu, wd, lr) }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn amsgrad(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        vhat: &mut [f32],
+        b1: f32,
+        b2: f32,
+        nu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        unsafe { amsgrad_impl(params, grad, m, v, vhat, b1, b2, nu, wd, lr) }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn adam(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        c1: f32,
+        c2: f32,
+        nu: f32,
+        lr: f32,
+        frozen: bool,
+    ) {
+        unsafe { adam_impl(params, grad, m, v, b1, b2, c1, c2, nu, lr, frozen) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_impl(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let full = out.len() / 8 * 8;
+        for i in (0..full).step_by(8) {
+            let s = _mm256_add_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), s);
+        }
+        super::scalar_add(&mut out[full..], &a[full..], &b[full..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sub_assign_impl(y: &mut [f32], x: &[f32]) {
+        let full = y.len() / 8 * 8;
+        for i in (0..full).step_by(8) {
+            let s = _mm256_sub_ps(
+                _mm256_loadu_ps(y.as_ptr().add(i)),
+                _mm256_loadu_ps(x.as_ptr().add(i)),
+            );
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), s);
+        }
+        super::scalar_sub_assign(&mut y[full..], &x[full..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sgd_momentum_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        u: &mut [f32],
+        mu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        let (muv, wdv, lrv) = (_mm256_set1_ps(mu), _mm256_set1_ps(wd), _mm256_set1_ps(lr));
+        let full = params.len() / 8 * 8;
+        for i in (0..full).step_by(8) {
+            let pv = _mm256_loadu_ps(params.as_ptr().add(i));
+            // g = grad + wd*p  (scalar: grad[i] + wd * params[i])
+            let g = _mm256_add_ps(_mm256_loadu_ps(grad.as_ptr().add(i)), _mm256_mul_ps(wdv, pv));
+            // u = mu*u + g
+            let ui = _mm256_add_ps(_mm256_mul_ps(muv, _mm256_loadu_ps(u.as_ptr().add(i))), g);
+            _mm256_storeu_ps(u.as_mut_ptr().add(i), ui);
+            // p -= lr*u
+            _mm256_storeu_ps(params.as_mut_ptr().add(i), _mm256_sub_ps(pv, _mm256_mul_ps(lrv, ui)));
+        }
+        super::scalar_fused_sgd_momentum_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut u[full..],
+            mu,
+            wd,
+            lr,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn amsgrad_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        vhat: &mut [f32],
+        b1: f32,
+        b2: f32,
+        nu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        let b1v = _mm256_set1_ps(b1);
+        let ob1 = _mm256_set1_ps(1.0 - b1);
+        let b2v = _mm256_set1_ps(b2);
+        let ob2 = _mm256_set1_ps(1.0 - b2);
+        let nuv = _mm256_set1_ps(nu);
+        let lrv = _mm256_set1_ps(lr);
+        // scalar `p -= lr * wd * p` associates as (lr*wd)*p
+        let lrwd = _mm256_set1_ps(lr * wd);
+        let full = params.len() / 8 * 8;
+        for i in (0..full).step_by(8) {
+            let g = _mm256_loadu_ps(grad.as_ptr().add(i));
+            // m = b1*m + (1-b1)*g
+            let mi = _mm256_add_ps(
+                _mm256_mul_ps(b1v, _mm256_loadu_ps(m.as_ptr().add(i))),
+                _mm256_mul_ps(ob1, g),
+            );
+            // v = b2*v + (1-b2)*g*g  (scalar associates ((1-b2)*g)*g)
+            let vi = _mm256_add_ps(
+                _mm256_mul_ps(b2v, _mm256_loadu_ps(v.as_ptr().add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(ob2, g), g),
+            );
+            // max_ps returns the SECOND operand when either is NaN, so
+            // vhat must be second to match scalar `vhat.max(vi)` (Rust
+            // f32::max returns the non-NaN operand) on a NaN vi.
+            let vh = _mm256_max_ps(vi, _mm256_loadu_ps(vhat.as_ptr().add(i)));
+            _mm256_storeu_ps(m.as_mut_ptr().add(i), mi);
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), vi);
+            _mm256_storeu_ps(vhat.as_mut_ptr().add(i), vh);
+            let mut p = _mm256_loadu_ps(params.as_ptr().add(i));
+            if wd != 0.0 {
+                p = _mm256_sub_ps(p, _mm256_mul_ps(lrwd, p));
+            }
+            // p - (lr*m)/sqrt(vh+nu)
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, mi), _mm256_sqrt_ps(_mm256_add_ps(vh, nuv)));
+            _mm256_storeu_ps(params.as_mut_ptr().add(i), _mm256_sub_ps(p, step));
+        }
+        super::scalar_fused_amsgrad_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut m[full..],
+            &mut v[full..],
+            &mut vhat[full..],
+            b1,
+            b2,
+            nu,
+            wd,
+            lr,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn adam_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        c1: f32,
+        c2: f32,
+        nu: f32,
+        lr: f32,
+        frozen: bool,
+    ) {
+        let b1v = _mm256_set1_ps(b1);
+        let ob1 = _mm256_set1_ps(1.0 - b1);
+        let b2v = _mm256_set1_ps(b2);
+        let ob2 = _mm256_set1_ps(1.0 - b2);
+        let c1v = _mm256_set1_ps(c1);
+        let c2v = _mm256_set1_ps(c2);
+        let nuv = _mm256_set1_ps(nu);
+        let lrv = _mm256_set1_ps(lr);
+        let full = params.len() / 8 * 8;
+        for i in (0..full).step_by(8) {
+            let g = _mm256_loadu_ps(grad.as_ptr().add(i));
+            let mi = _mm256_add_ps(
+                _mm256_mul_ps(b1v, _mm256_loadu_ps(m.as_ptr().add(i))),
+                _mm256_mul_ps(ob1, g),
+            );
+            _mm256_storeu_ps(m.as_mut_ptr().add(i), mi);
+            let vi = if frozen {
+                _mm256_loadu_ps(v.as_ptr().add(i))
+            } else {
+                let vi = _mm256_add_ps(
+                    _mm256_mul_ps(b2v, _mm256_loadu_ps(v.as_ptr().add(i))),
+                    _mm256_mul_ps(_mm256_mul_ps(ob2, g), g),
+                );
+                _mm256_storeu_ps(v.as_mut_ptr().add(i), vi);
+                vi
+            };
+            let mhat = _mm256_div_ps(mi, c1v);
+            let vhat = _mm256_div_ps(vi, c2v);
+            // p -= (lr*mhat)/(sqrt(vhat)+nu)
+            let step = _mm256_div_ps(
+                _mm256_mul_ps(lrv, mhat),
+                _mm256_add_ps(_mm256_sqrt_ps(vhat), nuv),
+            );
+            let p = _mm256_loadu_ps(params.as_ptr().add(i));
+            _mm256_storeu_ps(params.as_mut_ptr().add(i), _mm256_sub_ps(p, step));
+        }
+        super::scalar_fused_adam_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut m[full..],
+            &mut v[full..],
+            b1,
+            b2,
+            c1,
+            c2,
+            nu,
+            lr,
+            frozen,
+        );
+    }
+}
+
+/// NEON bodies: 4 f32 lanes, scalar tail via the reference kernels.
+/// Same bit-exactness construction as the AVX2 module (FDIV/FSQRT are
+/// correctly rounded; no FMA contraction).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub(super) static KERNELS: super::TensorKernels = super::TensorKernels {
+        add,
+        sub_assign,
+        sgd_momentum,
+        amsgrad,
+        adam,
+    };
+
+    // Safe shims — reachable only after the runtime NEON probe.
+    fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
+        unsafe { add_impl(out, a, b) }
+    }
+    fn sub_assign(y: &mut [f32], x: &[f32]) {
+        unsafe { sub_assign_impl(y, x) }
+    }
+    fn sgd_momentum(params: &mut [f32], grad: &[f32], u: &mut [f32], mu: f32, wd: f32, lr: f32) {
+        unsafe { sgd_momentum_impl(params, grad, u, mu, wd, lr) }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn amsgrad(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        vhat: &mut [f32],
+        b1: f32,
+        b2: f32,
+        nu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        unsafe { amsgrad_impl(params, grad, m, v, vhat, b1, b2, nu, wd, lr) }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn adam(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        c1: f32,
+        c2: f32,
+        nu: f32,
+        lr: f32,
+        frozen: bool,
+    ) {
+        unsafe { adam_impl(params, grad, m, v, b1, b2, c1, c2, nu, lr, frozen) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_impl(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let full = out.len() / 4 * 4;
+        for i in (0..full).step_by(4) {
+            vst1q_f32(
+                out.as_mut_ptr().add(i),
+                vaddq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))),
+            );
+        }
+        super::scalar_add(&mut out[full..], &a[full..], &b[full..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sub_assign_impl(y: &mut [f32], x: &[f32]) {
+        let full = y.len() / 4 * 4;
+        for i in (0..full).step_by(4) {
+            vst1q_f32(
+                y.as_mut_ptr().add(i),
+                vsubq_f32(vld1q_f32(y.as_ptr().add(i)), vld1q_f32(x.as_ptr().add(i))),
+            );
+        }
+        super::scalar_sub_assign(&mut y[full..], &x[full..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sgd_momentum_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        u: &mut [f32],
+        mu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        let (muv, wdv, lrv) = (vdupq_n_f32(mu), vdupq_n_f32(wd), vdupq_n_f32(lr));
+        let full = params.len() / 4 * 4;
+        for i in (0..full).step_by(4) {
+            let pv = vld1q_f32(params.as_ptr().add(i));
+            let g = vaddq_f32(vld1q_f32(grad.as_ptr().add(i)), vmulq_f32(wdv, pv));
+            let ui = vaddq_f32(vmulq_f32(muv, vld1q_f32(u.as_ptr().add(i))), g);
+            vst1q_f32(u.as_mut_ptr().add(i), ui);
+            vst1q_f32(params.as_mut_ptr().add(i), vsubq_f32(pv, vmulq_f32(lrv, ui)));
+        }
+        super::scalar_fused_sgd_momentum_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut u[full..],
+            mu,
+            wd,
+            lr,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn amsgrad_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        vhat: &mut [f32],
+        b1: f32,
+        b2: f32,
+        nu: f32,
+        wd: f32,
+        lr: f32,
+    ) {
+        let b1v = vdupq_n_f32(b1);
+        let ob1 = vdupq_n_f32(1.0 - b1);
+        let b2v = vdupq_n_f32(b2);
+        let ob2 = vdupq_n_f32(1.0 - b2);
+        let nuv = vdupq_n_f32(nu);
+        let lrv = vdupq_n_f32(lr);
+        let lrwd = vdupq_n_f32(lr * wd);
+        let full = params.len() / 4 * 4;
+        for i in (0..full).step_by(4) {
+            let g = vld1q_f32(grad.as_ptr().add(i));
+            let mi = vaddq_f32(vmulq_f32(b1v, vld1q_f32(m.as_ptr().add(i))), vmulq_f32(ob1, g));
+            let vi = vaddq_f32(
+                vmulq_f32(b2v, vld1q_f32(v.as_ptr().add(i))),
+                vmulq_f32(vmulq_f32(ob2, g), g),
+            );
+            let vh = vmaxq_f32(vld1q_f32(vhat.as_ptr().add(i)), vi);
+            vst1q_f32(m.as_mut_ptr().add(i), mi);
+            vst1q_f32(v.as_mut_ptr().add(i), vi);
+            vst1q_f32(vhat.as_mut_ptr().add(i), vh);
+            let mut p = vld1q_f32(params.as_ptr().add(i));
+            if wd != 0.0 {
+                p = vsubq_f32(p, vmulq_f32(lrwd, p));
+            }
+            let step = vdivq_f32(vmulq_f32(lrv, mi), vsqrtq_f32(vaddq_f32(vh, nuv)));
+            vst1q_f32(params.as_mut_ptr().add(i), vsubq_f32(p, step));
+        }
+        super::scalar_fused_amsgrad_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut m[full..],
+            &mut v[full..],
+            &mut vhat[full..],
+            b1,
+            b2,
+            nu,
+            wd,
+            lr,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    unsafe fn adam_impl(
+        params: &mut [f32],
+        grad: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        b1: f32,
+        b2: f32,
+        c1: f32,
+        c2: f32,
+        nu: f32,
+        lr: f32,
+        frozen: bool,
+    ) {
+        let b1v = vdupq_n_f32(b1);
+        let ob1 = vdupq_n_f32(1.0 - b1);
+        let b2v = vdupq_n_f32(b2);
+        let ob2 = vdupq_n_f32(1.0 - b2);
+        let c1v = vdupq_n_f32(c1);
+        let c2v = vdupq_n_f32(c2);
+        let nuv = vdupq_n_f32(nu);
+        let lrv = vdupq_n_f32(lr);
+        let full = params.len() / 4 * 4;
+        for i in (0..full).step_by(4) {
+            let g = vld1q_f32(grad.as_ptr().add(i));
+            let mi = vaddq_f32(vmulq_f32(b1v, vld1q_f32(m.as_ptr().add(i))), vmulq_f32(ob1, g));
+            vst1q_f32(m.as_mut_ptr().add(i), mi);
+            let vi = if frozen {
+                vld1q_f32(v.as_ptr().add(i))
+            } else {
+                let vi = vaddq_f32(
+                    vmulq_f32(b2v, vld1q_f32(v.as_ptr().add(i))),
+                    vmulq_f32(vmulq_f32(ob2, g), g),
+                );
+                vst1q_f32(v.as_mut_ptr().add(i), vi);
+                vi
+            };
+            let mhat = vdivq_f32(mi, c1v);
+            let vhat = vdivq_f32(vi, c2v);
+            let step = vdivq_f32(vmulq_f32(lrv, mhat), vaddq_f32(vsqrtq_f32(vhat), nuv));
+            let p = vld1q_f32(params.as_ptr().add(i));
+            vst1q_f32(params.as_mut_ptr().add(i), vsubq_f32(p, step));
+        }
+        super::scalar_fused_adam_step(
+            &mut params[full..],
+            &grad[full..],
+            &mut m[full..],
+            &mut v[full..],
+            b1,
+            b2,
+            c1,
+            c2,
+            nu,
+            lr,
+            frozen,
+        );
     }
 }
 

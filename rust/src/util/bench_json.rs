@@ -1,0 +1,140 @@
+//! Machine-readable bench output: read-merge-write of `BENCH_kernels.json`.
+//!
+//! The `harness = false` bench binaries print human tables; this sink
+//! additionally collects every row as a JSON object and merges them
+//! into one repo-root file keyed by bench name, so perf tracking (the
+//! §Perf loop in EXPERIMENTS.md, CI artifacts) can diff runs without
+//! scraping stdout. Each bench owns its top-level key — re-running one
+//! bench rewrites only its own entry and leaves the others' rows
+//! untouched (read-merge-write, not truncate).
+//!
+//! Layout:
+//!
+//! ```json
+//! {
+//!   "kernel_throughput": {
+//!     "meta": { "d": 4000000, "backend": "Avx2" },
+//!     "rows": [ { "kernel": "pack_signs", "mode": "simd", "ms": 0.41, ... } ]
+//!   },
+//!   "shard_throughput": { ... }
+//! }
+//! ```
+//!
+//! The file lands at `<repo root>/BENCH_kernels.json` (one level above
+//! the crate, next to `BENCH.md`); `CDADAM_BENCH_JSON` overrides the
+//! path for CI artifact staging.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Where bench rows land: `$CDADAM_BENCH_JSON` if set and non-empty,
+/// else `BENCH_kernels.json` at the repo root.
+pub fn default_path() -> PathBuf {
+    match std::env::var("CDADAM_BENCH_JSON") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json")),
+    }
+}
+
+/// Row collector for one bench binary. Build it at the top of `main`,
+/// `push` a row per printed table line, `flush` once at the end.
+pub struct BenchSink {
+    bench: String,
+    meta: BTreeMap<String, Json>,
+    rows: Vec<Json>,
+}
+
+impl BenchSink {
+    pub fn new(bench: &str) -> Self {
+        BenchSink { bench: bench.to_string(), meta: BTreeMap::new(), rows: Vec::new() }
+    }
+
+    /// Attach a bench-level fact (dimension, detected SIMD backend, …).
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    /// Append one row built from field pairs.
+    pub fn row(&mut self, fields: &[(&str, Json)]) {
+        let mut obj = BTreeMap::new();
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        self.rows.push(Json::Obj(obj));
+    }
+
+    /// Append one pre-built row (normally a `Json::Obj`).
+    pub fn push(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Merge this bench's entry into the default JSON file.
+    pub fn flush(&self) -> Result<PathBuf> {
+        let path = default_path();
+        self.flush_to(&path)?;
+        Ok(path)
+    }
+
+    /// Merge this bench's entry into `path`: existing entries for other
+    /// benches survive, this bench's entry is replaced wholesale. An
+    /// unreadable or unparsable existing file is treated as empty.
+    pub fn flush_to(&self, path: &Path) -> Result<()> {
+        let mut top = match std::fs::read_to_string(path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(Json::Obj(m)) => m,
+                _ => BTreeMap::new(),
+            },
+            Err(_) => BTreeMap::new(),
+        };
+        let mut entry = BTreeMap::new();
+        entry.insert("meta".to_string(), Json::Obj(self.meta.clone()));
+        entry.insert("rows".to_string(), Json::Arr(self.rows.clone()));
+        top.insert(self.bench.clone(), Json::Obj(entry));
+        std::fs::write(path, Json::Obj(top).to_string())
+            .with_context(|| format!("writing bench json {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_preserves_other_benches() {
+        let path = std::env::temp_dir()
+            .join(format!("cdadam_bench_json_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = BenchSink::new("alpha");
+        a.meta("d", Json::Num(8.0));
+        a.row(&[("kernel", Json::Str("pack".into())), ("ms", Json::Num(1.5))]);
+        a.flush_to(&path).unwrap();
+
+        let mut b = BenchSink::new("beta");
+        b.row(&[("kernel", Json::Str("fold".into()))]);
+        b.flush_to(&path).unwrap();
+
+        let top = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let alpha = top.req("alpha").unwrap();
+        assert_eq!(alpha.req("meta").unwrap().req("d").unwrap().as_usize().unwrap(), 8);
+        let rows = alpha.req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].req("kernel").unwrap().as_str().unwrap(), "pack");
+        assert!(top.get("beta").is_some(), "second bench entry missing");
+
+        // re-flushing alpha replaces its entry but keeps beta
+        let mut a2 = BenchSink::new("alpha");
+        a2.row(&[("kernel", Json::Str("pack2".into()))]);
+        a2.flush_to(&path).unwrap();
+        let top = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = top.req("alpha").unwrap().req("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("kernel").unwrap().as_str().unwrap(), "pack2");
+        assert!(top.get("beta").is_some(), "merge dropped the other bench");
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

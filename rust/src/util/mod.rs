@@ -6,6 +6,7 @@
 //! DESIGN.md §2, substitution table).
 
 pub mod args;
+pub mod bench_json;
 pub mod json;
 pub mod prop;
 pub mod rng;

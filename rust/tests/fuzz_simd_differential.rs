@@ -1,0 +1,210 @@
+//! Differential fuzz oracle: scalar vs SIMD bit-equality.
+//!
+//! Every kernel routed through [`cdadam::simd`] is run twice per random
+//! case — once with the knob forced off (scalar reference, the
+//! historical code verbatim) and once forced on (the runtime-detected
+//! vector backend) — and the outputs are compared **bitwise**
+//! (`f32::to_bits`), not approximately. On hosts without AVX2/NEON the
+//! forced-on run degrades to scalar and the oracle is vacuous there;
+//! CI pins it on an AVX2 runner.
+//!
+//! Test fns are named `fuzz_*` so the CI fuzz-smoke filter
+//! (`cargo test --release fuzz_`) picks them up, and the iteration
+//! budget follows the shared `CDADAM_FUZZ_ITERS` convention.
+
+use cdadam::compress::packing;
+use cdadam::simd::with_forced;
+use cdadam::tensor;
+use cdadam::util::rng::Rng;
+
+fn fuzz_iters() -> usize {
+    std::env::var("CDADAM_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
+}
+
+/// Random gradient-like vector with sign-edge values (±0.0, denormals,
+/// NaN, ±∞) planted at random positions — the packing kernels must
+/// treat all of them exactly like the scalar `v >= 0.0` reference.
+fn edgy_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; d];
+    rng.fill_normal(&mut x, 1.0);
+    const EDGES: &[f32] = &[
+        0.0,
+        -0.0,
+        1.0e-41,
+        -1.0e-41,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+    ];
+    let plants = (d / 4).max(1);
+    for _ in 0..plants {
+        x[rng.below(d)] = EDGES[rng.below(EDGES.len())];
+    }
+    x
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str, d: usize) {
+    assert_eq!(a.len(), b.len(), "{what} d={d}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what} d={d} i={i}: scalar {x:?} != simd {y:?}"
+        );
+    }
+}
+
+/// All sign pack/unpack/fold kernels (word- and byte-sourced twins) plus
+/// the word/byte conversion fast paths, on edge-heavy random inputs.
+#[test]
+fn fuzz_packing_scalar_simd_differential() {
+    let mut rng = Rng::new(0xD1FF_5109);
+    // `_into` scratch reused across every iteration — the oracle also
+    // proves the fast paths fully overwrite stale buffer contents.
+    let mut bytes_scratch = vec![0xA5u8; 7];
+    let mut words_scratch = vec![u64::MAX; 3];
+    for it in 0..fuzz_iters() {
+        let d = 1 + rng.below(5000);
+        let x = edgy_vec(&mut rng, d);
+        let scale = (rng.f32() + 0.25) * if rng.below(2) == 0 { 1.0 } else { 1.0e-3 };
+        let mut e = vec![0.0f32; d];
+        rng.fill_normal(&mut e, 2.0);
+        let start = rng.below(d.max(1));
+
+        let run = |on: bool| {
+            with_forced(on, || {
+                let bits = packing::pack_signs(&x);
+                let bytes = packing::words_to_bytes(&bits, d);
+                let word = packing::pack_word(&x[..x.len().min(64)]);
+                let mut unpacked = vec![0.0f32; d];
+                packing::unpack_signs_scaled(&bits, scale, &mut unpacked);
+                let mut unpacked_b = vec![0.0f32; d];
+                packing::unpack_signs_scaled_bytes(&bytes, scale, &mut unpacked_b);
+                let mut added = e.clone();
+                packing::add_signs_scaled(&bits, scale, &mut added);
+                let mut added_r = e[start..].to_vec();
+                packing::add_signs_scaled_range(&bits, scale, start, &mut added_r);
+                let mut added_rb = e[start..].to_vec();
+                packing::add_signs_scaled_range_bytes(&bytes, scale, start, &mut added_rb);
+                let mut resid = vec![0.0f32; d];
+                packing::residual_signs_scaled(&bits, scale, &e, &mut resid);
+                let mut resid_b = vec![0.0f32; d];
+                packing::residual_signs_scaled_bytes(&bytes, scale, &e, &mut resid_b);
+                (bits, bytes, word, unpacked, unpacked_b, added, added_r, added_rb, resid, resid_b)
+            })
+        };
+        let s = run(false);
+        let v = run(true);
+
+        assert_eq!(s.0, v.0, "pack_signs it={it} d={d}");
+        assert_eq!(s.1, v.1, "words_to_bytes it={it} d={d}");
+        assert_eq!(s.2, v.2, "pack_word it={it} d={d}");
+        assert_bits_eq(&s.3, &v.3, "unpack_signs_scaled", d);
+        assert_bits_eq(&s.4, &v.4, "unpack_signs_scaled_bytes", d);
+        assert_bits_eq(&s.5, &v.5, "add_signs_scaled", d);
+        assert_bits_eq(&s.6, &v.6, "add_signs_scaled_range", d);
+        assert_bits_eq(&s.7, &v.7, "add_signs_scaled_range_bytes", d);
+        assert_bits_eq(&s.8, &v.8, "residual_signs_scaled", d);
+        assert_bits_eq(&s.9, &v.9, "residual_signs_scaled_bytes", d);
+
+        // conversion fast paths, reusing the same scratch every round
+        let (bits, bytes) = (&s.0, &s.1);
+        with_forced(true, || {
+            packing::words_to_bytes_into(bits, d, &mut bytes_scratch);
+            packing::bytes_to_words_into(bytes, d, &mut words_scratch);
+        });
+        assert_eq!(&bytes_scratch, bytes, "words_to_bytes_into it={it} d={d}");
+        assert_eq!(&words_scratch, bits, "bytes_to_words_into it={it} d={d}");
+    }
+}
+
+/// The fused optimizer kernels and elementwise add/sub_assign: two
+/// bit-identical state streams stepped side by side for several rounds
+/// (scalar vs forced-SIMD), with weight decay toggled and 1-bit Adam's
+/// frozen-variance mode flipped mid-stream.
+#[test]
+fn fuzz_tensor_scalar_simd_differential() {
+    let mut rng = Rng::new(0x0515_0D07);
+    for it in 0..fuzz_iters() {
+        let d = 1 + rng.below(3000);
+        let wd = if rng.below(2) == 0 { 0.0 } else { 5.0e-4 };
+        let (b1, b2, nu, lr, mu) = (0.9f32, 0.999f32, 1.0e-8f32, 1.0e-2f32, 0.9f32);
+
+        // amsgrad stream
+        let mut p = vec![0.0f32; d];
+        rng.fill_normal(&mut p, 0.5);
+        let mut am_s = (p.clone(), vec![0.0f32; d], vec![0.0f32; d], vec![0.0f32; d]);
+        let mut am_v = am_s.clone();
+        // adam stream
+        let mut ad_s = (p.clone(), vec![0.0f32; d], vec![0.0f32; d]);
+        let mut ad_v = ad_s.clone();
+        // sgd stream
+        let mut sg_s = (p.clone(), vec![0.0f32; d]);
+        let mut sg_v = sg_s.clone();
+
+        let rounds = 1 + rng.below(4);
+        for t in 1..=rounds {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            let frozen = rng.below(2) == 0;
+            let (c1, c2) = (1.0 - b1.powi(t as i32), 1.0 - b2.powi(t as i32));
+
+            with_forced(false, || {
+                tensor::fused_amsgrad_step(
+                    &mut am_s.0, &g, &mut am_s.1, &mut am_s.2, &mut am_s.3, b1, b2, nu, wd, lr,
+                );
+                tensor::fused_adam_step(
+                    &mut ad_s.0, &g, &mut ad_s.1, &mut ad_s.2, b1, b2, c1, c2, nu, lr, frozen,
+                );
+                tensor::fused_sgd_momentum_step(&mut sg_s.0, &g, &mut sg_s.1, mu, wd, lr);
+            });
+            with_forced(true, || {
+                tensor::fused_amsgrad_step(
+                    &mut am_v.0, &g, &mut am_v.1, &mut am_v.2, &mut am_v.3, b1, b2, nu, wd, lr,
+                );
+                tensor::fused_adam_step(
+                    &mut ad_v.0, &g, &mut ad_v.1, &mut ad_v.2, b1, b2, c1, c2, nu, lr, frozen,
+                );
+                tensor::fused_sgd_momentum_step(&mut sg_v.0, &g, &mut sg_v.1, mu, wd, lr);
+            });
+        }
+        for (name, s, v) in [
+            ("amsgrad params", &am_s.0, &am_v.0),
+            ("amsgrad m", &am_s.1, &am_v.1),
+            ("amsgrad v", &am_s.2, &am_v.2),
+            ("amsgrad vhat", &am_s.3, &am_v.3),
+            ("adam params", &ad_s.0, &ad_v.0),
+            ("adam m", &ad_s.1, &ad_v.1),
+            ("adam v", &ad_s.2, &ad_v.2),
+            ("sgd params", &sg_s.0, &sg_v.0),
+            ("sgd u", &sg_s.1, &sg_v.1),
+        ] {
+            assert_bits_eq(s, v, name, d);
+            let _ = it;
+        }
+
+        // elementwise add / sub_assign on the same inputs
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let (sum_s, dif_s) = with_forced(false, || {
+            let mut out = vec![0.0f32; d];
+            tensor::add(&mut out, &a, &b);
+            let mut y = a.clone();
+            tensor::sub_assign(&mut y, &b);
+            (out, y)
+        });
+        let (sum_v, dif_v) = with_forced(true, || {
+            let mut out = vec![0.0f32; d];
+            tensor::add(&mut out, &a, &b);
+            let mut y = a.clone();
+            tensor::sub_assign(&mut y, &b);
+            (out, y)
+        });
+        assert_bits_eq(&sum_s, &sum_v, "add", d);
+        assert_bits_eq(&dif_s, &dif_v, "sub_assign", d);
+    }
+}

@@ -9,6 +9,12 @@
 //!     × {server_threads 0, 4} × {pipeline_depth 1, 2}
 //!     × {pin_shards off, on}
 //!
+//! plus, per downlink setting, two `simd_kernels = true` runs (lockstep
+//! baseline shape, and the threaded zero-copy/parallel-fold shape that
+//! exercises the wire-byte kernels) — the SIMD knob is a pure
+//! throughput knob, so its digests must equal the scalar baseline
+//! exactly rather than pin fixture rows of their own.
+//!
 //! `compress_downlink` is the one *math* knob in the matrix: it changes
 //! the trajectory for dense-broadcast strategies (their downlink gets
 //! EF-compressed), so each setting pins its own digest — fixture rows
@@ -88,6 +94,7 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.pipeline_depth = 1;
     cfg.pin_shards = false;
     cfg.compress_downlink = false;
+    cfg.simd_kernels = false;
     cfg
 }
 
@@ -209,6 +216,35 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
                         }
                     }
                 }
+            }
+
+            // SIMD kernel floor: bit-exact by contract, so it joins the
+            // matrix as two digest-equality runs instead of doubling it —
+            // the lockstep baseline shape, and the threaded shape whose
+            // zero-copy ingest + parallel fold routes the wire-*byte*
+            // kernel twins and range folds through the vector backend.
+            {
+                let mut cfg = base_cfg(strategy);
+                cfg.compress_downlink = compress_downlink;
+                cfg.simd_kernels = true;
+                assert_eq!(
+                    digest(&run_lockstep(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged with simd_kernels on \
+                     (lockstep, compress_downlink={compress_downlink})"
+                );
+                cfg.threaded = true;
+                cfg.zero_copy_ingest = true;
+                cfg.zero_copy_egress = true;
+                cfg.server_threads = 4;
+                cfg.server_min_parallel_dim = 1;
+                cfg.pipeline_depth = 2;
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged with simd_kernels on \
+                     (threaded zero-copy, compress_downlink={compress_downlink})"
+                );
             }
 
             let key = fixture_key(strategy, compress_downlink);
