@@ -27,6 +27,8 @@ use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
 use cdadam::config::ExperimentConfig;
 use cdadam::coordinator::pipeline::PipelineServer;
 use cdadam::util::args::Args;
+use cdadam::util::bench_json::BenchSink;
+use cdadam::util::json::Json;
 use cdadam::util::timer::Timer;
 
 /// FNV-1a over a byte stream (same mix the golden tests use).
@@ -122,6 +124,12 @@ fn main() {
 
     println!("### pipeline_throughput (d = {d}, shard = {shard}, {rounds} rounds, wall clock)");
 
+    // machine-readable mirror of every table row (see util::bench_json)
+    let mut sink = BenchSink::new("pipeline_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("rounds", Json::Num(rounds as f64));
+
     for &n in &ns {
         println!(
             "\n--- n = {n} producers ---\n{:<44} {:>10}  {:>11}  {:>7}",
@@ -157,7 +165,21 @@ fn main() {
                 "{label:<44} {ms:>8.1} ms  {:>8.1} ms  {speedup}",
                 ms / rounds as f64
             );
+            sink.row(&[
+                ("n", Json::Num(n as f64)),
+                ("mode", Json::Str(label.to_string())),
+                ("depth", Json::Num(depth as f64)),
+                ("server_threads", Json::Num(threads as f64)),
+                ("pin_shards", Json::Bool(pin)),
+                ("total_ms", Json::Num(ms)),
+                ("per_round_ms", Json::Num(ms / rounds as f64)),
+                ("speedup", Json::Num(base_ms.unwrap_or(ms) / ms)),
+            ]);
         }
     }
     println!("\nsanity: downlink streams bit-identical across all modes ✓");
+    match sink.flush() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
 }

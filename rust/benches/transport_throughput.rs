@@ -1,0 +1,170 @@
+//! Memory vs socket transport round time: the same pipelined server +
+//! n round-synchronous producers doing real compression work, with the
+//! links switched between in-process channels and loopback TCP streams
+//! (the length-prefixed codec in `comm::socket`). Default scale is the
+//! tentpole scenario: d = 2²⁰, n = 8.
+//!
+//! Transport is a *pure* knob: worker 0 digests every downlink it
+//! receives and the run asserts memory and socket produce bit-identical
+//! broadcast streams — the socket columns measure serialization +
+//! syscall + loopback cost, nothing mathematical.
+//!
+//! Rows land in `BENCH_transport.json` at the repo root (sibling of
+//! `BENCH_kernels.json`, same `CDADAM_BENCH_JSON` directory override).
+//!
+//! ```bash
+//! cargo bench --bench transport_throughput            # d = 2^20, n = 8
+//! cargo bench --bench transport_throughput -- --rounds 2 --quick
+//! ```
+
+use cdadam::comm::socket::{socket_topology, NetProfile};
+use cdadam::comm::{topology, wire, DownlinkPayload, UplinkFrame};
+use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::pipeline::PipelineServer;
+use cdadam::util::args::Args;
+use cdadam::util::bench_json::{sibling_path, BenchSink};
+use cdadam::util::json::Json;
+use cdadam::util::timer::Timer;
+
+/// FNV-1a over a byte stream (same mix the golden tests use).
+fn mix_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// One full run over the chosen transport. Returns (total wall ms,
+/// digest of worker 0's downlink byte stream).
+fn run_transport(
+    socket: bool,
+    depth: usize,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    shard: usize,
+) -> (f64, u64) {
+    let mut cfg = ExperimentConfig::preset("quickstart").expect("preset");
+    cfg.strategy = "naive".into();
+    cfg.shard_size = shard;
+    cfg.compress_threads = 2;
+    let strat = cfg.build_strategy().expect("strategy");
+    let mut server = strat.make_server(d, n);
+
+    let (workers, servers, _um, _dm) = if socket {
+        socket_topology(n, &NetProfile::default()).expect("socket topology")
+    } else {
+        topology(n)
+    };
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| {
+            std::thread::spawn(move || {
+                let mut comp = ShardedCompressor::new(Box::new(ScaledSign::new()), shard, 2)
+                    .fork_stream(i as u64);
+                let mut g = vec![0.0f32; d];
+                let mut digest = 0xcbf2_9ce4_8422_2325u64;
+                for t in 1..=rounds {
+                    for (j, gj) in g.iter_mut().enumerate() {
+                        *gj = ((i * 31 + j) % 97) as f32 * 0.13 - 6.0 + t as f32 * 0.01;
+                    }
+                    let c = comp.compress(&g);
+                    let fb = wire::encode_frame(t as u64, i as u32, &c).expect("encode");
+                    link.up.send(UplinkFrame::Bytes(fb)).expect("uplink closed");
+                    let down = link.down.recv().expect("downlink closed");
+                    assert_eq!(down.round, t as u64);
+                    if i == 0 {
+                        // digest the broadcast *bytes*: the in-memory
+                        // Shared payload is encoded here with the exact
+                        // codec the socket sender uses on the wire, so
+                        // the streams are comparable bit-for-bit
+                        match &down.payload {
+                            DownlinkPayload::Shared(m) => {
+                                let bytes =
+                                    wire::encode_parts(t as u64, 0, m).expect("encode down");
+                                mix_bytes(&mut digest, &bytes);
+                            }
+                            DownlinkPayload::Frame(fb) => mix_bytes(&mut digest, &fb.bytes),
+                        }
+                    }
+                }
+                digest
+            })
+        })
+        .collect();
+
+    let timer = Timer::start();
+    PipelineServer::new(rounds, depth).run(server.as_mut(), servers).expect("server loop");
+    let ms = timer.elapsed_ms();
+
+    let mut digest = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("producer panicked");
+        if i == 0 {
+            digest = got;
+        }
+    }
+    (ms, digest)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let d: usize = args.usize("d", 1 << 20).unwrap();
+    let n: usize = args.usize("n", 8).unwrap();
+    let shard: usize = args.usize("shard", 65_536).unwrap();
+    let rounds: usize = args.usize("rounds", if args.flag("quick") { 2 } else { 4 }).unwrap();
+
+    println!("### transport_throughput (d = {d}, n = {n}, shard = {shard}, {rounds} rounds)");
+    println!("{:<36} {:>10}  {:>11}  {:>9}", "transport", "total", "per round", "vs memory");
+
+    let mut sink = BenchSink::new("transport_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("n", Json::Num(n as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("rounds", Json::Num(rounds as f64));
+
+    // (label, socket, depth)
+    let modes: [(&str, bool, usize); 4] = [
+        ("memory (depth 1)", false, 1),
+        ("socket (depth 1)", true, 1),
+        ("memory (depth 2)", false, 2),
+        ("socket (depth 2)", true, 2),
+    ];
+    let mut base_ms = None;
+    let mut base_digest = None;
+    for (label, socket, depth) in modes {
+        let (ms, digest) = run_transport(socket, depth, d, n, rounds, shard);
+        // acceptance: the transport must never change the broadcast
+        // stream worker 0 observed
+        match base_digest {
+            None => base_digest = Some(digest),
+            Some(want) => {
+                assert_eq!(digest, want, "{label}: transport changed the downlink stream")
+            }
+        }
+        let rel = match base_ms {
+            None => {
+                base_ms = Some(ms);
+                "    1.00x".to_string()
+            }
+            Some(b) => format!("{:>8.2}x", ms / b),
+        };
+        println!("{label:<36} {ms:>8.1} ms  {:>8.1} ms  {rel}", ms / rounds as f64);
+        sink.row(&[
+            ("transport", Json::Str(if socket { "socket".into() } else { "memory".into() })),
+            ("depth", Json::Num(depth as f64)),
+            ("total_ms", Json::Num(ms)),
+            ("per_round_ms", Json::Num(ms / rounds as f64)),
+            ("round_time_vs_memory", Json::Num(ms / base_ms.unwrap_or(ms))),
+        ]);
+    }
+    println!("\nsanity: downlink streams bit-identical across transports ✓");
+
+    let path = sibling_path("BENCH_transport.json");
+    match sink.flush_to(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
+}

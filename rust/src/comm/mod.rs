@@ -11,6 +11,7 @@
 //! borrowed [`wire::FrameView`]s straight into its aggregation engine.
 //! The metered size is identical in every mode (asserted by tests).
 
+pub mod socket;
 pub mod wire;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -173,32 +174,81 @@ impl Meter {
     }
 }
 
+/// How a link moves messages: the historical in-process channel, or a
+/// byte stream over a real socket (see [`socket`]). An enum rather
+/// than a type parameter so every link-holding type — the topology,
+/// the pipeline engine, the coordinator — stays monomorphic and the
+/// transport switches with a config knob.
+enum SendBackend<T> {
+    Channel(Sender<T>),
+    Stream(socket::StreamSender<T>),
+}
+
 /// Sending half of a metered link.
 pub struct MeteredSender<T: Framed> {
-    tx: Sender<T>,
+    tx: SendBackend<T>,
     meter: Arc<Meter>,
 }
 
 impl<T: Framed> MeteredSender<T> {
-    pub fn send(&self, msg: T) -> anyhow::Result<()> {
+    /// Meter, then hand off. Metering happens on the sender in every
+    /// backend — the stream receiver *recomputes* payload bits from the
+    /// parsed frame, and the two must agree (pinned by socket tests).
+    pub fn send(&self, msg: T) -> anyhow::Result<()>
+    where
+        T: socket::WireTransportable,
+    {
         self.meter.bits.fetch_add(msg.wire_bits(), Ordering::Relaxed);
         self.meter.msgs.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(msg).map_err(|_| anyhow::anyhow!("link closed"))
+        match &self.tx {
+            SendBackend::Channel(tx) => tx.send(msg).map_err(|_| anyhow::anyhow!("link closed")),
+            SendBackend::Stream(tx) => tx.send(msg),
+        }
     }
+
+    /// Wrap a socket sender as a metered link half (fresh meter).
+    pub fn from_stream(tx: socket::StreamSender<T>) -> (Self, Arc<Meter>) {
+        let meter = Arc::new(Meter::default());
+        (MeteredSender { tx: SendBackend::Stream(tx), meter: meter.clone() }, meter)
+    }
+}
+
+enum RecvBackend<T> {
+    Channel(Receiver<T>),
+    Stream(socket::StreamReceiver<T>),
 }
 
 /// Receiving half of a metered link.
 pub struct MeteredReceiver<T: Framed> {
-    rx: Receiver<T>,
+    rx: RecvBackend<T>,
 }
 
 impl<T: Framed> MeteredReceiver<T> {
-    pub fn recv(&self) -> anyhow::Result<T> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("link closed"))
+    pub fn recv(&self) -> anyhow::Result<T>
+    where
+        T: socket::WireTransportable,
+    {
+        match &self.rx {
+            RecvBackend::Channel(rx) => rx.recv().map_err(|_| anyhow::anyhow!("link closed")),
+            RecvBackend::Stream(rx) => rx.recv(),
+        }
     }
 
-    pub fn try_recv(&self) -> Option<T> {
-        self.rx.try_recv().ok()
+    /// Non-blocking receive. For the stream backend this only drains
+    /// already-buffered frames (never touches the socket).
+    pub fn try_recv(&self) -> Option<T>
+    where
+        T: socket::WireTransportable,
+    {
+        match &self.rx {
+            RecvBackend::Channel(rx) => rx.try_recv().ok(),
+            RecvBackend::Stream(rx) => rx.try_recv(),
+        }
+    }
+
+    /// Wrap a socket receiver as a metered link half.
+    pub fn from_stream(rx: socket::StreamReceiver<T>) -> Self {
+        MeteredReceiver { rx: RecvBackend::Stream(rx) }
     }
 }
 
@@ -207,7 +257,11 @@ impl<T: Framed> MeteredReceiver<T> {
 pub fn link<T: Framed>() -> (MeteredSender<T>, MeteredReceiver<T>, Arc<Meter>) {
     let (tx, rx) = channel();
     let meter = Arc::new(Meter::default());
-    (MeteredSender { tx, meter: meter.clone() }, MeteredReceiver { rx }, meter)
+    (
+        MeteredSender { tx: SendBackend::Channel(tx), meter: meter.clone() },
+        MeteredReceiver { rx: RecvBackend::Channel(rx) },
+        meter,
+    )
 }
 
 /// The full duplex topology for one worker: uplink to server + downlink

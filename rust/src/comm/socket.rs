@@ -1,0 +1,1027 @@
+//! Socket transport backend: the metered links over real byte streams.
+//!
+//! The in-memory topology moves typed messages over `std::sync::mpsc`;
+//! this module carries the *same* frames over TCP or Unix-domain
+//! sockets so the compression strategies run against a real network
+//! path. The stream format is minimal: each message is one
+//! length-prefixed frame,
+//!
+//! ```text
+//! stream := ( len:u32-LE  frame[len] )*
+//! frame  := round:u32-LE  from:u16-LE  payload      (the wire layer)
+//! ```
+//!
+//! i.e. exactly the byte-stable [`wire`] frames the fuzz oracles pin,
+//! plus a 4-byte length so a streaming receiver can reassemble partial
+//! reads. Received uplinks surface as [`FrameBytes`] and flow straight
+//! into the zero-copy ingest path ([`wire::FrameView`]); the metered
+//! `payload_bits` are *recomputed* from the parsed view rather than
+//! transmitted — `PayloadView::wire_bits` has exact parity with the
+//! owned encoding (fuzz-pinned), so both transports meter identically.
+//!
+//! Failure semantics mirror the mpsc backend so the coordinator's
+//! error triage holds verbatim over real sockets:
+//!
+//! * every disconnect-class error (EOF, reset, mid-frame truncation,
+//!   injected fault) renders with the exact `"link closed"` token the
+//!   threaded driver greps to classify secondary echoes;
+//! * an uplink frame whose *header* arrives intact but whose payload is
+//!   corrupt is still delivered as [`FrameBytes`] — the pipeline's own
+//!   ingest parse is what diagnoses `CorruptFrame`, with worker/round
+//!   attribution, exactly as in-memory;
+//! * dropping a [`StreamSender`] half-closes the socket
+//!   (`shutdown(Write)`), so the pipeline's unwind order — drop the
+//!   downlinks to unblock workers parked in `recv` — keeps working
+//!   even though a duplex socket's two halves share one fd.
+//!
+//! A deterministic network-condition injector ([`NetProfile`],
+//! [`LinkFault`]) sits between the frame codec and the socket: per-link
+//! latency, jitter, and bandwidth pacing (seeded, replayable — timing
+//! only, never data), plus scripted drops and mid-frame kills for the
+//! failure-injection suite.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire::{self, FrameView};
+use super::{
+    Broadcast, DownlinkPayload, FrameBytes, Framed, Meter, MeteredReceiver, MeteredSender,
+    ServerLink, UplinkFrame, WireMsg, WorkerLink,
+};
+use crate::util::rng::Rng;
+
+/// Upper bound on one frame's byte length — a corrupt or hostile length
+/// prefix must produce a named error, not a giant allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Downlink frames are stamped with the server's sender id. Kept in
+/// lockstep with `algo::downlink::SERVER_FROM` (asserted by a test) —
+/// `comm` sits below `algo`, so the constant is mirrored, not imported.
+const SERVER_FROM: u32 = 0;
+
+const LEN_BYTES: usize = 4;
+/// Smallest parseable frame: the 6-byte round/from header.
+const MIN_FRAME_BYTES: usize = 6;
+
+// ---------------------------------------------------------------------------
+// Stream reassembly
+// ---------------------------------------------------------------------------
+
+/// Incremental length-prefixed frame reassembler: `feed` arbitrary
+/// chunks of the byte stream (however the socket fragmented them),
+/// `next_frame` pops complete frames in order. Pure state machine — no
+/// I/O — so the fuzz oracle can drive it with adversarial
+/// split/coalesce schedules without opening sockets.
+#[derive(Default)]
+pub struct StreamDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        StreamDecoder::default()
+    }
+
+    /// Append one received chunk (any split of the stream is legal).
+    pub fn feed(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are
+    /// needed, or a named error on an impossible length prefix. Never
+    /// panics on arbitrary input.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.buf.len() - self.pos;
+        if avail < LEN_BYTES {
+            return Ok(None);
+        }
+        let p = self.pos;
+        let len =
+            u32::from_le_bytes([self.buf[p], self.buf[p + 1], self.buf[p + 2], self.buf[p + 3]])
+                as usize;
+        if len < MIN_FRAME_BYTES || len > MAX_FRAME_BYTES {
+            bail!("invalid stream frame length {len} (corrupt length prefix)");
+        }
+        if avail < LEN_BYTES + len {
+            return Ok(None);
+        }
+        let start = p + LEN_BYTES;
+        let frame = self.buf[start..start + len].to_vec();
+        self.pos = start + len;
+        // reclaim consumed prefix: wholesale when drained, amortized
+        // otherwise so a long-lived link doesn't grow without bound
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 1 << 16 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(frame))
+    }
+
+    /// Bytes buffered but not yet consumed — nonzero at EOF means the
+    /// peer died mid-frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire transport codec: message type ↔ frame bytes
+// ---------------------------------------------------------------------------
+
+/// A link message that can cross a byte stream: append itself as one
+/// wire frame, and rebuild from one received frame. Implementations
+/// must round-trip metering — `from_wire(write_wire(m))` reports the
+/// same [`Framed::wire_bits`] as `m` (pinned by tests).
+pub trait WireTransportable: Framed + Sized {
+    /// Append this message's frame bytes (no length prefix) to `out`.
+    fn write_wire(&self, out: &mut Vec<u8>) -> Result<()>;
+    /// Rebuild from one complete frame's bytes.
+    fn from_wire(bytes: Vec<u8>) -> Result<Self>;
+}
+
+impl WireTransportable for WireMsg {
+    fn write_wire(&self, out: &mut Vec<u8>) -> Result<()> {
+        out.extend_from_slice(&wire::encode(self)?);
+        Ok(())
+    }
+
+    fn from_wire(bytes: Vec<u8>) -> Result<Self> {
+        wire::decode(&bytes)
+    }
+}
+
+impl WireTransportable for UplinkFrame {
+    fn write_wire(&self, out: &mut Vec<u8>) -> Result<()> {
+        match self {
+            UplinkFrame::Msg(m) => m.write_wire(out),
+            UplinkFrame::Bytes(fb) => {
+                out.extend_from_slice(&fb.bytes);
+                Ok(())
+            }
+        }
+    }
+
+    /// Deliberately lenient: any frame with a readable 6-byte header is
+    /// delivered as [`FrameBytes`] even if the payload fails
+    /// validation — the pipeline's ingest stage re-parses and is the
+    /// single authority on `CorruptFrame`, so wire corruption gets the
+    /// same worker/round-attributed protocol-fault diagnosis over
+    /// sockets as in memory. Only a headerless runt is a transport
+    /// error (disconnect class).
+    fn from_wire(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < MIN_FRAME_BYTES {
+            bail!("link closed: runt frame ({} bytes)", bytes.len());
+        }
+        let round = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as u64;
+        let from = u16::from_le_bytes([bytes[4], bytes[5]]) as u32;
+        // metering is recomputed from the validated view (exact parity
+        // with the sender's CompressedMsg::wire_bits — fuzz-pinned); a
+        // corrupt payload meters 0 and is caught downstream by ingest.
+        let payload_bits = FrameView::parse(&bytes).map(|fv| fv.payload.wire_bits()).unwrap_or(0);
+        Ok(UplinkFrame::Bytes(FrameBytes { round, from, payload_bits, bytes: bytes.into() }))
+    }
+}
+
+impl WireTransportable for Broadcast {
+    fn write_wire(&self, out: &mut Vec<u8>) -> Result<()> {
+        match &self.payload {
+            DownlinkPayload::Shared(m) => {
+                out.extend_from_slice(&wire::encode_parts(self.round, SERVER_FROM, m)?);
+                Ok(())
+            }
+            DownlinkPayload::Frame(fb) => {
+                out.extend_from_slice(&fb.bytes);
+                Ok(())
+            }
+        }
+    }
+
+    /// Strict: downlink frames are server-produced, so a payload that
+    /// fails validation is a codec bug or wire corruption and fails the
+    /// worker loudly (its *primary*, non-"link closed" error — the
+    /// triage class the in-memory path uses for the same failure).
+    fn from_wire(bytes: Vec<u8>) -> Result<Self> {
+        let (round, payload_bits) = {
+            let fv = FrameView::parse(&bytes).map_err(|e| anyhow!("corrupt downlink frame: {e}"))?;
+            (fv.round, fv.payload.wire_bits())
+        };
+        let fb = FrameBytes { round, from: SERVER_FROM, payload_bits, bytes: bytes.into() };
+        Ok(Broadcast { round, payload: DownlinkPayload::Frame(Arc::new(fb)) })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Network-condition injector
+// ---------------------------------------------------------------------------
+
+/// Deterministic per-link network conditions, applied on the sending
+/// side between the frame codec and the socket. Timing-only — the bytes
+/// are never altered — and seeded, so a scenario replays exactly: link
+/// `i` draws its jitter from `Rng::new(seed).fork(i)` in frame order.
+#[derive(Clone, Debug, Default)]
+pub struct NetProfile {
+    /// Fixed per-frame latency, microseconds.
+    pub latency_us: u64,
+    /// Uniform extra delay in `[0, jitter_us]` per frame, microseconds.
+    pub jitter_us: u64,
+    /// Bandwidth cap in bytes/second; 0 = unlimited.
+    pub bandwidth_bytes_per_sec: u64,
+    /// Seed for the per-link jitter streams.
+    pub seed: u64,
+}
+
+impl NetProfile {
+    pub fn is_noop(&self) -> bool {
+        self.latency_us == 0 && self.jitter_us == 0 && self.bandwidth_bytes_per_sec == 0
+    }
+}
+
+/// A scripted link death for the failure-injection suite: the sender
+/// completes `after_frames` sends, then kills the socket — either
+/// cleanly between frames, or `mid_frame` (length prefix plus a partial
+/// body hit the wire before the cut, exercising the receiver's
+/// truncated-stream path).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkFault {
+    pub after_frames: u64,
+    pub mid_frame: bool,
+}
+
+/// Per-link pacing state for one [`NetProfile`].
+struct Shaper {
+    profile: NetProfile,
+    rng: Rng,
+}
+
+impl Shaper {
+    fn new(profile: NetProfile, link_index: u64) -> Self {
+        let rng = Rng::new(profile.seed).fork(link_index);
+        Shaper { profile, rng }
+    }
+
+    /// Latency + jitter ahead of one frame.
+    fn frame_delay(&mut self) -> Duration {
+        let mut us = self.profile.latency_us;
+        if self.profile.jitter_us > 0 {
+            us += self.rng.next_u64() % (self.profile.jitter_us + 1);
+        }
+        Duration::from_micros(us)
+    }
+
+    /// Serialization time of `bytes` under the bandwidth cap.
+    fn transmit_time(&self, bytes: usize) -> Duration {
+        let bw = self.profile.bandwidth_bytes_per_sec;
+        if bw == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((bytes as u64).saturating_mul(1_000_000_000) / bw.max(1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket halves
+// ---------------------------------------------------------------------------
+
+/// A connected duplex stream: TCP or Unix-domain. One socket is split
+/// into an owning write half (the [`StreamSender`]) and read half (the
+/// [`StreamReceiver`]) via `try_clone` — each half is its own fd dup,
+/// and `shutdown` acts on the shared socket.
+pub enum SocketStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl SocketStream {
+    pub fn try_clone(&self) -> Result<SocketStream> {
+        Ok(match self {
+            SocketStream::Tcp(s) => SocketStream::Tcp(s.try_clone().context("tcp try_clone")?),
+            SocketStream::Unix(s) => SocketStream::Unix(s.try_clone().context("unix try_clone")?),
+        })
+    }
+
+    fn shutdown(&self, how: Shutdown) {
+        let _ = match self {
+            SocketStream::Tcp(s) => s.shutdown(how),
+            SocketStream::Unix(s) => s.shutdown(how),
+        };
+    }
+
+    /// Disable Nagle on TCP (latency-bound round trips; a no-op for
+    /// Unix sockets).
+    pub fn set_nodelay(&self) {
+        if let SocketStream::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+}
+
+impl Read for SocketStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.read(buf),
+            SocketStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for SocketStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            SocketStream::Tcp(s) => s.write(buf),
+            SocketStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            SocketStream::Tcp(s) => s.flush(),
+            SocketStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream sender / receiver
+// ---------------------------------------------------------------------------
+
+struct SendState {
+    sock: SocketStream,
+    shaper: Option<Shaper>,
+    fault: Option<LinkFault>,
+    frames_sent: u64,
+    closed: bool,
+    scratch: Vec<u8>,
+}
+
+/// Sending half of a socket link: serializes each message as one
+/// length-prefixed frame, applies the (optional) pacing profile and
+/// scripted fault, and half-closes the socket on drop so a parked
+/// receiver on the far end unblocks — the socket twin of dropping an
+/// mpsc `Sender`.
+pub struct StreamSender<T> {
+    state: Mutex<SendState>,
+    _marker: std::marker::PhantomData<fn(T)>,
+}
+
+impl<T> StreamSender<T> {
+    pub fn new(sock: SocketStream) -> Self {
+        StreamSender {
+            state: Mutex::new(SendState {
+                sock,
+                shaper: None,
+                fault: None,
+                frames_sent: 0,
+                closed: false,
+                scratch: Vec::new(),
+            }),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Apply a pacing profile; `link_index` picks the jitter stream.
+    pub fn with_profile(self, profile: &NetProfile, link_index: u64) -> Self {
+        if !profile.is_noop() {
+            self.state.lock().unwrap().shaper = Some(Shaper::new(profile.clone(), link_index));
+        }
+        self
+    }
+
+    /// Arm a scripted link death.
+    pub fn with_fault(self, fault: LinkFault) -> Self {
+        self.state.lock().unwrap().fault = Some(fault);
+        self
+    }
+}
+
+impl<T: WireTransportable> StreamSender<T> {
+    pub fn send(&self, msg: T) -> Result<()> {
+        let mut guard = self.state.lock().map_err(|_| anyhow!("link closed: sender poisoned"))?;
+        let s = &mut *guard;
+        if s.closed {
+            bail!("link closed");
+        }
+        s.scratch.clear();
+        s.scratch.extend_from_slice(&[0u8; LEN_BYTES]);
+        msg.write_wire(&mut s.scratch)?;
+        let len = s.scratch.len() - LEN_BYTES;
+        if len > MAX_FRAME_BYTES {
+            bail!("frame too large for stream transport ({len} bytes)");
+        }
+        s.scratch[..LEN_BYTES].copy_from_slice(&(len as u32).to_le_bytes());
+
+        if let Some(f) = s.fault {
+            if s.frames_sent >= f.after_frames {
+                if f.mid_frame {
+                    // put the length prefix and a partial body on the
+                    // wire, then cut — the receiver sees a truncated
+                    // frame, the hardest disconnect shape.
+                    // frames are ≥ 6 bytes, so len/2 lands strictly
+                    // inside the body: prefix + some payload, never all
+                    let cut = LEN_BYTES + len / 2;
+                    let _ = s.sock.write_all(&s.scratch[..cut]);
+                    let _ = s.sock.flush();
+                }
+                s.sock.shutdown(Shutdown::Both);
+                s.closed = true;
+                bail!("link closed (injected fault after {} frames)", s.frames_sent);
+            }
+        }
+
+        let sent = s.frames_sent;
+        let res = (|| -> std::io::Result<()> {
+            if let Some(sh) = &mut s.shaper {
+                std::thread::sleep(sh.frame_delay());
+                let bw = sh.profile.bandwidth_bytes_per_sec;
+                if bw > 0 {
+                    // chunked writes with pacing sleeps approximate the
+                    // serialization delay of a capped link
+                    const CHUNK: usize = 8192;
+                    let mut off = 0;
+                    while off < s.scratch.len() {
+                        let end = (off + CHUNK).min(s.scratch.len());
+                        s.sock.write_all(&s.scratch[off..end])?;
+                        std::thread::sleep(sh.transmit_time(end - off));
+                        off = end;
+                    }
+                } else {
+                    s.sock.write_all(&s.scratch)?;
+                }
+            } else {
+                s.sock.write_all(&s.scratch)?;
+            }
+            s.sock.flush()
+        })();
+        res.map_err(|e| {
+            s.closed = true;
+            anyhow!("link closed: write failed on frame {sent}: {e}")
+        })?;
+        s.frames_sent += 1;
+        Ok(())
+    }
+}
+
+impl<T> Drop for StreamSender<T> {
+    fn drop(&mut self) {
+        // half-close: FIN our write direction so the peer's blocking
+        // recv sees EOF, but keep reading — the exact semantics the
+        // pipeline's unwind order (drop downlinks → workers unblock →
+        // uplinks close behind them) depends on.
+        if let Ok(s) = self.state.lock() {
+            if !s.closed {
+                s.sock.shutdown(Shutdown::Write);
+            }
+        }
+    }
+}
+
+struct RecvState {
+    sock: SocketStream,
+    dec: StreamDecoder,
+    scratch: Box<[u8]>,
+}
+
+/// Receiving half of a socket link: blocking reads feed the
+/// [`StreamDecoder`], complete frames rebuild messages via
+/// [`WireTransportable::from_wire`].
+pub struct StreamReceiver<T> {
+    state: Mutex<RecvState>,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T> StreamReceiver<T> {
+    pub fn new(sock: SocketStream) -> Self {
+        StreamReceiver {
+            state: Mutex::new(RecvState {
+                sock,
+                dec: StreamDecoder::new(),
+                scratch: vec![0u8; 1 << 16].into_boxed_slice(),
+            }),
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<T: WireTransportable> StreamReceiver<T> {
+    pub fn recv(&self) -> Result<T> {
+        let mut guard = self.state.lock().map_err(|_| anyhow!("link closed: receiver poisoned"))?;
+        let s = &mut *guard;
+        loop {
+            if let Some(frame) = s.dec.next_frame().context("stream framing")? {
+                return T::from_wire(frame);
+            }
+            let n = loop {
+                match s.sock.read(&mut s.scratch) {
+                    Ok(n) => break n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(anyhow!("link closed: read failed: {e}")),
+                }
+            };
+            if n == 0 {
+                if s.dec.buffered() == 0 {
+                    // clean EOF between frames: the peer hung up
+                    bail!("link closed");
+                }
+                bail!("link closed mid-frame ({} bytes of a partial frame buffered)", s.dec.buffered());
+            }
+            s.dec.feed(&s.scratch[..n]);
+        }
+    }
+
+    /// Non-blocking pop of an already-buffered complete frame. The
+    /// stream backend never reads the socket here (a blocking read
+    /// could stall), so this only drains frames a prior `recv` call
+    /// over-buffered.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut guard = self.state.lock().ok()?;
+        match guard.dec.next_frame() {
+            Ok(Some(frame)) => T::from_wire(frame).ok(),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Link construction
+// ---------------------------------------------------------------------------
+
+/// Conditions and scripted faults for one link's construction.
+#[derive(Default)]
+pub struct LinkOptions {
+    pub profile: NetProfile,
+    /// Scripted death of this side's *sender*.
+    pub fault: Option<LinkFault>,
+}
+
+/// Jitter-stream convention: uplink sender of link `i` draws from fork
+/// `2i`, downlink sender from fork `2i + 1`.
+fn up_stream(index: u64) -> u64 {
+    2 * index
+}
+fn down_stream(index: u64) -> u64 {
+    2 * index + 1
+}
+
+/// Wrap a connected duplex socket as the **worker** side of a link
+/// (uplink sender + downlink receiver). Returns the link and its uplink
+/// meter.
+pub fn worker_link(
+    sock: SocketStream,
+    index: u64,
+    opts: &LinkOptions,
+) -> Result<(WorkerLink, Arc<Meter>)> {
+    sock.set_nodelay();
+    let write = sock.try_clone()?;
+    let mut tx = StreamSender::new(write).with_profile(&opts.profile, up_stream(index));
+    if let Some(f) = opts.fault {
+        tx = tx.with_fault(f);
+    }
+    let (up, meter) = MeteredSender::from_stream(tx);
+    let down = MeteredReceiver::from_stream(StreamReceiver::new(sock));
+    Ok((WorkerLink { up, down }, meter))
+}
+
+/// Wrap a connected duplex socket as the **server** side of a link
+/// (uplink receiver + downlink sender). Returns the link and its
+/// downlink meter.
+pub fn server_link(
+    sock: SocketStream,
+    index: u64,
+    opts: &LinkOptions,
+) -> Result<(ServerLink, Arc<Meter>)> {
+    sock.set_nodelay();
+    let write = sock.try_clone()?;
+    let mut tx = StreamSender::new(write).with_profile(&opts.profile, down_stream(index));
+    if let Some(f) = opts.fault {
+        tx = tx.with_fault(f);
+    }
+    let (down, meter) = MeteredSender::from_stream(tx);
+    let up = MeteredReceiver::from_stream(StreamReceiver::new(sock));
+    Ok((ServerLink { up, down }, meter))
+}
+
+/// Build n duplex worker↔server links over loopback TCP — the socket
+/// twin of [`super::topology`], same return shape, so the threaded
+/// coordinator switches transports without restructuring. Pairing is
+/// serial (connect `i`, accept `i`) and therefore deterministic.
+#[allow(clippy::type_complexity)]
+pub fn socket_topology(
+    n: usize,
+    profile: &NetProfile,
+) -> Result<(Vec<WorkerLink>, Vec<ServerLink>, Vec<Arc<Meter>>, Vec<Arc<Meter>>)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding loopback listener")?;
+    let addr = listener.local_addr()?;
+    let mut workers = Vec::with_capacity(n);
+    let mut servers = Vec::with_capacity(n);
+    let mut up_meters = Vec::with_capacity(n);
+    let mut down_meters = Vec::with_capacity(n);
+    for i in 0..n {
+        // connect before accept is safe on loopback: the handshake
+        // completes in the kernel backlog without a blocking accept.
+        let w = TcpStream::connect(addr).with_context(|| format!("worker {i} connect"))?;
+        let (s, _) = listener.accept().with_context(|| format!("accepting worker {i}"))?;
+        let opts = LinkOptions { profile: profile.clone(), fault: None };
+        let (wl, um) = worker_link(SocketStream::Tcp(w), i as u64, &opts)?;
+        let (sl, dm) = server_link(SocketStream::Tcp(s), i as u64, &opts)?;
+        workers.push(wl);
+        servers.push(sl);
+        up_meters.push(um);
+        down_meters.push(dm);
+    }
+    Ok((workers, servers, up_meters, down_meters))
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process endpoints: bind spec, hello handshake, listen/connect
+// ---------------------------------------------------------------------------
+
+/// Where a server listens / a worker connects: `host:port` TCP or
+/// `unix:/path`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BindSpec {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl BindSpec {
+    /// Parse `"unix:<path>"` or `"<host>:<port>"`.
+    pub fn parse(s: &str) -> Result<BindSpec> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                bail!("empty unix socket path in bind spec {s:?}");
+            }
+            return Ok(BindSpec::Unix(PathBuf::from(path)));
+        }
+        if s.parse::<SocketAddr>().is_err() && !s.contains(':') {
+            bail!("bind spec {s:?} is neither host:port nor unix:<path>");
+        }
+        Ok(BindSpec::Tcp(s.to_string()))
+    }
+}
+
+const HELLO_MAGIC: u32 = 0x4344_4131; // "CDA1"
+
+/// Worker → server identification, sent once at connect: magic +
+/// worker id + expected cohort size, all u32-LE.
+pub fn send_hello(sock: &mut SocketStream, worker_id: u32, n: u32) -> Result<()> {
+    let mut buf = [0u8; 12];
+    buf[..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+    buf[4..8].copy_from_slice(&worker_id.to_le_bytes());
+    buf[8..].copy_from_slice(&n.to_le_bytes());
+    sock.write_all(&buf).context("sending hello")?;
+    sock.flush().context("flushing hello")?;
+    Ok(())
+}
+
+/// Server-side half of the handshake.
+pub fn recv_hello(sock: &mut SocketStream) -> Result<(u32, u32)> {
+    let mut buf = [0u8; 12];
+    sock.read_exact(&mut buf).context("reading hello")?;
+    let magic = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != HELLO_MAGIC {
+        bail!("bad hello magic {magic:#x} (not a cdadam worker?)");
+    }
+    let id = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let n = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    Ok((id, n))
+}
+
+fn accept_one(listener: &Listener) -> Result<SocketStream> {
+    Ok(match listener {
+        Listener::Tcp(l) => SocketStream::Tcp(l.accept().context("tcp accept")?.0),
+        Listener::Unix(l) => SocketStream::Unix(l.accept().context("unix accept")?.0),
+    })
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// Bind `spec`, accept exactly `n` workers (identified by their hello),
+/// and return server links ordered by worker id, plus downlink meters.
+pub fn listen_links(
+    spec: &BindSpec,
+    n: usize,
+    profile: &NetProfile,
+) -> Result<(Vec<ServerLink>, Vec<Arc<Meter>>)> {
+    let listener = match spec {
+        BindSpec::Tcp(addr) => {
+            Listener::Tcp(TcpListener::bind(addr.as_str()).with_context(|| format!("bind {addr}"))?)
+        }
+        BindSpec::Unix(path) => {
+            // a stale path from a previous run would otherwise EADDRINUSE
+            let _ = std::fs::remove_file(path);
+            Listener::Unix(
+                UnixListener::bind(path).with_context(|| format!("bind {}", path.display()))?,
+            )
+        }
+    };
+    let mut slots: Vec<Option<(ServerLink, Arc<Meter>)>> = (0..n).map(|_| None).collect();
+    let mut seated = 0usize;
+    while seated < n {
+        let mut sock = accept_one(&listener)?;
+        let (id, peer_n) = recv_hello(&mut sock)?;
+        if peer_n as usize != n {
+            bail!("worker {id} expects a cohort of {peer_n}, server runs {n}");
+        }
+        let idx = id as usize;
+        if idx >= n {
+            bail!("worker id {id} out of range for n = {n}");
+        }
+        if slots[idx].is_some() {
+            bail!("duplicate worker id {id}");
+        }
+        let opts = LinkOptions { profile: profile.clone(), fault: None };
+        slots[idx] = Some(server_link(sock, idx as u64, &opts)?);
+        seated += 1;
+    }
+    if let BindSpec::Unix(path) = spec {
+        let _ = std::fs::remove_file(path);
+    }
+    let mut links = Vec::with_capacity(n);
+    let mut meters = Vec::with_capacity(n);
+    for slot in slots {
+        let (l, m) = slot.expect("all slots seated");
+        links.push(l);
+        meters.push(m);
+    }
+    Ok((links, meters))
+}
+
+/// Connect to a listening server, introduce ourselves, and return the
+/// worker side of the link.
+pub fn connect_worker_link(
+    spec: &BindSpec,
+    worker_id: u32,
+    n: u32,
+    profile: &NetProfile,
+) -> Result<WorkerLink> {
+    let mut sock = match spec {
+        BindSpec::Tcp(addr) => SocketStream::Tcp(
+            TcpStream::connect(addr.as_str()).with_context(|| format!("connect {addr}"))?,
+        ),
+        BindSpec::Unix(path) => SocketStream::Unix(
+            UnixStream::connect(path).with_context(|| format!("connect {}", path.display()))?,
+        ),
+    };
+    send_hello(&mut sock, worker_id, n)?;
+    let opts = LinkOptions { profile: profile.clone(), fault: None };
+    let (link, _meter) = worker_link(sock, worker_id as u64, &opts)?;
+    Ok(link)
+}
+
+/// A connected loopback TCP socket pair — raw material for tests that
+/// need direct byte-level access to one end (mid-frame kills, garbage
+/// injection).
+pub fn loopback_pair() -> Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let a = TcpStream::connect(addr)?;
+    let (b, _) = listener.accept()?;
+    a.set_nodelay(true)?;
+    b.set_nodelay(true)?;
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressedMsg;
+
+    #[test]
+    fn server_from_mirrors_downlink_constant() {
+        assert_eq!(SERVER_FROM, crate::algo::downlink::SERVER_FROM);
+    }
+
+    #[test]
+    fn decoder_reassembles_across_arbitrary_splits() {
+        let frames: Vec<Vec<u8>> = vec![
+            wire::encode_parts(1, 0, &CompressedMsg::Dense(vec![1.0, -2.0])).unwrap(),
+            wire::encode_parts(2, 1, &CompressedMsg::Zero { d: 7 }).unwrap(),
+            wire::encode_parts(3, 2, &CompressedMsg::Dense(vec![0.5; 33])).unwrap(),
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&(f.len() as u32).to_le_bytes());
+            stream.extend_from_slice(f);
+        }
+        // feed one byte at a time — the worst fragmentation
+        let mut dec = StreamDecoder::new();
+        let mut got = Vec::new();
+        for b in &stream {
+            dec.feed(std::slice::from_ref(b));
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn decoder_rejects_corrupt_length_prefix() {
+        let mut dec = StreamDecoder::new();
+        dec.feed(&u32::MAX.to_le_bytes());
+        assert!(dec.next_frame().is_err(), "absurd length must be a named error");
+        let mut dec = StreamDecoder::new();
+        dec.feed(&0u32.to_le_bytes());
+        assert!(dec.next_frame().is_err(), "sub-header length must be a named error");
+    }
+
+    #[test]
+    fn uplink_roundtrip_preserves_bits_and_bytes() {
+        let payload = CompressedMsg::Dense(vec![1.0, 2.0, 3.0]);
+        let frame = wire::encode_frame(5, 2, &payload).unwrap();
+        let sent = UplinkFrame::Bytes(frame.clone());
+        let mut buf = Vec::new();
+        sent.write_wire(&mut buf).unwrap();
+        let got = UplinkFrame::from_wire(buf).unwrap();
+        assert_eq!(Framed::wire_bits(&got), Framed::wire_bits(&sent));
+        match got {
+            UplinkFrame::Bytes(fb) => {
+                assert_eq!(fb.round, 5);
+                assert_eq!(fb.from, 2);
+                assert_eq!(&fb.bytes[..], &frame.bytes[..]);
+            }
+            UplinkFrame::Msg(_) => panic!("socket recv must yield bytes"),
+        }
+        // the structured mode serializes to the identical frame
+        let msg = UplinkFrame::Msg(WireMsg { round: 5, from: 2, payload });
+        let mut buf2 = Vec::new();
+        msg.write_wire(&mut buf2).unwrap();
+        assert_eq!(&buf2[..], &frame.bytes[..], "both uplink modes share one wire image");
+    }
+
+    #[test]
+    fn corrupt_uplink_payload_still_delivers_frame_bytes() {
+        // triage contract: header-intact corruption is the *pipeline's*
+        // CorruptFrame, not a transport disconnect
+        let mut bytes = wire::encode_parts(9, 1, &CompressedMsg::Dense(vec![1.0])).unwrap();
+        bytes[6] = 0xEE; // smash the payload tag
+        let got = UplinkFrame::from_wire(bytes.clone()).unwrap();
+        match got {
+            UplinkFrame::Bytes(fb) => {
+                assert_eq!(fb.round, 9);
+                assert_eq!(fb.from, 1);
+                assert_eq!(fb.payload_bits, 0, "unparseable payload meters zero");
+                assert!(FrameView::parse(&fb.bytes).is_err(), "ingest re-parse must fail");
+            }
+            UplinkFrame::Msg(_) => panic!("expected bytes"),
+        }
+        // but a runt (no full header) is a disconnect-class error
+        let err = UplinkFrame::from_wire(vec![1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("link closed"), "runt error: {err}");
+    }
+
+    #[test]
+    fn broadcast_roundtrip_both_payload_modes() {
+        let payload = CompressedMsg::Dense(vec![0.25; 6]);
+        // Shared (dense historical) serializes via encode_parts …
+        let shared =
+            Broadcast { round: 4, payload: DownlinkPayload::Shared(Arc::new(payload.clone())) };
+        let mut a = Vec::new();
+        shared.write_wire(&mut a).unwrap();
+        // … Frame ships its bytes verbatim …
+        let fb = wire::encode_frame(4, SERVER_FROM, &payload).unwrap();
+        let framed = Broadcast { round: 4, payload: DownlinkPayload::Frame(Arc::new(fb)) };
+        let mut b = Vec::new();
+        framed.write_wire(&mut b).unwrap();
+        // … and both paint the identical wire image.
+        assert_eq!(a, b);
+        let got = Broadcast::from_wire(a).unwrap();
+        assert_eq!(got.round, 4);
+        assert_eq!(Framed::wire_bits(&got), Framed::wire_bits(&shared));
+        match got.payload {
+            DownlinkPayload::Frame(fb) => assert_eq!(fb.payload_bits, payload.wire_bits()),
+            DownlinkPayload::Shared(_) => panic!("socket recv must yield a frame"),
+        }
+        // corrupt downlink is a loud primary error, not a disconnect
+        let mut bad = b;
+        bad[6] = 0xEE;
+        let err = Broadcast::from_wire(bad).unwrap_err();
+        assert!(err.to_string().contains("corrupt downlink frame"), "{err}");
+    }
+
+    #[test]
+    fn stream_link_roundtrip_over_tcp() {
+        let (w, s) = loopback_pair().unwrap();
+        let opts = LinkOptions::default();
+        let (wl, um) = worker_link(SocketStream::Tcp(w), 0, &opts).unwrap();
+        let (sl, _dm) = server_link(SocketStream::Tcp(s), 0, &opts).unwrap();
+        let payload = CompressedMsg::Dense(vec![1.0; 10]);
+        let frame = wire::encode_frame(1, 0, &payload).unwrap();
+        let bits = Framed::wire_bits(&UplinkFrame::Bytes(frame.clone()));
+        wl.up.send(UplinkFrame::Bytes(frame)).unwrap();
+        let got = sl.up.recv().unwrap();
+        assert_eq!(got.round(), 1);
+        assert_eq!(Framed::wire_bits(&got), bits, "metering survives the socket");
+        assert_eq!(um.bits(), bits);
+        assert_eq!(um.msgs(), 1);
+        // downlink direction, Shared → Frame transmutation included
+        sl.down
+            .send(Broadcast { round: 1, payload: DownlinkPayload::Shared(Arc::new(payload)) })
+            .unwrap();
+        let down = wl.down.recv().unwrap();
+        assert_eq!(down.round, 1);
+        assert_eq!(down.payload.wire_bits(), bits - 64);
+    }
+
+    #[test]
+    fn dropping_sender_unblocks_peer_recv() {
+        // the half-close invariant the pipeline unwind depends on
+        let (w, s) = loopback_pair().unwrap();
+        let opts = LinkOptions::default();
+        let (wl, _) = worker_link(SocketStream::Tcp(w), 0, &opts).unwrap();
+        let (sl, _) = server_link(SocketStream::Tcp(s), 0, &opts).unwrap();
+        let j = std::thread::spawn(move || sl.up.recv());
+        drop(wl.up); // half-close; wl.down (same socket) still alive
+        let err = j.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("link closed"), "{err}");
+    }
+
+    #[test]
+    fn shaped_link_delivers_identical_bytes() {
+        // the injector shapes *time*, never data
+        let (w, s) = loopback_pair().unwrap();
+        let profile = NetProfile {
+            latency_us: 200,
+            jitter_us: 100,
+            bandwidth_bytes_per_sec: 1 << 20,
+            seed: 7,
+        };
+        let opts = LinkOptions { profile, fault: None };
+        let (wl, _) = worker_link(SocketStream::Tcp(w), 3, &opts).unwrap();
+        let (sl, _) = server_link(SocketStream::Tcp(s), 3, &opts).unwrap();
+        let payload = CompressedMsg::Dense(vec![0.125; 4096]);
+        let frame = wire::encode_frame(1, 3, &payload).unwrap();
+        let want = frame.bytes.to_vec();
+        wl.up.send(UplinkFrame::Bytes(frame)).unwrap();
+        match sl.up.recv().unwrap() {
+            UplinkFrame::Bytes(fb) => assert_eq!(&fb.bytes[..], &want[..]),
+            UplinkFrame::Msg(_) => panic!("expected bytes"),
+        }
+    }
+
+    #[test]
+    fn injected_fault_kills_link_deterministically() {
+        let (w, s) = loopback_pair().unwrap();
+        let opts = LinkOptions {
+            profile: NetProfile::default(),
+            fault: Some(LinkFault { after_frames: 2, mid_frame: false }),
+        };
+        let (wl, _) = worker_link(SocketStream::Tcp(w), 0, &opts).unwrap();
+        let (sl, _) = server_link(SocketStream::Tcp(s), 0, &LinkOptions::default()).unwrap();
+        let payload = CompressedMsg::Zero { d: 3 };
+        for t in 1..=2u64 {
+            wl.up.send(UplinkFrame::Bytes(wire::encode_frame(t, 0, &payload).unwrap())).unwrap();
+            assert_eq!(sl.up.recv().unwrap().round(), t);
+        }
+        let err = wl
+            .up
+            .send(UplinkFrame::Bytes(wire::encode_frame(3, 0, &payload).unwrap()))
+            .unwrap_err();
+        assert!(err.to_string().contains("link closed"), "{err}");
+        let err = sl.up.recv().unwrap_err();
+        assert!(err.to_string().contains("link closed"), "{err}");
+    }
+
+    #[test]
+    fn bind_spec_parses() {
+        assert_eq!(BindSpec::parse("127.0.0.1:4433").unwrap(), BindSpec::Tcp("127.0.0.1:4433".into()));
+        assert_eq!(
+            BindSpec::parse("unix:/tmp/cdadam.sock").unwrap(),
+            BindSpec::Unix(PathBuf::from("/tmp/cdadam.sock"))
+        );
+        assert!(BindSpec::parse("unix:").is_err());
+        assert!(BindSpec::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn hello_handshake_roundtrip_over_unix() {
+        let path = std::env::temp_dir().join(format!("cdadam_hello_{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let path2 = path.clone();
+        let j = std::thread::spawn(move || {
+            let mut sock = SocketStream::Unix(UnixStream::connect(&path2).unwrap());
+            send_hello(&mut sock, 3, 8).unwrap();
+            sock
+        });
+        let (accepted, _) = listener.accept().unwrap();
+        let mut sock = SocketStream::Unix(accepted);
+        let (id, n) = recv_hello(&mut sock).unwrap();
+        assert_eq!((id, n), (3, 8));
+        drop(j.join().unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+}

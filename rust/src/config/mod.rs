@@ -100,6 +100,36 @@ impl UsizeKnob {
     }
 }
 
+/// A named-mode knob declared once (CLI flag + env var + built-in
+/// default), for knobs whose value is a small string rather than a
+/// switch — same dedup rationale as [`SwitchKnob`]. Values are
+/// case-normalized; the env var seeds the default (so CI can force a
+/// mode suite-wide) and the CLI flag overrides it.
+struct StrKnob {
+    cli: &'static str,
+    env: &'static str,
+    base: &'static str,
+}
+
+impl StrKnob {
+    const fn new(cli: &'static str, env: &'static str, base: &'static str) -> Self {
+        StrKnob { cli, env, base }
+    }
+
+    fn default(&self) -> String {
+        match std::env::var(self.env) {
+            Ok(v) if !v.trim().is_empty() => v.trim().to_ascii_lowercase(),
+            _ => self.base.to_string(),
+        }
+    }
+
+    fn apply(&self, args: &Args, field: &mut String) {
+        if let Some(v) = args.get(self.cli) {
+            *field = v.trim().to_ascii_lowercase();
+        }
+    }
+}
+
 /// The knob table: every env-switchable scheduling/transport knob in
 /// one place (name ⇒ CLI flag ⇒ `CDADAM_*` env var ⇒ default).
 const KNOB_ZERO_COPY_INGEST: SwitchKnob =
@@ -113,6 +143,24 @@ const KNOB_COMPRESS_DOWNLINK: SwitchKnob =
 const KNOB_SIMD_KERNELS: SwitchKnob = SwitchKnob::new("simd-kernels", "CDADAM_SIMD_KERNELS");
 const KNOB_PIPELINE_DEPTH: UsizeKnob =
     UsizeKnob::new("pipeline-depth", "CDADAM_PIPELINE_DEPTH", 1);
+const KNOB_TRANSPORT: StrKnob = StrKnob::new("transport", "CDADAM_TRANSPORT", "memory");
+const KNOB_NET_LATENCY_US: UsizeKnob =
+    UsizeKnob::new("net-latency-us", "CDADAM_NET_LATENCY_US", 0);
+const KNOB_NET_JITTER_US: UsizeKnob = UsizeKnob::new("net-jitter-us", "CDADAM_NET_JITTER_US", 0);
+const KNOB_NET_BANDWIDTH_KBPS: UsizeKnob =
+    UsizeKnob::new("net-bandwidth-kbps", "CDADAM_NET_BANDWIDTH_KBPS", 0);
+
+/// Which link backend the threaded coordinator builds (parsed from the
+/// `transport` knob by [`ExperimentConfig::transport_kind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process `mpsc` channels — the historical path verbatim.
+    Memory,
+    /// Loopback TCP sockets through the length-prefixed stream codec
+    /// ([`crate::comm::socket`]): every frame really leaves and
+    /// re-enters the process as bytes.
+    Socket,
+}
 
 /// What model/data the run trains.
 #[derive(Clone, Debug, PartialEq)]
@@ -258,6 +306,30 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     /// run through the threaded coordinator instead of lockstep.
     pub threaded: bool,
+    /// Link backend for the threaded coordinator: `memory` (the
+    /// historical in-process channels, verbatim) or `socket` (loopback
+    /// TCP through the length-prefixed stream codec — every uplink and
+    /// broadcast really crosses a kernel socket as bytes). A transport
+    /// knob, never a math knob: trajectories, replica hashes, and
+    /// cum_bits are bit-identical across transports (pinned by the
+    /// trajectory golden matrix's transport dimension). Lockstep runs
+    /// have no links and ignore it. CLI `--transport`; env
+    /// `CDADAM_TRANSPORT` flips the default so CI can force the socket
+    /// path across the whole suite.
+    pub transport: String,
+    /// Injected per-frame link latency in µs (socket transport only;
+    /// 0 = none). Deterministic timing shaping — never alters bytes.
+    /// CLI `--net-latency-us`; env `CDADAM_NET_LATENCY_US`.
+    pub net_latency_us: usize,
+    /// Injected uniform extra per-frame delay in `[0, jitter]` µs,
+    /// drawn from a per-link seeded stream so scenarios replay exactly
+    /// (socket transport only; 0 = none). CLI `--net-jitter-us`; env
+    /// `CDADAM_NET_JITTER_US`.
+    pub net_jitter_us: usize,
+    /// Injected bandwidth cap in kilobits/s (socket transport only;
+    /// 0 = unlimited). CLI `--net-bandwidth-kbps`; env
+    /// `CDADAM_NET_BANDWIDTH_KBPS`.
+    pub net_bandwidth_kbps: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -295,6 +367,10 @@ impl Default for ExperimentConfig {
             seed: 0,
             eval_every: 10,
             threaded: KNOB_THREADED.default(),
+            transport: KNOB_TRANSPORT.default(),
+            net_latency_us: KNOB_NET_LATENCY_US.default(),
+            net_jitter_us: KNOB_NET_JITTER_US.default(),
+            net_bandwidth_kbps: KNOB_NET_BANDWIDTH_KBPS.default(),
         }
     }
 }
@@ -428,6 +504,13 @@ impl ExperimentConfig {
         self.seed = args.u64("seed", self.seed)?;
         self.eval_every = args.usize("eval-every", self.eval_every)?;
         KNOB_THREADED.apply(args, &mut self.threaded);
+        KNOB_TRANSPORT.apply(args, &mut self.transport);
+        KNOB_NET_LATENCY_US.apply(args, &mut self.net_latency_us)?;
+        KNOB_NET_JITTER_US.apply(args, &mut self.net_jitter_us)?;
+        KNOB_NET_BANDWIDTH_KBPS.apply(args, &mut self.net_bandwidth_kbps)?;
+        // fail fast on an unknown transport name, at parse time rather
+        // than mid-run
+        self.transport_kind()?;
         if args.flag("full") {
             if let Task::Images { full, .. } = &mut self.task {
                 *full = true;
@@ -545,6 +628,28 @@ impl ExperimentConfig {
             comp = Box::new(sharded);
         }
         Ok(DownlinkChannel::compressed(comp))
+    }
+
+    /// Parse the `transport` knob into its backend.
+    pub fn transport_kind(&self) -> Result<Transport> {
+        match self.transport.as_str() {
+            "" | "memory" => Ok(Transport::Memory),
+            "socket" | "tcp" => Ok(Transport::Socket),
+            other => bail!("unknown transport {other:?} (expected memory | socket)"),
+        }
+    }
+
+    /// The socket transport's network-condition profile, seeded off the
+    /// run seed (own stream, `^ 0x5EED_11E7`) so injected jitter
+    /// replays exactly per link without mirroring any compressor draw.
+    pub fn net_profile(&self) -> crate::comm::socket::NetProfile {
+        crate::comm::socket::NetProfile {
+            latency_us: self.net_latency_us as u64,
+            jitter_us: self.net_jitter_us as u64,
+            // kilobits/s → bytes/s
+            bandwidth_bytes_per_sec: self.net_bandwidth_kbps as u64 * 125,
+            seed: self.seed ^ 0x5EED_11E7,
+        }
     }
 
     /// Label used in CSV output: strategy[+compressor].
@@ -705,6 +810,58 @@ mod tests {
         let before = cfg2.zero_copy_egress;
         cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
         assert_eq!(cfg2.zero_copy_egress, before);
+    }
+
+    #[test]
+    fn transport_knob_parses_and_validates() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        // the built-in default is memory — but only assert when the env
+        // var isn't forcing a different suite-wide default (the
+        // CDADAM_TRANSPORT=socket CI job), same pattern as every knob
+        if std::env::var("CDADAM_TRANSPORT").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert_eq!(cfg.transport_kind().unwrap(), Transport::Memory, "memory is the default");
+        }
+        let args = Args::parse(["--transport", "socket"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.transport, "socket");
+        assert_eq!(cfg.transport_kind().unwrap(), Transport::Socket);
+        // case-normalized, tcp accepted as an alias
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--transport", "TCP"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.transport_kind().unwrap(), Transport::Socket);
+        // unknown transport fails at parse time, not mid-run
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--transport", "carrier-pigeon"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
+        // absent flag leaves the (env-derived) default untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let before = cfg2.transport.clone();
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.transport, before);
+    }
+
+    #[test]
+    fn net_injector_knobs_parse_and_build_a_profile() {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(
+            ["--net-latency-us", "300", "--net-jitter-us", "50", "--net-bandwidth-kbps", "8000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        let p = cfg.net_profile();
+        assert_eq!(p.latency_us, 300);
+        assert_eq!(p.jitter_us, 50);
+        assert_eq!(p.bandwidth_bytes_per_sec, 8000 * 125);
+        assert!(!p.is_noop());
+        // defaults: no shaping at all
+        let quiet = ExperimentConfig::preset("quickstart").unwrap().net_profile();
+        assert!(quiet.is_noop(), "default profile must be a no-op");
+        // the profile seed is its own stream off the run seed
+        let mut other = cfg.clone();
+        other.seed ^= 0xABCD;
+        assert_ne!(cfg.net_profile().seed, other.net_profile().seed);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 pub mod lockstep;
 pub mod pipeline;
+pub mod remote;
 pub mod setup;
 pub mod threaded;
 
@@ -71,9 +72,13 @@ pub(crate) fn make_uplink_frame(
     Ok((frame, bits))
 }
 
-/// Run with the driver selected by the config.
+/// Run with the driver selected by the config. The socket transport
+/// only exists under the threaded topology (lockstep has no links at
+/// all), so `transport = socket` implies the threaded driver — which
+/// is trajectory-identical to lockstep, so forcing the knob (e.g.
+/// `CDADAM_TRANSPORT=socket` suite-wide in CI) changes no results.
 pub fn run(cfg: &ExperimentConfig) -> anyhow::Result<RunLog> {
-    if cfg.threaded {
+    if cfg.threaded || cfg.transport_kind()? == crate::config::Transport::Socket {
         run_threaded(cfg)
     } else {
         run_lockstep(cfg)

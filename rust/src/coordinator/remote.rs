@@ -1,0 +1,100 @@
+//! Standalone socket roles: a listening parameter server and a
+//! connecting worker, speaking the exact wire frames the in-process
+//! coordinator uses.
+//!
+//! `cdadam serve` binds a TCP or Unix-socket address, waits for the
+//! full worker cohort (each introduced by a 12-byte hello carrying its
+//! worker id and expected cohort size), and runs the same staged
+//! [`PipelineServer`](super::pipeline::PipelineServer) engine the
+//! threaded driver uses. `cdadam worker` connects, then runs the same
+//! round loop (`drive_worker`) as a threaded worker thread — so a
+//! multi-process run executes bit-for-bit the operations of an
+//! in-process one; only the bytes travel farther.
+//!
+//! Both roles derive everything (task, strategy, dim, schedule) from
+//! the shared [`ExperimentConfig`]; the server and every worker must be
+//! launched with the same preset/knobs or the hello handshake and
+//! round math will disagree loudly.
+
+use anyhow::{ensure, Result};
+
+use super::pipeline::PipelineServer;
+use super::setup;
+use super::threaded::{drive_worker, WorkerLoopSpec};
+use crate::comm::socket::{connect_worker_link, listen_links, BindSpec};
+use crate::config::ExperimentConfig;
+use crate::optim::LrSchedule;
+
+/// Run the server role: listen on `bind`, seat `cfg.n` workers, drive
+/// `cfg.rounds` pipelined rounds, then report downlink meter totals.
+pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
+    crate::simd::set_enabled(cfg.simd_kernels);
+    let spec = BindSpec::parse(bind)?;
+    let strat = cfg.build_strategy()?;
+    // the server needs only the model dimension from setup; the
+    // gradient engines built here are unused (they live in the worker
+    // processes).
+    let s = setup::build(cfg)?;
+    let mut server = strat.make_server(s.dim, cfg.n);
+    let downlink = cfg.build_downlink()?;
+    eprintln!(
+        "cdadam serve: listening on {bind} for {} worker(s), d = {}, {} rounds",
+        cfg.n, s.dim, cfg.rounds
+    );
+    let (links, down_meters) = listen_links(&spec, cfg.n, &cfg.net_profile())?;
+    eprintln!("cdadam serve: cohort complete, running");
+    PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
+        .with_downlink(downlink)
+        .run(server.as_mut(), links)
+        .map_err(anyhow::Error::new)?;
+    let bits: u64 = down_meters.iter().map(|m| m.bits()).sum();
+    let msgs: u64 = down_meters.iter().map(|m| m.msgs()).sum();
+    eprintln!("cdadam serve: done — {bits} downlink bits over {msgs} broadcasts");
+    Ok(())
+}
+
+/// Run one worker role: connect to `connect` as worker `index`, run the
+/// shared round loop, and print an eval line per eval round.
+pub fn run_remote_worker(cfg: &ExperimentConfig, connect: &str, index: usize) -> Result<()> {
+    crate::simd::set_enabled(cfg.simd_kernels);
+    ensure!(index < cfg.n, "worker id {index} out of range (n = {})", cfg.n);
+    let spec = BindSpec::parse(connect)?;
+    let strat = cfg.build_strategy()?;
+    let mut s = setup::build(cfg)?;
+    // take exactly this worker's shard-backed engine; the siblings
+    // belong to the other worker processes.
+    let mut engine = s.engines.remove(index);
+    let mut worker = strat.make_worker(s.dim, index);
+    let sched = LrSchedule::multi_step(cfg.lr as f32, &cfg.lr_milestones, cfg.lr_gamma as f32);
+    let mut params = s.init_params.clone();
+    eprintln!("cdadam worker {index}: connecting to {connect} (n = {}, d = {})", cfg.n, s.dim);
+    let link = connect_worker_link(&spec, index as u32, cfg.n as u32, &cfg.net_profile())?;
+    let loop_spec = WorkerLoopSpec {
+        dim: s.dim,
+        rounds: cfg.rounds,
+        eval_every: cfg.eval_every,
+        zero_copy_ingest: cfg.zero_copy_ingest,
+        zero_copy_egress: cfg.zero_copy_egress,
+        depth: cfg.pipeline_depth.max(1),
+        index,
+        snapshot_params: false,
+    };
+    drive_worker(
+        &loop_spec,
+        worker.as_mut(),
+        engine.as_mut(),
+        &link,
+        &sched,
+        &mut params,
+        &mut |tick| {
+            println!(
+                "round {}\tloss {:.6}\thash {:#018x}\tup_bits {}\tdown_bits {}",
+                tick.round, tick.loss, tick.params_hash, tick.up_bits, tick.down_bits
+            );
+            Ok(())
+        },
+    )
+    .map_err(|e| e.context(format!("worker {index} failed")))?;
+    eprintln!("cdadam worker {index}: done ({} rounds)", cfg.rounds);
+    Ok(())
+}

@@ -13,9 +13,11 @@ use anyhow::{anyhow, bail, Result};
 
 use super::pipeline::PipelineServer;
 use super::{params_hash, setup};
-use crate::comm::{topology, wire, DownlinkPayload};
-use crate::config::ExperimentConfig;
+use crate::algo::WorkerAlgo;
+use crate::comm::{self, topology, wire, DownlinkPayload, WorkerLink};
+use crate::config::{ExperimentConfig, Transport};
 use crate::metrics::{RoundRecord, RunLog};
+use crate::models::GradEngine;
 use crate::optim::LrSchedule;
 use crate::tensor;
 use crate::util::timer::Timer;
@@ -35,6 +37,114 @@ struct EvalReport {
     up_bits: u64,
     /// cumulative downlink payload bits, same convention.
     down_bits: u64,
+}
+
+/// One worker's view of an eval round, handed to the loop's report
+/// callback — the in-process driver turns it into an [`EvalReport`],
+/// the standalone socket worker prints it.
+pub(crate) struct WorkerTick {
+    pub round: usize,
+    pub loss: f32,
+    /// this worker's local gradient at the eval round (a copy — the
+    /// loop's scratch buffer keeps being overwritten).
+    pub grad: Vec<f32>,
+    pub params_hash: u64,
+    /// full replica snapshot, only when [`WorkerLoopSpec::snapshot_params`].
+    pub params: Option<Vec<f32>>,
+    /// cumulative uplink payload bits as of this round.
+    pub up_bits: u64,
+    /// cumulative downlink payload bits as of this round.
+    pub down_bits: u64,
+}
+
+/// Shape of one worker's round loop — shared between the in-process
+/// threaded driver and the standalone socket worker (`coordinator::
+/// remote`), so both transports run the exact same per-round
+/// operations in the exact same order.
+pub(crate) struct WorkerLoopSpec {
+    pub dim: usize,
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub zero_copy_ingest: bool,
+    pub zero_copy_egress: bool,
+    pub depth: usize,
+    pub index: usize,
+    /// snapshot the full parameter vector in eval ticks (worker 0 only
+    /// under the threaded driver — everyone else just hashes).
+    pub snapshot_params: bool,
+}
+
+/// The worker half of a round: grad → compress → send → recv → apply,
+/// with exact per-link bit accounting and periodic eval ticks. This is
+/// the historical threaded worker-thread body, verbatim — factored out
+/// so the remote (socket) worker mode reuses it bit-for-bit.
+pub(crate) fn drive_worker(
+    spec: &WorkerLoopSpec,
+    worker: &mut dyn WorkerAlgo,
+    engine: &mut dyn GradEngine,
+    link: &WorkerLink,
+    sched: &LrSchedule,
+    params: &mut Vec<f32>,
+    on_eval: &mut dyn FnMut(WorkerTick) -> Result<()>,
+) -> Result<()> {
+    let mut grad = vec![0.0f32; spec.dim];
+    let mut cum_up_bits = 0u64;
+    let mut cum_down_bits = 0u64;
+    // zero-copy egress: a reusable frame writer whose ring holds every
+    // frame that can be in flight at once — the recv stage parks up to
+    // depth − 1 rounds ahead of the fold cursor, plus the frame being
+    // folded and the one being written — so steady-state rounds are
+    // allocation-free on the encode path.
+    let mut writer = spec.zero_copy_egress.then(|| wire::FrameWriter::new(spec.depth + 2));
+    for t in 1..=spec.rounds {
+        let loss = engine.loss_grad(&params[..], &mut grad);
+        // one shared frame builder for all three uplink modes (egress
+        // writer / serialized bytes / structured message); the metered
+        // payload bits are identical in every mode — fuzz-pinned.
+        let (frame, up_bits) = super::make_uplink_frame(
+            worker,
+            writer.as_mut(),
+            spec.zero_copy_ingest,
+            t,
+            spec.index as u32,
+            &grad,
+        )?;
+        cum_up_bits += up_bits;
+        link.up.send(frame)?;
+        let down = link.down.recv()?;
+        debug_assert_eq!(down.round, t as u64);
+        cum_down_bits += down.payload.wire_bits();
+        let lr = sched.at(t - 1);
+        match &down.payload {
+            // historical dense broadcast: the shared message
+            DownlinkPayload::Shared(m) => {
+                worker.apply_downlink(t, m.as_ref(), params, lr);
+            }
+            // compressed downlink (or any socket downlink): parse the
+            // server's frame once and apply a borrowed view — no
+            // CompressedMsg materialization on the recv path. Frames
+            // are server-produced over a validated stream, so a parse
+            // failure is a codec bug and fails the worker loudly.
+            DownlinkPayload::Frame(fb) => {
+                let fv = wire::FrameView::parse(&fb.bytes)
+                    .map_err(|e| anyhow!("corrupt downlink frame at round {t}: {e}"))?;
+                debug_assert_eq!(fv.round, t as u64);
+                worker.apply_downlink_view(t, &fv.payload, params, lr);
+            }
+        }
+        if t % spec.eval_every == 0 || t == spec.rounds {
+            on_eval(WorkerTick {
+                round: t,
+                loss,
+                grad: grad.clone(),
+                params_hash: params_hash(params),
+                params: spec.snapshot_params.then(|| params.clone()),
+                up_bits: cum_up_bits,
+                down_bits: cum_down_bits,
+            })?;
+        }
+    }
+    Ok(())
 }
 
 /// Run one experiment through the threaded coordinator.
@@ -57,7 +167,15 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let eval_every = cfg.eval_every;
     let sched = LrSchedule::multi_step(cfg.lr as f32, &cfg.lr_milestones, cfg.lr_gamma as f32);
 
-    let (worker_links, server_links, up_meters, down_meters) = topology(n);
+    // transport knob: memory = the historical in-process channels,
+    // verbatim; socket = the same star over loopback TCP streams (with
+    // the seeded network-condition shaper from the net-* knobs), so the
+    // whole engine — including these in-process tests — can run over a
+    // real byte stream.
+    let (worker_links, server_links, up_meters, down_meters) = match cfg.transport_kind()? {
+        Transport::Memory => topology(n),
+        Transport::Socket => comm::socket::socket_topology(n, &cfg.net_profile())?,
+    };
     let (report_tx, report_rx) = channel::<EvalReport>();
 
     // --- server thread: the staged pipeline engine ----------------------
@@ -92,70 +210,37 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
         let tx = report_tx.clone();
         joins.push(std::thread::Builder::new().name(format!("worker-{i}")).spawn(
             move || -> Result<()> {
-                let mut grad = vec![0.0f32; dim];
-                let mut cum_up_bits = 0u64;
-                let mut cum_down_bits = 0u64;
-                // zero-copy egress: a reusable frame writer whose ring
-                // holds every frame that can be in flight at once — the
-                // recv stage parks up to depth − 1 rounds ahead of the
-                // fold cursor, plus the frame being folded and the one
-                // being written — so steady-state rounds are
-                // allocation-free on the encode path.
-                let mut writer =
-                    zero_copy_egress.then(|| wire::FrameWriter::new(depth + 2));
-                for t in 1..=rounds {
-                    let loss = engine.loss_grad(&params, &mut grad);
-                    // one shared frame builder for all three uplink
-                    // modes (egress writer / serialized bytes /
-                    // structured message); the metered payload bits are
-                    // identical in every mode — fuzz-pinned.
-                    let (frame, up_bits) = super::make_uplink_frame(
-                        worker.as_mut(),
-                        writer.as_mut(),
-                        zero_copy,
-                        t,
-                        i as u32,
-                        &grad,
-                    )?;
-                    cum_up_bits += up_bits;
-                    link.up.send(frame)?;
-                    let down = link.down.recv()?;
-                    debug_assert_eq!(down.round, t as u64);
-                    cum_down_bits += down.payload.wire_bits();
-                    let lr = sched.at(t - 1);
-                    match &down.payload {
-                        // historical dense broadcast: the shared message
-                        DownlinkPayload::Shared(m) => {
-                            worker.apply_downlink(t, m.as_ref(), &mut params, lr);
-                        }
-                        // compressed downlink: parse the server's frame
-                        // once and apply a borrowed view — no
-                        // CompressedMsg materialization on the recv path.
-                        // Frames are self-produced, so a parse failure is
-                        // a codec bug and fails the worker loudly.
-                        DownlinkPayload::Frame(fb) => {
-                            let fv = wire::FrameView::parse(&fb.bytes).map_err(|e| {
-                                anyhow!("corrupt downlink frame at round {t}: {e}")
-                            })?;
-                            debug_assert_eq!(fv.round, t as u64);
-                            worker.apply_downlink_view(t, &fv.payload, &mut params, lr);
-                        }
-                    }
-                    if t % eval_every == 0 || t == rounds {
+                let spec = WorkerLoopSpec {
+                    dim,
+                    rounds,
+                    eval_every,
+                    zero_copy_ingest: zero_copy,
+                    zero_copy_egress,
+                    depth,
+                    index: i,
+                    snapshot_params: i == 0,
+                };
+                drive_worker(
+                    &spec,
+                    worker.as_mut(),
+                    engine.as_mut(),
+                    &link,
+                    &sched,
+                    &mut params,
+                    &mut |tick| {
                         tx.send(EvalReport {
-                            round: t,
+                            round: tick.round,
                             worker: i,
-                            hash: params_hash(&params),
-                            loss,
-                            grad_norm_contrib: grad.clone(),
-                            params: if i == 0 { Some(params.clone()) } else { None },
-                            up_bits: cum_up_bits,
-                            down_bits: cum_down_bits,
+                            hash: tick.params_hash,
+                            loss: tick.loss,
+                            grad_norm_contrib: tick.grad,
+                            params: tick.params,
+                            up_bits: tick.up_bits,
+                            down_bits: tick.down_bits,
                         })
-                        .map_err(|_| anyhow!("driver gone"))?;
-                    }
-                }
-                Ok(())
+                        .map_err(|_| anyhow!("driver gone"))
+                    },
+                )
             },
         )?);
     }

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! cdadam run --preset quickstart [--strategy cdadam] [--n 8] [--threaded] ...
+//! cdadam serve --preset quickstart --bind 127.0.0.1:4433        # socket server
+//! cdadam worker --preset quickstart --connect 127.0.0.1:4433 --worker-id 0
 //! cdadam presets                 # list available presets
 //! cdadam artifacts               # show artifact manifest status
 //! ```
@@ -33,6 +35,8 @@ fn usage() -> ! {
          \n\
          commands:\n\
            run        run one experiment (--preset <name> + overrides)\n\
+           serve      listen as a socket parameter server (--bind <addr>)\n\
+           worker     connect as one socket worker (--connect <addr> --worker-id <i>)\n\
            presets    list experiment presets\n\
            artifacts  report AOT artifact status\n\
          \n\
@@ -66,12 +70,29 @@ fn usage() -> ! {
                                  it as a wire frame; changes the trajectory for\n\
                                  dense-broadcast strategies (off = dense\n\
                                  broadcast, byte-for-byte the historical path)\n\
+           --transport <t>       memory | socket — link backend for the threaded\n\
+                                 coordinator (memory = historical in-process\n\
+                                 channels verbatim; socket = loopback TCP\n\
+                                 streams, bit-identical trajectories; socket\n\
+                                 implies --threaded)\n\
+           --net-latency-us <int>   injected per-frame latency (socket only)\n\
+           --net-jitter-us <int>    injected latency jitter bound, seeded and\n\
+                                 replayable (socket only)\n\
+           --net-bandwidth-kbps <int>  per-link bandwidth cap, 0 = unlimited\n\
+                                 (socket only)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\
            --lr <float>          step size\n\
            --threaded            use the threaded coordinator\n\
-           --csv <path>          write the run log as CSV\n"
+           --csv <path>          write the run log as CSV\n\
+         \n\
+         serve/worker options (multi-process socket runs; every process\n\
+         must share the same preset + overrides):\n\
+           --bind <addr>         serve: listen address — host:port or\n\
+                                 unix:/path (default 127.0.0.1:4433)\n\
+           --connect <addr>      worker: server address (same forms)\n\
+           --worker-id <int>     worker: this worker's index in 0..n\n"
     );
     std::process::exit(2)
 }
@@ -80,6 +101,8 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("presets") => {
             for p in PRESETS {
                 println!("{p}");
@@ -91,10 +114,16 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
     let preset = args.string("preset", "quickstart");
     let mut cfg = ExperimentConfig::preset(&preset)?;
     cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let socket = cfg.transport_kind()? == cdadam::config::Transport::Socket;
     eprintln!(
         "running {} | strategy={} compressor={} n={} rounds={} lr={} ({})",
         cfg.name,
@@ -103,7 +132,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.n,
         cfg.rounds,
         cfg.lr,
-        if cfg.threaded { "threaded" } else { "lockstep" }
+        if socket {
+            "threaded, socket transport"
+        } else if cfg.threaded {
+            "threaded"
+        } else {
+            "lockstep"
+        }
     );
     let log = coordinator::run(&cfg)?;
     print_log(&log);
@@ -112,6 +147,22 @@ fn cmd_run(args: &Args) -> Result<()> {
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let bind = args.string("bind", "127.0.0.1:4433");
+    coordinator::remote::serve(&cfg, &bind)
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let connect = args.string("connect", "127.0.0.1:4433");
+    let Some(id) = args.get("worker-id") else {
+        bail!("worker requires --worker-id <0..n>");
+    };
+    let id: usize = id.parse().map_err(|_| anyhow::anyhow!("bad --worker-id {id:?}"))?;
+    coordinator::remote::run_remote_worker(&cfg, &connect, id)
 }
 
 fn print_log(log: &RunLog) {

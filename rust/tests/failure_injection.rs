@@ -147,6 +147,135 @@ fn pipeline_protocol_faults_are_clean_diagnostics() {
     }
 }
 
+/// Fail-loud guard for the socket scenarios: a wedged socket must fail
+/// the test, not hang the suite. A panic inside `f` propagates.
+fn watchdog(secs: u64, f: impl FnOnce() + Send + 'static) {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(RecvTimeoutError::Timeout) => panic!("watchdog: socket scenario hung"),
+    }
+}
+
+#[test]
+fn socket_worker_death_mid_round_surfaces_with_attribution() {
+    // The in-memory triage contract over real sockets: a worker dying
+    // mid-round under the depth-2 pipelined server must unwind cleanly
+    // — FIN propagation standing in for dropped channel ends — and the
+    // driver must still name the dead worker, not report a bare server
+    // error or a secondary "link closed" echo.
+    for zero_copy in [false, true] {
+        watchdog(120, move || {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            cfg.transport = "socket".into();
+            cfg.rounds = 50;
+            cfg.eval_every = 10;
+            cfg.pipeline_depth = 2;
+            cfg.zero_copy_ingest = zero_copy;
+            let mut s = setup::build(&cfg).unwrap();
+            let dim = s.dim;
+            s.engines[1] = Box::new(DyingEngine { dim, ok_rounds: 5, calls: 0 });
+            let err = run_threaded_with(&cfg, s).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("worker 1"),
+                "socket diagnostic should name the dead worker, got: {msg}"
+            );
+        });
+    }
+}
+
+#[test]
+fn socket_mid_frame_kill_is_a_disconnect_not_a_protocol_fault() {
+    // A scripted mid-frame kill: worker 1's sender puts a length prefix
+    // plus half a frame body on the wire, then cuts the socket. The
+    // server's stream reassembler must classify the truncated tail as a
+    // disconnect (worker-death triage class), never as a corrupt-frame
+    // protocol fault — and nothing may hang.
+    use cdadam::comm::socket::{
+        loopback_pair, server_link, worker_link, LinkFault, LinkOptions, NetProfile, SocketStream,
+    };
+    use cdadam::comm::UplinkFrame;
+    use cdadam::coordinator::pipeline::{PipelineError, PipelineServer};
+
+    for depth in [1usize, 2] {
+        watchdog(120, move || {
+            let (a0, b0) = loopback_pair().unwrap();
+            let (a1, b1) = loopback_pair().unwrap();
+            let (wl0, _m0) = worker_link(SocketStream::Tcp(a0), 0, &LinkOptions::default()).unwrap();
+            let fault = LinkFault { after_frames: 3, mid_frame: true };
+            let opts = LinkOptions { profile: NetProfile::default(), fault: Some(fault) };
+            let (wl1, _m1) = worker_link(SocketStream::Tcp(a1), 1, &opts).unwrap();
+            let (sl0, _d0) = server_link(SocketStream::Tcp(b0), 0, &LinkOptions::default()).unwrap();
+            let (sl1, _d1) = server_link(SocketStream::Tcp(b1), 1, &LinkOptions::default()).unwrap();
+
+            let spawn_worker = |wl: cdadam::comm::WorkerLink, from: u32| {
+                std::thread::spawn(move || {
+                    for t in 1..=10u64 {
+                        let fb = wire::encode_frame(t, from, &CompressedMsg::Dense(vec![0.5; 8]))
+                            .unwrap();
+                        if wl.up.send(UplinkFrame::Bytes(fb)).is_err() {
+                            return;
+                        }
+                        if wl.down.recv().is_err() {
+                            return;
+                        }
+                    }
+                })
+            };
+            let w0 = spawn_worker(wl0, 0);
+            let w1 = spawn_worker(wl1, 1);
+
+            let cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let strat = cfg.build_strategy().unwrap();
+            let mut server = strat.make_server(8, 2);
+            let err =
+                PipelineServer::new(10, depth).run(server.as_mut(), vec![sl0, sl1]).unwrap_err();
+            assert!(
+                !err.is_protocol_fault(),
+                "a truncated stream is a disconnect, not a protocol fault: {err}"
+            );
+            assert!(
+                matches!(err, PipelineError::WorkerDisconnected { worker: 1, .. }),
+                "expected WorkerDisconnected for worker 1, got: {err}"
+            );
+            w0.join().unwrap();
+            w1.join().unwrap();
+        });
+    }
+}
+
+#[test]
+fn socket_slow_link_under_bandwidth_cap_completes_identically() {
+    // A slow link is a condition, not a failure: under an injected
+    // latency + jitter + bandwidth cap the run must complete with the
+    // clean-shutdown triage class (Ok) and records bit-identical to the
+    // unshaped in-memory run — the injector is timing-only by contract.
+    watchdog(120, || {
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 15;
+        cfg.eval_every = 5;
+        cfg.transport = "memory".into();
+        let mem = run_threaded_with(&cfg, base_setup(&cfg)).unwrap();
+        cfg.transport = "socket".into();
+        cfg.net_latency_us = 300;
+        cfg.net_jitter_us = 200;
+        cfg.net_bandwidth_kbps = 256;
+        let slow = run_threaded_with(&cfg, base_setup(&cfg)).unwrap();
+        assert_eq!(mem.records.len(), slow.records.len());
+        for (a, b) in mem.records.iter().zip(&slow.records) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits(), "round {}", a.round);
+            assert_eq!(a.cum_bits, b.cum_bits, "round {}", a.round);
+        }
+    });
+}
+
 #[test]
 fn nan_gradients_propagate_to_metrics_not_panic() {
     let mut cfg = ExperimentConfig::preset("quickstart").unwrap();

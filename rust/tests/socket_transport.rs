@@ -1,0 +1,169 @@
+//! Socket transport differential battery: the loopback TCP backend must
+//! be a *pure transport* — every trajectory, bit split, and replica hash
+//! identical to the in-memory channels — across both downlink settings,
+//! the zero-copy/pipelined scheduling shapes, and under the seeded
+//! network-condition injector (timing-only by contract). Also drives the
+//! standalone `serve`/`worker` roles end-to-end over a Unix socket in
+//! one process.
+
+use std::time::Duration;
+
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::{remote, run_threaded};
+use cdadam::metrics::RunLog;
+
+/// The pinned small run every socket differential uses.
+fn base_cfg(compress_downlink: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+    cfg.rounds = 40;
+    cfg.eval_every = 10;
+    cfg.shard_size = 16; // sharded uplinks: 4 blocks over d = 50
+    cfg.compress_threads = 2;
+    cfg.compress_downlink = compress_downlink;
+    cfg.transport = "memory".into(); // explicit — env must not leak in
+    cfg.net_latency_us = 0;
+    cfg.net_jitter_us = 0;
+    cfg.net_bandwidth_kbps = 0;
+    cfg
+}
+
+fn assert_bit_identical(a: &RunLog, b: &RunLog, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{ctx}");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{ctx}: train_loss at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.grad_norm.to_bits(),
+            y.grad_norm.to_bits(),
+            "{ctx}: grad_norm at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.test_loss.to_bits(),
+            y.test_loss.to_bits(),
+            "{ctx}: test_loss at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.test_acc.to_bits(),
+            y.test_acc.to_bits(),
+            "{ctx}: test_acc at round {}",
+            x.round
+        );
+        assert_eq!(x.up_bits, y.up_bits, "{ctx}: up_bits at round {}", x.round);
+        assert_eq!(x.down_bits, y.down_bits, "{ctx}: down_bits at round {}", x.round);
+        assert_eq!(x.cum_bits, y.cum_bits, "{ctx}: cum_bits at round {}", x.round);
+    }
+}
+
+/// Fail-loud guard: sockets that wedge must fail the test, not hang CI.
+fn watchdog(secs: u64, f: impl FnOnce() + Send + 'static) {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(RecvTimeoutError::Timeout) => panic!("watchdog: socket scenario hung"),
+    }
+}
+
+#[test]
+fn socket_loopback_is_bit_identical_to_memory() {
+    // The tentpole pin: the full pipeline engine — recv → parse → fold →
+    // broadcast — over real TCP streams, in the baseline threaded shape
+    // and the zero-copy/pipelined shape, for both downlink settings.
+    // The replica-hash invariant is enforced inside the driver on every
+    // run; here we additionally require bit-equal records.
+    watchdog(240, || {
+        for compress_downlink in [false, true] {
+            let mem = run_threaded(&base_cfg(compress_downlink)).unwrap();
+
+            let mut cfg = base_cfg(compress_downlink);
+            cfg.transport = "socket".into();
+            let sock = run_threaded(&cfg).unwrap();
+            assert_bit_identical(&mem, &sock, &format!("socket baseline (down={compress_downlink})"));
+
+            cfg.zero_copy_ingest = true;
+            cfg.zero_copy_egress = true;
+            cfg.pipeline_depth = 2;
+            cfg.server_threads = 2;
+            cfg.server_min_parallel_dim = 1; // force the pool fold at d = 50
+            let sock_zc = run_threaded(&cfg).unwrap();
+            assert_bit_identical(
+                &mem,
+                &sock_zc,
+                &format!("socket zero-copy depth-2 (down={compress_downlink})"),
+            );
+        }
+    });
+}
+
+#[test]
+fn shaped_socket_run_is_bit_identical_and_replays_exactly() {
+    // The injector is timing-only and seeded: a latency/jitter/bandwidth
+    // profile must change *nothing* about the records, and the same
+    // seeded scenario must replay identically run-over-run.
+    watchdog(240, || {
+        let mem = run_threaded(&base_cfg(false)).unwrap();
+        let mut cfg = base_cfg(false);
+        cfg.transport = "socket".into();
+        cfg.net_latency_us = 200;
+        cfg.net_jitter_us = 150;
+        cfg.net_bandwidth_kbps = 512;
+        let a = run_threaded(&cfg).unwrap();
+        let b = run_threaded(&cfg).unwrap();
+        assert_bit_identical(&mem, &a, "shaped socket vs memory");
+        assert_bit_identical(&a, &b, "shaped socket replay");
+    });
+}
+
+#[test]
+fn serve_and_worker_roles_complete_over_unix_socket() {
+    // The multi-process roles, exercised in one test process over a
+    // Unix socket: `serve` seats the cohort via the hello handshake and
+    // runs the pipeline engine; each `worker` connects and runs the
+    // shared round loop. Both downlink settings.
+    watchdog(240, || {
+        for (tag, compress_downlink) in [("dense", false), ("down", true)] {
+            let mut cfg = base_cfg(compress_downlink);
+            cfg.n = 3;
+            cfg.rounds = 20;
+            cfg.eval_every = 10;
+            let n = cfg.n;
+            let path = std::env::temp_dir()
+                .join(format!("cdadam-sock-test-{}-{tag}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&path);
+            let bind = format!("unix:{}", path.display());
+
+            let scfg = cfg.clone();
+            let sbind = bind.clone();
+            let server = std::thread::spawn(move || remote::serve(&scfg, &sbind));
+            // the listener owns the path's lifecycle: wait for it to
+            // appear before pointing workers at it
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            while !path.exists() {
+                assert!(std::time::Instant::now() < deadline, "server never bound {bind}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            let workers: Vec<_> = (0..n)
+                .map(|i| {
+                    let wcfg = cfg.clone();
+                    let wbind = bind.clone();
+                    std::thread::spawn(move || remote::run_remote_worker(&wcfg, &wbind, i))
+                })
+                .collect();
+            for (i, w) in workers.into_iter().enumerate() {
+                w.join().unwrap().unwrap_or_else(|e| panic!("worker {i} ({tag}): {e:#}"));
+            }
+            server.join().unwrap().unwrap_or_else(|e| panic!("server ({tag}): {e:#}"));
+        }
+    });
+}

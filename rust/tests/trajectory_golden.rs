@@ -13,7 +13,11 @@
 //! baseline shape, and the threaded zero-copy/parallel-fold shape that
 //! exercises the wire-byte kernels) — the SIMD knob is a pure
 //! throughput knob, so its digests must equal the scalar baseline
-//! exactly rather than pin fixture rows of their own.
+//! exactly rather than pin fixture rows of their own — and two
+//! `transport = socket` runs per downlink setting (baseline threaded
+//! shape and the zero-copy pipelined shape): loopback TCP is a pure
+//! transport knob and must reproduce the in-memory digests bit-for-bit
+//! for all seven strategies.
 //!
 //! `compress_downlink` is the one *math* knob in the matrix: it changes
 //! the trajectory for dense-broadcast strategies (their downlink gets
@@ -244,6 +248,39 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
                     baseline,
                     "{strategy}: trajectory diverged with simd_kernels on \
                      (threaded zero-copy, compress_downlink={compress_downlink})"
+                );
+            }
+
+            // Transport dimension: the socket backend is a pure
+            // transport knob, so like SIMD it joins the matrix as two
+            // digest-equality runs rather than doubling it — the
+            // baseline threaded shape over loopback TCP, and the full
+            // zero-copy/pipelined/parallel-fold shape whose downlink
+            // frames really leave and re-enter the process as bytes.
+            // (base_cfg deliberately leaves `transport` on its env
+            // default, so the CI job that forces CDADAM_TRANSPORT=socket
+            // additionally routes the entire threaded matrix above over
+            // sockets.)
+            {
+                let mut cfg = base_cfg(strategy);
+                cfg.compress_downlink = compress_downlink;
+                cfg.transport = "socket".into();
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged over the socket transport \
+                     (baseline shape, compress_downlink={compress_downlink})"
+                );
+                cfg.zero_copy_ingest = true;
+                cfg.zero_copy_egress = true;
+                cfg.server_threads = 4;
+                cfg.server_min_parallel_dim = 1;
+                cfg.pipeline_depth = 2;
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged over the socket transport \
+                     (zero-copy pipelined shape, compress_downlink={compress_downlink})"
                 );
             }
 
