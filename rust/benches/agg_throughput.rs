@@ -10,6 +10,9 @@
 //! pure scheduling — the engine is bit-identical to the sequential fold
 //! at every thread count (asserted at the end of the run).
 //!
+//! Rows land in `BENCH_agg.json` at the repo root (sibling of
+//! `BENCH_kernels.json`, same `CDADAM_BENCH_JSON` directory override).
+//!
 //! ```bash
 //! cargo bench --bench agg_throughput              # preset geometry
 //! cargo bench --bench agg_throughput -- --n 16 --threads 8
@@ -20,6 +23,8 @@ use cdadam::comm::wire::{self, FrameView, PayloadView};
 use cdadam::compress::{CompressedMsg, Compressor, ScaledSign, ShardedCompressor, TopK};
 use cdadam::config::ExperimentConfig;
 use cdadam::util::args::Args;
+use cdadam::util::bench_json::{sibling_path, BenchSink};
+use cdadam::util::json::Json;
 use cdadam::util::rng::Rng;
 use cdadam::util::timer::bench;
 
@@ -40,7 +45,21 @@ fn make_uplinks(
         .collect()
 }
 
-fn row(name: &str, work_elems: usize, iters: usize, baseline_ms: Option<f64>, f: impl FnMut()) -> f64 {
+/// Time one aggregate variant, print its table line, and append a JSON
+/// row (`section`/`label`/`n`/`threads` identify the variant) to the
+/// sink.
+#[allow(clippy::too_many_arguments)]
+fn row(
+    sink: &mut BenchSink,
+    section: &str,
+    name: &str,
+    n: usize,
+    threads: usize,
+    work_elems: usize,
+    iters: usize,
+    baseline_ms: Option<f64>,
+    f: impl FnMut(),
+) -> f64 {
     let st = bench(2, iters, f);
     let ms = st.mean();
     let meps = work_elems as f64 / ms / 1e3;
@@ -49,6 +68,15 @@ fn row(name: &str, work_elems: usize, iters: usize, baseline_ms: Option<f64>, f:
         None => "  1.00x".into(),
     };
     println!("{name:<36} {ms:>9.3} ms  {meps:>9.1} Melem/s  {speedup}");
+    sink.row(&[
+        ("section", Json::Str(section.into())),
+        ("label", Json::Str(name.into())),
+        ("n", Json::Num(n as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("per_round_ms", Json::Num(ms)),
+        ("melem_per_s", Json::Num(meps)),
+        ("speedup_vs_baseline", Json::Num(baseline_ms.map_or(1.0, |b| b / ms))),
+    ]);
     ms
 }
 
@@ -71,6 +99,12 @@ fn main() {
         preset.name
     );
 
+    let mut sink = BenchSink::new("agg_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("iters", Json::Num(iters as f64));
+    sink.meta("preset", Json::Str(preset.name.clone()));
+
     for &n in &ns {
         println!(
             "\n--- n = {n} uplinks ---\n{:<36} {:>12}  {:>17}  {:>7}",
@@ -85,16 +119,36 @@ fn main() {
             let msgs = make_uplinks(mk, d, shard, preset.compress_threads, n);
             let mut out = vec![0.0f32; d];
             let seq = AggEngine::sequential();
-            let base = row(&format!("{label} sequential fold"), d * n, iters, None, || {
-                seq.average_into(&msgs, &mut out);
-                std::hint::black_box(&out);
-            });
+            let base = row(
+                &mut sink,
+                "fold",
+                &format!("{label} sequential fold"),
+                n,
+                0,
+                d * n,
+                iters,
+                None,
+                || {
+                    seq.average_into(&msgs, &mut out);
+                    std::hint::black_box(&out);
+                },
+            );
             for t in [2usize, max_threads] {
                 let eng = AggEngine::new(t);
-                row(&format!("{label} shard-parallel t={t}"), d * n, iters, Some(base), || {
-                    eng.average_into(&msgs, &mut out);
-                    std::hint::black_box(&out);
-                });
+                row(
+                    &mut sink,
+                    "fold",
+                    &format!("{label} shard-parallel t={t}"),
+                    n,
+                    t,
+                    d * n,
+                    iters,
+                    Some(base),
+                    || {
+                        eng.average_into(&msgs, &mut out);
+                        std::hint::black_box(&out);
+                    },
+                );
             }
         }
     }
@@ -124,18 +178,38 @@ fn main() {
             .collect();
         let engine = AggEngine::new(max_threads);
         let mut out = vec![0.0f32; d];
-        let base = row("owned: decode → fold", d * n, iters, None, || {
-            let owned: Vec<CompressedMsg> =
-                frames.iter().map(|b| wire::decode(b).expect("decode").payload).collect();
-            engine.average_into(&owned, &mut out);
-            std::hint::black_box(&out);
-        });
-        row("zero-copy: parse views → fold", d * n, iters, Some(base), || {
-            let views: Vec<PayloadView> =
-                frames.iter().map(|b| FrameView::parse(b).expect("parse").payload).collect();
-            engine.average_views_into(&views, &mut out);
-            std::hint::black_box(&out);
-        });
+        let base = row(
+            &mut sink,
+            "ingest",
+            "owned: decode → fold",
+            n,
+            max_threads,
+            d * n,
+            iters,
+            None,
+            || {
+                let owned: Vec<CompressedMsg> =
+                    frames.iter().map(|b| wire::decode(b).expect("decode").payload).collect();
+                engine.average_into(&owned, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        row(
+            &mut sink,
+            "ingest",
+            "zero-copy: parse views → fold",
+            n,
+            max_threads,
+            d * n,
+            iters,
+            Some(base),
+            || {
+                let views: Vec<PayloadView> =
+                    frames.iter().map(|b| FrameView::parse(b).expect("parse").payload).collect();
+                engine.average_views_into(&views, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
         // bit-equality assertion: both ingest modes produce the same
         // aggregate, to the bit, at full thread count
         let owned: Vec<CompressedMsg> =
@@ -165,4 +239,10 @@ fn main() {
     );
     println!("\nsanity: parallel == sequential fold, bit-for-bit ✓");
     println!("sanity: zero-copy view ingest == owned ingest, bit-for-bit ✓");
+
+    let path = sibling_path("BENCH_agg.json");
+    match sink.flush_to(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
 }

@@ -1,0 +1,234 @@
+//! Flat star vs star-of-stars round time: the same pipelined root
+//! server + n round-synchronous producers doing real compression work,
+//! with the fan-in switched between the flat topology and the two-level
+//! tree (`coordinator::tree`) at several group counts. Default scale is
+//! the tentpole scenario: d = 2²⁰, n ∈ {256, 1024}.
+//!
+//! Dense forwarding is a *pure* topology knob: worker 0 digests every
+//! downlink it receives and the run asserts flat and dense-tree produce
+//! bit-identical broadcast streams — its columns measure fan-in spread
+//! and hop dedup, nothing mathematical. The recompressing mode really
+//! pre-folds (m group means reach the root instead of n frames), so its
+//! digest legitimately differs and its column is the sublinear-scaling
+//! headline: root ingest work grows with m, not n.
+//!
+//! Rows land in `BENCH_tree.json` at the repo root (sibling of
+//! `BENCH_kernels.json`, same `CDADAM_BENCH_JSON` directory override).
+//!
+//! ```bash
+//! cargo bench --bench tree_throughput             # d = 2^20, n = 256/1024
+//! cargo bench --bench tree_throughput -- --quick  # d = 2^16, n = 32
+//! cargo bench --bench tree_throughput -- --n 512 --groups 16
+//! ```
+
+use std::sync::Arc;
+
+use cdadam::comm::socket::NetProfile;
+use cdadam::comm::{topology, wire, DownlinkPayload, UplinkFrame};
+use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::pipeline::PipelineServer;
+use cdadam::coordinator::tree::{build_tree, group_ranges, ForwardPlan, TreeSpec};
+use cdadam::util::args::Args;
+use cdadam::util::bench_json::{sibling_path, BenchSink};
+use cdadam::util::json::Json;
+use cdadam::util::timer::Timer;
+
+/// FNV-1a over a byte stream (same mix the golden tests use).
+fn mix_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Flat,
+    Dense,
+    Recompress,
+}
+
+/// One full run: n producers compressing a shared d-dim gradient (one
+/// read-only buffer for the whole cohort — at n = 1024 per-worker
+/// buffers would cost 4 GiB), folded at the root over the chosen
+/// topology. Returns (total wall ms, digest of worker 0's downlink
+/// byte stream).
+fn run_topology(
+    mode: Mode,
+    groups: usize,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    shard: usize,
+) -> (f64, u64) {
+    let mut cfg = ExperimentConfig::preset("quickstart").expect("preset");
+    cfg.strategy = "naive".into();
+    cfg.shard_size = shard;
+    cfg.compress_threads = 2;
+    let strat = cfg.build_strategy().expect("strategy");
+
+    let (workers, servers, _um, _dm) = topology(n);
+    let base: Arc<Vec<f32>> = Arc::new(
+        (0..d).map(|j| ((j * 31) % 97) as f32 * 0.13 - 6.0).collect(),
+    );
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| {
+            let base = Arc::clone(&base);
+            std::thread::spawn(move || {
+                let mut comp = ShardedCompressor::new(Box::new(ScaledSign::new()), shard, 2)
+                    .fork_stream(i as u64);
+                let mut digest = 0xcbf2_9ce4_8422_2325u64;
+                for t in 1..=rounds {
+                    let c = comp.compress(&base);
+                    let fb = wire::encode_frame(t as u64, i as u32, &c).expect("encode");
+                    link.up.send(UplinkFrame::Bytes(fb)).expect("uplink closed");
+                    let down = link.down.recv().expect("downlink closed");
+                    assert_eq!(down.round, t as u64);
+                    if i == 0 {
+                        match &down.payload {
+                            DownlinkPayload::Shared(m) => {
+                                let bytes =
+                                    wire::encode_parts(t as u64, 0, m).expect("encode down");
+                                mix_bytes(&mut digest, &bytes);
+                            }
+                            DownlinkPayload::Frame(fb) => mix_bytes(&mut digest, &fb.bytes),
+                        }
+                    }
+                }
+                digest
+            })
+        })
+        .collect();
+
+    let (root_links, root_n, tree_handles) = match mode {
+        Mode::Flat => (servers, n, Vec::new()),
+        Mode::Dense | Mode::Recompress => {
+            let spec = TreeSpec {
+                groups,
+                rounds,
+                socket_hops: false,
+                profile: NetProfile::default(),
+            };
+            let plan = if mode == Mode::Dense {
+                ForwardPlan::Dense
+            } else {
+                let m = group_ranges(n, groups).len();
+                // per-group streams forked off a distinct lane, exactly
+                // as `ExperimentConfig::build_group_compressor` does
+                let compressors: Vec<Box<dyn Compressor>> = (0..m)
+                    .map(|g| {
+                        ShardedCompressor::new(Box::new(ScaledSign::new()), shard, 2)
+                            .fork_stream(0xE0 ^ g as u64)
+                    })
+                    .collect();
+                ForwardPlan::Recompress { dim: d, compressors }
+            };
+            let tier = build_tree(&spec, plan, servers).expect("tree tier");
+            (tier.root_links, tier.root_n, tier.handles)
+        }
+    };
+
+    let mut server = strat.make_server(d, root_n);
+    let timer = Timer::start();
+    PipelineServer::new(rounds, 1).run(server.as_mut(), root_links).expect("server loop");
+    let ms = timer.elapsed_ms();
+
+    let mut digest = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("producer panicked");
+        if i == 0 {
+            digest = got;
+        }
+    }
+    for h in tree_handles {
+        h.join().expect("tree thread panicked");
+    }
+    (ms, digest)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let d: usize = args.usize("d", if quick { 1 << 16 } else { 1 << 20 }).unwrap();
+    let shard: usize = args.usize("shard", 65_536).unwrap();
+    let rounds: usize = args.usize("rounds", if quick { 2 } else { 3 }).unwrap();
+    let ns: Vec<usize> = match args.get("n") {
+        Some(v) => vec![v.parse().expect("bad --n")],
+        None if quick => vec![32],
+        None => vec![256, 1024],
+    };
+    let group_counts: Vec<usize> = match args.get("groups") {
+        Some(v) => vec![v.parse().expect("bad --groups")],
+        None if quick => vec![4],
+        None => vec![8, 32],
+    };
+
+    println!("### tree_throughput (d = {d}, shard = {shard}, {rounds} rounds)");
+    println!(
+        "{:<36} {:>10}  {:>11}  {:>9}",
+        "topology", "total", "per round", "vs flat"
+    );
+
+    let mut sink = BenchSink::new("tree_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("rounds", Json::Num(rounds as f64));
+
+    for &n in &ns {
+        let (flat_ms, flat_digest) = run_topology(Mode::Flat, 1, d, n, rounds, shard);
+        println!(
+            "{:<36} {flat_ms:>8.1} ms  {:>8.1} ms      1.00x",
+            format!("flat star (n = {n})"),
+            flat_ms / rounds as f64
+        );
+        sink.row(&[
+            ("n", Json::Num(n as f64)),
+            ("mode", Json::Str("flat".into())),
+            ("groups", Json::Num(1.0)),
+            ("total_ms", Json::Num(flat_ms)),
+            ("per_round_ms", Json::Num(flat_ms / rounds as f64)),
+            ("round_time_vs_flat", Json::Num(1.0)),
+        ]);
+
+        for &m in &group_counts {
+            if m >= n {
+                continue;
+            }
+            for (mode, tag) in [(Mode::Dense, "dense"), (Mode::Recompress, "recompress")] {
+                let (ms, digest) = run_topology(mode, m, d, n, rounds, shard);
+                // acceptance: dense forwarding must never change the
+                // broadcast stream worker 0 observed
+                if mode == Mode::Dense {
+                    assert_eq!(
+                        digest, flat_digest,
+                        "dense tree (n = {n}, m = {m}) changed the downlink stream"
+                    );
+                }
+                println!(
+                    "{:<36} {ms:>8.1} ms  {:>8.1} ms  {:>8.2}x",
+                    format!("tree {tag} (n = {n}, m = {m})"),
+                    ms / rounds as f64,
+                    ms / flat_ms
+                );
+                sink.row(&[
+                    ("n", Json::Num(n as f64)),
+                    ("mode", Json::Str(tag.into())),
+                    ("groups", Json::Num(m as f64)),
+                    ("total_ms", Json::Num(ms)),
+                    ("per_round_ms", Json::Num(ms / rounds as f64)),
+                    ("round_time_vs_flat", Json::Num(ms / flat_ms)),
+                ]);
+            }
+        }
+    }
+    println!("\nsanity: dense-tree downlink streams bit-identical to flat ✓");
+
+    let path = sibling_path("BENCH_tree.json");
+    match sink.flush_to(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
+}

@@ -714,6 +714,26 @@ pub fn listen_links(
     n: usize,
     profile: &NetProfile,
 ) -> Result<(Vec<ServerLink>, Vec<Arc<Meter>>)> {
+    listen_links_range(spec, 0..n, n, profile)
+}
+
+/// Bind `spec` and seat only the workers whose *global* ids fall in
+/// `range` — the group-aware generalization of [`listen_links`] a
+/// sub-aggregator process uses to host its slice of an n-worker cohort
+/// (`cohort_n`). Workers introduce themselves with their global id and
+/// the full cohort size, exactly as they would to a flat server, so a
+/// worker binary needs no knowledge of the tree shape. Links come back
+/// ordered by global id; jitter streams stay forked by global id so a
+/// worker's link behaves identically under either topology.
+pub fn listen_links_range(
+    spec: &BindSpec,
+    range: std::ops::Range<usize>,
+    cohort_n: usize,
+    profile: &NetProfile,
+) -> Result<(Vec<ServerLink>, Vec<Arc<Meter>>)> {
+    if range.start >= range.end || range.end > cohort_n {
+        bail!("worker range {range:?} invalid for cohort n = {cohort_n}");
+    }
     let listener = match spec {
         BindSpec::Tcp(addr) => {
             Listener::Tcp(TcpListener::bind(addr.as_str()).with_context(|| format!("bind {addr}"))?)
@@ -726,30 +746,32 @@ pub fn listen_links(
             )
         }
     };
-    let mut slots: Vec<Option<(ServerLink, Arc<Meter>)>> = (0..n).map(|_| None).collect();
+    let width = range.len();
+    let mut slots: Vec<Option<(ServerLink, Arc<Meter>)>> = (0..width).map(|_| None).collect();
     let mut seated = 0usize;
-    while seated < n {
+    while seated < width {
         let mut sock = accept_one(&listener)?;
         let (id, peer_n) = recv_hello(&mut sock)?;
-        if peer_n as usize != n {
-            bail!("worker {id} expects a cohort of {peer_n}, server runs {n}");
+        if peer_n as usize != cohort_n {
+            bail!("worker {id} expects a cohort of {peer_n}, server runs {cohort_n}");
         }
         let idx = id as usize;
-        if idx >= n {
-            bail!("worker id {id} out of range for n = {n}");
+        if !range.contains(&idx) {
+            bail!("worker id {id} out of range {range:?}");
         }
-        if slots[idx].is_some() {
+        let slot = idx - range.start;
+        if slots[slot].is_some() {
             bail!("duplicate worker id {id}");
         }
         let opts = LinkOptions { profile: profile.clone(), fault: None };
-        slots[idx] = Some(server_link(sock, idx as u64, &opts)?);
+        slots[slot] = Some(server_link(sock, idx as u64, &opts)?);
         seated += 1;
     }
     if let BindSpec::Unix(path) = spec {
         let _ = std::fs::remove_file(path);
     }
-    let mut links = Vec::with_capacity(n);
-    let mut meters = Vec::with_capacity(n);
+    let mut links = Vec::with_capacity(width);
+    let mut meters = Vec::with_capacity(width);
     for slot in slots {
         let (l, m) = slot.expect("all slots seated");
         links.push(l);
@@ -759,25 +781,76 @@ pub fn listen_links(
 }
 
 /// Connect to a listening server, introduce ourselves, and return the
-/// worker side of the link.
+/// worker side of the link. Fails immediately if the server is not yet
+/// listening — use [`connect_worker_link_retry`] to tolerate arbitrary
+/// launch order.
 pub fn connect_worker_link(
     spec: &BindSpec,
     worker_id: u32,
     n: u32,
     profile: &NetProfile,
 ) -> Result<WorkerLink> {
-    let mut sock = match spec {
+    let mut sock = connect_stream(spec)?;
+    send_hello(&mut sock, worker_id, n)?;
+    let opts = LinkOptions { profile: profile.clone(), fault: None };
+    let (link, _meter) = worker_link(sock, worker_id as u64, &opts)?;
+    Ok(link)
+}
+
+fn connect_stream(spec: &BindSpec) -> Result<SocketStream> {
+    Ok(match spec {
         BindSpec::Tcp(addr) => SocketStream::Tcp(
             TcpStream::connect(addr.as_str()).with_context(|| format!("connect {addr}"))?,
         ),
         BindSpec::Unix(path) => SocketStream::Unix(
             UnixStream::connect(path).with_context(|| format!("connect {}", path.display()))?,
         ),
-    };
-    send_hello(&mut sock, worker_id, n)?;
-    let opts = LinkOptions { profile: profile.clone(), fault: None };
-    let (link, _meter) = worker_link(sock, worker_id as u64, &opts)?;
-    Ok(link)
+    })
+}
+
+/// [`connect_worker_link`] with bounded-backoff retry: processes in a
+/// multi-process run launch in arbitrary order, so a worker (or
+/// sub-aggregator) may dial before the server has bound its address.
+/// Retries connection-establishment failures (refused, unix path not
+/// yet created) with exponential backoff from 10 ms capped at 500 ms
+/// per attempt, until `timeout` elapses — then fails loudly, naming
+/// the address, the deadline, and the last underlying error. Only the
+/// *connect* is retried; once a stream is established, a hello or
+/// handshake failure is a real protocol error and surfaces at once.
+pub fn connect_worker_link_retry(
+    spec: &BindSpec,
+    worker_id: u32,
+    n: u32,
+    profile: &NetProfile,
+    timeout: Duration,
+) -> Result<WorkerLink> {
+    let started = std::time::Instant::now();
+    let mut backoff = Duration::from_millis(10);
+    let mut last_err;
+    loop {
+        match connect_stream(spec) {
+            Ok(mut sock) => {
+                send_hello(&mut sock, worker_id, n)?;
+                let opts = LinkOptions { profile: profile.clone(), fault: None };
+                let (link, _meter) = worker_link(sock, worker_id as u64, &opts)?;
+                return Ok(link);
+            }
+            Err(e) => last_err = e,
+        }
+        if started.elapsed() >= timeout {
+            let addr = match spec {
+                BindSpec::Tcp(a) => a.clone(),
+                BindSpec::Unix(p) => format!("unix:{}", p.display()),
+            };
+            return Err(last_err.context(format!(
+                "no server reachable at {addr} after {:.1}s of retries (worker {worker_id}); \
+                 is `cdadam serve` running with the same bind address?",
+                timeout.as_secs_f64()
+            )));
+        }
+        std::thread::sleep(backoff.min(timeout.saturating_sub(started.elapsed())));
+        backoff = (backoff * 2).min(Duration::from_millis(500));
+    }
 }
 
 /// A connected loopback TCP socket pair — raw material for tests that

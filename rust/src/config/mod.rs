@@ -149,6 +149,8 @@ const KNOB_NET_LATENCY_US: UsizeKnob =
 const KNOB_NET_JITTER_US: UsizeKnob = UsizeKnob::new("net-jitter-us", "CDADAM_NET_JITTER_US", 0);
 const KNOB_NET_BANDWIDTH_KBPS: UsizeKnob =
     UsizeKnob::new("net-bandwidth-kbps", "CDADAM_NET_BANDWIDTH_KBPS", 0);
+const KNOB_AGG_GROUPS: UsizeKnob = UsizeKnob::new("agg-groups", "CDADAM_AGG_GROUPS", 1);
+const KNOB_TREE_FORWARD: StrKnob = StrKnob::new("tree-forward", "CDADAM_TREE_FORWARD", "dense");
 
 /// Which link backend the threaded coordinator builds (parsed from the
 /// `transport` knob by [`ExperimentConfig::transport_kind`]).
@@ -160,6 +162,24 @@ pub enum Transport {
     /// ([`crate::comm::socket`]): every frame really leaves and
     /// re-enters the process as bytes.
     Socket,
+}
+
+/// What a sub-aggregator forwards to the root in tree topology (parsed
+/// from the `tree_forward` knob by
+/// [`ExperimentConfig::tree_forward_kind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeForward {
+    /// Sub-aggregators absorb their group's fan-in and relay every
+    /// worker frame in worker order over one hop link; the root runs
+    /// the flat fold verbatim. **Bit-identical** to the flat star —
+    /// a topology knob, never a math knob.
+    Dense,
+    /// Sub-aggregators fold a true group mean and re-compress it
+    /// through the run's `Compressor` stack before forwarding — a new
+    /// bandwidth/accuracy algorithm point (Efficient-Adam-style
+    /// re-compression of aggregated updates). **A math knob**: the
+    /// root folds m group means instead of n uplinks.
+    Recompress,
 }
 
 /// What model/data the run trains.
@@ -330,6 +350,25 @@ pub struct ExperimentConfig {
     /// 0 = unlimited). CLI `--net-bandwidth-kbps`; env
     /// `CDADAM_NET_BANDWIDTH_KBPS`.
     pub net_bandwidth_kbps: usize,
+    /// Number of sub-aggregator groups in the two-level star-of-stars
+    /// ([`crate::coordinator::tree`]): m sub-aggregators each drive
+    /// their ≈ n/m workers' uplinks and forward to the root. 1 (the
+    /// default) = the flat star verbatim; values are clamped to ≤ n at
+    /// run time. In `dense` forwarding mode this is a topology knob,
+    /// never a math knob — trajectories, replica hashes, and cum_bits
+    /// are bit-identical to the flat star (pinned by the trajectory
+    /// golden matrix's topology dimension). Tree topology implies the
+    /// threaded coordinator. CLI `--agg-groups`; env
+    /// `CDADAM_AGG_GROUPS` flips the default so CI can force the tree
+    /// path across the whole suite.
+    pub agg_groups: usize,
+    /// What sub-aggregators forward to the root when `agg_groups > 1`:
+    /// `dense` (relay every worker frame — bit-identical to flat) or
+    /// `recompress` (fold a group mean and re-compress it through the
+    /// run's compressor stack — the second *math* knob after
+    /// `compress_downlink`). CLI `--tree-forward`; env
+    /// `CDADAM_TREE_FORWARD`.
+    pub tree_forward: String,
 }
 
 impl Default for ExperimentConfig {
@@ -371,6 +410,8 @@ impl Default for ExperimentConfig {
             net_latency_us: KNOB_NET_LATENCY_US.default(),
             net_jitter_us: KNOB_NET_JITTER_US.default(),
             net_bandwidth_kbps: KNOB_NET_BANDWIDTH_KBPS.default(),
+            agg_groups: KNOB_AGG_GROUPS.default(),
+            tree_forward: KNOB_TREE_FORWARD.default(),
         }
     }
 }
@@ -508,9 +549,12 @@ impl ExperimentConfig {
         KNOB_NET_LATENCY_US.apply(args, &mut self.net_latency_us)?;
         KNOB_NET_JITTER_US.apply(args, &mut self.net_jitter_us)?;
         KNOB_NET_BANDWIDTH_KBPS.apply(args, &mut self.net_bandwidth_kbps)?;
-        // fail fast on an unknown transport name, at parse time rather
-        // than mid-run
+        KNOB_AGG_GROUPS.apply(args, &mut self.agg_groups)?;
+        KNOB_TREE_FORWARD.apply(args, &mut self.tree_forward);
+        // fail fast on an unknown transport or forwarding mode name,
+        // at parse time rather than mid-run
         self.transport_kind()?;
+        self.tree_forward_kind()?;
         if args.flag("full") {
             if let Task::Images { full, .. } = &mut self.task {
                 *full = true;
@@ -637,6 +681,37 @@ impl ExperimentConfig {
             "socket" | "tcp" => Ok(Transport::Socket),
             other => bail!("unknown transport {other:?} (expected memory | socket)"),
         }
+    }
+
+    /// Parse the `tree_forward` knob into its forwarding mode.
+    pub fn tree_forward_kind(&self) -> Result<TreeForward> {
+        match self.tree_forward.as_str() {
+            "" | "dense" => Ok(TreeForward::Dense),
+            "recompress" | "recompressing" => Ok(TreeForward::Recompress),
+            other => bail!("unknown tree forwarding mode {other:?} (expected dense | recompress)"),
+        }
+    }
+
+    /// Compressor a re-compressing sub-aggregator runs its group fold
+    /// through: the run's compressor family (and sharded wrap) on its
+    /// own stream (`seed ^ 0xE0`, forked per group) so a stateful
+    /// compressor's group draws never mirror any worker uplink
+    /// (`^ 0xC0`) or downlink (`^ 0xD0`) stream.
+    pub fn build_group_compressor(&self, group: usize) -> Result<Box<dyn compress::Compressor>> {
+        let mut comp =
+            compress::by_name(&self.compressor, self.k_frac, self.block_size, self.seed ^ 0xE0)?;
+        if self.shard_size > 0 {
+            let mut sharded = compress::ShardedCompressor::new(
+                comp,
+                self.shard_size,
+                self.compress_threads.max(1),
+            );
+            if self.compress_min_parallel_dim > 0 {
+                sharded = sharded.with_min_parallel_dim(self.compress_min_parallel_dim);
+            }
+            comp = Box::new(sharded);
+        }
+        Ok(comp.fork_stream(group as u64))
     }
 
     /// The socket transport's network-condition profile, seeded off the
@@ -963,6 +1038,58 @@ mod tests {
             }
             other => panic!("expected sharded downlink, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn tree_knobs_parse_and_validate() {
+        let cfg = ExperimentConfig::preset("quickstart").unwrap();
+        // built-in defaults: flat star, dense forwarding — but only
+        // assert when the env vars aren't forcing a suite-wide default
+        // (the CDADAM_AGG_GROUPS=4 CI job), same pattern as transport
+        if std::env::var("CDADAM_AGG_GROUPS").is_err() {
+            assert_eq!(cfg.agg_groups, 1, "flat star is the default");
+        }
+        if std::env::var("CDADAM_TREE_FORWARD").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert_eq!(cfg.tree_forward_kind().unwrap(), TreeForward::Dense);
+        }
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(
+            ["--agg-groups", "4", "--tree-forward", "recompress"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.agg_groups, 4);
+        assert_eq!(cfg.tree_forward_kind().unwrap(), TreeForward::Recompress);
+        // case-normalized, "recompressing" accepted as an alias
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--tree-forward", "Recompressing"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.tree_forward_kind().unwrap(), TreeForward::Recompress);
+        // unknown mode fails at parse time, not mid-run
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--tree-forward", "carrier-pigeon"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
+        // absent flags leave the (env-derived) defaults untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let (g, f) = (cfg2.agg_groups, cfg2.tree_forward.clone());
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.agg_groups, g);
+        assert_eq!(cfg2.tree_forward, f);
+    }
+
+    #[test]
+    fn group_compressors_fork_per_group_off_their_own_stream() {
+        // rand-k is the stateful family: distinct groups must draw
+        // distinct index streams, and the group stream must not mirror
+        // the uplink (^0xC0) or downlink (^0xD0) streams
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.compressor = "randk".into();
+        cfg.k_frac = 0.1;
+        let x: Vec<f32> = (0..200).map(|i| (i as f32).sin()).collect();
+        let g0 = cfg.build_group_compressor(0).unwrap().compress(&x);
+        let g0b = cfg.build_group_compressor(0).unwrap().compress(&x);
+        let g1 = cfg.build_group_compressor(1).unwrap().compress(&x);
+        assert_eq!(g0, g0b, "group compressor must be deterministic given (seed, group)");
+        assert_ne!(g0, g1, "groups replayed identical rand-k streams");
     }
 
     #[test]

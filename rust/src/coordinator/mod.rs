@@ -25,6 +25,7 @@ pub mod pipeline;
 pub mod remote;
 pub mod setup;
 pub mod threaded;
+pub mod tree;
 
 pub use lockstep::run_lockstep;
 pub use threaded::run_threaded;
@@ -77,8 +78,15 @@ pub(crate) fn make_uplink_frame(
 /// all), so `transport = socket` implies the threaded driver — which
 /// is trajectory-identical to lockstep, so forcing the knob (e.g.
 /// `CDADAM_TRANSPORT=socket` suite-wide in CI) changes no results.
+/// Hierarchical aggregation (`agg_groups > 1`) likewise only exists
+/// where links exist, and its dense-forwarding default is bit-identical
+/// to the flat star, so forcing `CDADAM_AGG_GROUPS` suite-wide changes
+/// no results either.
 pub fn run(cfg: &ExperimentConfig) -> anyhow::Result<RunLog> {
-    if cfg.threaded || cfg.transport_kind()? == crate::config::Transport::Socket {
+    if cfg.threaded
+        || cfg.transport_kind()? == crate::config::Transport::Socket
+        || cfg.agg_groups > 1
+    {
         run_threaded(cfg)
     } else {
         run_lockstep(cfg)

@@ -16,17 +16,33 @@
 //! launched with the same preset/knobs or the hello handshake and
 //! round math will disagree loudly.
 
+use std::time::Duration;
+
 use anyhow::{ensure, Result};
 
 use super::pipeline::PipelineServer;
 use super::setup;
 use super::threaded::{drive_worker, WorkerLoopSpec};
-use crate::comm::socket::{connect_worker_link, listen_links, BindSpec};
-use crate::config::ExperimentConfig;
+use super::tree;
+use crate::comm::socket::{
+    connect_worker_link_retry, listen_links, listen_links_range, BindSpec,
+};
+use crate::config::{ExperimentConfig, TreeForward};
 use crate::optim::LrSchedule;
+
+/// How long a connecting role (worker, sub-aggregator) retries before
+/// declaring the server unreachable. Processes launch in arbitrary
+/// order, so the first dial routinely beats the server's bind.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Run the server role: listen on `bind`, seat `cfg.n` workers, drive
 /// `cfg.rounds` pipelined rounds, then report downlink meter totals.
+///
+/// With `agg_groups > 1` the sub-aggregator tier is built *in-process*
+/// over the accepted worker links — workers speak the flat hello
+/// protocol regardless of topology, and the dense default stays
+/// bit-identical. Genuinely multi-process sub-aggregators are the
+/// opt-in [`serve_tree_root`] / [`run_remote_subagg`] roles.
 pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
     crate::simd::set_enabled(cfg.simd_kernels);
     let spec = BindSpec::parse(bind)?;
@@ -35,7 +51,6 @@ pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
     // gradient engines built here are unused (they live in the worker
     // processes).
     let s = setup::build(cfg)?;
-    let mut server = strat.make_server(s.dim, cfg.n);
     let downlink = cfg.build_downlink()?;
     eprintln!(
         "cdadam serve: listening on {bind} for {} worker(s), d = {}, {} rounds",
@@ -43,13 +58,131 @@ pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
     );
     let (links, down_meters) = listen_links(&spec, cfg.n, &cfg.net_profile())?;
     eprintln!("cdadam serve: cohort complete, running");
-    PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
+    let (root_links, root_n, tree_handles) = if cfg.agg_groups > 1 {
+        let plan = match cfg.tree_forward_kind()? {
+            TreeForward::Dense => tree::ForwardPlan::Dense,
+            TreeForward::Recompress => {
+                let m = tree::group_ranges(cfg.n, cfg.agg_groups).len();
+                let compressors = (0..m)
+                    .map(|g| cfg.build_group_compressor(g))
+                    .collect::<Result<Vec<_>>>()?;
+                tree::ForwardPlan::Recompress { dim: s.dim, compressors }
+            }
+        };
+        // the worker links already cross the real network; the hop
+        // tier here is an in-process detail, so it rides memory links
+        let tspec = tree::TreeSpec {
+            groups: cfg.agg_groups,
+            rounds: cfg.rounds,
+            socket_hops: false,
+            profile: cfg.net_profile(),
+        };
+        let tier = tree::build_tree(&tspec, plan, links)?;
+        (tier.root_links, tier.root_n, tier.handles)
+    } else {
+        (links, cfg.n, Vec::new())
+    };
+    let mut server = strat.make_server(s.dim, root_n);
+    let result = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
         .with_downlink(downlink)
-        .run(server.as_mut(), links)
-        .map_err(anyhow::Error::new)?;
+        .run(server.as_mut(), root_links);
+    for h in tree_handles {
+        let _ = h.join();
+    }
+    result.map_err(anyhow::Error::new)?;
     let bits: u64 = down_meters.iter().map(|m| m.bits()).sum();
     let msgs: u64 = down_meters.iter().map(|m| m.msgs()).sum();
     eprintln!("cdadam serve: done — {bits} downlink bits over {msgs} broadcasts");
+    Ok(())
+}
+
+/// Run the tree-root role of a genuinely multi-process star-of-stars:
+/// listen on `bind` for the m sub-aggregator hop links (each introduced
+/// by a hello carrying its group id and cohort m — the same handshake
+/// workers use, at group scope), then fold rounds exactly as the
+/// in-process tree root does: the flat n-wide fold over bridged virtual
+/// links in dense mode, the m-wide group-mean fold in recompress mode.
+pub fn serve_tree_root(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
+    crate::simd::set_enabled(cfg.simd_kernels);
+    ensure!(cfg.agg_groups > 1, "tree root needs --agg-groups > 1");
+    let spec = BindSpec::parse(bind)?;
+    let strat = cfg.build_strategy()?;
+    let s = setup::build(cfg)?;
+    let ranges = tree::group_ranges(cfg.n, cfg.agg_groups);
+    let m = ranges.len();
+    let downlink = cfg.build_downlink()?;
+    eprintln!(
+        "cdadam serve --tree-root: listening on {bind} for {m} sub-aggregator(s) \
+         covering {} worker(s), d = {}, {} rounds",
+        cfg.n, s.dim, cfg.rounds
+    );
+    let (hop_links, hop_down_meters) = listen_links(&spec, m, &cfg.net_profile())?;
+    eprintln!("cdadam serve --tree-root: hop cohort complete, running");
+    let (root_links, root_n, bridge_handles) = match cfg.tree_forward_kind()? {
+        TreeForward::Dense => {
+            let (links, handles) = tree::bridge_dense(cfg.rounds, &ranges, hop_links);
+            (links, cfg.n, handles)
+        }
+        TreeForward::Recompress => (hop_links, m, Vec::new()),
+    };
+    let mut server = strat.make_server(s.dim, root_n);
+    let result = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
+        .with_downlink(downlink)
+        .run(server.as_mut(), root_links);
+    for h in bridge_handles {
+        let _ = h.join();
+    }
+    result.map_err(anyhow::Error::new)?;
+    let bits: u64 = hop_down_meters.iter().map(|mm| mm.bits()).sum();
+    let msgs: u64 = hop_down_meters.iter().map(|mm| mm.msgs()).sum();
+    eprintln!("cdadam serve --tree-root: done — {bits} hop downlink bits over {msgs} broadcasts");
+    Ok(())
+}
+
+/// Run one sub-aggregator role: dial the tree root at `connect_root`
+/// (with retry — launch order is arbitrary) introducing ourselves as
+/// group `group` of cohort m, seat our slice of the worker cohort on
+/// `bind` (workers use their *global* ids and the full cohort size, so
+/// a worker process is topology-oblivious), then run the group loop:
+/// dense relay or recompressed group-mean forwarding.
+pub fn run_remote_subagg(
+    cfg: &ExperimentConfig,
+    group: usize,
+    connect_root: &str,
+    bind: &str,
+) -> Result<()> {
+    crate::simd::set_enabled(cfg.simd_kernels);
+    let ranges = tree::group_ranges(cfg.n, cfg.agg_groups);
+    let m = ranges.len();
+    ensure!(m > 1, "sub-aggregator needs --agg-groups > 1 (and n > 1)");
+    ensure!(group < m, "group {group} out of range (m = {m})");
+    let range = ranges[group].clone();
+    let root_spec = BindSpec::parse(connect_root)?;
+    let bind_spec = BindSpec::parse(bind)?;
+    let s = setup::build(cfg)?;
+    let profile = cfg.net_profile();
+    eprintln!(
+        "cdadam subagg {group}: dialing root at {connect_root} (m = {m}), \
+         seating workers {}..{} on {bind}",
+        range.start, range.end
+    );
+    let hop =
+        connect_worker_link_retry(&root_spec, group as u32, m as u32, &profile, CONNECT_TIMEOUT)?;
+    let (links, _down_meters) = listen_links_range(&bind_spec, range.clone(), cfg.n, &profile)?;
+    eprintln!("cdadam subagg {group}: group cohort complete, running");
+    let completed = match cfg.tree_forward_kind()? {
+        TreeForward::Dense => tree::run_subagg_dense(cfg.rounds, &links, &hop),
+        TreeForward::Recompress => {
+            let comp = cfg.build_group_compressor(group)?;
+            tree::run_subagg_recompress(cfg.rounds, group, &links, &hop, s.dim, comp)
+        }
+    };
+    ensure!(
+        completed,
+        "subagg {group}: aborted before round {} (a worker or the root closed its link)",
+        cfg.rounds
+    );
+    eprintln!("cdadam subagg {group}: done ({} rounds)", cfg.rounds);
     Ok(())
 }
 
@@ -68,7 +201,17 @@ pub fn run_remote_worker(cfg: &ExperimentConfig, connect: &str, index: usize) ->
     let sched = LrSchedule::multi_step(cfg.lr as f32, &cfg.lr_milestones, cfg.lr_gamma as f32);
     let mut params = s.init_params.clone();
     eprintln!("cdadam worker {index}: connecting to {connect} (n = {}, d = {})", cfg.n, s.dim);
-    let link = connect_worker_link(&spec, index as u32, cfg.n as u32, &cfg.net_profile())?;
+    // retry with bounded backoff: in a multi-process launch the worker
+    // routinely dials before the server (or its group's sub-aggregator)
+    // has bound the address; a dead address still fails loudly after
+    // the deadline instead of hanging or dying on the first refusal.
+    let link = connect_worker_link_retry(
+        &spec,
+        index as u32,
+        cfg.n as u32,
+        &cfg.net_profile(),
+        CONNECT_TIMEOUT,
+    )?;
     let loop_spec = WorkerLoopSpec {
         dim: s.dim,
         rounds: cfg.rounds,

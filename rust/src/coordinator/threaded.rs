@@ -12,10 +12,10 @@ use std::sync::mpsc::channel;
 use anyhow::{anyhow, bail, Result};
 
 use super::pipeline::PipelineServer;
-use super::{params_hash, setup};
+use super::{params_hash, setup, tree};
 use crate::algo::WorkerAlgo;
 use crate::comm::{self, topology, wire, DownlinkPayload, WorkerLink};
-use crate::config::{ExperimentConfig, Transport};
+use crate::config::{ExperimentConfig, Transport, TreeForward};
 use crate::metrics::{RoundRecord, RunLog};
 use crate::models::GradEngine;
 use crate::optim::LrSchedule;
@@ -178,6 +178,41 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     };
     let (report_tx, report_rx) = channel::<EvalReport>();
 
+    // --- tree tier (agg_groups > 1): star-of-stars ----------------------
+    // interpose m sub-aggregators between the worker links and the root.
+    // Dense forwarding relays every frame in worker order, so the root
+    // below runs the *flat* fold over virtual links — a pure topology
+    // knob, bit-identical by construction. Recompress pre-folds a group
+    // mean per hop and the root folds m group uplinks — the math knob.
+    // agg_groups = 1 is the historical flat star, verbatim.
+    let is_tree = cfg.agg_groups > 1;
+    let mut dense_tree = false;
+    let (root_links, root_n, tree_handles, hop_up_meters, hop_down_meters) = if is_tree {
+        let plan = match cfg.tree_forward_kind()? {
+            TreeForward::Dense => {
+                dense_tree = true;
+                tree::ForwardPlan::Dense
+            }
+            TreeForward::Recompress => {
+                let m = tree::group_ranges(n, cfg.agg_groups).len();
+                let compressors = (0..m)
+                    .map(|g| cfg.build_group_compressor(g))
+                    .collect::<Result<Vec<_>>>()?;
+                tree::ForwardPlan::Recompress { dim, compressors }
+            }
+        };
+        let spec = tree::TreeSpec {
+            groups: cfg.agg_groups,
+            rounds,
+            socket_hops: cfg.transport_kind()? == Transport::Socket,
+            profile: cfg.net_profile(),
+        };
+        let tier = tree::build_tree(&spec, plan, server_links)?;
+        (tier.root_links, tier.root_n, tier.handles, tier.hop_up_meters, tier.hop_down_meters)
+    } else {
+        (server_links, n, Vec::new(), Vec::new(), Vec::new())
+    };
+
     // --- server thread: the staged pipeline engine ----------------------
     // recv → parse → fold → broadcast as explicit stages. At depth 1 the
     // engine reproduces the historical lockstep-per-round loop; at depth
@@ -185,7 +220,7 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     // parked uplink frames so round t+1's recv (and uplink i+1's send)
     // overlaps round t's parse+fold. Any failure comes back as a named
     // PipelineError instead of a panic or a silent return.
-    let mut server = strat.make_server(dim, n);
+    let mut server = strat.make_server(dim, root_n);
     let zero_copy = cfg.zero_copy_ingest;
     let zero_copy_egress = cfg.zero_copy_egress;
     let depth = cfg.pipeline_depth.max(1);
@@ -195,7 +230,7 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
         PipelineServer::new(rounds, depth)
             .with_downlink(downlink)
-            .run(server.as_mut(), server_links)
+            .run(server.as_mut(), root_links)
     })?;
 
     // --- worker threads --------------------------------------------------
@@ -325,9 +360,15 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let worker_results: Vec<std::thread::Result<Result<()>>> =
         joins.into_iter().map(|j| j.join()).collect();
     let server_result = server_join.join();
+    // the sub-aggregator tier unwinds once both of its sides are down
+    // (worker links closed above, root links dropped by the pipeline),
+    // so these joins cannot hang; a panic here is a tree bug, reported
+    // after the more-causal worker panics.
+    let tree_panicked = tree_handles.into_iter().map(|h| h.join()).filter(|r| r.is_err()).count();
     for (i, r) in worker_results.iter().enumerate() {
         anyhow::ensure!(r.is_ok(), "worker {i} panicked");
     }
+    anyhow::ensure!(tree_panicked == 0, "{tree_panicked} sub-aggregator thread(s) panicked");
     if let Ok(Err(e)) = &server_result {
         if e.is_protocol_fault() {
             return Err(anyhow::Error::new(e.clone()));
@@ -362,6 +403,28 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
             metered == last.cum_bits + headers,
             "bit-accounting mismatch: metered {metered} != payload {} + headers {headers}",
             last.cum_bits
+        );
+    }
+    // per-tier conservation audit for the dense tree: the hop tier
+    // relays worker frames verbatim, so its uplink meters must carry
+    // exactly the worker tier's uplink traffic, while its downlink
+    // carries one broadcast per group per round (the dedup that makes
+    // the hop cheaper than the flat fan-out).
+    if dense_tree {
+        let hop_bits: u64 = hop_up_meters.iter().map(|m| m.bits()).sum();
+        let hop_msgs: u64 = hop_up_meters.iter().map(|m| m.msgs()).sum();
+        let worker_bits: u64 = up_meters.iter().map(|m| m.bits()).sum();
+        let worker_msgs: u64 = up_meters.iter().map(|m| m.msgs()).sum();
+        anyhow::ensure!(
+            hop_bits == worker_bits && hop_msgs == worker_msgs,
+            "tree tier accounting mismatch: hop uplink {hop_bits} bits / {hop_msgs} msgs != \
+             worker uplink {worker_bits} bits / {worker_msgs} msgs"
+        );
+        let hop_down_msgs: u64 = hop_down_meters.iter().map(|m| m.msgs()).sum();
+        let expect = (hop_down_meters.len() * rounds) as u64;
+        anyhow::ensure!(
+            hop_down_msgs == expect,
+            "tree downlink dedup mismatch: {hop_down_msgs} hop broadcasts != {expect}"
         );
     }
     Ok(log)

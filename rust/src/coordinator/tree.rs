@@ -1,0 +1,697 @@
+//! Two-level star-of-stars aggregation: m sub-aggregators between the
+//! workers and the root server, so no single thread fans in all n
+//! uplinks.
+//!
+//! The flat star folds every uplink at one server; `agg::AggEngine`
+//! parallelized that fold across *coordinates*, but the recv loop is
+//! still a single fan-in point that scales linearly in n. The tree
+//! splits the n worker links into m contiguous groups
+//! ([`group_ranges`]); each group gets a sub-aggregator thread that
+//! absorbs its workers' fan-in and talks to the root over **one** hop
+//! link per group, in one of two forwarding modes:
+//!
+//! * [`ForwardPlan::Dense`] — the sub-aggregator relays every worker
+//!   frame over its hop link in strict worker order, and a per-group
+//!   demux thread feeds them back into a virtual n-link star for the
+//!   **untouched** root `PipelineServer`. The root executes exactly the
+//!   flat fold's `ingest_one` call sequence on exactly the flat frames,
+//!   so the trajectory is bit-identical to the flat star *by
+//!   construction* — f32 addition is non-associative, so any scheme
+//!   that pre-folds per-group partials cannot be. This is a pure
+//!   topology knob: the win is m hop broadcasts per round on the
+//!   downlink (one per group, fanned back out locally) and fan-in
+//!   spread over m threads, not fewer uplink bytes.
+//! * [`ForwardPlan::Recompress`] — the sub-aggregator really pre-folds:
+//!   it runs the group's frames through the same
+//!   [`fold_round`] stage the flat server uses (a per-group mean), then
+//!   pushes the folded vector back through the configured `Compressor`
+//!   stack (per-group RNG stream, `seed ^ 0xE0` forked by group id) and
+//!   forwards one compressed uplink. The root then folds m group means
+//!   — a *math* knob (mean-of-group-means reweights stragglers when
+//!   n % m ≠ 0) that buys an n/m uplink-byte reduction at the root,
+//!   the bandwidth/accuracy point Efficient-Adam-style re-compression
+//!   motivates.
+//!
+//! Hop links reuse the ordinary [`WorkerLink`]/[`ServerLink`] pair —
+//! in-process channels by default, real loopback sockets when the run's
+//! transport is `socket` — so hop traffic is metered by the same
+//! [`Meter`]s as worker traffic, split per tier ([`TreeTier`] exposes
+//! the hop meters; the worker-tier meters are untouched). In dense mode
+//! the hop relays the worker frames verbatim, so the per-tier meters
+//! obey a conservation identity the coordinator audits end-of-run:
+//! Σ_g hop_up(g) == Σ_i worker_up(i), in both bits and messages.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::agg::{AggEngine, UplinkRef};
+use crate::algo::ServerAlgo;
+use crate::comm::socket::{socket_topology, NetProfile};
+use crate::comm::{
+    topology, Broadcast, Meter, MeteredReceiver, MeteredSender, ServerLink, UplinkFrame, WireMsg,
+    WorkerLink,
+};
+use crate::compress::{CompressedMsg, Compressor};
+use crate::coordinator::pipeline::fold_round;
+
+/// Split `0..n` into `min(m, n)` contiguous groups of near-equal size:
+/// the first `n % m` groups get one extra worker. Contiguity means
+/// group-major iteration order equals flat worker order — the property
+/// the dense mode's bit-identity rests on. `m` is clamped into
+/// `[1, n]`; `n == 0` yields no groups.
+pub fn group_ranges(n: usize, m: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = m.clamp(1, n);
+    let (base, extra) = (n / m, n % m);
+    let mut out = Vec::with_capacity(m);
+    let mut lo = 0;
+    for g in 0..m {
+        let size = base + usize::from(g < extra);
+        out.push(lo..lo + size);
+        lo += size;
+    }
+    out
+}
+
+/// What a sub-aggregator forwards up its hop link.
+pub enum ForwardPlan {
+    /// Relay every worker frame in worker order; the root runs the flat
+    /// fold over demultiplexed virtual links. Bit-identical topology
+    /// knob.
+    Dense,
+    /// Fold a per-group mean and re-compress it through the group's
+    /// forked compressor stream; the root folds m group means. Math
+    /// knob.
+    Recompress { dim: usize, compressors: Vec<Box<dyn Compressor>> },
+}
+
+/// Static shape of the tree tier.
+pub struct TreeSpec {
+    /// Requested group count (clamped to the worker count).
+    pub groups: usize,
+    /// Training rounds — the sub-aggregator round loops are bounded,
+    /// like every other loop in the coordinator.
+    pub rounds: usize,
+    /// Route the aggregator hop links over real loopback sockets
+    /// instead of in-process channels (matches the run's transport).
+    pub socket_hops: bool,
+    /// Network-condition profile for socket hops.
+    pub profile: NetProfile,
+}
+
+/// The built tier: what the root server folds over, plus the spawned
+/// sub-aggregator machinery and the hop-tier meters.
+pub struct TreeTier {
+    /// Links the root `PipelineServer` runs over: n virtual links
+    /// (dense) or the m hop links (recompress).
+    pub root_links: Vec<ServerLink>,
+    /// Fan-in the root server is constructed for: n (dense) or m
+    /// (recompress).
+    pub root_n: usize,
+    /// Sub-aggregator / demux / mux threads. Joined by the coordinator
+    /// after the root server exits; every thread's loop is bounded by
+    /// `rounds` or exits on link closure, so joining cannot hang.
+    pub handles: Vec<JoinHandle<()>>,
+    /// Per-group uplink meters of the aggregator hop tier.
+    pub hop_up_meters: Vec<Arc<Meter>>,
+    /// Per-group downlink meters of the aggregator hop tier.
+    pub hop_down_meters: Vec<Arc<Meter>>,
+}
+
+/// The per-group fold the recompress mode runs between recv and
+/// forward: the same zero-at-first / `add_scaled` chain every flat
+/// strategy server uses, at group scope, finished by a trip through the
+/// group's compressor.
+struct GroupFold {
+    buf: Vec<f32>,
+    comp: Box<dyn Compressor>,
+    agg: AggEngine,
+}
+
+impl ServerAlgo for GroupFold {
+    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        if index == 0 {
+            self.buf.fill(0.0);
+        }
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+    }
+
+    fn finish_round(&mut self, _round: usize) -> CompressedMsg {
+        self.comp.compress(&self.buf)
+    }
+}
+
+/// Build the sub-aggregator tier over the n real server-side worker
+/// links and return what the (otherwise unmodified) root server should
+/// run on. Groups fewer workers than requested are handled by the
+/// [`group_ranges`] clamp; `groups <= 1` still builds a (degenerate)
+/// one-group tree — the coordinator routes around this module entirely
+/// when the knob is off.
+pub fn build_tree(
+    spec: &TreeSpec,
+    plan: ForwardPlan,
+    server_links: Vec<ServerLink>,
+) -> Result<TreeTier> {
+    let n = server_links.len();
+    let ranges = group_ranges(n, spec.groups);
+    let m = ranges.len();
+
+    // The aggregator hop: one duplex link per group, over the run's
+    // transport. (Socket hops fork jitter streams by link index, which
+    // overlaps worker links 0..m — deterministic and harmless: hop g is
+    // simply as noisy as worker g's link would be.)
+    let (hop_workers, hop_servers, hop_up_meters, hop_down_meters) = if spec.socket_hops {
+        socket_topology(m, &spec.profile).context("building aggregator hop sockets")?
+    } else {
+        topology(m)
+    };
+
+    let rounds = spec.rounds;
+    let mut links = server_links.into_iter();
+    let mut handles = Vec::new();
+    match plan {
+        ForwardPlan::Dense => {
+            for (range, hop) in ranges.iter().zip(hop_workers) {
+                let group_links: Vec<ServerLink> = links.by_ref().take(range.len()).collect();
+                handles.push(std::thread::spawn(move || {
+                    let _ = run_subagg_dense(rounds, &group_links, &hop);
+                }));
+            }
+            let (root_links, bridge_handles) = bridge_dense(rounds, &ranges, hop_servers);
+            handles.extend(bridge_handles);
+            Ok(TreeTier { root_links, root_n: n, handles, hop_up_meters, hop_down_meters })
+        }
+        ForwardPlan::Recompress { dim, compressors } => {
+            anyhow::ensure!(
+                compressors.len() == m,
+                "recompress plan has {} compressors for {m} groups",
+                compressors.len()
+            );
+            for (g, ((range, hop), comp)) in
+                ranges.iter().zip(hop_workers).zip(compressors).enumerate()
+            {
+                let group_links: Vec<ServerLink> = links.by_ref().take(range.len()).collect();
+                handles.push(std::thread::spawn(move || {
+                    let _ = run_subagg_recompress(rounds, g, &group_links, &hop, dim, comp);
+                }));
+            }
+            Ok(TreeTier {
+                root_links: hop_servers,
+                root_n: m,
+                handles,
+                hop_up_meters,
+                hop_down_meters,
+            })
+        }
+    }
+}
+
+/// Bridge the m dense hop streams back into an n-link virtual star for
+/// the root: per group, a demux thread fans hop uplinks out to the
+/// group's virtual uplinks and a mux thread collapses the root's
+/// per-worker broadcasts to one hop broadcast per round. Returns the
+/// virtual server links (what the root `PipelineServer` runs over) and
+/// the bridge threads. Shared by the in-process tree and the
+/// multi-process tree root (`coordinator::remote::serve_tree_root`),
+/// so both execute the identical fold.
+pub(crate) fn bridge_dense(
+    rounds: usize,
+    ranges: &[Range<usize>],
+    hop_servers: Vec<ServerLink>,
+) -> (Vec<ServerLink>, Vec<JoinHandle<()>>) {
+    let n = ranges.last().map_or(0, |r| r.end);
+    // The virtual star the root folds over: same shape as the flat
+    // topology, fed by the per-group demux threads. Its meters are
+    // dropped — the real accounting lives on the worker links
+    // (untouched) and the hop links.
+    let (vworkers, vservers, _vum, _vdm) = topology(n);
+    let mut vups: Vec<MeteredSender<UplinkFrame>> = Vec::with_capacity(n);
+    let mut vdowns: Vec<MeteredReceiver<Broadcast>> = Vec::with_capacity(n);
+    for w in vworkers {
+        vups.push(w.up);
+        vdowns.push(w.down);
+    }
+    let mut vups = vups.into_iter();
+    let mut vdowns = vdowns.into_iter();
+    let mut handles = Vec::new();
+    for (range, hop) in ranges.iter().zip(hop_servers) {
+        let ServerLink { up: hop_up, down: hop_down } = hop;
+        let group_vups: Vec<MeteredSender<UplinkFrame>> =
+            vups.by_ref().take(range.len()).collect();
+        let group_vdowns: Vec<MeteredReceiver<Broadcast>> =
+            vdowns.by_ref().take(range.len()).collect();
+        handles.push(std::thread::spawn(move || {
+            demux(&hop_up, &group_vups);
+        }));
+        handles.push(std::thread::spawn(move || {
+            mux(rounds, &group_vdowns, &hop_down);
+        }));
+    }
+    (vservers, handles)
+}
+
+/// Dense sub-aggregator: absorb the group's fan-in by relaying every
+/// worker frame up the hop in strict worker order, then fan the hop's
+/// one broadcast back out to the group. Exits on any link closure —
+/// worker death upstream or root/demux teardown downstream — which
+/// cascades the closure onward so the flat driver's error triage sees
+/// exactly the failure shape it would see on a flat star. Returns
+/// whether all `rounds` completed (a standalone sub-aggregator process
+/// reports an early exit; the in-process tree lets the coordinator's
+/// triage explain it).
+pub(crate) fn run_subagg_dense(rounds: usize, links: &[ServerLink], hop: &WorkerLink) -> bool {
+    for _t in 1..=rounds {
+        for l in links {
+            match l.up.recv() {
+                Ok(frame) => {
+                    if hop.up.send(frame).is_err() {
+                        return false;
+                    }
+                }
+                Err(_) => return false,
+            }
+        }
+        match hop.down.recv() {
+            Ok(b) => {
+                for l in links {
+                    if l.down.send(b.clone()).is_err() {
+                        return false;
+                    }
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Feed hop-relayed frames into the group's virtual uplinks by
+/// arrival-order round robin. The sub-aggregator relays in strict
+/// worker order, so arrival order *is* round-major / worker-minor —
+/// routing by a counter instead of the frame's `from` field keeps a
+/// corrupt frame flowing to the root verbatim (where the flat engine's
+/// validation classifies it) instead of panicking here.
+fn demux(hop_up: &MeteredReceiver<UplinkFrame>, vups: &[MeteredSender<UplinkFrame>]) {
+    let mut k = 0;
+    loop {
+        match hop_up.recv() {
+            Ok(frame) => {
+                if vups[k].send(frame).is_err() {
+                    return;
+                }
+                k = (k + 1) % vups.len();
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Collapse the root's per-worker broadcasts back to one hop broadcast
+/// per round: forward the group's first copy, drain and discard the
+/// rest (they are `Arc` clones of the same payload — the dedup is what
+/// makes the hop downlink carry m broadcasts per round instead of n).
+/// Draining keeps the virtual channels bounded.
+fn mux(rounds: usize, vdowns: &[MeteredReceiver<Broadcast>], hop_down: &MeteredSender<Broadcast>) {
+    for _t in 1..=rounds {
+        let b = match vdowns[0].recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        if hop_down.send(b).is_err() {
+            return;
+        }
+        for r in &vdowns[1..] {
+            if r.recv().is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Re-compressing sub-aggregator: collect the group's round, fold the
+/// group mean through the same [`fold_round`] stage the flat server
+/// uses, re-compress it on the group's forked stream, forward one
+/// frame. Protocol faults inside the group (corrupt frame, round skew)
+/// are reported here and surface at the root as a hop disconnect.
+/// Returns whether all `rounds` completed.
+pub(crate) fn run_subagg_recompress(
+    rounds: usize,
+    group: usize,
+    links: &[ServerLink],
+    hop: &WorkerLink,
+    dim: usize,
+    comp: Box<dyn Compressor>,
+) -> bool {
+    let mut fold = GroupFold { buf: vec![0.0; dim], comp, agg: AggEngine::sequential() };
+    for t in 1..=rounds {
+        let mut frames = Vec::with_capacity(links.len());
+        for l in links {
+            match l.up.recv() {
+                Ok(frame) => frames.push(frame),
+                Err(_) => return false,
+            }
+        }
+        let payload = match fold_round(&mut fold, t, &frames) {
+            Ok(c) => c,
+            Err(err) => {
+                eprintln!("tree sub-aggregator {group}: round {t}: {err}");
+                return false;
+            }
+        };
+        let msg = WireMsg { round: t as u64, from: group as u32, payload };
+        if hop.up.send(UplinkFrame::Msg(msg)).is_err() {
+            return false;
+        }
+        match hop.down.recv() {
+            Ok(b) => {
+                for l in links {
+                    if l.down.send(b.clone()).is_err() {
+                        return false;
+                    }
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{wire, DownlinkPayload};
+    use crate::coordinator::pipeline::PipelineServer;
+
+    #[test]
+    fn group_ranges_partition_arithmetic() {
+        // n % m != 0: the remainder goes to the leading groups
+        assert_eq!(group_ranges(10, 4), vec![0..3, 3..6, 6..8, 8..10]);
+        // degenerate m = 1: the flat range
+        assert_eq!(group_ranges(7, 1), vec![0..7]);
+        // degenerate m = n: singleton groups
+        assert_eq!(group_ranges(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        // m > n clamps to n; m = 0 clamps to 1
+        assert_eq!(group_ranges(3, 8).len(), 3);
+        assert_eq!(group_ranges(5, 0), vec![0..5]);
+        // n = 0: no groups at all
+        assert!(group_ranges(0, 4).is_empty());
+        // cover/disjoint/balance over a grid
+        for n in 1..40usize {
+            for m in 1..10usize {
+                let r = group_ranges(n, m);
+                assert_eq!(r.len(), m.min(n));
+                assert_eq!(r[0].start, 0);
+                assert_eq!(r.last().unwrap().end, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "gap at n={n} m={m}");
+                }
+                let sizes: Vec<usize> = r.iter().map(std::ops::Range::len).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "unbalanced at n={n} m={m}: {sizes:?}");
+                assert!(
+                    sizes.windows(2).all(|w| w[0] >= w[1]),
+                    "remainder not front-loaded at n={n} m={m}"
+                );
+            }
+        }
+    }
+
+    /// The strict left-to-right mean chain every strategy server runs.
+    struct MeanServer {
+        sum: Vec<f32>,
+        agg: AggEngine,
+        downs: Vec<CompressedMsg>,
+    }
+
+    impl ServerAlgo for MeanServer {
+        fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+            if index == 0 {
+                self.sum.fill(0.0);
+            }
+            self.agg.add_scaled_uplink_into(up, &mut self.sum, 1.0 / n as f32);
+        }
+
+        fn finish_round(&mut self, round: usize) -> CompressedMsg {
+            let out = CompressedMsg::Dense(self.sum.clone());
+            let _ = round;
+            self.downs.push(out.clone());
+            out
+        }
+    }
+
+    /// Adversarial gradients: large alternating-sign magnitudes mixed
+    /// with small offsets, so any re-association of the f32 fold order
+    /// changes the bits. The dense tree must reproduce the flat fold
+    /// exactly despite them.
+    fn grad(i: usize, t: usize, d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|j| {
+                let big = if i % 2 == 0 { 1.0e8 } else { -1.0e8 };
+                big + (i as f32) * 0.37 + (j as f32) * 0.011 + (t as f32) * 1.3
+            })
+            .collect()
+    }
+
+    /// Drive `rounds` rounds of n producers over prebuilt worker links,
+    /// returning worker 0's downlink payload bytes (digest material).
+    fn spawn_producers(
+        workers: Vec<WorkerLink>,
+        rounds: usize,
+        d: usize,
+    ) -> Vec<std::thread::JoinHandle<Vec<u8>>> {
+        workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    for t in 1..=rounds {
+                        let payload = CompressedMsg::Dense(grad(i, t, d));
+                        let msg = WireMsg { round: t as u64, from: i as u32, payload };
+                        link.up.send(UplinkFrame::Msg(msg)).expect("uplink closed");
+                        let down = link.down.recv().expect("downlink closed");
+                        assert_eq!(down.round, t as u64);
+                        if i == 0 {
+                            if let DownlinkPayload::Shared(m) = &down.payload {
+                                let bytes =
+                                    wire::encode_parts(t as u64, 0, m).expect("encode down");
+                                seen.extend_from_slice(&bytes);
+                            }
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect()
+    }
+
+    fn run_flat(n: usize, rounds: usize, d: usize) -> (Vec<CompressedMsg>, Vec<u8>) {
+        let (workers, servers, _um, _dm) = topology(n);
+        let producers = spawn_producers(workers, rounds, d);
+        let mut server =
+            MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+        PipelineServer::new(rounds, 1).run(&mut server, servers).expect("flat server");
+        let mut w0 = Vec::new();
+        for (i, h) in producers.into_iter().enumerate() {
+            let bytes = h.join().expect("producer panicked");
+            if i == 0 {
+                w0 = bytes;
+            }
+        }
+        (server.downs, w0)
+    }
+
+    fn run_tree_dense(n: usize, m: usize, rounds: usize, d: usize) -> TreeRun {
+        let (workers, servers, up_meters, _dm) = topology(n);
+        let producers = spawn_producers(workers, rounds, d);
+        let spec = TreeSpec {
+            groups: m,
+            rounds,
+            socket_hops: false,
+            profile: NetProfile::default(),
+        };
+        let tier = build_tree(&spec, ForwardPlan::Dense, servers).expect("tree");
+        assert_eq!(tier.root_n, n, "dense mode keeps the root fan-in at n");
+        let mut server =
+            MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+        PipelineServer::new(rounds, 1).run(&mut server, tier.root_links).expect("root server");
+        let mut w0 = Vec::new();
+        for (i, h) in producers.into_iter().enumerate() {
+            let bytes = h.join().expect("producer panicked");
+            if i == 0 {
+                w0 = bytes;
+            }
+        }
+        for h in tier.handles {
+            h.join().expect("tree thread panicked");
+        }
+        let hop_bits: u64 = tier.hop_up_meters.iter().map(|m| m.bits()).sum();
+        let hop_msgs: u64 = tier.hop_up_meters.iter().map(|m| m.msgs()).sum();
+        let worker_bits: u64 = up_meters.iter().map(|m| m.bits()).sum();
+        let worker_msgs: u64 = up_meters.iter().map(|m| m.msgs()).sum();
+        TreeRun { downs: server.downs, w0, hop_bits, hop_msgs, worker_bits, worker_msgs }
+    }
+
+    struct TreeRun {
+        downs: Vec<CompressedMsg>,
+        w0: Vec<u8>,
+        hop_bits: u64,
+        hop_msgs: u64,
+        worker_bits: u64,
+        worker_msgs: u64,
+    }
+
+    fn dense_bits(m: &CompressedMsg) -> Vec<u32> {
+        match m {
+            CompressedMsg::Dense(v) => v.iter().map(|x| x.to_bits()).collect(),
+            other => panic!("expected dense broadcast, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_tree_is_bitwise_identical_to_flat_fold() {
+        let (n, rounds, d) = (7, 3, 33);
+        let (flat_downs, flat_w0) = run_flat(n, rounds, d);
+        // m = 1 (degenerate), an uneven split, and m = n must all
+        // reproduce the flat chain bit-for-bit
+        for m in [1, 3, n] {
+            let tree = run_tree_dense(n, m, rounds, d);
+            assert_eq!(tree.downs.len(), flat_downs.len());
+            for (t, (a, b)) in flat_downs.iter().zip(&tree.downs).enumerate() {
+                assert_eq!(
+                    dense_bits(a),
+                    dense_bits(b),
+                    "m={m}: round {} broadcast diverged from flat",
+                    t + 1
+                );
+            }
+            assert_eq!(tree.w0, flat_w0, "m={m}: worker 0 downlink bytes diverged");
+        }
+    }
+
+    #[test]
+    fn dense_tree_hop_metering_conserves_worker_traffic() {
+        let (n, rounds, d) = (10, 2, 17);
+        let tree = run_tree_dense(n, 4, rounds, d);
+        // relayed verbatim: the hop tier carries exactly the worker
+        // tier's uplink traffic, bits and messages
+        assert_eq!(tree.worker_msgs, (n * rounds) as u64);
+        assert_eq!(tree.hop_msgs, tree.worker_msgs);
+        assert_eq!(tree.hop_bits, tree.worker_bits);
+    }
+
+    #[test]
+    fn recompress_tree_forwards_group_means() {
+        // identity compression + equal groups: the root's
+        // mean-of-group-means equals the flat mean mathematically
+        // (not necessarily bitwise — that is exactly why dense mode
+        // exists)
+        let (n, m, rounds, d) = (6, 3, 2, 9);
+        let (workers, servers, _um, _dm) = topology(n);
+        let producers: Vec<_> = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    for t in 1..=rounds {
+                        let g: Vec<f32> =
+                            (0..d).map(|j| (i * 10 + j) as f32 * 0.25 + t as f32).collect();
+                        let msg =
+                            WireMsg { round: t as u64, from: i as u32, payload: CompressedMsg::Dense(g) };
+                        link.up.send(UplinkFrame::Msg(msg)).expect("uplink closed");
+                        let down = link.down.recv().expect("downlink closed");
+                        assert_eq!(down.round, t as u64);
+                    }
+                })
+            })
+            .collect();
+        let compressors: Vec<Box<dyn Compressor>> =
+            (0..m).map(|_| crate::compress::by_name("identity", 0.1, 0, 7).unwrap()).collect();
+        let spec =
+            TreeSpec { groups: m, rounds, socket_hops: false, profile: NetProfile::default() };
+        let tier =
+            build_tree(&spec, ForwardPlan::Recompress { dim: d, compressors }, servers).unwrap();
+        assert_eq!(tier.root_n, m, "recompress mode folds m group uplinks at the root");
+        let mut server =
+            MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+        PipelineServer::new(rounds, 1).run(&mut server, tier.root_links).expect("root server");
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+        for h in tier.handles {
+            h.join().expect("tree thread panicked");
+        }
+        // expected flat mean of round t at coordinate j
+        for (t, down) in server.downs.iter().enumerate() {
+            let got = match down {
+                CompressedMsg::Dense(v) => v.clone(),
+                other => panic!("expected dense, got {other:?}"),
+            };
+            for (j, &x) in got.iter().enumerate() {
+                let want: f32 = (0..n)
+                    .map(|i| (i * 10 + j) as f32 * 0.25 + (t + 1) as f32)
+                    .sum::<f32>()
+                    / n as f32;
+                assert!((x - want).abs() < 1e-3, "round {t} coord {j}: {x} vs {want}");
+            }
+        }
+        // hop tier carried exactly one uplink frame per group per round
+        let hop_msgs: u64 = tier.hop_up_meters.iter().map(|mm| mm.msgs()).sum();
+        assert_eq!(hop_msgs, (m * rounds) as u64);
+    }
+
+    #[test]
+    fn dense_tree_unwinds_on_worker_death_without_deadlock() {
+        // worker 2 dies mid-run: the closure must cascade through the
+        // sub-aggregator, hop, and demux to the root, which reports the
+        // missing frame instead of hanging
+        let (n, m, rounds, d) = (5, 2, 4, 8);
+        let (workers, servers, _um, _dm) = topology(n);
+        let producers: Vec<_> = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    for t in 1..=rounds {
+                        if i == 2 && t == 3 {
+                            return; // dies: drops its links
+                        }
+                        let msg = WireMsg {
+                            round: t as u64,
+                            from: i as u32,
+                            payload: CompressedMsg::Dense(grad(i, t, d)),
+                        };
+                        if link.up.send(UplinkFrame::Msg(msg)).is_err() {
+                            return;
+                        }
+                        if link.down.recv().is_err() {
+                            return;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let spec =
+            TreeSpec { groups: m, rounds, socket_hops: false, profile: NetProfile::default() };
+        let tier = build_tree(&spec, ForwardPlan::Dense, servers).expect("tree");
+        let mut server =
+            MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+        let err = PipelineServer::new(rounds, 1)
+            .run(&mut server, tier.root_links)
+            .expect_err("root must observe the death");
+        let msg = err.to_string();
+        assert!(msg.contains("worker 2"), "attribution lost: {msg}");
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+        for h in tier.handles {
+            h.join().expect("tree thread panicked");
+        }
+    }
+}

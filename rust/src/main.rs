@@ -3,6 +3,9 @@
 //! ```text
 //! cdadam run --preset quickstart [--strategy cdadam] [--n 8] [--threaded] ...
 //! cdadam serve --preset quickstart --bind 127.0.0.1:4433        # socket server
+//! cdadam serve --preset quickstart --bind 127.0.0.1:4433 --agg-groups 4 --tree-root
+//! cdadam subagg --preset quickstart --agg-groups 4 --group 0 \
+//!        --connect 127.0.0.1:4433 --bind 127.0.0.1:4434        # sub-aggregator
 //! cdadam worker --preset quickstart --connect 127.0.0.1:4433 --worker-id 0
 //! cdadam presets                 # list available presets
 //! cdadam artifacts               # show artifact manifest status
@@ -35,7 +38,12 @@ fn usage() -> ! {
          \n\
          commands:\n\
            run        run one experiment (--preset <name> + overrides)\n\
-           serve      listen as a socket parameter server (--bind <addr>)\n\
+           serve      listen as a socket parameter server (--bind <addr>;\n\
+                      with --agg-groups > 1 the sub-aggregator tier runs\n\
+                      in-process, or add --tree-root to host only the m\n\
+                      hop links of standalone subagg processes)\n\
+           subagg     connect as one sub-aggregator of a tree-root server\n\
+                      (--group <g> --connect <root> --bind <addr>)\n\
            worker     connect as one socket worker (--connect <addr> --worker-id <i>)\n\
            presets    list experiment presets\n\
            artifacts  report AOT artifact status\n\
@@ -80,6 +88,14 @@ fn usage() -> ! {
                                  replayable (socket only)\n\
            --net-bandwidth-kbps <int>  per-link bandwidth cap, 0 = unlimited\n\
                                  (socket only)\n\
+           --agg-groups <int>    sub-aggregator groups for star-of-stars\n\
+                                 aggregation (1 = flat star verbatim; > 1\n\
+                                 builds a two-level tree)\n\
+           --tree-forward <m>    dense | recompress — what each group\n\
+                                 forwards up the hop: dense relays raw\n\
+                                 uplinks (bit-identical to flat), recompress\n\
+                                 re-compresses the group mean (changes the\n\
+                                 trajectory, cuts root uplink traffic m/n)\n\
            --n <int>             number of workers\n\
            --tau <int|full>      mini-batch size\n\
            --rounds <int>        training rounds\n\
@@ -89,10 +105,13 @@ fn usage() -> ! {
          \n\
          serve/worker options (multi-process socket runs; every process\n\
          must share the same preset + overrides):\n\
-           --bind <addr>         serve: listen address — host:port or\n\
+           --bind <addr>         serve/subagg: listen address — host:port or\n\
                                  unix:/path (default 127.0.0.1:4433)\n\
-           --connect <addr>      worker: server address (same forms)\n\
-           --worker-id <int>     worker: this worker's index in 0..n\n"
+           --tree-root <flag>    serve: host only the sub-aggregator hop\n\
+                                 links; each group runs as a `subagg` process\n\
+           --connect <addr>      worker/subagg: upstream address (same forms)\n\
+           --worker-id <int>     worker: this worker's index in 0..n\n\
+           --group <int>         subagg: this group's index in 0..m\n"
     );
     std::process::exit(2)
 }
@@ -102,6 +121,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("subagg") => cmd_subagg(&args),
         Some("worker") => cmd_worker(&args),
         Some("presets") => {
             for p in PRESETS {
@@ -152,7 +172,24 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let bind = args.string("bind", "127.0.0.1:4433");
-    coordinator::remote::serve(&cfg, &bind)
+    if args.flag("tree-root") {
+        coordinator::remote::serve_tree_root(&cfg, &bind)
+    } else {
+        coordinator::remote::serve(&cfg, &bind)
+    }
+}
+
+fn cmd_subagg(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let Some(g) = args.get("group") else {
+        bail!("subagg requires --group <0..m>");
+    };
+    let group: usize = g.parse().map_err(|_| anyhow::anyhow!("bad --group {g:?}"))?;
+    let connect = args.string("connect", "127.0.0.1:4433");
+    let Some(bind) = args.get("bind") else {
+        bail!("subagg requires --bind <addr> for its worker-facing listener");
+    };
+    coordinator::remote::run_remote_subagg(&cfg, group, &connect, bind)
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {

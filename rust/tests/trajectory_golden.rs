@@ -13,11 +13,15 @@
 //! baseline shape, and the threaded zero-copy/parallel-fold shape that
 //! exercises the wire-byte kernels) — the SIMD knob is a pure
 //! throughput knob, so its digests must equal the scalar baseline
-//! exactly rather than pin fixture rows of their own — and two
+//! exactly rather than pin fixture rows of their own — two
 //! `transport = socket` runs per downlink setting (baseline threaded
 //! shape and the zero-copy pipelined shape): loopback TCP is a pure
 //! transport knob and must reproduce the in-memory digests bit-for-bit
-//! for all seven strategies.
+//! for all seven strategies — and three dense star-of-stars runs per
+//! downlink setting (`agg_groups` 2, 3, and 4 with every scheduling
+//! knob on): dense tree forwarding relays raw uplinks in worker order,
+//! so the topology knob too must reproduce the flat digests
+//! bit-for-bit.
 //!
 //! `compress_downlink` is the one *math* knob in the matrix: it changes
 //! the trajectory for dense-broadcast strategies (their downlink gets
@@ -281,6 +285,50 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
                     baseline,
                     "{strategy}: trajectory diverged over the socket transport \
                      (zero-copy pipelined shape, compress_downlink={compress_downlink})"
+                );
+            }
+
+            // Topology dimension: dense-forwarding star-of-stars
+            // aggregation is a pure topology knob — sub-aggregators
+            // relay raw uplinks in worker order, so the root folds the
+            // same frames in the same order and every digest must equal
+            // the flat baseline bit-for-bit. Two group counts: m = 2
+            // (even split of n = 8) and m = 3 (uneven split, 3+3+2,
+            // exercising the remainder arithmetic), plus the full
+            // zero-copy/pipelined/parallel-fold shape at m = 4.
+            // (base_cfg deliberately leaves `agg_groups` on its env
+            // default, so the CI job that forces CDADAM_AGG_GROUPS=4
+            // additionally routes the entire threaded matrix above
+            // through the tree tier.)
+            {
+                for groups in [2usize, 3] {
+                    let mut cfg = base_cfg(strategy);
+                    cfg.compress_downlink = compress_downlink;
+                    cfg.agg_groups = groups;
+                    cfg.tree_forward = "dense".into();
+                    assert_eq!(
+                        digest(&run_threaded(&cfg).unwrap()),
+                        baseline,
+                        "{strategy}: trajectory diverged under dense tree \
+                         aggregation (agg_groups={groups}, \
+                         compress_downlink={compress_downlink})"
+                    );
+                }
+                let mut cfg = base_cfg(strategy);
+                cfg.compress_downlink = compress_downlink;
+                cfg.agg_groups = 4;
+                cfg.tree_forward = "dense".into();
+                cfg.zero_copy_ingest = true;
+                cfg.zero_copy_egress = true;
+                cfg.server_threads = 4;
+                cfg.server_min_parallel_dim = 1;
+                cfg.pipeline_depth = 2;
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged under dense tree \
+                     aggregation (zero-copy pipelined shape, agg_groups=4, \
+                     compress_downlink={compress_downlink})"
                 );
             }
 

@@ -1,0 +1,261 @@
+//! Star-of-stars aggregation battery: dense tree forwarding must be a
+//! *pure topology* — every record, bit split, and replica hash identical
+//! to the flat star — across strategies, group counts (even, uneven,
+//! m = n), and the socket transport; the recompressing mode is a math
+//! knob and is held to convergence + traffic-shape invariants instead.
+//! Also drives the genuinely multi-process roles (`serve --tree-root`,
+//! `subagg`, `worker`) end-to-end over Unix sockets in one process, and
+//! pins the connect-retry contract (loud timeout on a dead address,
+//! success against a late-binding server).
+
+use std::time::Duration;
+
+use cdadam::comm::socket::{connect_worker_link_retry, listen_links, BindSpec, NetProfile};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::{remote, run_threaded};
+use cdadam::metrics::RunLog;
+
+const STRATEGIES: [&str; 7] =
+    ["cdadam", "uncompressed_amsgrad", "naive", "ef", "ef21", "onebit_adam", "cdadam_server"];
+
+/// The pinned small run every tree differential uses: quickstart logreg
+/// (n = 8, d = 50) with sharded uplinks, short horizon.
+fn base_cfg(strategy: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+    cfg.strategy = strategy.into();
+    cfg.rounds = 30;
+    cfg.eval_every = 10;
+    cfg.warmup_rounds = 5;
+    cfg.shard_size = 16;
+    cfg.compress_threads = 2;
+    cfg.transport = "memory".into(); // explicit — env must not leak in
+    cfg.agg_groups = 1; // explicit flat baseline
+    cfg.tree_forward = "dense".into();
+    cfg.net_latency_us = 0;
+    cfg.net_jitter_us = 0;
+    cfg.net_bandwidth_kbps = 0;
+    cfg
+}
+
+fn assert_bit_identical(a: &RunLog, b: &RunLog, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{ctx}");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{ctx}: train_loss at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.grad_norm.to_bits(),
+            y.grad_norm.to_bits(),
+            "{ctx}: grad_norm at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.test_acc.to_bits(),
+            y.test_acc.to_bits(),
+            "{ctx}: test_acc at round {}",
+            x.round
+        );
+        assert_eq!(x.up_bits, y.up_bits, "{ctx}: up_bits at round {}", x.round);
+        assert_eq!(x.down_bits, y.down_bits, "{ctx}: down_bits at round {}", x.round);
+        assert_eq!(x.cum_bits, y.cum_bits, "{ctx}: cum_bits at round {}", x.round);
+    }
+}
+
+/// Fail-loud guard: a wedged link must fail the test, not hang CI.
+fn watchdog(secs: u64, f: impl FnOnce() + Send + 'static) {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(RecvTimeoutError::Timeout) => panic!("watchdog: tree scenario hung"),
+    }
+}
+
+#[test]
+fn dense_tree_matches_flat_star_across_strategies_and_group_counts() {
+    // The tentpole pin at the RunLog level: worker-0's per-round bit
+    // accounting and every metric must survive the topology change
+    // bit-for-bit. Group counts cover the even split (2 × 4), the
+    // uneven remainder split (5 groups over n = 8 → 2,2,2,1,1), and
+    // the degenerate one-worker-per-group tree (m = n = 8).
+    for strategy in STRATEGIES {
+        let flat = run_threaded(&base_cfg(strategy)).unwrap();
+        for groups in [2usize, 5, 8] {
+            let mut cfg = base_cfg(strategy);
+            cfg.agg_groups = groups;
+            let tree = run_threaded(&cfg).unwrap();
+            assert_bit_identical(
+                &flat,
+                &tree,
+                &format!("{strategy}: dense tree m={groups} vs flat"),
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_tree_over_socket_transport_matches_memory_flat_star() {
+    // Socket hop links: with transport = socket the sub-aggregator hop
+    // itself rides loopback TCP (its frames really leave the process),
+    // and the result must still equal the flat in-memory star.
+    watchdog(240, || {
+        let flat = run_threaded(&base_cfg("cdadam")).unwrap();
+        let mut cfg = base_cfg("cdadam");
+        cfg.transport = "socket".into();
+        cfg.agg_groups = 4;
+        let tree = run_threaded(&cfg).unwrap();
+        assert_bit_identical(&flat, &tree, "dense tree over sockets vs flat memory");
+    });
+}
+
+#[test]
+fn recompress_tree_converges_for_every_strategy() {
+    // The math knob: group means are re-compressed before the root, so
+    // trajectories legitimately differ from flat — but every strategy
+    // must still complete all rounds and make optimization progress.
+    for strategy in STRATEGIES {
+        let mut cfg = base_cfg(strategy);
+        cfg.agg_groups = 4;
+        cfg.tree_forward = "recompress".into();
+        let log = run_threaded(&cfg)
+            .unwrap_or_else(|e| panic!("{strategy}: recompress tree run failed: {e:#}"));
+        let last = log.last().unwrap_or_else(|| panic!("{strategy}: empty run log"));
+        assert_eq!(last.round, cfg.rounds, "{strategy}: run ended short of the horizon");
+        let first = &log.records[0];
+        assert!(
+            last.train_loss.is_finite() && last.grad_norm.is_finite(),
+            "{strategy}: recompress tree produced non-finite metrics"
+        );
+        assert!(
+            last.grad_norm < first.grad_norm * 100.0,
+            "{strategy}: recompress tree diverged: {} -> {}",
+            first.grad_norm,
+            last.grad_norm
+        );
+    }
+}
+
+#[test]
+fn tree_root_subagg_and_worker_roles_complete_over_unix_sockets() {
+    // The genuinely multi-process star-of-stars, exercised in one test
+    // process: `serve --tree-root` seats the m hop links, each `subagg`
+    // dials the root (with retry — launch order is arbitrary) and seats
+    // its worker slice, each `worker` dials its group's sub-aggregator
+    // by *global* id. Both forwarding modes.
+    watchdog(240, || {
+        for (tag, forward) in [("dense", "dense"), ("recomp", "recompress")] {
+            let mut cfg = base_cfg("cdadam");
+            cfg.n = 4;
+            cfg.agg_groups = 2;
+            cfg.tree_forward = forward.into();
+            cfg.rounds = 20;
+            cfg.eval_every = 10;
+            let groups = cdadam::coordinator::tree::group_ranges(cfg.n, cfg.agg_groups);
+
+            let dir = std::env::temp_dir();
+            let pid = std::process::id();
+            let root_path = dir.join(format!("cdadam-tree-root-{pid}-{tag}.sock"));
+            let sub_paths: Vec<_> = (0..groups.len())
+                .map(|g| dir.join(format!("cdadam-tree-sub{g}-{pid}-{tag}.sock")))
+                .collect();
+            for p in std::iter::once(&root_path).chain(&sub_paths) {
+                let _ = std::fs::remove_file(p);
+            }
+            let root_bind = format!("unix:{}", root_path.display());
+
+            // everything launches at once; the connect retry in the
+            // subagg and worker roles absorbs the arbitrary ordering.
+            let rcfg = cfg.clone();
+            let rbind = root_bind.clone();
+            let root = std::thread::spawn(move || remote::serve_tree_root(&rcfg, &rbind));
+
+            let subs: Vec<_> = (0..groups.len())
+                .map(|g| {
+                    let scfg = cfg.clone();
+                    let connect = root_bind.clone();
+                    let bind = format!("unix:{}", sub_paths[g].display());
+                    std::thread::spawn(move || remote::run_remote_subagg(&scfg, g, &connect, &bind))
+                })
+                .collect();
+
+            let workers: Vec<_> = (0..cfg.n)
+                .map(|i| {
+                    let g = groups.iter().position(|r| r.contains(&i)).unwrap();
+                    let wcfg = cfg.clone();
+                    let wbind = format!("unix:{}", sub_paths[g].display());
+                    std::thread::spawn(move || remote::run_remote_worker(&wcfg, &wbind, i))
+                })
+                .collect();
+
+            for (i, w) in workers.into_iter().enumerate() {
+                w.join().unwrap().unwrap_or_else(|e| panic!("worker {i} ({tag}): {e:#}"));
+            }
+            for (g, s) in subs.into_iter().enumerate() {
+                s.join().unwrap().unwrap_or_else(|e| panic!("subagg {g} ({tag}): {e:#}"));
+            }
+            root.join().unwrap().unwrap_or_else(|e| panic!("tree root ({tag}): {e:#}"));
+        }
+    });
+}
+
+#[test]
+fn connect_retry_fails_loudly_on_dead_address() {
+    // A dead address must produce a bounded, descriptive error — not a
+    // hang and not a bare first-dial ECONNREFUSED.
+    watchdog(60, || {
+        let path = std::env::temp_dir()
+            .join(format!("cdadam-retry-dead-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let spec = BindSpec::parse(&format!("unix:{}", path.display())).unwrap();
+        let err = connect_worker_link_retry(
+            &spec,
+            0,
+            1,
+            &NetProfile::default(),
+            Duration::from_millis(300),
+        )
+        .expect_err("dead address must not yield a link");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no server reachable"),
+            "retry error must say the server was unreachable, got: {msg}"
+        );
+    });
+}
+
+#[test]
+fn connect_retry_reaches_a_late_binding_server() {
+    // The worker routinely dials before the server binds; the retry
+    // loop must absorb that window and succeed once the listener is up.
+    watchdog(60, || {
+        let path = std::env::temp_dir()
+            .join(format!("cdadam-retry-late-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let bind = format!("unix:{}", path.display());
+        let server = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            let spec = BindSpec::parse(&bind).unwrap();
+            listen_links(&spec, 1, &NetProfile::default()).map(|_| ())
+        });
+        let spec = BindSpec::parse(&format!("unix:{}", path.display())).unwrap();
+        let link = connect_worker_link_retry(
+            &spec,
+            0,
+            1,
+            &NetProfile::default(),
+            Duration::from_secs(20),
+        );
+        if let Err(e) = &link {
+            panic!("retry should outlast the server's bind delay: {e:#}");
+        }
+        server.join().unwrap().unwrap();
+    });
+}
