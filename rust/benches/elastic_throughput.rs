@@ -1,0 +1,213 @@
+//! Synchronous vs elastic round time under a bandwidth-capped
+//! straggler: the same server + n round-synchronous producers doing
+//! real compression work over in-memory links, with the last worker's
+//! uplink paced to a modeled link rate (it sleeps the frame's
+//! serialization time before each send — the in-process analogue of
+//! the socket layer's bandwidth shaper). Default scale is the tentpole
+//! scenario: d = 2²⁰, n = 8 and 32.
+//!
+//! Three modes per n: the synchronous fold (every round waits for the
+//! straggler), elastic quorum k = n (the same wait through the elastic
+//! engine — its downlink stream is asserted bit-identical to sync),
+//! and elastic quorum k = 3n/4 (rounds close without the straggler;
+//! its stale frames drop). The headline column is per-round time vs
+//! sync: full quorum must cost nothing, partial quorum must win back
+//! the straggler's entire delay.
+//!
+//! Rows land in `BENCH_elastic.json` at the repo root (sibling of
+//! `BENCH_kernels.json`, same `CDADAM_BENCH_JSON` directory override).
+//!
+//! ```bash
+//! cargo bench --bench elastic_throughput            # d = 2^20, n = 8/32
+//! cargo bench --bench elastic_throughput -- --quick
+//! ```
+
+use cdadam::comm::{topology, wire, DownlinkPayload, UplinkFrame};
+use cdadam::compress::{Compressor, ScaledSign, ShardedCompressor};
+use cdadam::config::ExperimentConfig;
+use cdadam::coordinator::pipeline::{ElasticSpec, PipelineServer};
+use cdadam::util::args::Args;
+use cdadam::util::bench_json::{sibling_path, BenchSink};
+use cdadam::util::json::Json;
+use cdadam::util::timer::Timer;
+
+/// FNV-1a over a byte stream (same mix the golden tests use).
+fn mix_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// One full run. `quorum = None` is the synchronous engine; `Some(k)`
+/// routes through `run_elastic`. Worker n-1 is the straggler: before
+/// each uplink send it sleeps the time its frame would take at
+/// `straggler_bits_per_sec`. Returns (server wall ms, digest of worker
+/// 0's downlink byte stream, participants folded per round on average).
+fn run_mode(
+    quorum: Option<usize>,
+    d: usize,
+    n: usize,
+    rounds: usize,
+    shard: usize,
+    straggler_bits_per_sec: f64,
+) -> (f64, u64, f64) {
+    let mut cfg = ExperimentConfig::preset("quickstart").expect("preset");
+    cfg.strategy = "naive".into();
+    cfg.shard_size = shard;
+    cfg.compress_threads = 2;
+    let strat = cfg.build_strategy().expect("strategy");
+    let mut server = strat.make_server(d, n);
+
+    let (workers, servers, _um, _dm) = topology(n);
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| {
+            let straggler = i == n - 1;
+            std::thread::spawn(move || {
+                let mut comp = ShardedCompressor::new(Box::new(ScaledSign::new()), shard, 2)
+                    .fork_stream(i as u64);
+                let mut g = vec![0.0f32; d];
+                let mut digest = 0xcbf2_9ce4_8422_2325u64;
+                for t in 1..=rounds {
+                    for (j, gj) in g.iter_mut().enumerate() {
+                        *gj = ((i * 31 + j) % 97) as f32 * 0.13 - 6.0 + t as f32 * 0.01;
+                    }
+                    let c = comp.compress(&g);
+                    let fb = wire::encode_frame(t as u64, i as u32, &c).expect("encode");
+                    if straggler {
+                        let secs = fb.bytes.len() as f64 * 8.0 / straggler_bits_per_sec;
+                        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+                    }
+                    // under a partial quorum the server may finish and
+                    // unwind while this worker is still paced rounds
+                    // behind — a closed link ends the producer cleanly
+                    if link.up.send(UplinkFrame::Bytes(fb)).is_err() {
+                        break;
+                    }
+                    let Ok(down) = link.down.recv() else { break };
+                    assert_eq!(down.round, t as u64);
+                    if i == 0 {
+                        match &down.payload {
+                            DownlinkPayload::Shared(m) => {
+                                let bytes =
+                                    wire::encode_parts(t as u64, 0, m).expect("encode down");
+                                mix_bytes(&mut digest, &bytes);
+                            }
+                            DownlinkPayload::Frame(fb) => mix_bytes(&mut digest, &fb.bytes),
+                        }
+                    }
+                }
+                digest
+            })
+        })
+        .collect();
+
+    let timer = Timer::start();
+    let mean_participants = match quorum {
+        None => {
+            PipelineServer::new(rounds, 1).run(server.as_mut(), servers).expect("server loop");
+            n as f64
+        }
+        Some(k) => {
+            let spec = ElasticSpec::new(k);
+            let report = PipelineServer::new(rounds, 1)
+                .run_elastic(server.as_mut(), servers, &spec)
+                .expect("elastic server loop");
+            assert!(report.lost_workers.is_empty(), "no worker should be lost in the bench");
+            report.rounds.iter().map(|r| r.participants as f64).sum::<f64>()
+                / report.rounds.len().max(1) as f64
+        }
+    };
+    let ms = timer.elapsed_ms();
+
+    let mut digest = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("producer panicked");
+        if i == 0 {
+            digest = got;
+        }
+    }
+    (ms, digest, mean_participants)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let d: usize = args.usize("d", if quick { 1 << 16 } else { 1 << 20 }).unwrap();
+    let shard: usize = args.usize("shard", 65_536).unwrap();
+    let rounds: usize = args.usize("rounds", if quick { 2 } else { 4 }).unwrap();
+    // the straggler's modeled uplink rate: a sign-compressed d = 2²⁰
+    // frame is ~128 KiB, so 8 Mbit/s paces it to ~130 ms per round —
+    // large against the healthy workers' compress+fold time.
+    let mbps: f64 = args.usize("straggler-mbps", 8).unwrap() as f64;
+    let ns: &[usize] = if quick { &[8] } else { &[8, 32] };
+
+    println!(
+        "### elastic_throughput (d = {d}, shard = {shard}, {rounds} rounds, \
+         straggler at {mbps} Mbit/s)"
+    );
+    println!(
+        "{:<28} {:>4}  {:>10}  {:>11}  {:>8}  {:>12}",
+        "mode", "n", "total", "per round", "vs sync", "participants"
+    );
+
+    let mut sink = BenchSink::new("elastic_throughput");
+    sink.meta("d", Json::Num(d as f64));
+    sink.meta("shard", Json::Num(shard as f64));
+    sink.meta("rounds", Json::Num(rounds as f64));
+    sink.meta("straggler_mbps", Json::Num(mbps));
+
+    for &n in ns {
+        let k_partial = (3 * n).div_ceil(4);
+        // (label, quorum)
+        let modes: [(&str, Option<usize>); 3] = [
+            ("sync (all n)", None),
+            ("elastic k=n", Some(n)),
+            ("elastic k=3n/4", Some(k_partial)),
+        ];
+        let mut sync_ms = None;
+        let mut sync_digest = None;
+        for (label, quorum) in modes {
+            let (ms, digest, participants) =
+                run_mode(quorum, d, n, rounds, shard, mbps * 1_000_000.0);
+            match (quorum, sync_digest) {
+                (None, _) => sync_digest = Some(digest),
+                // acceptance: full quorum through the elastic engine
+                // must not change the broadcast stream worker 0 saw
+                (Some(k), Some(want)) if k == n => {
+                    assert_eq!(digest, want, "{label}: full quorum changed the downlink stream")
+                }
+                _ => {}
+            }
+            let rel = match sync_ms {
+                None => {
+                    sync_ms = Some(ms);
+                    "   1.00x".to_string()
+                }
+                Some(b) => format!("{:>7.2}x", ms / b),
+            };
+            println!(
+                "{label:<28} {n:>4}  {ms:>8.1} ms  {:>8.1} ms  {rel}  {participants:>12.2}",
+                ms / rounds as f64
+            );
+            sink.row(&[
+                ("mode", Json::Str(label.into())),
+                ("n", Json::Num(n as f64)),
+                ("quorum", Json::Num(quorum.unwrap_or(n) as f64)),
+                ("total_ms", Json::Num(ms)),
+                ("per_round_ms", Json::Num(ms / rounds as f64)),
+                ("round_time_vs_sync", Json::Num(ms / sync_ms.unwrap_or(ms))),
+                ("mean_participants", Json::Num(participants)),
+            ]);
+        }
+    }
+    println!("\nsanity: full-quorum elastic downlink stream bit-identical to sync ✓");
+
+    let path = sibling_path("BENCH_elastic.json");
+    match sink.flush_to(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(err) => eprintln!("bench json: {err:#}"),
+    }
+}

@@ -142,13 +142,13 @@ pub struct CdAdamServer {
 }
 
 impl ServerAlgo for CdAdamServer {
-    fn ingest_one(&mut self, _round: usize, _index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, _index: usize, scale: f32, up: &UplinkRef<'_>) {
         // folds straight from whichever form arrived — owned message
         // or zero-copy wire view; ĝ (the only cross-round state) is
         // dense, so nothing needs materializing, and the running sum
         // lets the pipelined engine fold uplink i while i+1..n are
-        // still in flight.
-        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, 1.0 / n as f32);
+        // still in flight. `scale` is 1/n synchronously, w(s)/k elastic.
+        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {

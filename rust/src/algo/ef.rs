@@ -127,14 +127,14 @@ struct EfServer {
 }
 
 impl ServerAlgo for EfServer {
-    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
         // the EF memory δ (cross-round state) is dense — each uplink
         // folds into the running average and is dropped, so views work
         // without materialization.
         if index == 0 {
             self.avg.fill(0.0);
         }
-        self.agg.add_scaled_uplink_into(up, &mut self.avg, 1.0 / n as f32);
+        self.agg.add_scaled_uplink_into(up, &mut self.avg, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {

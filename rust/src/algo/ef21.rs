@@ -108,8 +108,8 @@ struct Ef21Server {
 }
 
 impl ServerAlgo for Ef21Server {
-    fn ingest_one(&mut self, _round: usize, _index: usize, n: usize, up: &UplinkRef<'_>) {
-        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, 1.0 / n as f32);
+    fn ingest_scaled(&mut self, _round: usize, _index: usize, scale: f32, up: &UplinkRef<'_>) {
+        self.agg.add_scaled_uplink_into(up, &mut self.ghat_agg, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {

@@ -114,9 +114,28 @@ pub trait WorkerAlgo: Send {
 /// chain, incremental ingestion is **bit-identical** to the
 /// whole-round [`Self::round_ingest`] wrapper — scheduling, never
 /// math (pinned end-to-end by the trajectory golden matrix).
+///
+/// The primitive is [`Self::ingest_scaled`]: fold one uplink with an
+/// explicit per-uplink weight. The synchronous engine always passes
+/// `1/n` (through the [`Self::ingest_one`] wrapper — bit-identical to
+/// the historical fixed-`n` normalization, since `scale` is computed by
+/// the same `1.0 / n as f32` expression). The elastic engine passes
+/// `1/k` for the k quorum members of a partial round and `w(s)/k` for
+/// staleness-weighted late uplinks, which is how quorum-count-aware
+/// normalization reaches every strategy without any server knowing
+/// about quorums. `index == 0` still marks "first fold of this round"
+/// for servers that zero an accumulator.
 pub trait ServerAlgo: Send {
-    /// Fold uplink `index` of an `n`-worker round into server state.
-    fn ingest_one(&mut self, round: usize, index: usize, n: usize, up: &UplinkRef<'_>);
+    /// Fold one uplink into server state with weight `scale` (the
+    /// fold is `acc += scale * decode(up)`; `index == 0` starts the
+    /// round for accumulator-zeroing servers).
+    fn ingest_scaled(&mut self, round: usize, index: usize, scale: f32, up: &UplinkRef<'_>);
+
+    /// Fold uplink `index` of an `n`-worker round into server state
+    /// (the synchronous full-participation form: weight `1/n`).
+    fn ingest_one(&mut self, round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        self.ingest_scaled(round, index, 1.0 / n as f32, up);
+    }
 
     /// All n uplinks of `round` ingested: finish the round's
     /// server-side math and produce the broadcast.

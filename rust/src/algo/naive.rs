@@ -97,14 +97,14 @@ struct NaiveServer {
 }
 
 impl ServerAlgo for NaiveServer {
-    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
         // the round average accumulates in place: zero at the round's
         // first uplink, then ordered scaled adds — the same fill+fold
         // the whole-round average ran, one uplink at a time.
         if index == 0 {
             self.buf.fill(0.0);
         }
-        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {

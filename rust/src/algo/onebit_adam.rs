@@ -158,11 +158,11 @@ struct OneBitServer {
 }
 
 impl ServerAlgo for OneBitServer {
-    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
         if index == 0 {
             self.avg.fill(0.0);
         }
-        self.agg.add_scaled_uplink_into(up, &mut self.avg, 1.0 / n as f32);
+        self.agg.add_scaled_uplink_into(up, &mut self.avg, scale);
     }
 
     fn finish_round(&mut self, round: usize) -> CompressedMsg {

@@ -136,11 +136,11 @@ struct UncompressedServer {
 }
 
 impl ServerAlgo for UncompressedServer {
-    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
         if index == 0 {
             self.buf.fill(0.0);
         }
-        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {

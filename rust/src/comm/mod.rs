@@ -246,6 +246,29 @@ impl<T: Framed> MeteredReceiver<T> {
         }
     }
 
+    /// Receive with a deadline: `Ok(Some)` on a frame, `Ok(None)` when
+    /// `timeout` elapses with nothing to deliver (the link is still
+    /// healthy as far as anyone can tell — the elastic engine's hang
+    /// triage decides what a quiet link means), `Err` when the link is
+    /// closed. The stream backend arms a socket read timeout for the
+    /// call and always restores blocking mode before returning, so a
+    /// later plain [`Self::recv`] never sees a spurious timeout.
+    pub fn recv_deadline(&self, timeout: std::time::Duration) -> anyhow::Result<Option<T>>
+    where
+        T: socket::WireTransportable,
+    {
+        match &self.rx {
+            RecvBackend::Channel(rx) => match rx.recv_timeout(timeout) {
+                Ok(msg) => Ok(Some(msg)),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(anyhow::anyhow!("link closed"))
+                }
+            },
+            RecvBackend::Stream(rx) => rx.recv_deadline(timeout),
+        }
+    }
+
     /// Wrap a socket receiver as a metered link half.
     pub fn from_stream(rx: socket::StreamReceiver<T>) -> Self {
         MeteredReceiver { rx: RecvBackend::Stream(rx) }

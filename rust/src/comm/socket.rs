@@ -323,6 +323,16 @@ impl SocketStream {
             let _ = s.set_nodelay(true);
         }
     }
+
+    /// Arm (or clear) a read timeout on this socket. `Some(ZERO)` is an
+    /// error in std's API, so finite deadlines are clamped to ≥ 1 ms.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        let t = timeout.map(|d| d.max(Duration::from_millis(1)));
+        match self {
+            SocketStream::Tcp(s) => s.set_read_timeout(t),
+            SocketStream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
 }
 
 impl Read for SocketStream {
@@ -547,6 +557,69 @@ impl<T: WireTransportable> StreamReceiver<T> {
             Ok(Some(frame)) => T::from_wire(frame).ok(),
             _ => None,
         }
+    }
+
+    /// [`recv`](Self::recv) with a deadline: `Ok(Some(msg))` on a
+    /// frame, `Ok(None)` if `timeout` elapses with no complete frame
+    /// (partial bytes stay buffered for the next call), `Err` on the
+    /// same disconnect-class conditions as `recv`. The elastic
+    /// coordinator uses this to triage a silently hung peer — a socket
+    /// that neither delivers nor closes — like a disconnect instead of
+    /// blocking forever. The socket's read timeout is restored to
+    /// blocking on every exit path, so interleaved plain `recv` calls
+    /// never see a spurious `WouldBlock`.
+    pub fn recv_deadline(&self, timeout: Duration) -> Result<Option<T>> {
+        let mut guard = self.state.lock().map_err(|_| anyhow!("link closed: receiver poisoned"))?;
+        let s = &mut *guard;
+        // a frame a prior read over-buffered costs no syscall
+        if let Some(frame) = s.dec.next_frame().context("stream framing")? {
+            return Ok(Some(T::from_wire(frame)?));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        s.sock.set_read_timeout(Some(timeout)).context("arming read deadline")?;
+        let res = loop {
+            match s.sock.read(&mut s.scratch) {
+                Ok(0) => {
+                    break if s.dec.buffered() == 0 {
+                        Err(anyhow!("link closed"))
+                    } else {
+                        Err(anyhow!(
+                            "link closed mid-frame ({} bytes of a partial frame buffered)",
+                            s.dec.buffered()
+                        ))
+                    };
+                }
+                Ok(n) => {
+                    s.dec.feed(&s.scratch[..n]);
+                    match s.dec.next_frame().context("stream framing") {
+                        Ok(Some(frame)) => break T::from_wire(frame).map(Some),
+                        Ok(None) => {
+                            // mid-frame: re-arm with the remaining time
+                            let now = std::time::Instant::now();
+                            if now >= deadline {
+                                break Ok(None);
+                            }
+                            s.sock
+                                .set_read_timeout(Some(deadline - now))
+                                .context("re-arming read deadline")?;
+                        }
+                        Err(e) => break Err(e),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // WouldBlock (unix) / TimedOut (tcp on some platforms):
+                // the deadline fired with no complete frame
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break Ok(None);
+                }
+                Err(e) => break Err(anyhow!("link closed: read failed: {e}")),
+            }
+        };
+        let _ = s.sock.set_read_timeout(None);
+        res
     }
 }
 
@@ -808,6 +881,11 @@ fn connect_stream(spec: &BindSpec) -> Result<SocketStream> {
     })
 }
 
+/// Seed-domain tag for reconnect-jitter streams, so backoff draws never
+/// collide with the frame-pacing streams forked from the same profile
+/// seed.
+const RETRY_JITTER_SALT: u64 = 0x4241_434B_4F46_465F; // "BACKOFF_"
+
 /// [`connect_worker_link`] with bounded-backoff retry: processes in a
 /// multi-process run launch in arbitrary order, so a worker (or
 /// sub-aggregator) may dial before the server has bound its address.
@@ -817,6 +895,12 @@ fn connect_stream(spec: &BindSpec) -> Result<SocketStream> {
 /// the address, the deadline, and the last underlying error. Only the
 /// *connect* is retried; once a stream is established, a hello or
 /// handshake failure is a real protocol error and surfaces at once.
+///
+/// Each sleep is scaled by a seeded per-worker jitter factor in
+/// `[0.5, 1.0]` — forked from the profile seed by *global* worker id —
+/// so a large cohort retrying against a late-binding server desyncs
+/// instead of dialing in lockstep thundering-herd waves, while any
+/// single worker's retry schedule stays exactly replayable.
 pub fn connect_worker_link_retry(
     spec: &BindSpec,
     worker_id: u32,
@@ -826,6 +910,7 @@ pub fn connect_worker_link_retry(
 ) -> Result<WorkerLink> {
     let started = std::time::Instant::now();
     let mut backoff = Duration::from_millis(10);
+    let mut rng = Rng::new(profile.seed ^ RETRY_JITTER_SALT).fork(worker_id as u64);
     let mut last_err;
     loop {
         match connect_stream(spec) {
@@ -848,7 +933,8 @@ pub fn connect_worker_link_retry(
                 timeout.as_secs_f64()
             )));
         }
-        std::thread::sleep(backoff.min(timeout.saturating_sub(started.elapsed())));
+        let jittered = backoff.mul_f64(0.5 + 0.5 * rng.f64());
+        std::thread::sleep(jittered.min(timeout.saturating_sub(started.elapsed())));
         backoff = (backoff * 2).min(Duration::from_millis(500));
     }
 }
@@ -1065,6 +1151,28 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("link closed"), "{err}");
         let err = sl.up.recv().unwrap_err();
+        assert!(err.to_string().contains("link closed"), "{err}");
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_delivers_then_closes() {
+        let (w, s) = loopback_pair().unwrap();
+        let opts = LinkOptions::default();
+        let (wl, _) = worker_link(SocketStream::Tcp(w), 0, &opts).unwrap();
+        let (sl, _) = server_link(SocketStream::Tcp(s), 0, &opts).unwrap();
+        let rx = &sl.up; // the metered wrapper forwards the deadline API
+        // silent peer: the deadline fires with no frame, link stays usable
+        assert!(rx.recv_deadline(Duration::from_millis(20)).unwrap().is_none());
+        let payload = CompressedMsg::Dense(vec![2.0; 8]);
+        wl.up.send(UplinkFrame::Bytes(wire::encode_frame(1, 0, &payload).unwrap())).unwrap();
+        let got = rx.recv_deadline(Duration::from_millis(500)).unwrap().expect("frame due");
+        assert_eq!(got.round(), 1);
+        // plain blocking recv after a timed recv must not see WouldBlock
+        wl.up.send(UplinkFrame::Bytes(wire::encode_frame(2, 0, &payload).unwrap())).unwrap();
+        assert_eq!(rx.recv().unwrap().round(), 2);
+        // hangup is a disconnect-class error, same token as recv
+        drop(wl.up);
+        let err = rx.recv_deadline(Duration::from_millis(500)).unwrap_err();
         assert!(err.to_string().contains("link closed"), "{err}");
     }
 

@@ -151,6 +151,12 @@ const KNOB_NET_BANDWIDTH_KBPS: UsizeKnob =
     UsizeKnob::new("net-bandwidth-kbps", "CDADAM_NET_BANDWIDTH_KBPS", 0);
 const KNOB_AGG_GROUPS: UsizeKnob = UsizeKnob::new("agg-groups", "CDADAM_AGG_GROUPS", 1);
 const KNOB_TREE_FORWARD: StrKnob = StrKnob::new("tree-forward", "CDADAM_TREE_FORWARD", "dense");
+const KNOB_QUORUM: StrKnob = StrKnob::new("quorum", "CDADAM_QUORUM", "");
+const KNOB_ROUND_TIMEOUT_MS: UsizeKnob =
+    UsizeKnob::new("round-timeout-ms", "CDADAM_ROUND_TIMEOUT_MS", 0);
+const KNOB_STALENESS: StrKnob = StrKnob::new("staleness", "CDADAM_STALENESS", "drop");
+const KNOB_ON_WORKER_LOSS: StrKnob =
+    StrKnob::new("on-worker-loss", "CDADAM_ON_WORKER_LOSS", "abort");
 
 /// Which link backend the threaded coordinator builds (parsed from the
 /// `transport` knob by [`ExperimentConfig::transport_kind`]).
@@ -369,6 +375,38 @@ pub struct ExperimentConfig {
     /// `compress_downlink`). CLI `--tree-forward`; env
     /// `CDADAM_TREE_FORWARD`.
     pub tree_forward: String,
+    /// Elastic round quorum: how many uplinks close a round
+    /// ([`crate::coordinator::pipeline::ElasticSpec`]). Empty (the
+    /// default) disables elastic mode entirely — the historical
+    /// synchronous engine runs verbatim. `"n"` engages the elastic
+    /// engine at full quorum (bit-identical trajectories, pinned by the
+    /// golden matrix's elastic dimension); `"n-<k>"` closes rounds `k`
+    /// short of the live cohort; a bare integer is an absolute quorum
+    /// (clamped to `[1, n]`). **A math knob below `n`** — folding k of
+    /// n uplinks averages over the quorum, changing the trajectory.
+    /// Elastic mode implies the threaded coordinator. CLI `--quorum`;
+    /// env `CDADAM_QUORUM` flips the default so CI can force partial
+    /// participation across the whole suite.
+    pub quorum: String,
+    /// Elastic straggler deadline in ms: a non-empty round older than
+    /// this closes below quorum instead of waiting. 0 (the default) =
+    /// quorum-only rounds. CLI `--round-timeout-ms`; env
+    /// `CDADAM_ROUND_TIMEOUT_MS`.
+    pub round_timeout_ms: usize,
+    /// What the elastic server does with a late uplink from an already
+    /// closed round: `drop` (discard, counted in the `dropped` column)
+    /// or `weight:<gamma>` (fold into the current round with staleness
+    /// weight `w(s) = gamma^s`, `s` rounds late — the third *math* knob
+    /// after `compress_downlink` and `tree_forward=recompress`;
+    /// `weight:0` is fold-equivalent to `drop`). CLI `--staleness`; env
+    /// `CDADAM_STALENESS`.
+    pub staleness: String,
+    /// Churn policy when a worker dies or silently hangs mid-run:
+    /// `abort` (the default — today's fail-fast triage verbatim) or
+    /// `degrade` (permanently shrink the active cohort and finish the
+    /// run, reporting every loss per round). CLI `--on-worker-loss`;
+    /// env `CDADAM_ON_WORKER_LOSS`.
+    pub on_worker_loss: String,
 }
 
 impl Default for ExperimentConfig {
@@ -412,6 +450,10 @@ impl Default for ExperimentConfig {
             net_bandwidth_kbps: KNOB_NET_BANDWIDTH_KBPS.default(),
             agg_groups: KNOB_AGG_GROUPS.default(),
             tree_forward: KNOB_TREE_FORWARD.default(),
+            quorum: KNOB_QUORUM.default(),
+            round_timeout_ms: KNOB_ROUND_TIMEOUT_MS.default(),
+            staleness: KNOB_STALENESS.default(),
+            on_worker_loss: KNOB_ON_WORKER_LOSS.default(),
         }
     }
 }
@@ -551,10 +593,18 @@ impl ExperimentConfig {
         KNOB_NET_BANDWIDTH_KBPS.apply(args, &mut self.net_bandwidth_kbps)?;
         KNOB_AGG_GROUPS.apply(args, &mut self.agg_groups)?;
         KNOB_TREE_FORWARD.apply(args, &mut self.tree_forward);
-        // fail fast on an unknown transport or forwarding mode name,
-        // at parse time rather than mid-run
+        KNOB_QUORUM.apply(args, &mut self.quorum);
+        KNOB_ROUND_TIMEOUT_MS.apply(args, &mut self.round_timeout_ms)?;
+        KNOB_STALENESS.apply(args, &mut self.staleness);
+        KNOB_ON_WORKER_LOSS.apply(args, &mut self.on_worker_loss);
+        // fail fast on an unknown transport, forwarding mode, quorum,
+        // staleness, or loss-policy name, at parse time rather than
+        // mid-run
         self.transport_kind()?;
         self.tree_forward_kind()?;
+        self.quorum_for(self.n)?;
+        self.staleness_kind()?;
+        self.on_worker_loss_kind()?;
         if args.flag("full") {
             if let Task::Images { full, .. } = &mut self.task {
                 *full = true;
@@ -690,6 +740,80 @@ impl ExperimentConfig {
             "recompress" | "recompressing" => Ok(TreeForward::Recompress),
             other => bail!("unknown tree forwarding mode {other:?} (expected dense | recompress)"),
         }
+    }
+
+    /// Whether the run uses the elastic round engine at all. Empty
+    /// `quorum` (the default) keeps the historical synchronous engine
+    /// verbatim; any explicit quorum — including `"n"` — routes through
+    /// [`crate::coordinator::pipeline::PipelineServer::run_elastic`].
+    pub fn elastic_enabled(&self) -> bool {
+        !self.quorum.trim().is_empty()
+    }
+
+    /// Resolve the `quorum` knob against a cohort of `n` workers:
+    /// `""`/`"n"` → `n`, `"n-<k>"` → `n − k` (floored at 1), a bare
+    /// integer → that value clamped to `[1, n]`. Malformed specs fail
+    /// loudly at parse time.
+    pub fn quorum_for(&self, n: usize) -> Result<usize> {
+        let q = self.quorum.trim();
+        if q.is_empty() || q == "n" {
+            return Ok(n);
+        }
+        if let Some(k) = q.strip_prefix("n-") {
+            return match k.parse::<usize>() {
+                Ok(k) => Ok(n.saturating_sub(k).max(1)),
+                Err(_) => bail!("unknown quorum {q:?} (expected n | n-<k> | <k>)"),
+            };
+        }
+        match q.parse::<usize>() {
+            // k ≥ 1 by the guard, so min against max(n, 1) keeps ≥ 1
+            Ok(k) if k >= 1 => Ok(k.min(n.max(1))),
+            _ => bail!("unknown quorum {q:?} (expected n | n-<k> | a positive integer)"),
+        }
+    }
+
+    /// Parse the `staleness` knob into the elastic late-uplink policy.
+    pub fn staleness_kind(&self) -> Result<crate::coordinator::pipeline::Staleness> {
+        use crate::coordinator::pipeline::Staleness;
+        let s = self.staleness.as_str();
+        match s {
+            "" | "drop" => Ok(Staleness::Drop),
+            _ => {
+                if let Some(g) = s.strip_prefix("weight:") {
+                    match g.trim().parse::<f32>() {
+                        Ok(gamma) if gamma.is_finite() && (0.0..=1.0).contains(&gamma) => {
+                            return Ok(Staleness::Weight(gamma));
+                        }
+                        Ok(gamma) => {
+                            bail!("staleness weight gamma {gamma} out of range (expected [0, 1])")
+                        }
+                        Err(_) => bail!("unparsable staleness weight in {s:?}"),
+                    }
+                }
+                bail!("unknown staleness policy {s:?} (expected drop | weight:<gamma>)")
+            }
+        }
+    }
+
+    /// Parse the `on_worker_loss` knob into the elastic churn policy.
+    pub fn on_worker_loss_kind(&self) -> Result<crate::coordinator::pipeline::OnWorkerLoss> {
+        use crate::coordinator::pipeline::OnWorkerLoss;
+        match self.on_worker_loss.as_str() {
+            "" | "abort" => Ok(OnWorkerLoss::Abort),
+            "degrade" => Ok(OnWorkerLoss::Degrade),
+            other => bail!("unknown worker-loss policy {other:?} (expected abort | degrade)"),
+        }
+    }
+
+    /// Assemble the elastic round policy for a cohort of `n` workers
+    /// from the four elastic knobs (wall clock, default hang triage).
+    /// Call only when [`elastic_enabled`](Self::elastic_enabled).
+    pub fn elastic_spec(&self, n: usize) -> Result<crate::coordinator::pipeline::ElasticSpec> {
+        let mut spec = crate::coordinator::pipeline::ElasticSpec::new(self.quorum_for(n)?);
+        spec.round_timeout_ms = self.round_timeout_ms as u64;
+        spec.staleness = self.staleness_kind()?;
+        spec.on_worker_loss = self.on_worker_loss_kind()?;
+        Ok(spec)
     }
 
     /// Compressor a re-compressing sub-aggregator runs its group fold
@@ -1090,6 +1214,84 @@ mod tests {
         let g1 = cfg.build_group_compressor(1).unwrap().compress(&x);
         assert_eq!(g0, g0b, "group compressor must be deterministic given (seed, group)");
         assert_ne!(g0, g1, "groups replayed identical rand-k streams");
+    }
+
+    #[test]
+    fn elastic_knobs_parse_and_validate() {
+        use crate::coordinator::pipeline::{OnWorkerLoss, Staleness};
+        let cfg = ExperimentConfig::preset("quickstart").unwrap();
+        // built-in defaults: elastic off, drop, abort — but only assert
+        // when the env vars aren't forcing a suite-wide default (the
+        // CDADAM_QUORUM=n-1 CI job), same pattern as transport
+        if std::env::var("CDADAM_QUORUM").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert!(!cfg.elastic_enabled(), "elastic must be off by default");
+            assert_eq!(cfg.quorum_for(8).unwrap(), 8);
+        }
+        if std::env::var("CDADAM_STALENESS").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert_eq!(cfg.staleness_kind().unwrap(), Staleness::Drop);
+        }
+        if std::env::var("CDADAM_ON_WORKER_LOSS").map(|v| v.trim().is_empty()).unwrap_or(true) {
+            assert_eq!(cfg.on_worker_loss_kind().unwrap(), OnWorkerLoss::Abort);
+        }
+        // every quorum spelling resolves against the cohort
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--quorum", "n"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.elastic_enabled(), "--quorum n engages the elastic engine");
+        assert_eq!(cfg.quorum_for(8).unwrap(), 8);
+        cfg.quorum = "n-3".into();
+        assert_eq!(cfg.quorum_for(8).unwrap(), 5);
+        assert_eq!(cfg.quorum_for(2).unwrap(), 1, "n-k floors at 1");
+        cfg.quorum = "5".into();
+        assert_eq!(cfg.quorum_for(8).unwrap(), 5);
+        assert_eq!(cfg.quorum_for(3).unwrap(), 3, "absolute quorum clamps to n");
+        cfg.quorum = "n-1".into();
+        assert_eq!(cfg.quorum_for(1).unwrap(), 1, "a 1-worker cohort keeps quorum 1");
+        // malformed specs fail at parse time, not mid-run
+        for bad in ["zero", "n-x", "0", "-1"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let args = Args::parse(["--quorum", bad].iter().map(|s| s.to_string()));
+            assert!(cfg.apply_args(&args).is_err(), "quorum {bad:?} should be rejected");
+        }
+        // staleness: drop | weight:<gamma in [0,1]>
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--staleness", "weight:0.5"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.staleness_kind().unwrap(), Staleness::Weight(0.5));
+        cfg.staleness = "weight:0".into();
+        assert_eq!(cfg.staleness_kind().unwrap(), Staleness::Weight(0.0));
+        for bad in ["weight:1.5", "weight:-0.1", "weight:nan", "weight:", "sometimes"] {
+            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let args = Args::parse(["--staleness", bad].iter().map(|s| s.to_string()));
+            assert!(cfg.apply_args(&args).is_err(), "staleness {bad:?} should be rejected");
+        }
+        // loss policy: abort | degrade, case-normalized
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--on-worker-loss", "Degrade"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.on_worker_loss_kind().unwrap(), OnWorkerLoss::Degrade);
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let args = Args::parse(["--on-worker-loss", "panic"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
+        // the assembled spec carries all three policies
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.quorum = "n-1".into();
+        cfg.round_timeout_ms = 250;
+        cfg.staleness = "weight:0.5".into();
+        cfg.on_worker_loss = "degrade".into();
+        let spec = cfg.elastic_spec(8).unwrap();
+        assert_eq!(spec.quorum, 7);
+        assert_eq!(spec.round_timeout_ms, 250);
+        assert_eq!(spec.staleness, Staleness::Weight(0.5));
+        assert_eq!(spec.on_worker_loss, OnWorkerLoss::Degrade);
+        // absent flags leave the (env-derived) defaults untouched
+        let mut cfg2 = ExperimentConfig::preset("quickstart").unwrap();
+        let (q, s, l) =
+            (cfg2.quorum.clone(), cfg2.staleness.clone(), cfg2.on_worker_loss.clone());
+        cfg2.apply_args(&Args::parse(std::iter::empty())).unwrap();
+        assert_eq!(cfg2.quorum, q);
+        assert_eq!(cfg2.staleness, s);
+        assert_eq!(cfg2.on_worker_loss, l);
     }
 
     #[test]

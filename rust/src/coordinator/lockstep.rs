@@ -106,6 +106,9 @@ pub fn run_lockstep(cfg: &ExperimentConfig) -> Result<RunLog> {
                 cum_bits: cum_up_bits + cum_down_bits,
                 up_bits: cum_up_bits,
                 down_bits: cum_down_bits,
+                participants: n,
+                late_folds: 0,
+                dropped: 0,
                 wall_ms: timer.elapsed_ms(),
             });
         }

@@ -81,11 +81,15 @@ pub(crate) fn make_uplink_frame(
 /// Hierarchical aggregation (`agg_groups > 1`) likewise only exists
 /// where links exist, and its dense-forwarding default is bit-identical
 /// to the flat star, so forcing `CDADAM_AGG_GROUPS` suite-wide changes
-/// no results either.
+/// no results either. Elastic rounds (`quorum` non-empty) also imply
+/// the threaded driver — k-of-n quorum folds only make sense where
+/// uplinks actually race; at full quorum (`--quorum n`) the elastic
+/// engine is bit-identical to the synchronous fold.
 pub fn run(cfg: &ExperimentConfig) -> anyhow::Result<RunLog> {
     if cfg.threaded
         || cfg.transport_kind()? == crate::config::Transport::Socket
         || cfg.agg_groups > 1
+        || cfg.elastic_enabled()
     {
         run_threaded(cfg)
     } else {

@@ -67,9 +67,27 @@
 //! thread is [`PipelineServer::run`]; the lockstep driver calls the
 //! same [`fold_round`] stage directly (it has no links to receive
 //! from), so the server-side round math has exactly one implementation.
+//!
+//! ## Elastic rounds
+//!
+//! [`PipelineServer::run_elastic`] is the partial-participation variant
+//! of the same loop: a round closes once a **quorum** of k-of-n uplinks
+//! is ingested (k = n reproduces the synchronous fold bit-for-bit — the
+//! fold order and the `1/k` scale are computed by the very same
+//! expressions), or once a per-round straggler deadline passes with at
+//! least one uplink in hand. Late uplinks are dropped or folded with a
+//! staleness weight `w(s) = γ^s` ([`Staleness`]), and a worker loss
+//! either unwinds the run exactly like the synchronous triage or
+//! permanently shrinks the active cohort ([`OnWorkerLoss`]), with a
+//! per-round participation report ([`RunReport`]) for the metrics
+//! layer. Timing is injectable ([`RoundClock`]) so deadline behaviour
+//! is deterministic under test.
 
-use std::sync::mpsc::sync_channel;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::agg::UplinkRef;
 use crate::algo::downlink::DownlinkChannel;
@@ -410,6 +428,442 @@ fn broadcast_round(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Elastic rounds: k-of-n quorum folds, staleness-weighted late uplinks,
+// worker-churn survival.
+// ---------------------------------------------------------------------------
+
+/// What to do with an uplink whose round already closed (it arrives
+/// tagged t−s while the server is collecting round t).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Staleness {
+    /// Discard late uplinks (counted in the round's `dropped` column).
+    Drop,
+    /// Fold a round-(t−s) uplink into round t with weight `w(s) = γ^s`
+    /// (so `w(0) = 1` and `γ = 0` folds nothing in). This is the third
+    /// *math* knob: staleness-weighted trajectories legitimately differ
+    /// from the synchronous fold.
+    Weight(f32),
+}
+
+/// Whether losing a worker unwinds the run (the historical triage,
+/// verbatim) or permanently shrinks the active cohort and lets the run
+/// complete with a loud participation report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnWorkerLoss {
+    Abort,
+    Degrade,
+}
+
+/// Time source for the elastic engine's straggler deadline and hang
+/// triage. `Real` reads the wall clock; `Virtual` advances a counter by
+/// `tick_ms` on every idle poll, so deadline-driven behaviour fires
+/// after an exact, schedule-independent number of idle polls in tests.
+#[derive(Debug)]
+pub enum RoundClock {
+    Real(Instant),
+    Virtual { now_ms: Cell<u64>, tick_ms: u64 },
+}
+
+impl RoundClock {
+    /// Wall-clock time, anchored at construction.
+    pub fn real() -> Self {
+        RoundClock::Real(Instant::now())
+    }
+
+    /// A deterministic clock that advances `tick_ms` per idle poll.
+    pub fn virtual_ticking(tick_ms: u64) -> Self {
+        RoundClock::Virtual { now_ms: Cell::new(0), tick_ms: tick_ms.max(1) }
+    }
+
+    fn now_ms(&self) -> u64 {
+        match self {
+            RoundClock::Real(anchor) => anchor.elapsed().as_millis() as u64,
+            RoundClock::Virtual { now_ms, .. } => now_ms.get(),
+        }
+    }
+
+    /// An event-channel poll returned empty: virtual time moves only
+    /// here, so a fixed frame schedule yields a fixed deadline history.
+    fn idle_tick(&self) {
+        if let RoundClock::Virtual { now_ms, tick_ms } = self {
+            now_ms.set(now_ms.get() + tick_ms);
+        }
+    }
+
+    /// How long one event poll blocks: long enough to stay cheap on the
+    /// wall clock, short enough that virtual tests finish quickly.
+    fn poll(&self) -> Duration {
+        match self {
+            RoundClock::Real(_) => Duration::from_millis(25),
+            RoundClock::Virtual { .. } => Duration::from_millis(1),
+        }
+    }
+}
+
+/// With no straggler deadline configured, how long the engine tolerates
+/// a round making *no progress at all* (no frame, no disconnect) before
+/// triaging the undelivered workers as hung — the silent-hang analogue
+/// of `WorkerDisconnected`.
+pub const DEFAULT_STALL_TIMEOUT_MS: u64 = 30_000;
+
+/// The elastic round policy (see the module docs).
+pub struct ElasticSpec {
+    /// Close a round once this many uplinks are ingested (clamped to
+    /// the live cohort size; `quorum = n` + no losses = the synchronous
+    /// fold bit-for-bit).
+    pub quorum: usize,
+    /// Straggler deadline: close a non-empty round this many ms after
+    /// it started even below quorum. `0` = quorum-only.
+    pub round_timeout_ms: u64,
+    /// Hang triage: if a round sees no event at all for this long while
+    /// below quorum, the undelivered workers are treated as lost.
+    pub stall_timeout_ms: u64,
+    pub staleness: Staleness,
+    pub on_worker_loss: OnWorkerLoss,
+    pub clock: RoundClock,
+}
+
+impl ElasticSpec {
+    /// Quorum-only policy: no straggler deadline, drop late uplinks,
+    /// abort on loss, wall clock, default hang triage.
+    pub fn new(quorum: usize) -> Self {
+        ElasticSpec {
+            quorum,
+            round_timeout_ms: 0,
+            stall_timeout_ms: DEFAULT_STALL_TIMEOUT_MS,
+            staleness: Staleness::Drop,
+            on_worker_loss: OnWorkerLoss::Abort,
+            clock: RoundClock::real(),
+        }
+    }
+}
+
+/// Who actually made it into one elastic round's fold.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundParticipation {
+    pub round: usize,
+    /// Current-round uplinks folded (the quorum members).
+    pub participants: usize,
+    /// Late uplinks folded with a staleness weight.
+    pub late_folds: usize,
+    /// Uplinks discarded (late under `Staleness::Drop`, or sent by a
+    /// worker already declared lost).
+    pub dropped: usize,
+}
+
+/// The elastic run's participation ledger: one entry per round, plus
+/// every `(worker, round)` loss the run survived under
+/// [`OnWorkerLoss::Degrade`].
+#[derive(Debug, Default)]
+pub struct RunReport {
+    pub rounds: Vec<RoundParticipation>,
+    pub lost_workers: Vec<(usize, usize)>,
+}
+
+/// What a per-link recv thread forwards to the elastic fold loop.
+enum ElasticEvent {
+    Frame(usize, UplinkFrame),
+    Closed(usize),
+}
+
+impl PipelineServer {
+    /// The elastic variant of [`Self::run`]: close each round on quorum
+    /// or deadline, fold or drop late uplinks, and survive (or abort
+    /// on) worker churn per `spec`. Returns the participation ledger.
+    ///
+    /// One recv thread per link polls with a deadline
+    /// ([`MeteredReceiver::recv_deadline`]) and forwards frames and
+    /// disconnects into a single event channel; the fold loop classifies
+    /// each event against the round being collected. The fold itself is
+    /// [`fold_elastic_round`]: membership alone determines the math —
+    /// late uplinks sorted by (origin round, worker) first, then quorum
+    /// members sorted by worker — so a fixed membership schedule yields
+    /// replay-exact trajectories regardless of arrival interleaving.
+    pub fn run_elastic(
+        &mut self,
+        server: &mut dyn ServerAlgo,
+        links: Vec<ServerLink>,
+        spec: &ElasticSpec,
+    ) -> Result<RunReport, PipelineError> {
+        let n = links.len();
+        let rounds = self.rounds;
+        let (ups, downs): (Vec<_>, Vec<_>) = links.into_iter().map(|l| (l.up, l.down)).unzip();
+        let mut downs: Vec<Option<MeteredSender<Broadcast>>> = downs.into_iter().map(Some).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<ElasticEvent>();
+        let recv_threads: Vec<_> = ups
+            .into_iter()
+            .enumerate()
+            .map(|(i, up)| {
+                let tx = tx.clone();
+                let stop = Arc::clone(&stop);
+                std::thread::Builder::new()
+                    .name(format!("elastic-recv-{i}"))
+                    .spawn(move || loop {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        match up.recv_deadline(Duration::from_millis(50)) {
+                            Ok(Some(frame)) => {
+                                if tx.send(ElasticEvent::Frame(i, frame)).is_err() {
+                                    return;
+                                }
+                            }
+                            Ok(None) => {}
+                            Err(_) => {
+                                let _ = tx.send(ElasticEvent::Closed(i));
+                                return;
+                            }
+                        }
+                    })
+                    .map_err(|_| PipelineError::StageDied { stage: "recv" })
+            })
+            .collect::<Result<_, _>>()?;
+        drop(tx);
+
+        let stall_ms = spec.stall_timeout_ms.max(1);
+        let mut fw = self.downlink_writer();
+        let downlink = &mut self.downlink;
+        let mut alive = vec![true; n];
+        let mut alive_count = n;
+        let mut report = RunReport::default();
+
+        let result: Result<(), PipelineError> = (|| {
+            for t in 1..=rounds {
+                let lose = |i: usize,
+                                alive: &mut [bool],
+                                alive_count: &mut usize,
+                                downs: &mut [Option<MeteredSender<Broadcast>>],
+                                report: &mut RunReport| {
+                    if alive[i] {
+                        alive[i] = false;
+                        *alive_count -= 1;
+                        downs[i] = None; // unblock its downlink recv
+                        report.lost_workers.push((i, t));
+                        eprintln!(
+                            "[elastic] worker {i} lost in round {t}; cohort shrinks to \
+                             {alive_count} of {n}"
+                        );
+                    }
+                };
+                if alive_count == 0 {
+                    let worker = report.lost_workers.last().map_or(0, |&(w, _)| w);
+                    return Err(PipelineError::WorkerDisconnected { worker, round: t });
+                }
+                let round_start = spec.clock.now_ms();
+                let mut last_event = round_start;
+                let mut current: Vec<(usize, UplinkFrame)> = Vec::new();
+                let mut late: Vec<(usize, usize, UplinkFrame)> = Vec::new();
+                let mut dropped = 0usize;
+                let mut target = spec.quorum.min(alive_count).max(1);
+                loop {
+                    if current.len() >= target {
+                        break;
+                    }
+                    let now = spec.clock.now_ms();
+                    if spec.round_timeout_ms > 0
+                        && now.saturating_sub(round_start) >= spec.round_timeout_ms
+                        && !current.is_empty()
+                    {
+                        break; // straggler deadline: fold what we have
+                    }
+                    if now.saturating_sub(last_event) >= stall_ms {
+                        // silent hang: nobody delivered anything for the
+                        // whole stall window — the undelivered workers
+                        // are triaged exactly like disconnects.
+                        let missing: Vec<usize> = (0..n)
+                            .filter(|&i| alive[i] && !current.iter().any(|&(w, _)| w == i))
+                            .collect();
+                        let first = *missing.first().unwrap_or(&0);
+                        if spec.on_worker_loss == OnWorkerLoss::Abort {
+                            return Err(PipelineError::WorkerDisconnected {
+                                worker: first,
+                                round: t,
+                            });
+                        }
+                        for &i in &missing {
+                            lose(i, &mut alive, &mut alive_count, &mut downs, &mut report);
+                        }
+                        if current.is_empty() {
+                            return Err(PipelineError::WorkerDisconnected {
+                                worker: first,
+                                round: t,
+                            });
+                        }
+                        break;
+                    }
+                    match rx.recv_timeout(spec.clock.poll()) {
+                        Ok(ElasticEvent::Frame(i, frame)) => {
+                            last_event = spec.clock.now_ms();
+                            if !alive[i] {
+                                dropped += 1; // in flight past its loss
+                                continue;
+                            }
+                            let tag = frame.round();
+                            if tag == t as u64 {
+                                current.push((i, frame));
+                            } else if tag < t as u64 {
+                                match spec.staleness {
+                                    Staleness::Drop => dropped += 1,
+                                    Staleness::Weight(_) => late.push((tag as usize, i, frame)),
+                                }
+                            } else {
+                                // workers block on the downlink, so a
+                                // future tag is a protocol fault.
+                                return Err(PipelineError::RoundMismatch {
+                                    worker: i,
+                                    round: t,
+                                    got: tag,
+                                });
+                            }
+                        }
+                        Ok(ElasticEvent::Closed(i)) => {
+                            if !alive[i] {
+                                continue;
+                            }
+                            last_event = spec.clock.now_ms();
+                            if spec.on_worker_loss == OnWorkerLoss::Abort {
+                                return Err(PipelineError::WorkerDisconnected {
+                                    worker: i,
+                                    round: t,
+                                });
+                            }
+                            lose(i, &mut alive, &mut alive_count, &mut downs, &mut report);
+                            if alive_count == 0 && current.is_empty() {
+                                return Err(PipelineError::WorkerDisconnected {
+                                    worker: i,
+                                    round: t,
+                                });
+                            }
+                            target = spec.quorum.min(alive_count).max(1);
+                        }
+                        Err(RecvTimeoutError::Timeout) => spec.clock.idle_tick(),
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return Err(PipelineError::StageDied { stage: "recv" })
+                        }
+                    }
+                }
+                let (update, late_folds) =
+                    fold_elastic_round(server, t, late, &mut current, spec.staleness)?;
+                report.rounds.push(RoundParticipation {
+                    round: t,
+                    participants: current.len(),
+                    late_folds,
+                    dropped,
+                });
+                let down = Self::make_downlink(downlink, fw.as_mut(), t, update)?;
+                let mut failed_sends: Vec<usize> = Vec::new();
+                for (i, slot) in downs.iter().enumerate() {
+                    if let Some(link) = slot {
+                        if link.send(Broadcast { round: t as u64, payload: down.clone() }).is_err() {
+                            failed_sends.push(i); // died between send and recv
+                        }
+                    }
+                }
+                for i in failed_sends {
+                    if spec.on_worker_loss == OnWorkerLoss::Abort {
+                        return Err(PipelineError::DownlinkClosed { worker: i, round: t });
+                    }
+                    lose(i, &mut alive, &mut alive_count, &mut downs, &mut report);
+                }
+            }
+            Ok(())
+        })();
+
+        // Unwind: dropping the downlinks unblocks workers parked on
+        // their downlink recv; the stop flag (checked every ≤ 50 ms
+        // poll) bounds the recv-thread joins even when a hung worker
+        // never closes its uplink.
+        stop.store(true, Ordering::Relaxed);
+        downs.clear();
+        drop(rx);
+        for h in recv_threads {
+            let _ = h.join();
+        }
+        result.map(|()| report)
+    }
+}
+
+/// The elastic fold stage for one closed round: late uplinks first
+/// (sorted by origin round then worker, each scaled `γ^s / k`), then
+/// the k quorum members (sorted by worker, each scaled `1/k`). Only
+/// membership determines the math — the sort erases arrival order — and
+/// at k = n with no late frames the call sequence and scales are the
+/// synchronous [`fold_round`]'s exactly. Public so staleness math is
+/// unit-testable in closed form.
+pub fn fold_elastic_round(
+    server: &mut dyn ServerAlgo,
+    round: usize,
+    mut late: Vec<(usize, usize, UplinkFrame)>,
+    current: &mut Vec<(usize, UplinkFrame)>,
+    staleness: Staleness,
+) -> Result<(CompressedMsg, usize), PipelineError> {
+    current.sort_by_key(|&(w, _)| w);
+    late.sort_by_key(|&(r, w, _)| (r, w));
+    let k = current.len().max(1);
+    let base = 1.0 / k as f32;
+    let mut mode = None;
+    let mut ord = 0usize;
+    let mut late_folds = 0usize;
+    if let Staleness::Weight(gamma) = staleness {
+        for (orig, w, frame) in &late {
+            let s = round.saturating_sub(*orig) as i32;
+            let scale = gamma.powi(s) * base;
+            ingest_frame_scaled(server, round, *orig, *w, ord, scale, frame, &mut mode)?;
+            ord += 1;
+            late_folds += 1;
+        }
+    }
+    for (w, frame) in current.iter() {
+        ingest_frame_scaled(server, round, round, *w, ord, base, frame, &mut mode)?;
+        ord += 1;
+    }
+    Ok((server.finish_round(round), late_folds))
+}
+
+/// [`ingest_frame`]'s scaled twin: validate the frame against *its own*
+/// round tag (`expect_tag` — late frames carry their origin round) and
+/// fold it with an explicit weight at fold ordinal `ord` (ordinal 0
+/// starts the round for accumulator-zeroing servers).
+#[allow(clippy::too_many_arguments)]
+fn ingest_frame_scaled(
+    server: &mut dyn ServerAlgo,
+    round: usize,
+    expect_tag: usize,
+    worker: usize,
+    ord: usize,
+    scale: f32,
+    frame: &UplinkFrame,
+    mode: &mut Option<FrameMode>,
+) -> Result<(), PipelineError> {
+    if frame.round() != expect_tag as u64 {
+        return Err(PipelineError::RoundMismatch { worker, round, got: frame.round() });
+    }
+    let this = match frame {
+        UplinkFrame::Msg(_) => FrameMode::Structured,
+        UplinkFrame::Bytes(_) => FrameMode::Bytes,
+    };
+    match *mode {
+        None => *mode = Some(this),
+        Some(m) if m != this => return Err(PipelineError::MixedFrameModes { worker, round }),
+        Some(_) => {}
+    }
+    match frame {
+        UplinkFrame::Msg(m) => server.ingest_scaled(round, ord, scale, &UplinkRef::Owned(&m.payload)),
+        UplinkFrame::Bytes(fb) => {
+            let fv = wire::FrameView::parse(&fb.bytes).map_err(|e| {
+                PipelineError::CorruptFrame { worker, round, detail: e.to_string() }
+            })?;
+            if fv.round != expect_tag as u64 {
+                return Err(PipelineError::RoundMismatch { worker, round, got: fv.round });
+            }
+            server.ingest_scaled(round, ord, scale, &UplinkRef::View(&fv.payload));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,10 +872,11 @@ mod tests {
     use crate::compress::{Compressor, ScaledSign};
 
     /// Minimal recording server: averages uplinks densely and logs the
-    /// exact (round, index, n) ingest order, so tests can pin the
-    /// engine's worker-order contract at any depth.
+    /// exact (round, ordinal, scale) ingest sequence, so tests can pin
+    /// the engine's worker-order contract at any depth and the elastic
+    /// fold's scale schedule in closed form.
     struct Recorder {
-        calls: Vec<(usize, usize, usize)>,
+        calls: Vec<(usize, usize, f32)>,
         sum: Vec<f32>,
     }
 
@@ -432,12 +887,12 @@ mod tests {
     }
 
     impl ServerAlgo for Recorder {
-        fn ingest_one(&mut self, round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
-            self.calls.push((round, index, n));
+        fn ingest_scaled(&mut self, round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
+            self.calls.push((round, index, scale));
             if index == 0 {
                 self.sum.fill(0.0);
             }
-            AggEngine::sequential().add_scaled_uplink_into(up, &mut self.sum, 1.0 / n as f32);
+            AggEngine::sequential().add_scaled_uplink_into(up, &mut self.sum, scale);
         }
 
         fn finish_round(&mut self, _round: usize) -> CompressedMsg {
@@ -505,9 +960,9 @@ mod tests {
                 let handles = spawn_workers(workers, rounds, d, bytes_mode);
                 let mut server = Recorder::new(d);
                 PipelineServer::new(rounds, depth).run(&mut server, servers).unwrap();
-                // ingest order: (1,0,n), (1,1,n), ... (rounds,n-1,n)
-                let want: Vec<(usize, usize, usize)> = (1..=rounds)
-                    .flat_map(|t| (0..n).map(move |i| (t, i, n)))
+                // ingest order: (1,0,1/n), (1,1,1/n), ... (rounds,n-1,1/n)
+                let want: Vec<(usize, usize, f32)> = (1..=rounds)
+                    .flat_map(|t| (0..n).map(move |i| (t, i, 1.0 / n as f32)))
                     .collect();
                 assert_eq!(server.calls, want, "depth {depth} broke the ingest order");
                 let mut outs: Vec<Vec<f32>> =
@@ -716,6 +1171,306 @@ mod tests {
         match &err {
             PipelineError::RoundMismatch { worker: 0, round: 1, got: 9 } => {}
             other => panic!("expected RoundMismatch, got {other}"),
+        }
+    }
+
+    // --- elastic rounds ---------------------------------------------------
+
+    /// Round-synchronous workers that exit cleanly on any link error
+    /// (for scenarios where the server aborts or sheds workers mid-run).
+    fn spawn_workers_tolerant(
+        links: Vec<WorkerLink>,
+        rounds: usize,
+        d: usize,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        links
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    let mut comp = ScaledSign::new().fork_stream(i as u64);
+                    for t in 1..=rounds {
+                        let g: Vec<f32> =
+                            (0..d).map(|j| ((i + 1) * (j + 1)) as f32 * t as f32).collect();
+                        let c = comp.compress(&g);
+                        let frame =
+                            UplinkFrame::Msg(WireMsg { round: t as u64, from: i as u32, payload: c });
+                        if link.up.send(frame).is_err() || link.down.recv().is_err() {
+                            return;
+                        }
+                    }
+                })
+            })
+            .collect()
+    }
+
+    fn dense_frame(round: usize, from: usize, vals: &[f32]) -> UplinkFrame {
+        UplinkFrame::Msg(WireMsg {
+            round: round as u64,
+            from: from as u32,
+            payload: CompressedMsg::Dense(vals.to_vec()),
+        })
+    }
+
+    #[test]
+    fn elastic_full_quorum_matches_sync_engine_bitwise() {
+        // quorum = n with everyone healthy: the elastic engine must be
+        // the synchronous fold bit-for-bit — same (round, ordinal,
+        // scale) ingest schedule, same broadcasts — in both frame modes.
+        let (d, n, rounds) = (64usize, 3usize, 6usize);
+        for bytes_mode in [false, true] {
+            let (workers, servers, _um, _dm) = topology(n);
+            let handles = spawn_workers(workers, rounds, d, bytes_mode);
+            let mut sync_server = Recorder::new(d);
+            PipelineServer::new(rounds, 1).run(&mut sync_server, servers).unwrap();
+            let sync_final: Vec<Vec<f32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+            let (workers, servers, _um, _dm) = topology(n);
+            let handles = spawn_workers(workers, rounds, d, bytes_mode);
+            let mut el_server = Recorder::new(d);
+            let spec = ElasticSpec::new(n);
+            let report = PipelineServer::new(rounds, 1)
+                .run_elastic(&mut el_server, servers, &spec)
+                .unwrap();
+            let el_final: Vec<Vec<f32>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+            assert_eq!(
+                sync_server.calls, el_server.calls,
+                "ingest schedule diverged (bytes={bytes_mode})"
+            );
+            for (a, b) in sync_final.iter().zip(&el_final) {
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "quorum=n broke bitwise equality (bytes={bytes_mode})"
+                );
+            }
+            assert!(report.lost_workers.is_empty());
+            assert_eq!(report.rounds.len(), rounds);
+            for (i, p) in report.rounds.iter().enumerate() {
+                assert_eq!(
+                    (p.round, p.participants, p.late_folds, p.dropped),
+                    (i + 1, n, 0, 0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quorum_subset_closes_rounds_without_the_silent_worker() {
+        // worker n−1 never uplinks; quorum = n−1 closes every round on
+        // the others with deterministic membership (the silent worker
+        // still receives every broadcast — alive, just not folding),
+        // so the whole run is replay-exact.
+        let (d, n, rounds) = (32usize, 3usize, 4usize);
+        let run = || {
+            let (mut workers, servers, _um, _dm) = topology(n);
+            let silent = workers.pop().unwrap();
+            let handles = spawn_workers(workers, rounds, d, false);
+            let silent_handle = std::thread::spawn(move || {
+                let mut got = 0usize;
+                while silent.down.recv().is_ok() {
+                    got += 1;
+                }
+                got
+            });
+            let mut server = Recorder::new(d);
+            let spec = ElasticSpec::new(n - 1);
+            let report = PipelineServer::new(rounds, 1)
+                .run_elastic(&mut server, servers, &spec)
+                .unwrap();
+            let finals: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(silent_handle.join().unwrap(), rounds);
+            (server.sum.clone(), server.calls.clone(), finals, report)
+        };
+        let (sum_a, calls_a, finals_a, report) = run();
+        let (sum_b, calls_b, finals_b, _) = run();
+        assert_eq!(calls_a, calls_b, "partial quorum must replay exactly");
+        assert!(sum_a.iter().zip(&sum_b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(finals_a, finals_b);
+        assert!(report.lost_workers.is_empty());
+        for p in &report.rounds {
+            assert_eq!(
+                (p.participants, p.late_folds, p.dropped),
+                (n - 1, 0, 0),
+                "round {}",
+                p.round
+            );
+        }
+    }
+
+    #[test]
+    fn staleness_weight_zero_fold_equals_drop() {
+        // γ = 0 folds a zero-scaled late uplink — on these inputs that
+        // is bit-identical to not folding it at all, which is exactly
+        // the drop ≡ weight:0 equivalence the knob docs promise.
+        let d = 16;
+        let x: Vec<f32> = (0..d).map(|j| (j + 1) as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..d).map(|j| (j + 2) as f32 * 0.25).collect();
+        let mut with_late = Recorder::new(d);
+        let (a, late_folds) = fold_elastic_round(
+            &mut with_late,
+            5,
+            vec![(4, 1, dense_frame(4, 1, &y))],
+            &mut vec![(0, dense_frame(5, 0, &x))],
+            Staleness::Weight(0.0),
+        )
+        .unwrap();
+        assert_eq!(late_folds, 1);
+        let mut dropped = Recorder::new(d);
+        let (b, no_late) = fold_elastic_round(
+            &mut dropped,
+            5,
+            Vec::new(),
+            &mut vec![(0, dense_frame(5, 0, &x))],
+            Staleness::Drop,
+        )
+        .unwrap();
+        assert_eq!(no_late, 0);
+        match (&a, &b) {
+            (CompressedMsg::Dense(va), CompressedMsg::Dense(vb)) => {
+                assert!(va.iter().zip(vb).all(|(p, q)| p.to_bits() == q.to_bits()));
+            }
+            _ => panic!("recorder broadcasts dense"),
+        }
+    }
+
+    #[test]
+    fn staleness_weight_is_gamma_pow_s_and_w0_is_one() {
+        // the scale schedule in closed form: a round-(t−s) uplink folds
+        // with exactly γ^s · (1/k), and s = 0 degenerates to the plain
+        // quorum weight (w(0) = 1).
+        let d = 8;
+        let gamma = 0.5f32;
+        let x: Vec<f32> = (0..d).map(|j| (j + 1) as f32).collect();
+        let y: Vec<f32> = (0..d).map(|j| (j + 1) as f32 * -0.125).collect();
+        for s in [0usize, 1, 2, 3] {
+            let mut server = Recorder::new(d);
+            let (out, late_folds) = fold_elastic_round(
+                &mut server,
+                10,
+                vec![(10 - s, 1, dense_frame(10 - s, 1, &y))],
+                &mut vec![(0, dense_frame(10, 0, &x))],
+                Staleness::Weight(gamma),
+            )
+            .unwrap();
+            assert_eq!(late_folds, 1);
+            // k = 1, so the late scale is γ^s exactly and the member
+            // scale is 1 exactly
+            let scales: Vec<f32> = server.calls.iter().map(|&(_, _, sc)| sc).collect();
+            assert_eq!(scales.len(), 2);
+            assert_eq!(scales[0].to_bits(), (gamma.powi(s as i32) * 1.0).to_bits(), "s={s}");
+            assert_eq!(scales[1].to_bits(), 1.0f32.to_bits());
+            if s == 0 {
+                assert_eq!(scales[0].to_bits(), 1.0f32.to_bits(), "w(0) must be 1");
+            }
+            // and the fold lands on γ^s·y + x (analytic form)
+            let CompressedMsg::Dense(v) = out else { panic!("recorder broadcasts dense") };
+            for j in 0..d {
+                let want = gamma.powi(s as i32) * y[j] + x[j];
+                assert!((v[j] - want).abs() < 1e-5, "s={s} j={j}: {} vs {want}", v[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn silent_hang_is_triaged_by_the_virtual_clock() {
+        // worker n−1 seats its links but never uplinks: with quorum = n
+        // and no straggler deadline, only the stall triage can close
+        // round 1. Under abort it must name a hung worker; under
+        // degrade the run completes with that worker dead from round 1.
+        let (d, n, rounds) = (16usize, 3usize, 3usize);
+        for abort in [true, false] {
+            let (mut workers, servers, _um, _dm) = topology(n);
+            let hung = workers.pop().unwrap();
+            let handles = spawn_workers_tolerant(workers, rounds, d);
+            let hung_handle = std::thread::spawn(move || {
+                // holds its links open, sends nothing, parks on recv
+                let _ = hung.down.recv();
+            });
+            let mut server = Recorder::new(d);
+            let mut spec = ElasticSpec::new(n);
+            spec.stall_timeout_ms = 10_000;
+            spec.clock = RoundClock::virtual_ticking(100);
+            spec.on_worker_loss =
+                if abort { OnWorkerLoss::Abort } else { OnWorkerLoss::Degrade };
+            let got = PipelineServer::new(rounds, 1).run_elastic(&mut server, servers, &spec);
+            if abort {
+                match got.unwrap_err() {
+                    PipelineError::WorkerDisconnected { worker, round } => {
+                        assert_eq!((worker, round), (n - 1, 1));
+                    }
+                    other => panic!("expected WorkerDisconnected, got {other}"),
+                }
+            } else {
+                let report = got.unwrap();
+                assert_eq!(report.lost_workers, vec![(n - 1, 1)]);
+                assert_eq!(report.rounds.len(), rounds);
+                for p in &report.rounds {
+                    assert_eq!(p.participants, n - 1, "round {}", p.round);
+                }
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            hung_handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mid_run_death_shrinks_the_cohort_and_replays_exactly() {
+        // worker 1 exits after die_after full rounds: under degrade the
+        // run completes, the loss lands on round die_after+1 (the
+        // worker cannot die earlier — it blocks on each broadcast), and
+        // because membership per round is structural, two runs replay
+        // bit-for-bit.
+        let (d, n, rounds, die_after) = (24usize, 3usize, 6usize, 2usize);
+        let run = || {
+            let (workers, servers, _um, _dm) = topology(n);
+            let handles: Vec<_> = workers
+                .into_iter()
+                .enumerate()
+                .map(|(i, link)| {
+                    std::thread::spawn(move || {
+                        let my_rounds = if i == 1 { die_after } else { rounds };
+                        for t in 1..=my_rounds {
+                            let g: Vec<f32> =
+                                (0..d).map(|j| ((i + 1) * (j + 1)) as f32 * t as f32).collect();
+                            let frame = UplinkFrame::Msg(WireMsg {
+                                round: t as u64,
+                                from: i as u32,
+                                payload: CompressedMsg::Dense(g),
+                            });
+                            if link.up.send(frame).is_err() || link.down.recv().is_err() {
+                                return;
+                            }
+                        }
+                        // worker 1 drops its links here, mid-run
+                    })
+                })
+                .collect();
+            let mut server = Recorder::new(d);
+            let mut spec = ElasticSpec::new(n);
+            spec.on_worker_loss = OnWorkerLoss::Degrade;
+            let report = PipelineServer::new(rounds, 1)
+                .run_elastic(&mut server, servers, &spec)
+                .unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            (server.sum.clone(), server.calls.clone(), report)
+        };
+        let (sum_a, calls_a, report_a) = run();
+        let (sum_b, calls_b, report_b) = run();
+        assert_eq!(calls_a, calls_b, "churn replay must be exact");
+        assert!(sum_a.iter().zip(&sum_b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(report_a.lost_workers, vec![(1, die_after + 1)]);
+        assert_eq!(report_b.lost_workers, vec![(1, die_after + 1)]);
+        for p in &report_a.rounds {
+            let want = if p.round <= die_after { n } else { n - 1 };
+            assert_eq!(p.participants, want, "round {}", p.round);
+            assert_eq!((p.late_folds, p.dropped), (0, 0), "round {}", p.round);
         }
     }
 }

@@ -58,6 +58,7 @@ pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
     );
     let (links, down_meters) = listen_links(&spec, cfg.n, &cfg.net_profile())?;
     eprintln!("cdadam serve: cohort complete, running");
+    let worker_quorum = if cfg.elastic_enabled() { Some(cfg.quorum_for(cfg.n)?) } else { None };
     let (root_links, root_n, tree_handles) = if cfg.agg_groups > 1 {
         let plan = match cfg.tree_forward_kind()? {
             TreeForward::Dense => tree::ForwardPlan::Dense,
@@ -76,6 +77,7 @@ pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
             rounds: cfg.rounds,
             socket_hops: false,
             profile: cfg.net_profile(),
+            elastic_quorum: worker_quorum.map(|k| (k, cfg.n)),
         };
         let tier = tree::build_tree(&tspec, plan, links)?;
         (tier.root_links, tier.root_n, tier.handles)
@@ -83,13 +85,47 @@ pub fn serve(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
         (links, cfg.n, Vec::new())
     };
     let mut server = strat.make_server(s.dim, root_n);
-    let result = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
-        .with_downlink(downlink)
-        .run(server.as_mut(), root_links);
+    // elastic rounds: the same engine as the in-process driver, with the
+    // quorum rescaled to group units when a recompress tree shrinks the
+    // root fan-in (see coordinator::threaded).
+    let elastic_spec = match worker_quorum {
+        Some(k) if root_n != cfg.n => {
+            let mut espec = cfg.elastic_spec(cfg.n)?;
+            espec.quorum = (k * root_n).div_ceil(cfg.n).max(1);
+            Some(espec)
+        }
+        Some(_) => Some(cfg.elastic_spec(cfg.n)?),
+        None => None,
+    };
+    let mut ps = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1)).with_downlink(downlink);
+    let result = match &elastic_spec {
+        Some(espec) => ps.run_elastic(server.as_mut(), root_links, espec).map(Some),
+        None => ps.run(server.as_mut(), root_links).map(|()| None),
+    };
+    // a lost worker can wedge its strictly-ordered relay group mid-recv;
+    // the loss is already triaged, so elastic runs detach still-blocked
+    // tree threads instead of joining them.
+    let degraded = matches!(&result, Ok(Some(rep)) if !rep.lost_workers.is_empty());
+    let wedgeable = degraded || (elastic_spec.is_some() && result.is_err());
     for h in tree_handles {
-        let _ = h.join();
+        if wedgeable && !h.is_finished() {
+            drop(h);
+        } else {
+            let _ = h.join();
+        }
     }
-    result.map_err(anyhow::Error::new)?;
+    let report = result.map_err(anyhow::Error::new)?;
+    if let Some(report) = &report {
+        if !report.lost_workers.is_empty() {
+            let detail: Vec<String> =
+                report.lost_workers.iter().map(|&(u, t)| format!("{u} (round {t})")).collect();
+            eprintln!(
+                "cdadam serve: completed DEGRADED — lost {}/{root_n} root uplinks: {}",
+                report.lost_workers.len(),
+                detail.join(", ")
+            );
+        }
+    }
     let bits: u64 = down_meters.iter().map(|m| m.bits()).sum();
     let msgs: u64 = down_meters.iter().map(|m| m.msgs()).sum();
     eprintln!("cdadam serve: done — {bits} downlink bits over {msgs} broadcasts");
@@ -126,13 +162,45 @@ pub fn serve_tree_root(cfg: &ExperimentConfig, bind: &str) -> Result<()> {
         TreeForward::Recompress => (hop_links, m, Vec::new()),
     };
     let mut server = strat.make_server(s.dim, root_n);
-    let result = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1))
-        .with_downlink(downlink)
-        .run(server.as_mut(), root_links);
+    // elastic rounds at the multi-process root: identical policy to the
+    // in-process tree — per-worker quorum over the dense virtual star,
+    // group-unit quorum over recompress hop links.
+    let elastic_spec = if cfg.elastic_enabled() {
+        let k = cfg.quorum_for(cfg.n)?;
+        let mut espec = cfg.elastic_spec(cfg.n)?;
+        if root_n != cfg.n {
+            espec.quorum = (k * root_n).div_ceil(cfg.n).max(1);
+        }
+        Some(espec)
+    } else {
+        None
+    };
+    let mut ps = PipelineServer::new(cfg.rounds, cfg.pipeline_depth.max(1)).with_downlink(downlink);
+    let result = match &elastic_spec {
+        Some(espec) => ps.run_elastic(server.as_mut(), root_links, espec).map(Some),
+        None => ps.run(server.as_mut(), root_links).map(|()| None),
+    };
+    let degraded = matches!(&result, Ok(Some(rep)) if !rep.lost_workers.is_empty());
+    let wedgeable = degraded || (elastic_spec.is_some() && result.is_err());
     for h in bridge_handles {
-        let _ = h.join();
+        if wedgeable && !h.is_finished() {
+            drop(h);
+        } else {
+            let _ = h.join();
+        }
     }
-    result.map_err(anyhow::Error::new)?;
+    let report = result.map_err(anyhow::Error::new)?;
+    if let Some(report) = &report {
+        if !report.lost_workers.is_empty() {
+            let detail: Vec<String> =
+                report.lost_workers.iter().map(|&(u, t)| format!("{u} (round {t})")).collect();
+            eprintln!(
+                "cdadam serve --tree-root: completed DEGRADED — lost {}/{root_n} uplinks: {}",
+                report.lost_workers.len(),
+                detail.join(", ")
+            );
+        }
+    }
     let bits: u64 = hop_down_meters.iter().map(|mm| mm.bits()).sum();
     let msgs: u64 = hop_down_meters.iter().map(|mm| mm.msgs()).sum();
     eprintln!("cdadam serve --tree-root: done — {bits} hop downlink bits over {msgs} broadcasts");
@@ -174,7 +242,22 @@ pub fn run_remote_subagg(
         TreeForward::Dense => tree::run_subagg_dense(cfg.rounds, &links, &hop),
         TreeForward::Recompress => {
             let comp = cfg.build_group_compressor(group)?;
-            tree::run_subagg_recompress(cfg.rounds, group, &links, &hop, s.dim, comp)
+            if cfg.elastic_enabled() {
+                // same group-share quorum the in-process tree derives
+                let k = cfg.quorum_for(cfg.n)?;
+                let gq = (k * range.len()).div_ceil(cfg.n).max(1);
+                tree::run_subagg_recompress_elastic(
+                    cfg.rounds,
+                    group,
+                    &links,
+                    &hop,
+                    s.dim,
+                    comp,
+                    gq,
+                )
+            } else {
+                tree::run_subagg_recompress(cfg.rounds, group, &links, &hop, s.dim, comp)
+            }
         }
     };
     ensure!(

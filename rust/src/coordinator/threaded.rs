@@ -11,7 +11,7 @@ use std::sync::mpsc::channel;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::pipeline::PipelineServer;
+use super::pipeline::{PipelineError, PipelineServer, RunReport};
 use super::{params_hash, setup, tree};
 use crate::algo::WorkerAlgo;
 use crate::comm::{self, topology, wire, DownlinkPayload, WorkerLink};
@@ -178,6 +178,13 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     };
     let (report_tx, report_rx) = channel::<EvalReport>();
 
+    // --- elastic rounds (quorum non-empty): k-of-n folds ----------------
+    // the worker-level quorum is resolved once here; the root-fold spec
+    // below rescales it when a recompress tree makes the root fold group
+    // means instead of worker uplinks.
+    let elastic = cfg.elastic_enabled();
+    let worker_quorum = if elastic { Some(cfg.quorum_for(n)?) } else { None };
+
     // --- tree tier (agg_groups > 1): star-of-stars ----------------------
     // interpose m sub-aggregators between the worker links and the root.
     // Dense forwarding relays every frame in worker order, so the root
@@ -206,6 +213,7 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
             rounds,
             socket_hops: cfg.transport_kind()? == Transport::Socket,
             profile: cfg.net_profile(),
+            elastic_quorum: worker_quorum.map(|k| (k, n)),
         };
         let tier = tree::build_tree(&spec, plan, server_links)?;
         (tier.root_links, tier.root_n, tier.handles, tier.hop_up_meters, tier.hop_down_meters)
@@ -224,13 +232,30 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     let zero_copy = cfg.zero_copy_ingest;
     let zero_copy_egress = cfg.zero_copy_egress;
     let depth = cfg.pipeline_depth.max(1);
+    // elastic spec for the root fold. Under a recompress tree the root
+    // folds m group means, so the k-of-n worker quorum rescales to
+    // ⌈k·m/n⌉ groups; the churn unit at the root is then a whole group.
+    // (A dense tree keeps per-worker links at the root, but its relay
+    // sub-aggregators are strictly ordered, so one worker death still
+    // silences its whole group — a documented granularity limit.)
+    let elastic_spec = match worker_quorum {
+        Some(k) if root_n != n => {
+            let mut spec = cfg.elastic_spec(n)?;
+            spec.quorum = (k * root_n).div_ceil(n).max(1);
+            Some(spec)
+        }
+        Some(_) => Some(cfg.elastic_spec(n)?),
+        None => None,
+    };
     // the downlink channel (identity unless `compress_downlink`) lives
     // on the server thread, beside the strategy server it post-processes.
     let downlink = cfg.build_downlink()?;
     let server_join = std::thread::Builder::new().name("server".into()).spawn(move || {
-        PipelineServer::new(rounds, depth)
-            .with_downlink(downlink)
-            .run(server.as_mut(), root_links)
+        let mut ps = PipelineServer::new(rounds, depth).with_downlink(downlink);
+        match elastic_spec {
+            Some(spec) => ps.run_elastic(server.as_mut(), root_links, &spec).map(Some),
+            None => ps.run(server.as_mut(), root_links).map(|()| None),
+        }
     })?;
 
     // --- worker threads --------------------------------------------------
@@ -253,7 +278,10 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
                     zero_copy_egress,
                     depth,
                     index: i,
-                    snapshot_params: i == 0,
+                    // under elastic rounds worker 0 may die mid-run, so
+                    // every worker snapshots: the driver takes the
+                    // lowest-indexed survivor's replica per eval round.
+                    snapshot_params: i == 0 || elastic,
                 };
                 drive_worker(
                     &spec,
@@ -282,59 +310,68 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     drop(report_tx);
 
     // --- driver: collect eval reports -----------------------------------
+    // Synchronous runs consume the channel live and require all n
+    // reports per eval round. Elastic runs defer the drain to after the
+    // joins: a hung worker never drops its sender, so a blocking
+    // recv-until-close loop could never terminate.
     let mut log = RunLog::new(cfg.label());
     let timer = Timer::start();
     let mut pending: std::collections::BTreeMap<usize, Vec<EvalReport>> = Default::default();
-    while let Ok(rep) = report_rx.recv() {
-        let round = rep.round;
-        let entry = pending.entry(round).or_default();
-        entry.push(rep);
-        if entry.len() == n {
-            let reports = pending.remove(&round).unwrap();
-            let h0 = reports[0].hash;
-            for r in &reports {
-                anyhow::ensure!(
-                    r.hash == h0,
-                    "replica divergence at round {round}: worker {} hash {:#x} != {:#x}",
-                    r.worker,
-                    r.hash,
-                    h0
-                );
+    if !elastic {
+        while let Ok(rep) = report_rx.recv() {
+            let round = rep.round;
+            let entry = pending.entry(round).or_default();
+            entry.push(rep);
+            if entry.len() == n {
+                let reports = pending.remove(&round).unwrap();
+                let h0 = reports[0].hash;
+                for r in &reports {
+                    anyhow::ensure!(
+                        r.hash == h0,
+                        "replica divergence at round {round}: worker {} hash {:#x} != {:#x}",
+                        r.worker,
+                        r.hash,
+                        h0
+                    );
+                }
+                let params = reports
+                    .iter()
+                    .find_map(|r| r.params.as_ref())
+                    .ok_or_else(|| anyhow!("no params snapshot"))?;
+                let mut grad_avg = vec![0.0f32; dim];
+                for r in &reports {
+                    tensor::axpy(&mut grad_avg, 1.0 / n as f32, &r.grad_norm_contrib);
+                }
+                let loss_sum: f64 = reports.iter().map(|r| r.loss as f64).sum();
+                let grad_norm = s
+                    .evaluator
+                    .global_grad_norm(params)
+                    .unwrap_or_else(|| tensor::norm2(&grad_avg));
+                let ev = s.evaluator.eval(params);
+                // bits: per-worker link (paper convention), snapshotted by
+                // worker 0 at this round — payload bits only, so lockstep and
+                // threaded report identical numbers.
+                let (up_bits, down_bits) = reports
+                    .iter()
+                    .find(|r| r.worker == 0)
+                    .map(|r| (r.up_bits, r.down_bits))
+                    .unwrap_or((0, 0));
+                log.push(RoundRecord {
+                    round,
+                    epoch: round as f64 * (n * s.tau_effective) as f64 / s.total_samples as f64,
+                    train_loss: loss_sum / n as f64,
+                    grad_norm,
+                    test_loss: ev.loss,
+                    test_acc: ev.accuracy,
+                    cum_bits: up_bits + down_bits,
+                    up_bits,
+                    down_bits,
+                    participants: n,
+                    late_folds: 0,
+                    dropped: 0,
+                    wall_ms: timer.elapsed_ms(),
+                });
             }
-            let params = reports
-                .iter()
-                .find_map(|r| r.params.as_ref())
-                .ok_or_else(|| anyhow!("no params snapshot"))?;
-            let mut grad_avg = vec![0.0f32; dim];
-            for r in &reports {
-                tensor::axpy(&mut grad_avg, 1.0 / n as f32, &r.grad_norm_contrib);
-            }
-            let loss_sum: f64 = reports.iter().map(|r| r.loss as f64).sum();
-            let grad_norm = s
-                .evaluator
-                .global_grad_norm(params)
-                .unwrap_or_else(|| tensor::norm2(&grad_avg));
-            let ev = s.evaluator.eval(params);
-            // bits: per-worker link (paper convention), snapshotted by
-            // worker 0 at this round — payload bits only, so lockstep and
-            // threaded report identical numbers.
-            let (up_bits, down_bits) = reports
-                .iter()
-                .find(|r| r.worker == 0)
-                .map(|r| (r.up_bits, r.down_bits))
-                .unwrap_or((0, 0));
-            log.push(RoundRecord {
-                round,
-                epoch: round as f64 * (n * s.tau_effective) as f64 / s.total_samples as f64,
-                train_loss: loss_sum / n as f64,
-                grad_norm,
-                test_loss: ev.loss,
-                test_acc: ev.accuracy,
-                cum_bits: up_bits + down_bits,
-                up_bits,
-                down_bits,
-                wall_ms: timer.elapsed_ms(),
-            });
         }
     }
 
@@ -357,14 +394,92 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
     //   5. a server-side disconnect — an unexpected worker departure
     //      that nothing above explains, surfaced, never swallowed;
     //   6. failing all that, the first secondary link error.
-    let worker_results: Vec<std::thread::Result<Result<()>>> =
-        joins.into_iter().map(|j| j.join()).collect();
-    let server_result = server_join.join();
+    //
+    // Elastic runs join the SERVER first: its run report names the
+    // workers it deliberately lost, and those threads may be hung (a
+    // silent socket, a wedged engine) — joining one would hang the
+    // driver on a failure mode the recv deadline already triaged as a
+    // disconnect. Lost workers that did finish are joined and their
+    // results masked (their link errors are echoes of a loss the
+    // participation report already records); lost-or-suspect workers
+    // still running are detached. Every *surviving* worker is joined
+    // normally — the server has run to completion (or unwound and
+    // dropped their downlinks), so those joins cannot hang.
+    let (worker_results, server_result) = if elastic {
+        let server_result = server_join.join();
+        // root loss units are worker indices on a flat (or dense-tree)
+        // star but *group* indices under a recompress tree — expand each
+        // lost unit to the workers it covers before masking.
+        let expand: Box<dyn Fn(usize) -> std::ops::Range<usize>> = if is_tree && root_n != n {
+            let ranges = tree::group_ranges(n, cfg.agg_groups);
+            Box::new(move |g| ranges[g].clone())
+        } else {
+            Box::new(|w| w..w + 1)
+        };
+        let lost: std::collections::BTreeSet<usize> = match &server_result {
+            Ok(Ok(Some(report))) => {
+                report.lost_workers.iter().flat_map(|&(u, _)| expand(u)).collect()
+            }
+            _ => Default::default(),
+        };
+        // under on_worker_loss = abort the disconnect is an error, not a
+        // report entry — the named unit's workers are the ones that may
+        // be hung.
+        let suspect: std::collections::BTreeSet<usize> = match &server_result {
+            Ok(Err(PipelineError::WorkerDisconnected { worker, .. })) => expand(*worker).collect(),
+            _ => Default::default(),
+        };
+        let worker_results: Vec<std::thread::Result<Result<()>>> = joins
+            .into_iter()
+            .enumerate()
+            .map(|(i, j)| {
+                if lost.contains(&i) || suspect.contains(&i) {
+                    if j.is_finished() {
+                        let r = j.join();
+                        if lost.contains(&i) {
+                            return Ok(Ok(()));
+                        }
+                        r
+                    } else {
+                        drop(j);
+                        Ok(Ok(()))
+                    }
+                } else {
+                    j.join()
+                }
+            })
+            .collect();
+        (worker_results, server_result)
+    } else {
+        let worker_results: Vec<std::thread::Result<Result<()>>> =
+            joins.into_iter().map(|j| j.join()).collect();
+        (worker_results, server_join.join())
+    };
     // the sub-aggregator tier unwinds once both of its sides are down
     // (worker links closed above, root links dropped by the pipeline),
     // so these joins cannot hang; a panic here is a tree bug, reported
-    // after the more-causal worker panics.
-    let tree_panicked = tree_handles.into_iter().map(|h| h.join()).filter(|r| r.is_err()).count();
+    // after the more-causal worker panics. The exception is an elastic
+    // run that lost (or aborted on) a worker: a hung worker can wedge
+    // its strictly-ordered relay group mid-recv, so still-blocked tree
+    // threads are detached — the loss is already triaged.
+    let elastic_wedgeable = elastic
+        && match &server_result {
+            Ok(Ok(Some(report))) => !report.lost_workers.is_empty(),
+            Ok(Ok(None)) => false,
+            _ => true,
+        };
+    let tree_panicked = tree_handles
+        .into_iter()
+        .filter_map(|h| {
+            if elastic_wedgeable && !h.is_finished() {
+                drop(h);
+                None
+            } else {
+                Some(h.join())
+            }
+        })
+        .filter(|r| r.is_err())
+        .count();
     for (i, r) in worker_results.iter().enumerate() {
         anyhow::ensure!(r.is_ok(), "worker {i} panicked");
     }
@@ -387,45 +502,142 @@ pub fn run_threaded_with(cfg: &ExperimentConfig, mut s: setup::Setup) -> Result<
             }
         }
     }
-    if let Ok(Err(e)) = server_result {
-        return Err(anyhow::Error::new(e));
-    }
+    let run_report: Option<RunReport> = match server_result {
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => return Err(anyhow::Error::new(e)),
+        Err(_) => None, // unreachable: the server-panic bail above fired
+    };
     if let Some((i, e)) = secondary {
         return Err(e.context(format!("worker {i} lost its link")));
     }
-    log.records.sort_by_key(|r| r.round);
-    // end-of-run accounting audit: the comm-layer meters (which include
-    // the 64-bit frame headers) must agree with worker 0's payload count.
-    if let Some(last) = log.records.last() {
-        let metered = up_meters[0].bits() + down_meters[0].bits();
-        let headers = 64 * (up_meters[0].msgs() + down_meters[0].msgs());
-        anyhow::ensure!(
-            metered == last.cum_bits + headers,
-            "bit-accounting mismatch: metered {metered} != payload {} + headers {headers}",
-            last.cum_bits
-        );
+
+    // --- elastic runs: deferred eval-report drain ------------------------
+    // every surviving worker has been joined, so its reports are all in
+    // the channel; anything a lost worker managed to send before dying
+    // is folded into whatever eval rounds it reached.
+    if elastic {
+        while let Ok(rep) = report_rx.try_recv() {
+            pending.entry(rep.round).or_default().push(rep);
+        }
+        let participation: std::collections::BTreeMap<usize, _> = run_report
+            .as_ref()
+            .map(|rep| rep.rounds.iter().map(|p| (p.round, *p)).collect())
+            .unwrap_or_default();
+        let mut prev_eval = 0usize;
+        for (&round, reports) in pending.iter_mut() {
+            // deterministic fold order: lockstep's worker order, never
+            // arrival order
+            reports.sort_by_key(|r| r.worker);
+            let k = reports.len();
+            let h0 = reports[0].hash;
+            for r in reports.iter() {
+                anyhow::ensure!(
+                    r.hash == h0,
+                    "replica divergence at round {round}: worker {} hash {:#x} != {:#x}",
+                    r.worker,
+                    r.hash,
+                    h0
+                );
+            }
+            let params = reports
+                .iter()
+                .find_map(|r| r.params.as_ref())
+                .ok_or_else(|| anyhow!("no params snapshot at round {round}"))?;
+            let mut grad_avg = vec![0.0f32; dim];
+            for r in reports.iter() {
+                tensor::axpy(&mut grad_avg, 1.0 / k as f32, &r.grad_norm_contrib);
+            }
+            let loss_sum: f64 = reports.iter().map(|r| r.loss as f64).sum();
+            let grad_norm = s
+                .evaluator
+                .global_grad_norm(params)
+                .unwrap_or_else(|| tensor::norm2(&grad_avg));
+            let ev = s.evaluator.eval(params);
+            // worker 0's link if it survived (the paper convention),
+            // else the lowest-indexed survivor's.
+            let (up_bits, down_bits) = reports
+                .iter()
+                .find(|r| r.worker == 0)
+                .map(|r| (r.up_bits, r.down_bits))
+                .unwrap_or((reports[0].up_bits, reports[0].down_bits));
+            let participants = participation.get(&round).map_or(k, |p| p.participants);
+            let (late_folds, dropped) = participation
+                .range(prev_eval + 1..=round)
+                .fold((0, 0), |(l, d), (_, p)| (l + p.late_folds, d + p.dropped));
+            log.push(RoundRecord {
+                round,
+                epoch: round as f64 * (n * s.tau_effective) as f64 / s.total_samples as f64,
+                train_loss: loss_sum / k as f64,
+                grad_norm,
+                test_loss: ev.loss,
+                test_acc: ev.accuracy,
+                cum_bits: up_bits + down_bits,
+                up_bits,
+                down_bits,
+                participants,
+                late_folds,
+                dropped,
+                wall_ms: timer.elapsed_ms(),
+            });
+            prev_eval = round;
+        }
     }
-    // per-tier conservation audit for the dense tree: the hop tier
-    // relays worker frames verbatim, so its uplink meters must carry
-    // exactly the worker tier's uplink traffic, while its downlink
-    // carries one broadcast per group per round (the dedup that makes
-    // the hop cheaper than the flat fan-out).
-    if dense_tree {
-        let hop_bits: u64 = hop_up_meters.iter().map(|m| m.bits()).sum();
-        let hop_msgs: u64 = hop_up_meters.iter().map(|m| m.msgs()).sum();
-        let worker_bits: u64 = up_meters.iter().map(|m| m.bits()).sum();
-        let worker_msgs: u64 = up_meters.iter().map(|m| m.msgs()).sum();
-        anyhow::ensure!(
-            hop_bits == worker_bits && hop_msgs == worker_msgs,
-            "tree tier accounting mismatch: hop uplink {hop_bits} bits / {hop_msgs} msgs != \
-             worker uplink {worker_bits} bits / {worker_msgs} msgs"
-        );
-        let hop_down_msgs: u64 = hop_down_meters.iter().map(|m| m.msgs()).sum();
-        let expect = (hop_down_meters.len() * rounds) as u64;
-        anyhow::ensure!(
-            hop_down_msgs == expect,
-            "tree downlink dedup mismatch: {hop_down_msgs} hop broadcasts != {expect}"
-        );
+    log.records.sort_by_key(|r| r.round);
+
+    // loud per-run participation summary: a degraded completion must
+    // never look like a clean one. (Each individual loss was already
+    // reported by the elastic engine as it happened.)
+    let lost_units = run_report.as_ref().map_or(0, |r| r.lost_workers.len());
+    if let Some(report) = &run_report {
+        if !report.lost_workers.is_empty() {
+            let detail: Vec<String> =
+                report.lost_workers.iter().map(|&(u, t)| format!("{u} (round {t})")).collect();
+            eprintln!(
+                "elastic run degraded: lost {lost_units}/{root_n} root uplinks — {}",
+                detail.join(", ")
+            );
+        }
+    }
+
+    // The end-of-run accounting audits assume every worker sent every
+    // round and saw every broadcast. Worker churn breaks both by
+    // design (the dead worker's link stops mid-run, and the server
+    // stops broadcasting to it), so a degraded run skips them — its
+    // participation columns carry the per-round truth instead.
+    if lost_units == 0 {
+        // the comm-layer meters (which include the 64-bit frame
+        // headers) must agree with worker 0's payload count.
+        if let Some(last) = log.records.last() {
+            let metered = up_meters[0].bits() + down_meters[0].bits();
+            let headers = 64 * (up_meters[0].msgs() + down_meters[0].msgs());
+            anyhow::ensure!(
+                metered == last.cum_bits + headers,
+                "bit-accounting mismatch: metered {metered} != payload {} + headers {headers}",
+                last.cum_bits
+            );
+        }
+        // per-tier conservation audit for the dense tree: the hop tier
+        // relays worker frames verbatim, so its uplink meters must carry
+        // exactly the worker tier's uplink traffic, while its downlink
+        // carries one broadcast per group per round (the dedup that makes
+        // the hop cheaper than the flat fan-out).
+        if dense_tree {
+            let hop_bits: u64 = hop_up_meters.iter().map(|m| m.bits()).sum();
+            let hop_msgs: u64 = hop_up_meters.iter().map(|m| m.msgs()).sum();
+            let worker_bits: u64 = up_meters.iter().map(|m| m.bits()).sum();
+            let worker_msgs: u64 = up_meters.iter().map(|m| m.msgs()).sum();
+            anyhow::ensure!(
+                hop_bits == worker_bits && hop_msgs == worker_msgs,
+                "tree tier accounting mismatch: hop uplink {hop_bits} bits / {hop_msgs} msgs != \
+                 worker uplink {worker_bits} bits / {worker_msgs} msgs"
+            );
+            let hop_down_msgs: u64 = hop_down_meters.iter().map(|m| m.msgs()).sum();
+            let expect = (hop_down_meters.len() * rounds) as u64;
+            anyhow::ensure!(
+                hop_down_msgs == expect,
+                "tree downlink dedup mismatch: {hop_down_msgs} hop broadcasts != {expect}"
+            );
+        }
     }
     Ok(log)
 }
@@ -435,9 +647,22 @@ mod tests {
     use super::*;
     use crate::coordinator::run_lockstep;
 
+    /// quickstart preset with the elastic knobs pinned to their
+    /// synchronous defaults: CI's tier1-elastic job forces
+    /// `CDADAM_QUORUM` suite-wide, and these equality tests compare
+    /// against lockstep, which has no elastic path.
+    fn base_cfg() -> ExperimentConfig {
+        let mut cfg = base_cfg();
+        cfg.quorum = String::new();
+        cfg.round_timeout_ms = 0;
+        cfg.staleness = "drop".into();
+        cfg.on_worker_loss = "abort".into();
+        cfg
+    }
+
     #[test]
     fn matches_lockstep_exactly() {
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.rounds = 60;
         cfg.eval_every = 20;
         let a = run_lockstep(&cfg).unwrap();
@@ -456,7 +681,7 @@ mod tests {
         // trajectories, replica hashes (enforced inside the driver), and
         // cum_bits untouched — threaded vs lockstep AND parallel vs
         // sequential aggregation.
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.rounds = 60;
         cfg.eval_every = 20;
         cfg.shard_size = 16; // sharded uplinks (d = 50 ⇒ 4 blocks)
@@ -488,7 +713,7 @@ mod tests {
         for strat in
             ["cdadam", "ef", "naive", "onebit_adam", "ef21", "uncompressed_amsgrad", "cdadam_server"]
         {
-            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let mut cfg = base_cfg();
             cfg.strategy = strat.into();
             cfg.rounds = 30;
             cfg.eval_every = 10;
@@ -509,7 +734,7 @@ mod tests {
         // {sequential, pool-forced} with zero-copy ingest on must
         // reproduce the owned-path records exactly, sharded uplinks
         // included (d = 50 ⇒ 4 blocks of 16).
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.rounds = 40;
         cfg.eval_every = 20;
         cfg.shard_size = 16;
@@ -554,7 +779,7 @@ mod tests {
         // to 1 so the d = 50 uplinks (4 blocks of 16) really take the
         // pool + disjoint-window egress path, ring-recycled round after
         // round under the live coordinator.
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.rounds = 40;
         cfg.eval_every = 20;
         cfg.shard_size = 16;
@@ -599,7 +824,7 @@ mod tests {
         // the pipeline-depth knob is scheduling only: depth 2 (and a
         // deeper-than-useful 4) must reproduce the depth-1 records
         // exactly, in both ingest modes, with the pool fold forced.
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.rounds = 40;
         cfg.eval_every = 20;
         cfg.shard_size = 16;
@@ -640,7 +865,7 @@ mod tests {
         // replica hashes (enforced inside the driver) must be identical
         // at every pipeline depth. uncompressed_amsgrad is the strategy
         // whose broadcast actually gets EF-compressed here.
-        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let mut cfg = base_cfg();
         cfg.strategy = "uncompressed_amsgrad".into();
         cfg.compress_downlink = true;
         cfg.rounds = 60;
@@ -666,7 +891,7 @@ mod tests {
     #[test]
     fn replica_invariant_enforced_across_strategies() {
         for strat in ["cdadam", "ef", "naive", "onebit_adam", "ef21"] {
-            let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let mut cfg = base_cfg();
             cfg.strategy = strat.into();
             cfg.rounds = 30;
             cfg.eval_every = 10;

@@ -102,6 +102,14 @@ pub struct TreeSpec {
     pub socket_hops: bool,
     /// Network-condition profile for socket hops.
     pub profile: NetProfile,
+    /// Elastic rounds: the run-level `(quorum, n)` pair, from which each
+    /// re-compressing sub-aggregator derives its group quorum
+    /// gq = max(1, ⌈quorum·|g|/n⌉). `None` = synchronous groups. Dense
+    /// mode ignores this: its sub-aggregators relay rather than fold,
+    /// so elasticity lives entirely at the root (with the caveat that
+    /// the strict relay order makes one worker death silence its whole
+    /// group).
+    pub elastic_quorum: Option<(usize, usize)>,
 }
 
 /// The built tier: what the root server folds over, plus the spawned
@@ -134,11 +142,11 @@ struct GroupFold {
 }
 
 impl ServerAlgo for GroupFold {
-    fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+    fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
         if index == 0 {
             self.buf.fill(0.0);
         }
-        self.agg.add_scaled_uplink_into(up, &mut self.buf, 1.0 / n as f32);
+        self.agg.add_scaled_uplink_into(up, &mut self.buf, scale);
     }
 
     fn finish_round(&mut self, _round: usize) -> CompressedMsg {
@@ -196,8 +204,20 @@ pub fn build_tree(
                 ranges.iter().zip(hop_workers).zip(compressors).enumerate()
             {
                 let group_links: Vec<ServerLink> = links.by_ref().take(range.len()).collect();
+                // elastic runs close the group fold at the group's
+                // share of the run-level quorum. At gq = |g| (full
+                // participation) the elastic variant collects every
+                // member and folds in worker order at 1/|g| — the
+                // synchronous fold bit-for-bit — so it is safe to route
+                // every elastic run through it.
+                let gq = spec.elastic_quorum.map(|(k, n)| (k * range.len()).div_ceil(n).max(1));
                 handles.push(std::thread::spawn(move || {
-                    let _ = run_subagg_recompress(rounds, g, &group_links, &hop, dim, comp);
+                    let _ = match gq {
+                        Some(gq) => {
+                            run_subagg_recompress_elastic(rounds, g, &group_links, &hop, dim, comp, gq)
+                        }
+                        None => run_subagg_recompress(rounds, g, &group_links, &hop, dim, comp),
+                    };
                 }));
             }
             Ok(TreeTier {
@@ -381,6 +401,97 @@ pub(crate) fn run_subagg_recompress(
     true
 }
 
+/// Elastic re-compressing sub-aggregator: close the group's fold as
+/// soon as `gq` live members have delivered round t (polling the
+/// group's links round-robin under a short recv deadline), drop stale
+/// frames left over from rounds the quorum closed without their sender,
+/// and survive member death by shrinking the live set — the group keeps
+/// forwarding means as long as one member breathes, and only a
+/// whole-group loss cascades to the root. The forwarded mean is over
+/// the on-time members only (worker order, scale 1/k), so at
+/// gq = |group| this reproduces [`run_subagg_recompress`] bit-for-bit.
+pub(crate) fn run_subagg_recompress_elastic(
+    rounds: usize,
+    group: usize,
+    links: &[ServerLink],
+    hop: &WorkerLink,
+    dim: usize,
+    comp: Box<dyn Compressor>,
+    gq: usize,
+) -> bool {
+    const POLL: std::time::Duration = std::time::Duration::from_millis(5);
+    let mut fold = GroupFold { buf: vec![0.0; dim], comp, agg: AggEngine::sequential() };
+    let nl = links.len();
+    let mut live = vec![true; nl];
+    for t in 1..=rounds {
+        let mut frames: Vec<Option<UplinkFrame>> = (0..nl).map(|_| None).collect();
+        let mut have = 0usize;
+        loop {
+            let live_count = live.iter().filter(|&&a| a).count();
+            if live_count == 0 {
+                // the whole group is gone: cascade the closure to the
+                // root, whose loss policy decides abort vs degrade
+                return false;
+            }
+            if have >= gq.min(live_count).max(1) {
+                break;
+            }
+            for i in 0..nl {
+                if !live[i] || frames[i].is_some() {
+                    continue;
+                }
+                match links[i].up.recv_deadline(POLL) {
+                    Ok(Some(frame)) => {
+                        let r = frame.round() as usize;
+                        if r < t {
+                            // leftover from a round this member missed —
+                            // its fresh frame may be right behind, so
+                            // drop it and keep this link in the rotation
+                            eprintln!(
+                                "tree sub-aggregator {group}: dropping stale round-{r} \
+                                 frame from member {i} during round {t}"
+                            );
+                        } else {
+                            frames[i] = Some(frame);
+                            have += 1;
+                        }
+                    }
+                    Ok(None) => {} // deadline passed: poll the next member
+                    Err(_) => live[i] = false,
+                }
+            }
+        }
+        // worker-order fold over the on-time members (a round tag ahead
+        // of t is impossible for a live worker and is rejected by
+        // fold_round's validation as a protocol fault)
+        let collected: Vec<UplinkFrame> = frames.into_iter().flatten().collect();
+        let payload = match fold_round(&mut fold, t, &collected) {
+            Ok(c) => c,
+            Err(err) => {
+                eprintln!("tree sub-aggregator {group}: round {t}: {err}");
+                return false;
+            }
+        };
+        let msg = WireMsg { round: t as u64, from: group as u32, payload };
+        if hop.up.send(UplinkFrame::Msg(msg)).is_err() {
+            return false;
+        }
+        match hop.down.recv() {
+            Ok(b) => {
+                // a member that dies between fold and broadcast costs
+                // the group nothing but its own seat
+                for (i, l) in links.iter().enumerate() {
+                    if live[i] && l.down.send(b.clone()).is_err() {
+                        live[i] = false;
+                    }
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -430,11 +541,11 @@ mod tests {
     }
 
     impl ServerAlgo for MeanServer {
-        fn ingest_one(&mut self, _round: usize, index: usize, n: usize, up: &UplinkRef<'_>) {
+        fn ingest_scaled(&mut self, _round: usize, index: usize, scale: f32, up: &UplinkRef<'_>) {
             if index == 0 {
                 self.sum.fill(0.0);
             }
-            self.agg.add_scaled_uplink_into(up, &mut self.sum, 1.0 / n as f32);
+            self.agg.add_scaled_uplink_into(up, &mut self.sum, scale);
         }
 
         fn finish_round(&mut self, round: usize) -> CompressedMsg {
@@ -515,6 +626,7 @@ mod tests {
             rounds,
             socket_hops: false,
             profile: NetProfile::default(),
+            elastic_quorum: None,
         };
         let tier = build_tree(&spec, ForwardPlan::Dense, servers).expect("tree");
         assert_eq!(tier.root_n, n, "dense mode keeps the root fan-in at n");
@@ -614,7 +726,13 @@ mod tests {
         let compressors: Vec<Box<dyn Compressor>> =
             (0..m).map(|_| crate::compress::by_name("identity", 0.1, 0, 7).unwrap()).collect();
         let spec =
-            TreeSpec { groups: m, rounds, socket_hops: false, profile: NetProfile::default() };
+            TreeSpec {
+            groups: m,
+            rounds,
+            socket_hops: false,
+            profile: NetProfile::default(),
+            elastic_quorum: None,
+        };
         let tier =
             build_tree(&spec, ForwardPlan::Recompress { dim: d, compressors }, servers).unwrap();
         assert_eq!(tier.root_n, m, "recompress mode folds m group uplinks at the root");
@@ -678,7 +796,13 @@ mod tests {
             })
             .collect();
         let spec =
-            TreeSpec { groups: m, rounds, socket_hops: false, profile: NetProfile::default() };
+            TreeSpec {
+            groups: m,
+            rounds,
+            socket_hops: false,
+            profile: NetProfile::default(),
+            elastic_quorum: None,
+        };
         let tier = build_tree(&spec, ForwardPlan::Dense, servers).expect("tree");
         let mut server =
             MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
@@ -687,6 +811,101 @@ mod tests {
             .expect_err("root must observe the death");
         let msg = err.to_string();
         assert!(msg.contains("worker 2"), "attribution lost: {msg}");
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+        for h in tier.handles {
+            h.join().expect("tree thread panicked");
+        }
+    }
+
+    #[test]
+    fn elastic_recompress_full_quorum_is_bitwise_sync() {
+        // the elastic sub-aggregator at gq = |group| collects every
+        // member and folds in worker order at 1/|g| — the synchronous
+        // group fold, so the root broadcasts must match bit-for-bit
+        let (n, m, rounds, d) = (6, 3, 3, 9);
+        let run = |elastic: Option<(usize, usize)>| -> Vec<Vec<u32>> {
+            let (workers, servers, _um, _dm) = topology(n);
+            let producers = spawn_producers(workers, rounds, d);
+            let compressors: Vec<Box<dyn Compressor>> = (0..m)
+                .map(|_| crate::compress::by_name("identity", 0.1, 0, 7).unwrap())
+                .collect();
+            let spec = TreeSpec {
+                groups: m,
+                rounds,
+                socket_hops: false,
+                profile: NetProfile::default(),
+                elastic_quorum: elastic,
+            };
+            let tier = build_tree(&spec, ForwardPlan::Recompress { dim: d, compressors }, servers)
+                .unwrap();
+            let mut server =
+                MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+            PipelineServer::new(rounds, 1).run(&mut server, tier.root_links).expect("root server");
+            for p in producers {
+                let _ = p.join().expect("producer panicked");
+            }
+            for h in tier.handles {
+                h.join().expect("tree thread panicked");
+            }
+            server.downs.iter().map(dense_bits).collect()
+        };
+        assert_eq!(
+            run(None),
+            run(Some((n, n))),
+            "full-quorum elastic groups diverged from the synchronous fold"
+        );
+    }
+
+    #[test]
+    fn elastic_recompress_group_survives_member_death() {
+        // worker 1 dies mid-run; its group's 2-of-3 quorum keeps the
+        // group folding, so the root sees every round from both groups
+        let (n, m, rounds, d) = (6, 2, 5, 8);
+        let (workers, servers, _um, _dm) = topology(n);
+        let producers: Vec<_> = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, link)| {
+                std::thread::spawn(move || {
+                    for t in 1..=rounds {
+                        if i == 1 && t == 3 {
+                            return; // dies: drops its links
+                        }
+                        let msg = WireMsg {
+                            round: t as u64,
+                            from: i as u32,
+                            payload: CompressedMsg::Dense(grad(i, t, d)),
+                        };
+                        if link.up.send(UplinkFrame::Msg(msg)).is_err() {
+                            return;
+                        }
+                        if link.down.recv().is_err() {
+                            return;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let compressors: Vec<Box<dyn Compressor>> =
+            (0..m).map(|_| crate::compress::by_name("identity", 0.1, 0, 7).unwrap()).collect();
+        let spec = TreeSpec {
+            groups: m,
+            rounds,
+            socket_hops: false,
+            profile: NetProfile::default(),
+            // 4-of-6 run-level quorum ⇒ 2-of-3 per group
+            elastic_quorum: Some((4, n)),
+        };
+        let tier =
+            build_tree(&spec, ForwardPlan::Recompress { dim: d, compressors }, servers).unwrap();
+        let mut server =
+            MeanServer { sum: vec![0.0; d], agg: AggEngine::sequential(), downs: Vec::new() };
+        PipelineServer::new(rounds, 1)
+            .run(&mut server, tier.root_links)
+            .expect("both groups must keep folding past the death");
+        assert_eq!(server.downs.len(), rounds);
         for p in producers {
             p.join().expect("producer panicked");
         }

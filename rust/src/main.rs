@@ -88,6 +88,20 @@ fn usage() -> ! {
                                  replayable (socket only)\n\
            --net-bandwidth-kbps <int>  per-link bandwidth cap, 0 = unlimited\n\
                                  (socket only)\n\
+           --quorum <k>          elastic rounds: fold the first k-of-n uplinks\n\
+                                 per round — `n`, `n-<j>`, or a literal count\n\
+                                 (empty = synchronous; `n` is bit-identical to\n\
+                                 the synchronous engine, k < n changes the\n\
+                                 trajectory; implies --threaded)\n\
+           --round-timeout-ms <int>  elastic straggler deadline: close a\n\
+                                 non-empty round after this many ms even\n\
+                                 below quorum (0 = wait for quorum)\n\
+           --staleness <p>       drop | weight:<gamma> — late uplinks are\n\
+                                 discarded, or folded s rounds stale at\n\
+                                 weight gamma^s/k (changes the trajectory)\n\
+           --on-worker-loss <p>  abort | degrade — a dead worker fails the\n\
+                                 run loudly (default) or permanently shrinks\n\
+                                 the cohort and the run completes\n\
            --agg-groups <int>    sub-aggregator groups for star-of-stars\n\
                                  aggregation (1 = flat star verbatim; > 1\n\
                                  builds a two-level tree)\n\
@@ -203,12 +217,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
 }
 
 fn print_log(log: &RunLog) {
-    println!("round\tepoch\ttrain_loss\tgrad_norm\ttest_acc\tcum_bits\tup_bits\tdown_bits");
+    println!(
+        "round\tepoch\ttrain_loss\tgrad_norm\ttest_acc\tcum_bits\tup_bits\tdown_bits\tparticipants"
+    );
     for r in &log.records {
         println!(
-            "{}\t{:.2}\t{:.5}\t{:.5}\t{:.4}\t{}\t{}\t{}",
+            "{}\t{:.2}\t{:.5}\t{:.5}\t{:.4}\t{}\t{}\t{}\t{}",
             r.round, r.epoch, r.train_loss, r.grad_norm, r.test_acc, r.cum_bits, r.up_bits,
-            r.down_bits
+            r.down_bits, r.participants
         );
     }
 }

@@ -28,6 +28,15 @@ pub struct RoundRecord {
     pub up_bits: u64,
     /// cumulative downlink (server→worker) component of `cum_bits`
     pub down_bits: u64,
+    /// uplinks folded into this round's broadcast on time (elastic
+    /// runs close a round at quorum; synchronous runs always report n)
+    pub participants: usize,
+    /// stale uplinks folded with a staleness weight since the previous
+    /// eval round (always 0 outside elastic `staleness = weight:<γ>`)
+    pub late_folds: usize,
+    /// stale uplinks discarded since the previous eval round (always 0
+    /// outside elastic runs)
+    pub dropped: usize,
     pub wall_ms: f64,
 }
 
@@ -58,14 +67,15 @@ impl RunLog {
 
     /// CSV header shared by all experiment outputs.
     pub const CSV_HEADER: &'static str =
-        "label,round,epoch,train_loss,grad_norm,test_loss,test_acc,cum_bits,up_bits,down_bits,wall_ms";
+        "label,round,epoch,train_loss,grad_norm,test_loss,test_acc,cum_bits,up_bits,down_bits,\
+         participants,late_folds,dropped,wall_ms";
 
     pub fn to_csv_rows(&self) -> String {
         let mut out = String::new();
         for r in &self.records {
             let _ = writeln!(
                 out,
-                "{},{},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{},{},{},{:.2}",
+                "{},{},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{},{},{},{},{},{},{:.2}",
                 self.label,
                 r.round,
                 r.epoch,
@@ -76,6 +86,9 @@ impl RunLog {
                 r.cum_bits,
                 r.up_bits,
                 r.down_bits,
+                r.participants,
+                r.late_folds,
+                r.dropped,
                 r.wall_ms
             );
         }
@@ -140,6 +153,9 @@ mod tests {
             cum_bits: 100,
             up_bits: 60,
             down_bits: 40,
+            participants: 8,
+            late_folds: 2,
+            dropped: 1,
             wall_ms: 5.0,
         });
         run.push(RoundRecord {
@@ -159,10 +175,10 @@ mod tests {
         assert_eq!(rows.lines().count(), 2);
         assert!(rows.starts_with("cdadam,1,0.5"));
         assert_eq!(run.total_bits(), 200);
-        // the split columns ride between cum_bits and wall_ms, and the
-        // invariant cum = up + down holds for every record
+        // the split and participation columns ride between cum_bits and
+        // wall_ms, and the invariant cum = up + down holds everywhere
         let first = rows.lines().next().unwrap();
-        assert!(first.contains(",100,60,40,"), "row missing bit split: {first}");
+        assert!(first.contains(",100,60,40,8,2,1,"), "row missing bit split: {first}");
         for r in &run.records {
             assert_eq!(r.cum_bits, r.up_bits + r.down_bits);
         }

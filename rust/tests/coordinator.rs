@@ -10,6 +10,13 @@ fn quick(preset: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::preset(preset).unwrap();
     cfg.rounds = 60;
     cfg.eval_every = 20;
+    // differential tests pin the synchronous engine: the elastic CI job
+    // forces partial participation through the env, which legitimately
+    // changes the math (quorum < n averages over the quorum).
+    cfg.quorum = String::new();
+    cfg.round_timeout_ms = 0;
+    cfg.staleness = "drop".into();
+    cfg.on_worker_loss = "abort".into();
     cfg
 }
 
@@ -32,8 +39,14 @@ fn threaded_equals_lockstep_for_every_strategy() {
 
 #[test]
 fn threaded_scales_workers() {
+    // deliberately built from the raw preset (not `quick`): the elastic
+    // knobs stay on their env defaults, so the elastic CI job routes
+    // this scaling check through quorum = n-1 partial participation —
+    // the assertions here are shape/finiteness, not bitwise.
     for n in [1, 2, 7, 16] {
-        let mut cfg = quick("quickstart");
+        let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
+        cfg.rounds = 60;
+        cfg.eval_every = 20;
         cfg.n = n;
         let log = run_threaded(&cfg).unwrap();
         assert_eq!(log.records.len(), 3, "n={n}");
@@ -127,6 +140,13 @@ fn fig2_shape_holds_on_tiny_logreg() {
         // reproduction pinned to that setting even when the suite runs
         // with CDADAM_COMPRESS_DOWNLINK forced on.
         c.compress_downlink = false;
+        // likewise pin fully synchronous rounds: the who-wins ordering
+        // is a property of the paper's algorithms, not of the elastic
+        // quorum the CDADAM_QUORUM CI job forces suite-wide.
+        c.quorum = String::new();
+        c.round_timeout_ms = 0;
+        c.staleness = "drop".into();
+        c.on_worker_loss = "abort".into();
     })
     .unwrap();
     let get = |label: &str| {

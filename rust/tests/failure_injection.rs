@@ -59,11 +59,23 @@ fn base_setup(cfg: &ExperimentConfig) -> Setup {
     setup::build(cfg).unwrap()
 }
 
+/// Pin the synchronous engine and the abort-on-death triage: these
+/// tests assert today's fail-loud contract (or bitwise equality), which
+/// the env-forced elastic CI job (quorum < n + degrade) would
+/// legitimately change into survivable degradation.
+fn pin_sync(cfg: &mut ExperimentConfig) {
+    cfg.quorum = String::new();
+    cfg.round_timeout_ms = 0;
+    cfg.staleness = "drop".into();
+    cfg.on_worker_loss = "abort".into();
+}
+
 #[test]
 fn worker_death_surfaces_as_error_not_hang() {
     let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
     cfg.rounds = 50;
     cfg.eval_every = 10;
+    pin_sync(&mut cfg);
     let mut s = base_setup(&cfg);
     let dim = s.dim;
     // worker 2 dies after 5 rounds
@@ -90,6 +102,7 @@ fn worker_death_unwinds_pipelined_server_without_deadlock() {
             cfg.eval_every = 10;
             cfg.pipeline_depth = 2;
             cfg.zero_copy_ingest = zero_copy;
+            pin_sync(&mut cfg);
             let mut s = setup::build(&cfg).unwrap();
             let dim = s.dim;
             s.engines[1] = Box::new(DyingEngine { dim, ok_rounds: 5, calls: 0 });
@@ -177,6 +190,7 @@ fn socket_worker_death_mid_round_surfaces_with_attribution() {
             cfg.eval_every = 10;
             cfg.pipeline_depth = 2;
             cfg.zero_copy_ingest = zero_copy;
+            pin_sync(&mut cfg);
             let mut s = setup::build(&cfg).unwrap();
             let dim = s.dim;
             s.engines[1] = Box::new(DyingEngine { dim, ok_rounds: 5, calls: 0 });
@@ -260,6 +274,7 @@ fn socket_slow_link_under_bandwidth_cap_completes_identically() {
         let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
         cfg.rounds = 15;
         cfg.eval_every = 5;
+        pin_sync(&mut cfg);
         cfg.transport = "memory".into();
         let mem = run_threaded_with(&cfg, base_setup(&cfg)).unwrap();
         cfg.transport = "socket".into();
@@ -278,6 +293,9 @@ fn socket_slow_link_under_bandwidth_cap_completes_identically() {
 
 #[test]
 fn nan_gradients_propagate_to_metrics_not_panic() {
+    // deliberately unpinned: the elastic knobs stay on their env
+    // defaults, so the elastic CI job also proves a NaN loss survives
+    // quorum rounds — the assertion is on the metric, not on bits.
     let mut cfg = ExperimentConfig::preset("quickstart").unwrap();
     cfg.rounds = 10;
     cfg.eval_every = 10;
@@ -311,6 +329,291 @@ fn dropped_receiver_fails_sender() {
     let (tx, rx, _) = link();
     drop(rx);
     assert!(tx.send(WireMsg { round: 0, from: 0, payload: CompressedMsg::Zero { d: 1 } }).is_err());
+}
+
+/// Elastic arrival-schedule scenarios: scripted worker behaviours —
+/// straggler, flapper, silent hang — driven over real loopback TCP
+/// against the elastic pipeline engine. The elastic fold depends on
+/// *membership* only (quorum members sorted by worker, each scaled
+/// 1/k), so a seeded schedule that forces a fixed membership sequence
+/// must yield replay-exact broadcast digests, and the `degrade` vs
+/// `abort` knob decides whether a lost worker shrinks the cohort or
+/// unwinds the run. Readmission is out of scope by design: a returning
+/// flapper is a fresh dial absorbed by the jittered connect retry
+/// (pinned in `comm::socket` and `tests/tree_topology.rs`), but the
+/// engine's cohort shrink is permanent for the run.
+mod elastic_scenarios {
+    use cdadam::comm::socket::{
+        loopback_pair, server_link, worker_link, LinkFault, LinkOptions, NetProfile, SocketStream,
+    };
+    use cdadam::comm::{topology, wire, Broadcast, DownlinkPayload, UplinkFrame, WireMsg};
+    use cdadam::compress::CompressedMsg;
+    use cdadam::config::ExperimentConfig;
+    use cdadam::coordinator::pipeline::{
+        ElasticSpec, OnWorkerLoss, PipelineError, PipelineServer, RunReport,
+    };
+
+    use super::watchdog;
+
+    /// One worker's scripted behaviour for a scenario run.
+    #[derive(Clone, Copy)]
+    enum Script {
+        /// uplinks every round on time
+        Healthy,
+        /// healthy loop over a bandwidth-capped uplink: every frame
+        /// crawls, so the on-time quorum always closes without it
+        Straggler { bytes_per_sec: u64 },
+        /// the seeded fault injector kills the socket after this many
+        /// delivered frames (the flap; the cut is frame-deterministic)
+        CutAfter { frames: u64 },
+        /// keeps its links open but stops uplinking after this round
+        HangAfter { rounds: u64 },
+    }
+
+    struct Outcome {
+        result: Result<RunReport, PipelineError>,
+        /// FNV-1a digest over the broadcast stream worker 0 received
+        digest: u64,
+    }
+
+    fn mix(h: &mut u64, b: u8) {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+
+    fn digest_broadcast(h: &mut u64, b: &Broadcast) {
+        for byte in b.round.to_le_bytes() {
+            mix(h, byte);
+        }
+        match &b.payload {
+            DownlinkPayload::Shared(m) => {
+                let bytes = wire::encode(&WireMsg {
+                    round: b.round,
+                    from: 0,
+                    payload: (**m).clone(),
+                })
+                .unwrap();
+                for &byte in &bytes {
+                    mix(h, byte);
+                }
+            }
+            DownlinkPayload::Frame(f) => {
+                for &byte in f.bytes.iter() {
+                    mix(h, byte);
+                }
+            }
+        }
+    }
+
+    /// Deterministic per-(worker, round) dense uplink: the scenario
+    /// digests compare server broadcast streams, so the payloads must
+    /// be a pure function of worker id and round.
+    fn payload(worker: usize, round: u64, dim: usize) -> CompressedMsg {
+        CompressedMsg::Dense(
+            (0..dim).map(|j| ((worker * 31 + j + 1) as f32) * 0.01 / round as f32).collect(),
+        )
+    }
+
+    /// Drive one scenario: per-worker loopback TCP links shaped per
+    /// script, scripted worker threads, the quickstart strategy server
+    /// under `run_elastic`. Returns the engine result and worker 0's
+    /// broadcast digest (worker 0 is always healthy in these schedules).
+    fn run_scenario(rounds: usize, dim: usize, scripts: &[Script], spec: &ElasticSpec) -> Outcome {
+        let mut wls = Vec::new();
+        let mut sls = Vec::new();
+        for (i, script) in scripts.iter().enumerate() {
+            let (a, b) = loopback_pair().unwrap();
+            let opts = match *script {
+                Script::Straggler { bytes_per_sec } => LinkOptions {
+                    profile: NetProfile {
+                        latency_us: 0,
+                        jitter_us: 0,
+                        bandwidth_bytes_per_sec: bytes_per_sec,
+                        seed: 7,
+                    },
+                    fault: None,
+                },
+                Script::CutAfter { frames } => LinkOptions {
+                    profile: NetProfile::default(),
+                    fault: Some(LinkFault { after_frames: frames, mid_frame: false }),
+                },
+                _ => LinkOptions::default(),
+            };
+            let (wl, _m) = worker_link(SocketStream::Tcp(a), i as u64, &opts).unwrap();
+            let (sl, _m) = server_link(SocketStream::Tcp(b), i as u64, &LinkOptions::default())
+                .unwrap();
+            wls.push(wl);
+            sls.push(sl);
+        }
+
+        let handles: Vec<_> = wls
+            .into_iter()
+            .zip(scripts.iter().copied())
+            .enumerate()
+            .map(|(i, (wl, script))| {
+                std::thread::spawn(move || -> u64 {
+                    let mut h = 0xcbf2_9ce4_8422_2325u64;
+                    for t in 1..=rounds as u64 {
+                        let hung =
+                            matches!(script, Script::HangAfter { rounds: r } if t > r);
+                        if !hung {
+                            let fb =
+                                wire::encode_frame(t, i as u32, &payload(i, t, dim)).unwrap();
+                            if wl.up.send(UplinkFrame::Bytes(fb)).is_err() {
+                                return h;
+                            }
+                        }
+                        match wl.down.recv() {
+                            Ok(b) => digest_broadcast(&mut h, &b),
+                            Err(_) => return h,
+                        }
+                    }
+                    h
+                })
+            })
+            .collect();
+
+        let cfg = ExperimentConfig::preset("quickstart").unwrap();
+        let strat = cfg.build_strategy().unwrap();
+        let mut server = strat.make_server(dim, scripts.len());
+        let result = PipelineServer::new(rounds, 1).run_elastic(server.as_mut(), sls, spec);
+        let digests: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        Outcome { result, digest: digests[0] }
+    }
+
+    #[test]
+    fn straggler_rounds_close_at_quorum_and_replay_exactly() {
+        // One link crawls under a bandwidth cap (~0.5 s per 16 KiB
+        // frame vs microseconds for the healthy links), so membership
+        // is {0, 2} every round: the report, the replayed digest, AND
+        // a synchronous 2-worker reference fold must all agree.
+        watchdog(120, || {
+            const DIM: usize = 4096;
+            const ROUNDS: usize = 4;
+            let scripts =
+                [Script::Healthy, Script::Straggler { bytes_per_sec: 32_000 }, Script::Healthy];
+            let mut spec = ElasticSpec::new(2);
+            spec.on_worker_loss = OnWorkerLoss::Degrade;
+            let a = run_scenario(ROUNDS, DIM, &scripts, &spec);
+            let report = a.result.expect("straggler run must complete");
+            for p in &report.rounds {
+                assert_eq!(
+                    p.participants, 2,
+                    "round {}: quorum must close without the straggler",
+                    p.round
+                );
+            }
+            assert!(report.lost_workers.is_empty(), "a slow link is a condition, not a loss");
+
+            let b = run_scenario(ROUNDS, DIM, &scripts, &spec);
+            assert_eq!(a.digest, b.digest, "seeded straggler schedule must replay exactly");
+
+            // membership alone determines the math: an in-memory
+            // synchronous run over just workers {0, 2} with the same
+            // payload schedule folds identically (scale 1/2, worker
+            // order), so its broadcast stream is bit-identical.
+            let (ref_wls, ref_sls, _um, _dm) = topology(2);
+            let ids = [0usize, 2];
+            let ref_handles: Vec<_> = ref_wls
+                .into_iter()
+                .zip(ids)
+                .map(|(wl, id)| {
+                    std::thread::spawn(move || -> u64 {
+                        let mut h = 0xcbf2_9ce4_8422_2325u64;
+                        for t in 1..=ROUNDS as u64 {
+                            let fb = wire::encode_frame(t, id as u32, &payload(id, t, DIM))
+                                .unwrap();
+                            wl.up.send(UplinkFrame::Bytes(fb)).unwrap();
+                            digest_broadcast(&mut h, &wl.down.recv().unwrap());
+                        }
+                        h
+                    })
+                })
+                .collect();
+            let cfg = ExperimentConfig::preset("quickstart").unwrap();
+            let strat = cfg.build_strategy().unwrap();
+            let mut server = strat.make_server(DIM, scripts.len());
+            PipelineServer::new(ROUNDS, 1).run(server.as_mut(), ref_sls).unwrap();
+            let ref_digest = ref_handles.into_iter().map(|h| h.join().unwrap()).next().unwrap();
+            assert_eq!(
+                a.digest, ref_digest,
+                "elastic 2-of-3 fold must equal the synchronous 2-worker fold"
+            );
+        });
+    }
+
+    #[test]
+    fn flapper_cut_shrinks_the_cohort_under_degrade() {
+        // The fault injector kills worker 2's socket after exactly 3
+        // delivered frames: rounds 1-3 fold everyone, the flap is
+        // triaged during round 3's broadcast or round 4's collection
+        // (TCP buffering decides which side notices first), and every
+        // later round folds the shrunken cohort.
+        watchdog(120, || {
+            let scripts = [Script::Healthy, Script::Healthy, Script::CutAfter { frames: 3 }];
+            let mut spec = ElasticSpec::new(3); // full quorum pre-flap
+            spec.on_worker_loss = OnWorkerLoss::Degrade;
+            let a = run_scenario(6, 16, &scripts, &spec);
+            let report = a.result.expect("degrade must survive the flap");
+            let participants: Vec<usize> = report.rounds.iter().map(|p| p.participants).collect();
+            assert_eq!(participants, [3, 3, 3, 2, 2, 2], "cohort must shrink exactly at the cut");
+            assert_eq!(report.lost_workers.len(), 1, "one permanent loss");
+            let (w, r) = report.lost_workers[0];
+            assert_eq!(w, 2, "the flapper is the lost worker");
+            assert!(r == 3 || r == 4, "loss triaged at the cut boundary, got round {r}");
+
+            let b = run_scenario(6, 16, &scripts, &spec);
+            assert_eq!(a.digest, b.digest, "seeded flap schedule must replay exactly");
+        });
+    }
+
+    #[test]
+    fn flapper_cut_aborts_loudly_under_abort() {
+        watchdog(120, || {
+            let scripts = [Script::Healthy, Script::Healthy, Script::CutAfter { frames: 3 }];
+            let spec = ElasticSpec::new(3); // abort is the default policy
+            let err = run_scenario(6, 16, &scripts, &spec).result.unwrap_err();
+            assert!(!err.is_protocol_fault(), "a flap is a disconnect, not a protocol fault");
+            let msg = err.to_string();
+            assert!(msg.contains("worker 2"), "abort triage must name the flapper: {msg}");
+        });
+    }
+
+    #[test]
+    fn silent_hang_is_triaged_and_survived_under_degrade() {
+        // Worker 2 stops uplinking after round 2 but keeps its socket
+        // open: only the stall window can triage it. Below-quorum
+        // silence for stall_timeout_ms converts the hang into a loss,
+        // round 3 closes with what arrived, and the cohort stays
+        // shrunk — all of it a deterministic membership schedule.
+        watchdog(120, || {
+            let scripts = [Script::Healthy, Script::Healthy, Script::HangAfter { rounds: 2 }];
+            let mut spec = ElasticSpec::new(3);
+            spec.on_worker_loss = OnWorkerLoss::Degrade;
+            spec.stall_timeout_ms = 500;
+            let a = run_scenario(5, 16, &scripts, &spec);
+            let report = a.result.expect("degrade must survive the hang");
+            let participants: Vec<usize> = report.rounds.iter().map(|p| p.participants).collect();
+            assert_eq!(participants, [3, 3, 2, 2, 2], "hang must be triaged in round 3");
+            assert_eq!(report.lost_workers, [(2, 3)], "the silent worker is lost, permanently");
+
+            let b = run_scenario(5, 16, &scripts, &spec);
+            assert_eq!(a.digest, b.digest, "seeded hang schedule must replay exactly");
+        });
+    }
+
+    #[test]
+    fn silent_hang_aborts_with_attribution_under_abort() {
+        watchdog(120, || {
+            let scripts = [Script::Healthy, Script::Healthy, Script::HangAfter { rounds: 2 }];
+            let mut spec = ElasticSpec::new(3);
+            spec.stall_timeout_ms = 500; // abort policy is the default
+            let err = run_scenario(5, 16, &scripts, &spec).result.unwrap_err();
+            assert!(!err.is_protocol_fault(), "a hang is triaged as a disconnect");
+            let msg = err.to_string();
+            assert!(msg.contains("worker 2"), "hang triage must name the silent worker: {msg}");
+        });
+    }
 }
 
 #[test]

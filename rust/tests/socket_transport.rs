@@ -24,6 +24,13 @@ fn base_cfg(compress_downlink: bool) -> ExperimentConfig {
     cfg.net_latency_us = 0;
     cfg.net_jitter_us = 0;
     cfg.net_bandwidth_kbps = 0;
+    // synchronous rounds pinned: the differentials below assert bitwise
+    // equality, which the env-forced elastic CI job (quorum < n) would
+    // legitimately break.
+    cfg.quorum = String::new();
+    cfg.round_timeout_ms = 0;
+    cfg.staleness = "drop".into();
+    cfg.on_worker_loss = "abort".into();
     cfg
 }
 

@@ -21,7 +21,10 @@
 //! downlink setting (`agg_groups` 2, 3, and 4 with every scheduling
 //! knob on): dense tree forwarding relays raw uplinks in worker order,
 //! so the topology knob too must reproduce the flat digests
-//! bit-for-bit.
+//! bit-for-bit. An elastic dimension (two `quorum = n` runs per
+//! downlink setting) additionally routes the matrix through the
+//! elastic round engine at full quorum, which is the synchronous fold
+//! with different plumbing and must also be bit-identical.
 //!
 //! `compress_downlink` is the one *math* knob in the matrix: it changes
 //! the trajectory for dense-broadcast strategies (their downlink gets
@@ -103,6 +106,17 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.pin_shards = false;
     cfg.compress_downlink = false;
     cfg.simd_kernels = false;
+    // elastic knobs: pinned to the synchronous engine. Partial
+    // participation (quorum < n) is a *math* knob, so the env-forced
+    // elastic CI job must not reroute the digest matrix; the elastic
+    // dimension below opts into the elastic engine at full quorum
+    // explicitly, where it must be bit-identical. (transport and
+    // agg_groups stay on their env defaults, so the socket/tree CI
+    // jobs route that dimension over TCP and through the tree too.)
+    cfg.quorum = String::new();
+    cfg.round_timeout_ms = 0;
+    cfg.staleness = "drop".into();
+    cfg.on_worker_loss = "abort".into();
     cfg
 }
 
@@ -328,6 +342,41 @@ fn trajectories_bit_identical_across_ingest_matrix_and_pinned() {
                     baseline,
                     "{strategy}: trajectory diverged under dense tree \
                      aggregation (zero-copy pipelined shape, agg_groups=4, \
+                     compress_downlink={compress_downlink})"
+                );
+            }
+
+            // Elastic dimension: quorum = n routed through the elastic
+            // engine (`run_elastic`) with the abort loss policy is the
+            // synchronous fold with different plumbing — same
+            // membership every round (everyone, scale 1/n), same
+            // worker-sorted fold order — so its digest must equal the
+            // baseline bit-for-bit. Two shapes: the baseline threaded
+            // star, and the zero-copy pipelined shape. Because base_cfg
+            // leaves `transport` and `agg_groups` on their env
+            // defaults, the CI jobs that force CDADAM_TRANSPORT=socket
+            // or CDADAM_AGG_GROUPS=4 additionally pin elastic × socket
+            // and elastic × tree here.
+            {
+                let mut cfg = base_cfg(strategy);
+                cfg.compress_downlink = compress_downlink;
+                cfg.quorum = "n".into();
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged under the elastic engine \
+                     (quorum=n, compress_downlink={compress_downlink})"
+                );
+                cfg.zero_copy_ingest = true;
+                cfg.zero_copy_egress = true;
+                cfg.server_threads = 4;
+                cfg.server_min_parallel_dim = 1;
+                cfg.pipeline_depth = 2;
+                assert_eq!(
+                    digest(&run_threaded(&cfg).unwrap()),
+                    baseline,
+                    "{strategy}: trajectory diverged under the elastic engine \
+                     (quorum=n, zero-copy pipelined shape, \
                      compress_downlink={compress_downlink})"
                 );
             }

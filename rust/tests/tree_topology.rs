@@ -34,6 +34,15 @@ fn base_cfg(strategy: &str) -> ExperimentConfig {
     cfg.net_latency_us = 0;
     cfg.net_jitter_us = 0;
     cfg.net_bandwidth_kbps = 0;
+    // synchronous rounds pinned: the tree differentials assert bitwise
+    // equality against the flat star, which the env-forced elastic CI
+    // job (quorum < n) would legitimately break. Elastic × tree is
+    // covered by the tree unit tests and the golden matrix's elastic
+    // dimension.
+    cfg.quorum = String::new();
+    cfg.round_timeout_ms = 0;
+    cfg.staleness = "drop".into();
+    cfg.on_worker_loss = "abort".into();
     cfg
 }
 
